@@ -1,0 +1,23 @@
+"""Auto-generated serverless application chameleon (FWB-CML)."""
+import fakelib_pkgres
+
+def render_template(event=None):
+    _out = 0
+    _out += fakelib_pkgres.working_set.work(18)
+    return {"handler": "render_template", "ok": True, "out": _out}
+
+
+def list_plugins(event=None):
+    _out = 0
+    _out += fakelib_pkgres.extern.work(4)
+    return {"handler": "list_plugins", "ok": True, "out": _out}
+
+
+HANDLERS = {"render_template": render_template, "list_plugins": list_plugins}
+WEIGHTS = {"render_template": 0.97, "list_plugins": 0.03}
+
+
+def handler(event=None):
+    """Default Lambda-style entry point: dispatch on event["op"]."""
+    op = (event or {}).get("op") or "render_template"
+    return HANDLERS[op](event)

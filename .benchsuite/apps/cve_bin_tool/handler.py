@@ -1,0 +1,24 @@
+"""Auto-generated serverless application cve_bin_tool (CVE-bin-tool)."""
+import fakelib_cvecore
+
+def scan(event=None):
+    _out = 0
+    _out += fakelib_cvecore.checkers.work(16)
+    _out += fakelib_cvecore.scanner.work(10)
+    return {"handler": "scan", "ok": True, "out": _out}
+
+
+def sbom_scan(event=None):
+    _out = 0
+    _out += fakelib_cvecore.sbom.work(4)
+    return {"handler": "sbom_scan", "ok": True, "out": _out}
+
+
+HANDLERS = {"scan": scan, "sbom_scan": sbom_scan}
+WEIGHTS = {"scan": 0.97, "sbom_scan": 0.03}
+
+
+def handler(event=None):
+    """Default Lambda-style entry point: dispatch on event["op"]."""
+    op = (event or {}).get("op") or "scan"
+    return HANDLERS[op](event)

@@ -1,0 +1,24 @@
+"""Auto-generated serverless application dna_visualisation (R-DV)."""
+import fakelib_numpy
+
+def visualise(event=None):
+    _out = 0
+    _out += fakelib_numpy.core.work(22)
+    _out += fakelib_numpy.linalg.work(5)
+    return {"handler": "visualise", "ok": True, "out": _out}
+
+
+def spectrum(event=None):
+    _out = 0
+    _out += fakelib_numpy.fft.work(4)
+    return {"handler": "spectrum", "ok": True, "out": _out}
+
+
+HANDLERS = {"visualise": visualise, "spectrum": spectrum}
+WEIGHTS = {"visualise": 0.96, "spectrum": 0.04}
+
+
+def handler(event=None):
+    """Default Lambda-style entry point: dispatch on event["op"]."""
+    op = (event or {}).get("op") or "visualise"
+    return HANDLERS[op](event)

@@ -1,0 +1,29 @@
+"""Auto-generated serverless application graph_bfs (R-GB)."""
+import fakelib_igraph
+
+def bfs(event=None):
+    _out = 0
+    _out += fakelib_igraph.core.work(20)
+    return {"handler": "bfs", "ok": True, "out": _out}
+
+
+def stats(event=None):
+    _out = 0
+    _out += fakelib_igraph.core.work(8)
+    return {"handler": "stats", "ok": True, "out": _out}
+
+
+def render(event=None):
+    _out = 0
+    _out += fakelib_igraph.drawing.matplotlib.work(6)
+    return {"handler": "render", "ok": True, "out": _out}
+
+
+HANDLERS = {"bfs": bfs, "stats": stats, "render": render}
+WEIGHTS = {"bfs": 0.94, "stats": 0.03, "render": 0.03}
+
+
+def handler(event=None):
+    """Default Lambda-style entry point: dispatch on event["op"]."""
+    op = (event or {}).get("op") or "bfs"
+    return HANDLERS[op](event)

@@ -1,0 +1,23 @@
+"""Auto-generated serverless application graph_mst (R-GM)."""
+import fakelib_igraph
+
+def mst(event=None):
+    _out = 0
+    _out += fakelib_igraph.core.work(22)
+    return {"handler": "mst", "ok": True, "out": _out}
+
+
+def render(event=None):
+    _out = 0
+    _out += fakelib_igraph.drawing.cairo.work(5)
+    return {"handler": "render", "ok": True, "out": _out}
+
+
+HANDLERS = {"mst": mst, "render": render}
+WEIGHTS = {"mst": 0.95, "render": 0.05}
+
+
+def handler(event=None):
+    """Default Lambda-style entry point: dispatch on event["op"]."""
+    op = (event or {}).get("op") or "mst"
+    return HANDLERS[op](event)

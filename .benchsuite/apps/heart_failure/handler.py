@@ -1,0 +1,25 @@
+"""Auto-generated serverless application heart_failure (HFP)."""
+import fakelib_scipy
+import fakelib_sklearn
+
+def predict_risk(event=None):
+    _out = 0
+    _out += fakelib_sklearn.linear_model.work(14)
+    _out += fakelib_scipy.stats.work(10)
+    return {"handler": "predict_risk", "ok": True, "out": _out}
+
+
+def cohort_stats(event=None):
+    _out = 0
+    _out += fakelib_scipy.stats.work(6)
+    return {"handler": "cohort_stats", "ok": True, "out": _out}
+
+
+HANDLERS = {"predict_risk": predict_risk, "cohort_stats": cohort_stats}
+WEIGHTS = {"predict_risk": 0.96, "cohort_stats": 0.04}
+
+
+def handler(event=None):
+    """Default Lambda-style entry point: dispatch on event["op"]."""
+    op = (event or {}).get("op") or "predict_risk"
+    return HANDLERS[op](event)

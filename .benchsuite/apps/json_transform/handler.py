@@ -1,0 +1,17 @@
+"""Auto-generated serverless application json_transform (clean-2)."""
+import fakelib_jsonlib
+
+def transform(event=None):
+    _out = 0
+    _out += fakelib_jsonlib.codec.work(12)
+    return {"handler": "transform", "ok": True, "out": _out}
+
+
+HANDLERS = {"transform": transform}
+WEIGHTS = {"transform": 1.0}
+
+
+def handler(event=None):
+    """Default Lambda-style entry point: dispatch on event["op"]."""
+    op = (event or {}).get("op") or "transform"
+    return HANDLERS[op](event)

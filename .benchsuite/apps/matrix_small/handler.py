@@ -1,0 +1,17 @@
+"""Auto-generated serverless application matrix_small (clean-4)."""
+import fakelib_mathcore
+
+def multiply(event=None):
+    _out = 0
+    _out += fakelib_mathcore.ops.work(14)
+    return {"handler": "multiply", "ok": True, "out": _out}
+
+
+HANDLERS = {"multiply": multiply}
+WEIGHTS = {"multiply": 1.0}
+
+
+def handler(event=None):
+    """Default Lambda-style entry point: dispatch on event["op"]."""
+    op = (event or {}).get("op") or "multiply"
+    return HANDLERS[op](event)

@@ -1,0 +1,27 @@
+"""Auto-generated serverless application model_serving (FWB-MS)."""
+import fakelib_scipy
+import fakelib_sklearn
+import fakelib_numpy
+
+def serve(event=None):
+    _out = 0
+    _out += fakelib_sklearn.linear_model.work(14)
+    _out += fakelib_numpy.core.work(8)
+    _out += fakelib_scipy.stats.work(6)
+    return {"handler": "serve", "ok": True, "out": _out}
+
+
+def batch_score(event=None):
+    _out = 0
+    _out += fakelib_sklearn.metrics.work(4)
+    return {"handler": "batch_score", "ok": True, "out": _out}
+
+
+HANDLERS = {"serve": serve, "batch_score": batch_score}
+WEIGHTS = {"serve": 0.97, "batch_score": 0.03}
+
+
+def handler(event=None):
+    """Default Lambda-style entry point: dispatch on event["op"]."""
+    op = (event or {}).get("op") or "serve"
+    return HANDLERS[op](event)

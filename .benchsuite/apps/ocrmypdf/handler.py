@@ -1,0 +1,25 @@
+"""Auto-generated serverless application ocrmypdf (OCRmyPDF)."""
+import fakelib_pdfminer
+
+def ocr(event=None):
+    _out = 0
+    _out += fakelib_pdfminer.layout.work(14)
+    _out += fakelib_pdfminer.converter.work(8)
+    _out += fakelib_pdfminer.psparser.work(6)
+    return {"handler": "ocr", "ok": True, "out": _out}
+
+
+def extract_images(event=None):
+    _out = 0
+    _out += fakelib_pdfminer.image.work(5)
+    return {"handler": "extract_images", "ok": True, "out": _out}
+
+
+HANDLERS = {"ocr": ocr, "extract_images": extract_images}
+WEIGHTS = {"ocr": 0.94, "extract_images": 0.06}
+
+
+def handler(event=None):
+    """Default Lambda-style entry point: dispatch on event["op"]."""
+    op = (event or {}).get("op") or "ocr"
+    return HANDLERS[op](event)

@@ -1,0 +1,24 @@
+"""Auto-generated serverless application predict_wine_ml (FL-PWM)."""
+import fakelib_pandas
+
+def predict(event=None):
+    _out = 0
+    _out += fakelib_pandas.core.work(20)
+    _out += fakelib_pandas.io.work(6)
+    return {"handler": "predict", "ok": True, "out": _out}
+
+
+def describe(event=None):
+    _out = 0
+    _out += fakelib_pandas.computation.work(4)
+    return {"handler": "describe", "ok": True, "out": _out}
+
+
+HANDLERS = {"predict": predict, "describe": describe}
+WEIGHTS = {"predict": 0.97, "describe": 0.03}
+
+
+def handler(event=None):
+    """Default Lambda-style entry point: dispatch on event["op"]."""
+    op = (event or {}).get("op") or "predict"
+    return HANDLERS[op](event)

@@ -1,0 +1,24 @@
+"""Auto-generated serverless application sensor_telemetry (SensorTD)."""
+import fakelib_prophet
+
+def forecast(event=None):
+    _out = 0
+    _out += fakelib_prophet.forecaster.work(22)
+    _out += fakelib_prophet.models.work(8)
+    return {"handler": "forecast", "ok": True, "out": _out}
+
+
+def backtest(event=None):
+    _out = 0
+    _out += fakelib_prophet.diagnostics.work(5)
+    return {"handler": "backtest", "ok": True, "out": _out}
+
+
+HANDLERS = {"forecast": forecast, "backtest": backtest}
+WEIGHTS = {"forecast": 0.96, "backtest": 0.04}
+
+
+def handler(event=None):
+    """Default Lambda-style entry point: dispatch on event["op"]."""
+    op = (event or {}).get("op") or "forecast"
+    return HANDLERS[op](event)

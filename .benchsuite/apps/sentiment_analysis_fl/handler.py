@@ -1,0 +1,25 @@
+"""Auto-generated serverless application sentiment_analysis_fl (FL-SA)."""
+import fakelib_pandas
+import fakelib_scipy
+
+def analyze(event=None):
+    _out = 0
+    _out += fakelib_pandas.core.work(16)
+    _out += fakelib_scipy.stats.work(10)
+    return {"handler": "analyze", "ok": True, "out": _out}
+
+
+def aggregate(event=None):
+    _out = 0
+    _out += fakelib_pandas.io.work(4)
+    return {"handler": "aggregate", "ok": True, "out": _out}
+
+
+HANDLERS = {"analyze": analyze, "aggregate": aggregate}
+WEIGHTS = {"analyze": 0.98, "aggregate": 0.02}
+
+
+def handler(event=None):
+    """Default Lambda-style entry point: dispatch on event["op"]."""
+    op = (event or {}).get("op") or "analyze"
+    return HANDLERS[op](event)

@@ -1,0 +1,17 @@
+"""Auto-generated serverless application thumbnail (clean-5)."""
+import fakelib_imgsmall
+
+def resize(event=None):
+    _out = 0
+    _out += fakelib_imgsmall.resize.work(14)
+    return {"handler": "resize", "ok": True, "out": _out}
+
+
+HANDLERS = {"resize": resize}
+WEIGHTS = {"resize": 1.0}
+
+
+def handler(event=None):
+    """Default Lambda-style entry point: dispatch on event["op"]."""
+    op = (event or {}).get("op") or "resize"
+    return HANDLERS[op](event)

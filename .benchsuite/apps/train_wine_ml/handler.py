@@ -1,0 +1,24 @@
+"""Auto-generated serverless application train_wine_ml (FL-TWM)."""
+import fakelib_pandas
+
+def train(event=None):
+    _out = 0
+    _out += fakelib_pandas.core.work(26)
+    _out += fakelib_pandas.io.work(8)
+    return {"handler": "train", "ok": True, "out": _out}
+
+
+def profile_data(event=None):
+    _out = 0
+    _out += fakelib_pandas.computation.work(5)
+    return {"handler": "profile_data", "ok": True, "out": _out}
+
+
+HANDLERS = {"train": train, "profile_data": profile_data}
+WEIGHTS = {"train": 0.96, "profile_data": 0.04}
+
+
+def handler(event=None):
+    """Default Lambda-style entry point: dispatch on event["op"]."""
+    op = (event or {}).get("op") or "train"
+    return HANDLERS[op](event)

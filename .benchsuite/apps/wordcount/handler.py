@@ -1,0 +1,17 @@
+"""Auto-generated serverless application wordcount (clean-3)."""
+import fakelib_wordlib
+
+def count(event=None):
+    _out = 0
+    _out += fakelib_wordlib.tokens.work(12)
+    return {"handler": "count", "ok": True, "out": _out}
+
+
+HANDLERS = {"count": count}
+WEIGHTS = {"count": 1.0}
+
+
+def handler(event=None):
+    """Default Lambda-style entry point: dispatch on event["op"]."""
+    op = (event or {}).get("op") or "count"
+    return HANDLERS[op](event)

@@ -1,0 +1,17 @@
+"""Auto-generated serverless application echo (clean-1)."""
+
+
+def echo(event=None):
+    _out = 0
+    _out += len(str(event)) if event else 0
+    return {"handler": "echo", "ok": True, "out": _out}
+
+
+HANDLERS = {"echo": echo}
+WEIGHTS = {"echo": 1.0}
+
+
+def handler(event=None):
+    """Default Lambda-style entry point: dispatch on event["op"]."""
+    op = (event or {}).get("op") or "echo"
+    return HANDLERS[op](event)

@@ -1,0 +1,24 @@
+"""Auto-generated serverless application graph_pagerank (R-GPR)."""
+import fakelib_igraph
+
+def pagerank(event=None):
+    _out = 0
+    _out += fakelib_igraph.core.work(18)
+    _out += fakelib_igraph.community.work(6)
+    return {"handler": "pagerank", "ok": True, "out": _out}
+
+
+def render(event=None):
+    _out = 0
+    _out += fakelib_igraph.drawing.matplotlib.work(4)
+    return {"handler": "render", "ok": True, "out": _out}
+
+
+HANDLERS = {"pagerank": pagerank, "render": render}
+WEIGHTS = {"pagerank": 0.9, "render": 0.1}
+
+
+def handler(event=None):
+    """Default Lambda-style entry point: dispatch on event["op"]."""
+    op = (event or {}).get("op") or "pagerank"
+    return HANDLERS[op](event)

@@ -1,0 +1,26 @@
+"""Auto-generated serverless application model_training (FWB-MT)."""
+import fakelib_scipy
+import fakelib_sklearn
+
+def train(event=None):
+    _out = 0
+    _out += fakelib_sklearn.linear_model.work(16)
+    _out += fakelib_scipy.optimize.work(10)
+    _out += fakelib_sklearn.preprocessing.work(5)
+    return {"handler": "train", "ok": True, "out": _out}
+
+
+def score(event=None):
+    _out = 0
+    _out += fakelib_sklearn.metrics.work(4)
+    return {"handler": "score", "ok": True, "out": _out}
+
+
+HANDLERS = {"train": train, "score": score}
+WEIGHTS = {"train": 0.95, "score": 0.05}
+
+
+def handler(event=None):
+    """Default Lambda-style entry point: dispatch on event["op"]."""
+    op = (event or {}).get("op") or "train"
+    return HANDLERS[op](event)

@@ -1,0 +1,24 @@
+"""Auto-generated serverless application price_ml_predict (FL-PMP)."""
+import fakelib_scipy
+
+def predict(event=None):
+    _out = 0
+    _out += fakelib_scipy.optimize.work(18)
+    _out += fakelib_scipy.stats.work(8)
+    return {"handler": "predict", "ok": True, "out": _out}
+
+
+def integrate_curve(event=None):
+    _out = 0
+    _out += fakelib_scipy.integrate.work(4)
+    return {"handler": "integrate_curve", "ok": True, "out": _out}
+
+
+HANDLERS = {"predict": predict, "integrate_curve": integrate_curve}
+WEIGHTS = {"predict": 0.95, "integrate_curve": 0.05}
+
+
+def handler(event=None):
+    """Default Lambda-style entry point: dispatch on event["op"]."""
+    op = (event or {}).get("op") or "predict"
+    return HANDLERS[op](event)

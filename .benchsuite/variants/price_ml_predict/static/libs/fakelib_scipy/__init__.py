@@ -1,0 +1,70 @@
+"""Auto-generated module fakelib_scipy (SLIMSTART benchsuite; not a real library)."""
+import time as _time
+
+# -- calibrated import-time cost ------------------------------------------
+_end = _time.perf_counter() + 4 / 1000.0
+while _time.perf_counter() < _end:
+    pass
+_BALLAST = bytearray(int(1 * 1048576)) or bytearray(1)
+_BALLAST[::4096] = b"\x01" * len(_BALLAST[::4096])
+
+from fakelib_scipy import _lib
+from fakelib_scipy import optimize
+from fakelib_scipy import stats
+from fakelib_scipy import sparse
+from fakelib_scipy import signal
+# from fakelib_scipy import interpolate  # SLIMSTART: deferred
+from fakelib_scipy import integrate
+
+__all__ = ['optimize', 'stats', 'sparse', 'signal', 'integrate']
+
+
+def work(ms):
+    """Busy loop attributed to this module by the sampling profiler."""
+    end = _time.perf_counter() + ms / 1000.0
+    x = 0
+    while _time.perf_counter() < end:
+        x += 1
+    return x
+
+
+def compute(n):
+    s = 0
+    for i in range(int(n)):
+        s += (i * i) % 97
+    return s
+
+
+def _touch_static():
+    """References kept so static reachability must retain these imports."""
+    return (_lib, optimize, stats)
+
+
+# --- SLIMSTART deferred-import shim (auto-generated) ---
+_SLIMSTART_DEFERRED = {
+    'interpolate': (('fakelib_scipy.interpolate',), None, None),
+}
+
+
+def __getattr__(_name):
+    _spec = _SLIMSTART_DEFERRED.get(_name)
+    if _spec is None:
+        raise AttributeError(_name)
+    import importlib as _il
+    import sys as _sys
+    for _m in _spec[0]:
+        _mod = _il.import_module(_m)
+    if _spec[1] is not None:
+        try:
+            # __dict__ lookup: must not re-enter this __getattr__ when the
+            # attribute is really a submodule of *this* package.
+            _val = _mod.__dict__[_spec[1]]
+        except KeyError:
+            _val = _il.import_module(_spec[0][-1] + "." + _spec[1])
+    elif _spec[2] is not None:
+        _val = _sys.modules[_spec[2]]
+    else:
+        _val = _mod
+    globals()[_name] = _val
+    return _val
+# --- end SLIMSTART shim ---

@@ -1,0 +1,25 @@
+"""Auto-generated module fakelib_scipy.stats (SLIMSTART benchsuite; not a real library)."""
+import time as _time
+
+# -- calibrated import-time cost ------------------------------------------
+_end = _time.perf_counter() + 24 / 1000.0
+while _time.perf_counter() < _end:
+    pass
+_BALLAST = bytearray(int(6 * 1048576)) or bytearray(1)
+_BALLAST[::4096] = b"\x01" * len(_BALLAST[::4096])
+
+
+def work(ms):
+    """Busy loop attributed to this module by the sampling profiler."""
+    end = _time.perf_counter() + ms / 1000.0
+    x = 0
+    while _time.perf_counter() < end:
+        x += 1
+    return x
+
+
+def compute(n):
+    s = 0
+    for i in range(int(n)):
+        s += (i * i) % 97
+    return s

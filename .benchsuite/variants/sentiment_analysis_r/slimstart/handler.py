@@ -1,0 +1,33 @@
+"""Auto-generated serverless application sentiment_analysis_r (R-SA)."""
+import fakelib_nltk
+import fakelib_textblob
+
+def analyze(event=None):
+    _out = 0
+    _out += fakelib_nltk.tokenize.work(14)
+    _out += fakelib_textblob.blob.work(6)
+    _out += fakelib_textblob.sentiments.work(5)
+    return {"handler": "analyze", "ok": True, "out": _out}
+
+
+def corpus_stats(event=None):
+    _out = 0
+    _out += fakelib_nltk.corpus.work(6)
+    _out += fakelib_nltk.data.work(4)
+    return {"handler": "corpus_stats", "ok": True, "out": _out}
+
+
+def tag_text(event=None):
+    _out = 0
+    _out += fakelib_nltk.tag.work(3)
+    return {"handler": "tag_text", "ok": True, "out": _out}
+
+
+HANDLERS = {"analyze": analyze, "corpus_stats": corpus_stats, "tag_text": tag_text}
+WEIGHTS = {"analyze": 0.92, "corpus_stats": 0.06, "tag_text": 0.02}
+
+
+def handler(event=None):
+    """Default Lambda-style entry point: dispatch on event["op"]."""
+    op = (event or {}).get("op") or "analyze"
+    return HANDLERS[op](event)

@@ -1,0 +1,25 @@
+"""Auto-generated serverless application skimage_numpy (FL-SN)."""
+import fakelib_skimage
+import fakelib_numpy
+
+def filter_image(event=None):
+    _out = 0
+    _out += fakelib_skimage.filters.work(16)
+    _out += fakelib_numpy.core.work(8)
+    return {"handler": "filter_image", "ok": True, "out": _out}
+
+
+def recolor(event=None):
+    _out = 0
+    _out += fakelib_skimage.color.work(5)
+    return {"handler": "recolor", "ok": True, "out": _out}
+
+
+HANDLERS = {"filter_image": filter_image, "recolor": recolor}
+WEIGHTS = {"filter_image": 0.94, "recolor": 0.06}
+
+
+def handler(event=None):
+    """Default Lambda-style entry point: dispatch on event["op"]."""
+    op = (event or {}).get("op") or "filter_image"
+    return HANDLERS[op](event)

@@ -1,0 +1,37 @@
+"""Fig. 8 — peak-memory reduction from SLIMSTART optimization.
+
+Reads Table II measurements (bench_speedup_table) if present — memory is
+measured in the same cold-start runs — otherwise measures a subset.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import load_result, save_result, table
+
+
+def run() -> dict:
+    tab = load_result("bench_speedup_table")
+    if tab is None:
+        import benchmarks.bench_speedup_table as bst
+        tab = bst.run()
+    rows = [{
+        "app": r["app"],
+        "base_rss_mb": r["base_rss_mb"],
+        "opt_rss_mb": r["opt_rss_mb"],
+        "mem_reduction": r["mem_reduction"],
+    } for r in tab["rows"]]
+    best = max(r["mem_reduction"] for r in rows)
+    payload = {
+        "figure": "Fig. 8",
+        "claims": {"paper_best_mem_reduction": 1.51,
+                   "ours_best_mem_reduction": best},
+        "rows": rows,
+    }
+    save_result("bench_memory", payload)
+    print(table(rows, ["app", "base_rss_mb", "opt_rss_mb",
+                       "mem_reduction"], "Fig. 8 memory"))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Fig. 9 — runtime overhead of SLIMSTART-Profiler.
+
+Warm per-invocation time with vs without the sampling profiler attached;
+the paper reports <=10% for most apps at the default sampling rate.
+"""
+
+from __future__ import annotations
+
+import os
+
+from repro.benchsuite.genlibs import build_suite
+from repro.benchsuite.harness import measure_warm_overhead
+
+from benchmarks.common import (
+    ALL_OPT_APPS, APP_SHORT, N_INVOKE, QUICK, save_result, table,
+)
+
+
+def run() -> dict:
+    root = build_suite()
+    apps = ALL_OPT_APPS if not QUICK else ALL_OPT_APPS[:6]
+    rows = []
+    for app in apps:
+        base_ms, prof_ms = measure_warm_overhead(
+            os.path.join(root, "apps", app), invocations=N_INVOKE)
+        rows.append({
+            "app": APP_SHORT.get(app, app),
+            "base_ms": round(base_ms, 3),
+            "profiled_ms": round(prof_ms, 3),
+            "overhead_pct": round(100 * (prof_ms / base_ms - 1), 1),
+        })
+    under10 = sum(r["overhead_pct"] <= 10 for r in rows)
+    payload = {
+        "figure": "Fig. 9",
+        "claims": {
+            "paper": "most apps <=10% overhead",
+            "ours_under_10pct": under10,
+            "n_apps": len(rows),
+            "ours_mean_overhead_pct": round(
+                sum(r["overhead_pct"] for r in rows) / len(rows), 2),
+        },
+        "rows": rows,
+    }
+    save_result("bench_profiler_overhead", payload)
+    print(table(rows, ["app", "base_ms", "profiled_ms", "overhead_pct"],
+                "Fig. 9 profiler overhead"))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

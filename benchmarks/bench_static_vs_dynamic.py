@@ -1,0 +1,75 @@
+"""Fig. 2 / Observation 2 — static reachability (STAT) vs dynamic
+profiling (DYN) on the FaaSLight apps.
+
+STAT defers only provably-unreachable imports; DYN additionally defers
+reachable-but-unused (workload-dependent) libraries found by sampling.
+We report each method's deferred init share and the measured e2e —
+the paper's point is DYN's upper bound is far larger (avg 50.68% vs
+static's 19.21% reduction).
+"""
+
+from __future__ import annotations
+
+import os
+
+from repro.benchsuite.genlibs import build_suite
+from repro.benchsuite.harness import measure_cold_starts
+from repro.benchsuite.pipeline import SlimstartPipeline, StaticPipeline
+
+from benchmarks.common import (
+    APP_SHORT, FAASLIGHT, N_COLD, N_INSTANCES, N_INVOKE, save_result,
+    table,
+)
+
+
+def run() -> dict:
+    root = build_suite()
+    rows = []
+    for app in FAASLIGHT:
+        base_dir = os.path.join(root, "apps", app)
+        base = measure_cold_starts(base_dir, n=N_COLD)
+
+        static = StaticPipeline(app, root).run()
+        stat = measure_cold_starts(static.variant_dir, n=N_COLD)
+
+        dyn_pipe = SlimstartPipeline(app, root)
+        dyn_res = dyn_pipe.run(instances=N_INSTANCES,
+                               invocations=N_INVOKE)
+        dyn = measure_cold_starts(dyn_res.variant_dir, n=N_COLD)
+
+        rows.append({
+            "app": APP_SHORT.get(app, app),
+            "stat_deferred": static.apply_summary["deferred"],
+            "dyn_deferred": dyn_res.apply_summary["deferred"],
+            "stat_init_cut_pct": round(
+                100 * (1 - stat.init_mean / base.init_mean), 1),
+            "dyn_init_cut_pct": round(
+                100 * (1 - dyn.init_mean / base.init_mean), 1),
+            "stat_e2e_speedup": round(base.e2e_mean / stat.e2e_mean, 2),
+            "dyn_e2e_speedup": round(base.e2e_mean / dyn.e2e_mean, 2),
+        })
+    avg_stat = sum(r["stat_init_cut_pct"] for r in rows) / len(rows)
+    avg_dyn = sum(r["dyn_init_cut_pct"] for r in rows) / len(rows)
+    payload = {
+        "figure": "Fig. 2 / Obs. 2",
+        "claims": {
+            "paper_static_avg_cut_pct": 19.21,
+            "paper_dynamic_avg_cut_pct": 50.68,
+            "ours_static_avg_cut_pct": round(avg_stat, 2),
+            "ours_dynamic_avg_cut_pct": round(avg_dyn, 2),
+            "dynamic_beats_static": avg_dyn > avg_stat,
+        },
+        "rows": rows,
+    }
+    save_result("bench_static_vs_dynamic", payload)
+    print(table(rows, ["app", "stat_deferred", "dyn_deferred",
+                       "stat_init_cut_pct", "dyn_init_cut_pct",
+                       "stat_e2e_speedup", "dyn_e2e_speedup"],
+                "Fig. 2 STAT vs DYN"))
+    print(f"avg init cut: static {avg_stat:.1f}% vs dynamic "
+          f"{avg_dyn:.1f}% (paper: 19.2% vs 50.7%)")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Fig. 3 / Observation 3 — entry-point count PDF and invocation CDF.
+
+Replays the suite's handler weights (calibrated to the production-trace
+statistics the paper reports: 54% of functions have >1 entry point; the
+top handlers take >80% of cumulative invocations).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.benchsuite.genlibs import build_suite
+
+from benchmarks.common import save_result, table
+
+
+def run() -> dict:
+    root = build_suite()
+    apps_dir = os.path.join(root, "apps")
+    counts = []
+    all_weights = []
+    for app in sorted(os.listdir(apps_dir)):
+        meta = json.load(open(os.path.join(apps_dir, app, "meta.json")))
+        weights = meta.get("handlers", {})
+        counts.append(len(weights))
+        if weights:
+            all_weights.append(sorted(weights.values(), reverse=True))
+
+    counts = np.array(counts)
+    multi = float((counts > 1).mean())
+    # CDF of invocation mass by handler rank (averaged over apps)
+    max_h = max(len(w) for w in all_weights)
+    cdf = np.zeros(max_h)
+    for w in all_weights:
+        c = np.cumsum(np.pad(w, (0, max_h - len(w))))
+        cdf += c
+    cdf /= len(all_weights)
+    top1 = float(cdf[0])
+    top2 = float(cdf[min(1, max_h - 1)])
+
+    pdf_rows = [{"n_handlers": int(k),
+                 "fraction": round(float((counts == k).mean()), 3)}
+                for k in sorted(set(counts))]
+    payload = {
+        "figure": "Fig. 3 / Obs. 3",
+        "claims": {
+            "paper_multi_entry_fraction": 0.54,
+            "ours_multi_entry_fraction": round(multi, 3),
+            "paper_top_handlers_over_80pct": True,
+            "ours_top1_mass": round(top1, 3),
+            "ours_top2_mass": round(top2, 3),
+        },
+        "pdf": pdf_rows,
+        "cdf_by_rank": [round(float(x), 3) for x in cdf],
+    }
+    save_result("bench_workload_skew", payload)
+    print(table(pdf_rows, ["n_handlers", "fraction"],
+                "Fig. 3(1) PDF of #entry points"))
+    print(f"multi-entry fraction: {multi:.2f} (paper 0.54); "
+          f"top-2 handler mass: {top2:.2f} (paper >0.8)")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,87 @@
+"""Shared helpers for the benchmark suite."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+# Suite-wide sizing: QUICK=1 trims cold-start repetitions so the whole
+# suite runs in minutes on one CPU core; the full setting mirrors the
+# paper's 500-cold-start protocol at a scale this container can run.
+QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
+N_COLD = 3 if QUICK else 8
+N_INVOKE = 40 if QUICK else 150
+N_INSTANCES = 2 if QUICK else 4
+
+# the paper's per-suite app sets
+RAINBOWCAKE = ["dna_visualisation", "graph_bfs", "graph_mst",
+               "graph_pagerank", "sentiment_analysis_r"]
+FAASLIGHT = ["price_ml_predict", "skimage_numpy", "predict_wine_ml",
+             "train_wine_ml", "sentiment_analysis_fl"]
+FAASWORKBENCH = ["chameleon", "model_training", "model_serving"]
+REALWORLD = ["ocrmypdf", "cve_bin_tool", "sensor_telemetry",
+             "heart_failure"]
+LOW_INIT = ["echo", "json_transform", "wordcount", "matrix_small",
+            "thumbnail"]  # <10% init share: excluded from optimization
+ALL_OPT_APPS = RAINBOWCAKE + FAASLIGHT + FAASWORKBENCH + REALWORLD
+
+APP_SHORT = {
+    "dna_visualisation": "R-DV", "graph_bfs": "R-GB", "graph_mst": "R-GM",
+    "graph_pagerank": "R-GPR", "sentiment_analysis_r": "R-SA",
+    "price_ml_predict": "FL-PMP", "skimage_numpy": "FL-SN",
+    "predict_wine_ml": "FL-PWM", "train_wine_ml": "FL-TWM",
+    "sentiment_analysis_fl": "FL-SA", "chameleon": "FWB-CML",
+    "model_training": "FWB-MT", "model_serving": "FWB-MS",
+    "ocrmypdf": "OCRmyPDF", "cve_bin_tool": "CVE-bin-tool",
+    "sensor_telemetry": "SensorTD", "heart_failure": "HFP",
+}
+
+
+def save_result(name: str, payload) -> Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    path = RESULTS / f"{name}.json"
+    path.write_text(json.dumps(payload, indent=2))
+    return path
+
+
+def load_result(name: str):
+    path = RESULTS / f"{name}.json"
+    if path.exists():
+        return json.loads(path.read_text())
+    return None
+
+
+def table(rows: list[dict], cols: list[str], title: str = "") -> str:
+    if title:
+        out = [f"== {title} =="]
+    else:
+        out = []
+    widths = {c: max(len(c), *(len(_fmt(r.get(c))) for r in rows))
+              for c in cols} if rows else {c: len(c) for c in cols}
+    out.append("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        out.append("  ".join(_fmt(r.get(c)).ljust(widths[c])
+                             for c in cols))
+    return "\n".join(out)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.2f}"
+    return str(v)
+
+
+class timed:
+    def __init__(self, label):
+        self.label = label
+
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        print(f"[{self.label}] {time.time() - self.t0:.1f}s")

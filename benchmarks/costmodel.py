@@ -1,0 +1,201 @@
+"""Structural FLOP/byte model for every (arch x shape) cell.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies once, so a
+21-period layer scan under-reports FLOPs ~21x.  This model reconstructs
+per-step totals from the model definition itself — every matmul the
+layers actually issue (attention, MLP, MoE dispatch einsums, recurrent
+gates, embedding/logits) — and is validated against cost_analysis on
+small *unrolled* configs (tests/test_costmodel.py, <10% error).
+
+Conventions:
+  * one MAC = 2 FLOPs;
+  * train  = fwd + bwd (2x) + block-remat recompute (+1x fwd) = 4x fwd;
+  * decode counts one new token against a seq_len cache;
+  * bytes  = HBM traffic per device per step (params/opt/grad + KV + a
+    2-pass activation estimate), the roofline memory term.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.models.config import ArchConfig, ShapeSpec
+from repro.models.model import block_pattern_of, param_count
+
+
+@dataclasses.dataclass
+class CellCost:
+    fwd_flops: float  # per step, global (all devices)
+    step_flops: float  # incl. bwd/remat for train
+    model_flops: float  # 6*N*D (train) / 2*N*D (serve) reference
+    hbm_bytes: float  # per device per step
+    params: int
+    active_params: int
+
+
+def _attn_flops(cfg: ArchConfig, tokens: int, kv_len: float) -> float:
+    """QK^T + PV for one layer: 2 einsums x 2 FLOPs x H x hd."""
+    return 4.0 * tokens * kv_len * cfg.n_heads * cfg.head_dim
+
+
+def _proj_flops(cfg: ArchConfig, tokens: int) -> float:
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return 2.0 * tokens * D * (H * hd + 2 * K * hd + H * hd)
+
+
+def _mlp_flops(cfg: ArchConfig, tokens: int, d_ff: Optional[int] = None
+               ) -> float:
+    F = d_ff if d_ff is not None else cfg.d_ff
+    return 2.0 * tokens * cfg.d_model * 3 * F  # gate+up+down
+
+
+def _moe_flops(cfg: ArchConfig, tokens: int) -> float:
+    e = cfg.moe
+    group = cfg.moe_group
+    D, E, k, F = cfg.d_model, e.n_experts, e.top_k, e.d_expert_ff
+    cap = max(int(e.capacity_factor * min(group, tokens) * k / E), 1)
+    n_groups = max(tokens // group, 1)
+    slots = n_groups * E * cap  # expert-slot tokens actually computed
+    flops = 2.0 * tokens * D * E  # router
+    flops += 2.0 * slots * D * 3 * F  # expert gate+up+down
+    # dispatch/combine one-hot einsums (the dense-dispatch overhead the
+    # ragged path removes):   xin (E,C,D) = disp (S,E,C) . x (S,D) etc.
+    flops += 2.0 * 2 * tokens * E * cap * D
+    return flops
+
+
+def _block_flops(cfg: ArchConfig, kind: str, tokens: int, *,
+                 kv_len: float, cross_len: float = 0.0) -> float:
+    D = cfg.d_model
+    f = 0.0
+    if kind.startswith("attn"):
+        f += _proj_flops(cfg, tokens)
+        f += _attn_flops(cfg, tokens, kv_len)
+    elif kind == "rglru":
+        R = cfg.rglru_dim or D
+        f += 2.0 * tokens * D * (2 * R)  # wx, wg
+        f += 2.0 * tokens * R * D  # wo
+        f += 2.0 * tokens * R * (2 * R)  # w_a, w_i gates
+        f += tokens * R * (cfg.conv_width * 2 + 10)  # conv + scan ops
+    elif kind == "mlstm":
+        nh = cfg.lru_heads or cfg.n_heads
+        dh = D // nh
+        f += 2.0 * tokens * D * (4 * D + 2 * nh)  # q,k,v,og + gates
+        f += 2.0 * tokens * D * D  # wo
+        f += tokens * nh * (4 * dh * dh + 6 * dh)  # C update + readout
+    elif kind == "slstm":
+        nh = cfg.lru_heads or cfg.n_heads
+        dh = D // nh
+        f += 2.0 * tokens * D * (4 * D) + 2.0 * tokens * D * D
+        f += 2.0 * tokens * nh * 4 * dh * dh  # block-diag recurrence
+    if cross_len:
+        f += _proj_flops(cfg, tokens)
+        f += _attn_flops(cfg, tokens, cross_len)
+    if cfg.moe is not None and kind.startswith("attn"):
+        f += _moe_flops(cfg, tokens)
+    elif cfg.d_ff > 0:
+        f += _mlp_flops(cfg, tokens)
+    return f
+
+
+def _kv_len_for(cfg: ArchConfig, kind: str, shape: ShapeSpec) -> float:
+    S = shape.seq_len
+    if shape.kind == "train" or shape.kind == "prefill":
+        if kind == "attn_local":
+            w = cfg.window_size
+            return min(w, S) / 1.0 if S > w else S / 2.0
+        return S / 2.0  # causal average
+    # decode: one token against the cache
+    if kind == "attn_local":
+        return min(cfg.window_size, S)
+    return S
+
+
+def forward_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    pat = block_pattern_of(cfg)
+    S = shape.seq_len
+    B = shape.global_batch
+    tokens = B * (1 if shape.kind == "decode" else S)
+    total = 0.0
+    cross = cfg.encoder_seq if cfg.encoder_layers else 0.0
+    for li in range(cfg.n_layers):
+        kind = pat[li % len(pat)]
+        total += _block_flops(cfg, kind, tokens,
+                              kv_len=_kv_len_for(cfg, kind, shape),
+                              cross_len=cross)
+    # encoder (whisper): bidirectional full attention over 1500 frames
+    if cfg.encoder_layers and shape.kind != "decode":
+        enc_tokens = B * cfg.encoder_seq
+        for _ in range(cfg.encoder_layers):
+            total += _proj_flops(cfg, enc_tokens)
+            total += _attn_flops(cfg, enc_tokens, cfg.encoder_seq)
+            total += _mlp_flops(cfg, enc_tokens)
+    # embedding lookup is a gather; logits are a matmul
+    if shape.kind == "train":
+        total += 2.0 * tokens * cfg.d_model * cfg.vocab
+    elif shape.kind == "prefill":
+        total += 2.0 * B * cfg.d_model * cfg.vocab  # last position only
+    else:
+        total += 2.0 * B * cfg.d_model * cfg.vocab
+    return total
+
+
+def cell_cost(cfg: ArchConfig, shape: ShapeSpec, *, n_devices: int = 256,
+              train_multiplier: float = 4.0) -> CellCost:
+    fwd = forward_flops(cfg, shape)
+    if shape.kind == "train":
+        step = fwd * train_multiplier
+    else:
+        step = fwd
+    N = param_count(cfg)
+    Na = cfg.active_param_count() if cfg.moe else N
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    model = (6.0 if shape.kind == "train" else 2.0) * Na * tokens
+
+    # ---- per-device HBM bytes ----
+    dt = 2  # bf16
+    p_local = N * dt / min(n_devices, 16)  # TP over the model axis
+    if shape.kind == "train":
+        # params r + grads w + master/mu/nu r/w (f32, ZeRO over mesh)
+        opt_local = 3 * N * 4 / n_devices
+        bytes_dev = p_local * 2 + opt_local * 2
+        # activations: ~12 r/w of (tokens, D) bf16 per layer (fwd+bwd)
+        act = 12.0 * tokens * cfg.d_model * dt * cfg.n_layers / n_devices
+        bytes_dev += act
+    elif shape.kind == "prefill":
+        act = 8.0 * tokens * cfg.d_model * dt * cfg.n_layers / n_devices
+        kv_write = _kv_cache_bytes(cfg, shape) / n_devices
+        bytes_dev = p_local + act + kv_write
+    else:  # decode: params + full KV read dominate
+        kv = _kv_cache_bytes(cfg, shape) / n_devices
+        bytes_dev = p_local + kv
+    return CellCost(fwd_flops=fwd, step_flops=step, model_flops=model,
+                    hbm_bytes=bytes_dev, params=N, active_params=Na)
+
+
+def _kv_cache_bytes(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    pat = block_pattern_of(cfg)
+    S, B = shape.seq_len, shape.global_batch
+    dt = 2
+    # int8 KV: 1 byte codes + one f32 scale per (token, kv-head)
+    dt_g = 1 + 4.0 / cfg.head_dim if cfg.kv_quant == "int8" else dt
+    total = 0.0
+    for li in range(cfg.n_layers):
+        kind = pat[li % len(pat)]
+        if kind == "attn_global":
+            total += 2 * B * S * cfg.n_kv_heads * cfg.head_dim * dt_g
+        elif kind == "attn_local":
+            L = min(cfg.window_size, S)
+            total += 2 * B * L * cfg.n_kv_heads * cfg.head_dim * dt
+        elif kind == "rglru":
+            total += B * (cfg.rglru_dim or cfg.d_model) * 4
+        elif kind in ("mlstm", "slstm"):
+            nh = cfg.lru_heads or cfg.n_heads
+            dh = cfg.d_model // nh
+            total += B * nh * dh * dh * 4
+    if cfg.encoder_layers and shape.kind == "decode":
+        total += (2 * B * cfg.encoder_seq * cfg.n_kv_heads * cfg.head_dim
+                  * dt * cfg.n_layers)
+    return total

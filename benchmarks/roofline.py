@@ -1,0 +1,137 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) on the single-pod mesh:
+    compute term    = step_FLOPs / (chips x 197 TF/s bf16)
+    memory term     = HBM_bytes_per_chip / 819 GB/s
+    collective term = collective_bytes_per_chip / 50 GB/s  (loop-aware
+                      HLO parse from the dry-run; per-partition shapes)
+Compute/memory come from the structural cost model (costmodel.py) because
+cost_analysis counts loop bodies once — the raw cost_analysis numbers are
+kept alongside for reference.  Dominant term = max of the three; the
+roofline fraction = compute / dominant (1.0 = compute-bound at peak,
+assuming perfect overlap).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--tag baseline] [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import get_config
+from repro.launch.mesh import HW
+from repro.models import SHAPES
+
+from benchmarks.costmodel import cell_cost
+
+RESULTS = Path(__file__).resolve().parent / "results"
+DRYRUN = RESULTS / "dryrun"
+
+
+def analyze_cell(rec: dict) -> dict:
+    cfg = get_config(rec["arch"])
+    if rec.get("overrides"):
+        cfg = cfg.with_(**{k: v for k, v in rec["overrides"].items()
+                           if not isinstance(v, (list, dict))})
+    shape = SHAPES[rec["shape"]]
+    chips = rec["n_devices"]
+    cost = cell_cost(cfg, shape, n_devices=chips)
+
+    t_compute = cost.step_flops / (chips * HW["peak_flops_bf16"])
+    t_memory = cost.hbm_bytes / HW["hbm_bw"]
+    coll_bytes = rec["collectives"]["total"]  # per device (per-partition)
+    t_coll = coll_bytes / HW["ici_bw"]
+
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    t_max = max(terms.values()) or 1e-12
+    frac = t_compute / t_max
+    hlo_flops_raw = rec["cost"].get("flops") or 0.0
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "tag": rec.get("tag", "baseline"),
+        "chips": chips,
+        "multi_pod": rec["multi_pod"],
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_coll,
+        "dominant": dominant,
+        "roofline_fraction": frac,
+        "model_flops": cost.model_flops,
+        "step_flops": cost.step_flops,
+        "useful_ratio": cost.model_flops / max(cost.step_flops, 1.0),
+        "hbm_gb_per_dev": cost.hbm_bytes / 1e9,
+        "coll_gb_per_dev": coll_bytes / 1e9,
+        "temp_gb": (rec["memory"].get("temp_bytes") or 0) / 1e9,
+        "args_gb": (rec["memory"].get("argument_bytes") or 0) / 1e9,
+        "fits_hbm": ((rec["memory"].get("temp_bytes") or 0)
+                     + (rec["memory"].get("argument_bytes") or 0))
+        <= HW["hbm_bytes"] * 1.0,
+        "cost_analysis_flops_raw": hlo_flops_raw,
+        "compile_s": rec.get("compile_s"),
+    }
+
+
+def load_cells(tag: str = "baseline", pod: str = "sp1") -> list[dict]:
+    out = []
+    for f in sorted(DRYRUN.glob(f"*__{pod}__{tag}.json")):
+        out.append(analyze_cell(json.loads(f.read_text())))
+    return out
+
+
+def bottleneck_note(row: dict) -> str:
+    d = row["dominant"]
+    if d == "compute":
+        return ("compute-bound: larger per-chip tiles / fewer chips or "
+                "higher MFU kernels move it")
+    if d == "memory":
+        return ("HBM-bound: KV/weight quantization or higher arithmetic "
+                "intensity (bigger batch) moves it")
+    return ("collective-bound: overlap/reschedule collectives, shard to "
+            "cut resharding, or compress traffic")
+
+
+def to_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "dominant | roofline | useful | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} | "
+            f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+            f"{r['dominant']} | {r['roofline_fraction']:.2f} | "
+            f"{r['useful_ratio']:.2f} | "
+            f"{'y' if r['fits_hbm'] else 'N'} |")
+    return hdr + "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--pod", default="sp1")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    rows = load_cells(args.tag, args.pod)
+    if not rows:
+        raise SystemExit(f"no dry-run results for tag={args.tag}")
+    out = RESULTS / f"roofline_{args.tag}_{args.pod}.json"
+    out.write_text(json.dumps(rows, indent=2))
+    if args.md:
+        print(to_markdown(rows))
+    else:
+        for r in rows:
+            print(f"{r['arch']:24s} {r['shape']:12s} "
+                  f"C={r['compute_s']:.2e} M={r['memory_s']:.2e} "
+                  f"X={r['collective_s']:.2e} dom={r['dominant']:10s} "
+                  f"roof={r['roofline_fraction']:.2f} "
+                  f"useful={r['useful_ratio']:.2f}")
+    print(f"\n[roofline] wrote {out} ({len(rows)} cells)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Benchmark orchestrator — one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick]
+
+Level A (the paper, measured on this container's subprocess cells):
+    Fig.1 init ratio, Fig.2 STAT/DYN, Fig.3 skew, Table II speedups,
+    Table III FaaSLight, Fig.8 memory, Fig.9 overhead, Fig.10 adaptive.
+Level B (TPU-native adaptation): serving cold starts.
+Roofline: merged from the dry-run artifacts if present.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+import traceback
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    if args.quick:
+        os.environ["BENCH_QUICK"] = "1"
+
+    # import after BENCH_QUICK is set (common.py reads it at import)
+    from benchmarks import (
+        bench_adaptive, bench_faaslight_compare, bench_init_ratio,
+        bench_memory, bench_profiler_overhead, bench_serving_coldstart,
+        bench_speedup_table, bench_static_vs_dynamic,
+        bench_workload_skew,
+    )
+
+    benches = [
+        ("workload_skew", bench_workload_skew.run),          # Fig. 3
+        ("adaptive", bench_adaptive.run),                    # Fig. 10
+        ("init_ratio", bench_init_ratio.run),                # Fig. 1
+        ("static_vs_dynamic", bench_static_vs_dynamic.run),  # Fig. 2
+        ("speedup_table", bench_speedup_table.run),          # Table II
+        ("faaslight_compare", bench_faaslight_compare.run),  # Table III
+        ("memory", bench_memory.run),                        # Fig. 8
+        ("profiler_overhead", bench_profiler_overhead.run),  # Fig. 9
+        ("serving_coldstart", bench_serving_coldstart.run),  # Level B
+    ]
+
+    results = {}
+    failures = []
+    for name, fn in benches:
+        if args.only and args.only != name:
+            continue
+        print(f"\n{'=' * 72}\n[bench] {name}\n{'=' * 72}", flush=True)
+        t0 = time.time()
+        try:
+            results[name] = fn()
+            print(f"[bench] {name} done in {time.time() - t0:.1f}s",
+                  flush=True)
+        except Exception as e:  # pragma: no cover
+            failures.append(name)
+            traceback.print_exc()
+            print(f"[bench] {name} FAILED: {e}")
+
+    # roofline summary (reads dry-run artifacts if the sweep has run)
+    if not args.only or args.only == "roofline":
+        try:
+            from benchmarks.roofline import load_cells, to_markdown
+            rows = load_cells("baseline", "sp1")
+            if rows:
+                print(f"\n{'=' * 72}\n[bench] roofline "
+                      f"({len(rows)} cells)\n{'=' * 72}")
+                print(to_markdown(rows))
+                results["roofline_cells"] = len(rows)
+        except Exception:
+            traceback.print_exc()
+
+    print("\n" + "=" * 72)
+    print(f"[bench] complete: {len(results)} ok, {len(failures)} failed"
+          + (f" ({failures})" if failures else ""))
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Synthetic serverless benchmark suite.
+
+The paper evaluates SLIMSTART on 22 Python serverless applications
+(RainbowCake / FaaSLight / FaaSWorkbench suites + 4 real-world apps)
+whose heavy dependencies (numpy, igraph, nltk, pandas, scipy, …) are not
+installed in this offline container.  This package *generates* a
+structurally equivalent suite:
+
+* ``specs``    — declarative library + application specs whose import-time
+  CPU cost and memory footprint are calibrated to the paper's Table II
+  scale factors (unused-init fractions sized to the reported speedups);
+* ``genlibs``  — writes the library trees and per-app deployments
+  (handler.py + vendored libs, like a Lambda zip);
+* ``runner``   — the in-subprocess entry that performs ONE cold start and
+  reports init / e2e / peak-RSS metrics (optionally with the SLIMSTART
+  profiler attached);
+* ``harness``  — spawns fresh subprocesses per cold start, aggregates
+  distributions (mean + p99);
+* ``pipeline`` — the full SLIMSTART loop (profile → analyze → optimize →
+  re-measure) and the FaaSLight-style static baseline loop;
+* ``workload`` — skewed and time-varying handler-invocation distributions
+  (paper Fig. 3 / Fig. 10).
+"""
+
+from repro.benchsuite.specs import APPS, LIBS, AppSpec, LibSpec
+from repro.benchsuite.genlibs import build_suite, suite_root
+from repro.benchsuite.harness import ColdStartStats, measure_cold_starts
+from repro.benchsuite.pipeline import (
+    SlimstartPipeline,
+    StaticPipeline,
+    profile_app,
+)
+
+__all__ = [
+    "APPS",
+    "LIBS",
+    "AppSpec",
+    "LibSpec",
+    "build_suite",
+    "suite_root",
+    "ColdStartStats",
+    "measure_cold_starts",
+    "SlimstartPipeline",
+    "StaticPipeline",
+    "profile_app",
+]

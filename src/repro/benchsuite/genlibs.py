@@ -1,0 +1,219 @@
+"""Generator: writes the synthetic library trees and per-app deployments.
+
+Layout under the suite root (default ``<repo>/.benchsuite``)::
+
+    libs_src/<lib>/...            master copies of the fake libraries
+    apps/<app>/handler.py         the application entry module
+    apps/<app>/meta.json          handlers, weights, paper id, ...
+    apps/<app>/libs/<lib>/...     vendored per-app library copies
+                                  (a Lambda-zip analog; optimization
+                                  mutates per-app copies only)
+
+Modules burn real CPU at import time (a calibrated busy loop) and hold
+page-touched ballast, so initialization latency and peak RSS measured by
+the harness are genuine, not simulated numbers.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+from repro.benchsuite.specs import APPS, LIBS, AppSpec, LibSpec, ModSpec, lib_closure
+
+DEFAULT_ROOT = os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))))), ".benchsuite")
+
+
+def suite_root() -> str:
+    return os.environ.get("SLIMSTART_SUITE", DEFAULT_ROOT)
+
+
+# ---------------------------------------------------------------------------
+# Module rendering
+# ---------------------------------------------------------------------------
+
+_MODULE_HEADER = '''\
+"""Auto-generated module {dotted} (SLIMSTART benchsuite; not a real library)."""
+import time as _time
+
+# -- calibrated import-time cost ------------------------------------------
+_end = _time.perf_counter() + {spin_ms} / 1000.0
+while _time.perf_counter() < _end:
+    pass
+_BALLAST = bytearray(int({alloc_mb} * 1048576)) or bytearray(1)
+_BALLAST[::4096] = b"\\x01" * len(_BALLAST[::4096])
+'''
+
+_MODULE_BODY = '''
+
+def work(ms):
+    """Busy loop attributed to this module by the sampling profiler."""
+    end = _time.perf_counter() + ms / 1000.0
+    x = 0
+    while _time.perf_counter() < end:
+        x += 1
+    return x
+
+
+def compute(n):
+    s = 0
+    for i in range(int(n)):
+        s += (i * i) % 97
+    return s
+'''
+
+_TOUCH_FN = '''
+
+def _touch_static():
+    """References kept so static reachability must retain these imports."""
+    return ({names})
+'''
+
+
+def _import_line(target: str) -> str:
+    if "." in target:
+        parent, child = target.rsplit(".", 1)
+        return f"from {parent} import {child}"
+    return f"import {target}"
+
+
+def render_module(dotted: str, spec: ModSpec) -> str:
+    src = _MODULE_HEADER.format(dotted=dotted, spin_ms=spec.spin_ms,
+                                alloc_mb=spec.alloc_mb)
+    if spec.imports:
+        src += "\n" + "\n".join(_import_line(t) for t in spec.imports) + "\n"
+    if spec.export:
+        src += f"\n__all__ = {list(spec.export)!r}\n"
+    src += _MODULE_BODY
+    if spec.use:
+        src += _TOUCH_FN.format(names=", ".join(spec.use) + ("," if len(spec.use) == 1 else ""))
+    return src
+
+
+def write_lib(lib: LibSpec, dest: str) -> None:
+    """Write one library tree under ``dest`` (its parent dir)."""
+    for suffix, spec in lib.modules.items():
+        dotted = lib.name if not suffix else f"{lib.name}.{suffix}"
+        rel = dotted.replace(".", os.sep)
+        # A name is a package iff any other module nests under it.
+        is_pkg = any(
+            other != suffix and (other.startswith(suffix + ".") if suffix
+                                 else True)
+            for other in lib.modules
+        )
+        if is_pkg:
+            path = os.path.join(dest, rel, "__init__.py")
+        else:
+            path = os.path.join(dest, rel + ".py")
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as fh:
+            fh.write(render_module(dotted, spec))
+
+
+# ---------------------------------------------------------------------------
+# Application rendering
+# ---------------------------------------------------------------------------
+
+_APP_TEMPLATE = '''\
+"""Auto-generated serverless application {name} ({paper_id})."""
+{imports}
+
+{handler_defs}
+
+HANDLERS = {{{handler_map}}}
+WEIGHTS = {{{weight_map}}}
+
+
+def handler(event=None):
+    """Default Lambda-style entry point: dispatch on event["op"]."""
+    op = (event or {{}}).get("op") or "{hot}"
+    return HANDLERS[op](event)
+'''
+
+_HANDLER_TEMPLATE = '''\
+def {name}(event=None):
+    _out = 0
+{body}
+    return {{"handler": "{name}", "ok": True, "out": _out}}
+'''
+
+
+def render_app(app: AppSpec) -> str:
+    handler_defs = []
+    for h in app.handlers:
+        body = "\n".join(f"    _out += {line}" if not line.startswith("_")
+                         else f"    {line}" for line in h.body)
+        handler_defs.append(_HANDLER_TEMPLATE.format(name=h.name, body=body))
+    return _APP_TEMPLATE.format(
+        name=app.name,
+        paper_id=app.paper_id,
+        imports="\n".join(app.import_lines),
+        handler_defs="\n\n".join(handler_defs),
+        handler_map=", ".join(f'"{h.name}": {h.name}' for h in app.handlers),
+        weight_map=", ".join(f'"{h.name}": {h.weight}' for h in app.handlers),
+        hot=app.hot_handler,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Suite build
+# ---------------------------------------------------------------------------
+
+def build_app(app: AppSpec, root: str) -> str:
+    """Write one app deployment (handler + vendored libs). Returns its dir."""
+    app_dir = os.path.join(root, "apps", app.name)
+    libs_src = os.path.join(root, "libs_src")
+    if os.path.isdir(app_dir):
+        shutil.rmtree(app_dir)
+    libs_dir = os.path.join(app_dir, "libs")
+    os.makedirs(libs_dir, exist_ok=True)
+    with open(os.path.join(app_dir, "handler.py"), "w") as fh:
+        fh.write(render_app(app))
+    for lib in lib_closure(app.libs):
+        shutil.copytree(os.path.join(libs_src, lib),
+                        os.path.join(libs_dir, lib))
+    meta = {
+        "name": app.name,
+        "paper_id": app.paper_id,
+        "suite": app.suite,
+        "handlers": {h.name: h.weight for h in app.handlers},
+        "hot_handler": app.hot_handler,
+        "libs": lib_closure(app.libs),
+        "expected_flagged": list(app.expected_flagged),
+        "target_init_speedup": app.target_init_speedup,
+    }
+    with open(os.path.join(app_dir, "meta.json"), "w") as fh:
+        json.dump(meta, fh, indent=2)
+    return app_dir
+
+
+def build_suite(root: str | None = None, force: bool = False,
+                apps: list[str] | None = None) -> str:
+    """Generate the whole suite. Idempotent unless ``force``."""
+    root = root or suite_root()
+    manifest_path = os.path.join(root, "manifest.json")
+    if os.path.exists(manifest_path) and not force:
+        return root
+    libs_src = os.path.join(root, "libs_src")
+    if os.path.isdir(libs_src):
+        shutil.rmtree(libs_src)
+    os.makedirs(libs_src, exist_ok=True)
+    for lib in LIBS.values():
+        write_lib(lib, libs_src)
+    selected = apps or list(APPS)
+    for name in selected:
+        build_app(APPS[name], root)
+    with open(manifest_path, "w") as fh:
+        json.dump({
+            "apps": selected,
+            "libs": sorted(LIBS),
+            "lib_init_ms": {k: v.total_init_ms() for k, v in LIBS.items()},
+        }, fh, indent=2)
+    return root
+
+
+if __name__ == "__main__":
+    import sys
+    print(build_suite(force="--force" in sys.argv))

@@ -1,0 +1,121 @@
+"""Cold-start measurement harness.
+
+Each cold start is a fresh subprocess of ``repro.benchsuite.runner`` —
+a faithful analog of a new Lambda container: cold module cache, cold
+code objects, fresh heap.  Metrics are parsed from the runner's JSON
+stdout and aggregated into mean / p99 statistics (the paper reports
+both; p99 captures the tail that matters for SLAs).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import statistics
+import subprocess
+import sys
+from dataclasses import dataclass, field
+from typing import Optional
+
+_REPRO_SRC = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+
+def _percentile(xs: list[float], q: float) -> float:
+    if not xs:
+        return math.nan
+    ys = sorted(xs)
+    idx = min(len(ys) - 1, max(0, int(round(q * (len(ys) - 1)))))
+    return ys[idx]
+
+
+@dataclass
+class ColdStartStats:
+    app: str
+    n: int
+    init_ms: list[float] = field(default_factory=list)
+    e2e_ms: list[float] = field(default_factory=list)
+    peak_rss_kb: list[float] = field(default_factory=list)
+
+    @property
+    def init_mean(self) -> float:
+        return statistics.fmean(self.init_ms)
+
+    @property
+    def e2e_mean(self) -> float:
+        return statistics.fmean(self.e2e_ms)
+
+    @property
+    def init_p99(self) -> float:
+        return _percentile(self.init_ms, 0.99)
+
+    @property
+    def e2e_p99(self) -> float:
+        return _percentile(self.e2e_ms, 0.99)
+
+    @property
+    def rss_mean_mb(self) -> float:
+        return statistics.fmean(self.peak_rss_kb) / 1024.0
+
+    def summary(self) -> dict:
+        return {
+            "app": self.app,
+            "n": self.n,
+            "init_mean_ms": self.init_mean,
+            "init_p99_ms": self.init_p99,
+            "e2e_mean_ms": self.e2e_mean,
+            "e2e_p99_ms": self.e2e_p99,
+            "rss_mean_mb": self.rss_mean_mb,
+        }
+
+
+def run_instance(app_dir: str, *, invocations: int = 1,
+                 handler: Optional[str] = None, seed: int = 0,
+                 profile: bool = False, sink: Optional[str] = None,
+                 sample_interval: float = 0.002,
+                 timeout_s: float = 120.0) -> dict:
+    """One cold instance in a fresh subprocess; returns runner metrics."""
+    cmd = [sys.executable, "-m", "repro.benchsuite.runner",
+           "--app-dir", app_dir, "--invocations", str(invocations),
+           "--seed", str(seed),
+           "--sample-interval", str(sample_interval)]
+    if handler:
+        cmd += ["--handler", handler]
+    if profile:
+        cmd += ["--profile"]
+        if sink:
+            cmd += ["--sink", sink]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _REPRO_SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                          timeout=timeout_s)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"runner failed for {app_dir}:\n{proc.stderr[-2000:]}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def measure_cold_starts(app_dir: str, n: int = 10, *,
+                        handler: Optional[str] = None,
+                        invocations: int = 1,
+                        seed0: int = 100) -> ColdStartStats:
+    """``n`` independent cold starts (fresh subprocess each)."""
+    stats = ColdStartStats(app=os.path.basename(app_dir.rstrip("/")), n=n)
+    for i in range(n):
+        m = run_instance(app_dir, invocations=invocations, handler=handler,
+                         seed=seed0 + i)
+        stats.init_ms.append(m["init_ms"])
+        stats.e2e_ms.append(m["e2e_cold_ms"])
+        stats.peak_rss_kb.append(m["peak_rss_kb"])
+    return stats
+
+
+def measure_warm_overhead(app_dir: str, *, invocations: int = 200,
+                          seed: int = 7) -> tuple[float, float]:
+    """Mean per-invocation time without and with the profiler attached
+    (paper Fig. 9: runtime overhead of SLIMSTART-Profiler)."""
+    base = run_instance(app_dir, invocations=invocations, seed=seed)
+    prof = run_instance(app_dir, invocations=invocations, seed=seed,
+                        profile=True)
+    return base["mean_invoke_ms"], prof["mean_invoke_ms"]

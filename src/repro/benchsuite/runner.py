@@ -1,0 +1,135 @@
+"""In-subprocess cold-start runner.
+
+One execution of this module == one serverless *instance lifecycle*:
+
+    fresh CPython process (cold)  ->  import handler module (init)
+    ->  N handler invocations (possibly spanning several requests,
+        like a warm container)    ->  metrics JSON on stdout
+
+With ``--profile`` the SLIMSTART profiler is attached exactly as it
+would be in production (paper §IV-D): the import timer hooks
+``sys.meta_path`` before the handler import, the sampling profiler runs
+across init + invocations, and one instance-record is batch-written to
+the sink directory through the AsyncCollector.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import os
+import random
+import resource
+import sys
+import time
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--app-dir", required=True)
+    ap.add_argument("--invocations", type=int, default=1)
+    ap.add_argument("--handler", default=None,
+                    help="force a single handler (default: sample WEIGHTS)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--profile", action="store_true")
+    ap.add_argument("--sink", default=None, help="profile sink directory")
+    ap.add_argument("--sample-interval", type=float, default=0.002)
+    args = ap.parse_args(argv)
+
+    app_dir = os.path.abspath(args.app_dir)
+    libs_dir = os.path.join(app_dir, "libs")
+    sys.path.insert(0, libs_dir)
+    sys.path.insert(0, app_dir)
+
+    timer = sampler = None
+    if args.profile:
+        from repro.core.profiler.import_timer import ImportTimer
+        from repro.core.profiler.sampler import CallPathSampler, SamplerConfig
+        timer = ImportTimer(only_under=(libs_dir,))
+        timer.install()
+        sampler = CallPathSampler(
+            SamplerConfig(interval_s=args.sample_interval, timer="prof"))
+        sampler.start()
+
+    # ---------------------------------------------------------- cold start
+    t0 = time.perf_counter()
+    handler_mod = importlib.import_module("handler")
+    init_s = time.perf_counter() - t0
+    if timer is not None:
+        timer.uninstall()
+
+    # --------------------------------------------------------- invocations
+    weights: dict[str, float] = getattr(handler_mod, "WEIGHTS", {})
+    rng = random.Random(args.seed)
+    names = list(weights) or ["handler"]
+    probs = [weights.get(n, 1.0) for n in names]
+
+    def pick() -> str:
+        if args.handler:
+            return args.handler
+        return rng.choices(names, weights=probs, k=1)[0]
+
+    invocation_s: list[tuple[str, float]] = []
+    counts: dict[str, int] = {}
+    for _ in range(max(1, args.invocations)):
+        op = pick()
+        ev = {"op": op}
+        t1 = time.perf_counter()
+        handler_mod.handler(ev)
+        invocation_s.append((op, time.perf_counter() - t1))
+        counts[op] = counts.get(op, 0) + 1
+    e2e_cold_s = init_s + invocation_s[0][1]
+
+    if sampler is not None:
+        sampler.stop()
+
+    # NOTE: ru_maxrss is NOT reset by execve, so a child forked from a
+    # large parent (e.g. pytest) inherits the parent's peak and floors
+    # the measurement.  /proc/self/status VmHWM is per-mm and resets on
+    # exec — the faithful "peak memory of this cold instance" number.
+    peak_rss_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    try:
+        with open("/proc/self/status") as fh:
+            for line in fh:
+                if line.startswith("VmHWM:"):
+                    peak_rss_kb = int(line.split()[1])
+                    break
+    except OSError:
+        pass
+
+    # ----------------------------------------------------------- profiling
+    if args.profile and args.sink:
+        from repro.core.profiler.collector import AsyncCollector
+        cct = sampler.build_cct()
+        record = {
+            "app": os.path.basename(app_dir.rstrip("/")),
+            "init_s": init_s,
+            "e2e_cold_s": e2e_cold_s,
+            "init_records": timer.to_dict(),
+            "cct": cct.to_dict(),
+            "counts": counts,
+            "n_signals": sampler.n_signals,
+        }
+        with AsyncCollector(args.sink, batch_size=4) as col:
+            col.put(record)
+
+    per_handler: dict[str, list[float]] = {}
+    for op, dt in invocation_s:
+        per_handler.setdefault(op, []).append(dt)
+    print(json.dumps({
+        "init_ms": init_s * 1e3,
+        "first_invoke_ms": invocation_s[0][1] * 1e3,
+        "e2e_cold_ms": e2e_cold_s * 1e3,
+        "mean_invoke_ms": 1e3 * sum(d for _, d in invocation_s)
+        / len(invocation_s),
+        "peak_rss_kb": peak_rss_kb,
+        "invocations": counts,
+        "per_handler_ms": {k: 1e3 * sum(v) / len(v)
+                           for k, v in per_handler.items()},
+    }))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,519 @@
+"""Declarative specs for the synthetic benchmark suite.
+
+Libraries are trees of modules with calibrated import-time CPU cost
+(``spin_ms``) and import-time memory footprint (``alloc_mb``).  The
+unused/rarely-used init fractions are sized so that deferring them
+reproduces the paper's Table II initialization-speedup scale
+(1.17× – 2.30×).  Applications mirror the paper's: the same library
+roles (igraph for graph apps, nltk+textblob for sentiment, pandas for
+wine-ml, …), multiple entry handlers with skewed invocation weights
+(paper Fig. 3), and workload-dependent imports that static analysis
+must keep but dynamic profiling can defer (paper Observation 2).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModSpec:
+    spin_ms: float = 5.0  # CPU busy-work at import time
+    alloc_mb: float = 1.0  # page-touched ballast held by the module
+    imports: tuple[str, ...] = ()  # absolute dotted modules this imports
+    use: tuple[str, ...] = ()  # imported bindings referenced in a function
+    export: tuple[str, ...] = ()  # names re-exported via __all__
+
+
+@dataclass(frozen=True)
+class LibSpec:
+    name: str
+    modules: dict[str, ModSpec]  # "" is the package __init__
+
+    def total_init_ms(self) -> float:
+        return sum(m.spin_ms for m in self.modules.values())
+
+
+@dataclass(frozen=True)
+class HandlerSpec:
+    name: str
+    weight: float
+    body: tuple[str, ...]  # statements; last value is returned
+
+
+@dataclass(frozen=True)
+class AppSpec:
+    name: str
+    paper_id: str  # e.g. "R-GB"
+    suite: str  # rainbowcake | faaslight | faasworkbench | realworld | clean
+    import_lines: tuple[str, ...]
+    handlers: tuple[HandlerSpec, ...]
+    # Dotted packages we EXPECT the profiler to flag (used by tests only;
+    # the pipeline itself is entirely data-driven).
+    expected_flagged: tuple[str, ...] = ()
+    target_init_speedup: float = 1.0  # paper Table II, informational
+
+    @property
+    def hot_handler(self) -> str:
+        return max(self.handlers, key=lambda h: h.weight).name
+
+    @property
+    def libs(self) -> tuple[str, ...]:
+        seen = []
+        for line in self.import_lines:
+            for tok in line.replace(",", " ").split():
+                if tok.startswith("fakelib_"):
+                    root = tok.split(".")[0]
+                    if root not in seen:
+                        seen.append(root)
+        return tuple(seen)
+
+
+M = ModSpec
+
+# ---------------------------------------------------------------------------
+# Libraries
+# ---------------------------------------------------------------------------
+
+LIBS: dict[str, LibSpec] = {}
+
+
+def _lib(name: str, modules: dict[str, ModSpec]) -> None:
+    LIBS[name] = LibSpec(name, modules)
+
+
+# -- graph processing (igraph analog; paper Table I shows its drawing
+#    subtree being pulled in via clustering) ---------------------------------
+_lib("fakelib_igraph", {
+    "": M(4, 1, imports=("fakelib_igraph.core",
+                         "fakelib_igraph.community",
+                         "fakelib_igraph.drawing",
+                         "fakelib_igraph.legacy"),
+          use=("core",), export=("core", "community", "drawing")),
+    "core": M(40, 8),
+    "community": M(7, 1, imports=("fakelib_igraph.clustering",),
+                   use=("clustering",)),
+    "clustering": M(6, 1, imports=("fakelib_igraph.drawing.colors",),
+                    use=("colors",)),
+    "drawing": M(3, 1, imports=("fakelib_igraph.drawing.colors",
+                                "fakelib_igraph.drawing.cairo",
+                                "fakelib_igraph.drawing.matplotlib"),
+                 use=("colors", "cairo", "matplotlib"),
+                 export=("cairo", "matplotlib")),
+    "drawing.colors": M(5, 1),
+    "drawing.cairo": M(12, 4),
+    "drawing.matplotlib": M(14, 5),
+    # dead import in __init__ (binding unused, unexported): the slice
+    # static analysis CAN catch.
+    "legacy": M(6, 2),
+})
+
+# -- NLP (nltk analog; R-SA case study: sem/stem/parse/tag unused) ----------
+_lib("fakelib_nltk", {
+    "": M(5, 1, imports=("fakelib_nltk.tokenize", "fakelib_nltk.data",
+                         "fakelib_nltk.corpus", "fakelib_nltk.sem",
+                         "fakelib_nltk.stem", "fakelib_nltk.parse",
+                         "fakelib_nltk.tag"),
+          use=("tokenize", "data"),
+          export=("tokenize", "corpus", "sem", "stem", "parse", "tag")),
+    "tokenize": M(25, 4),
+    "data": M(15, 6),
+    "corpus": M(10, 3),
+    "sem": M(8, 2),
+    "stem": M(7, 2),
+    "parse": M(6, 2),
+    "tag": M(5, 1),
+})
+
+_lib("fakelib_textblob", {
+    "": M(4, 1, imports=("fakelib_textblob.blob",
+                         "fakelib_textblob.sentiments"),
+          use=("blob", "sentiments"), export=("blob", "sentiments")),
+    "blob": M(10, 2, imports=("fakelib_nltk",), use=("fakelib_nltk",)),
+    "sentiments": M(8, 2),
+})
+
+# -- dataframes (pandas analog; wine-ml apps) --------------------------------
+_lib("fakelib_pandas", {
+    "": M(5, 2, imports=("fakelib_pandas.core", "fakelib_pandas.io",
+                         "fakelib_pandas.api", "fakelib_pandas.plotting",
+                         "fakelib_pandas.tseries", "fakelib_pandas.window",
+                         "fakelib_pandas.computation"),
+          use=("core", "io", "api"),
+          export=("core", "io", "plotting", "tseries")),
+    "core": M(30, 10),
+    "io": M(15, 4),
+    "api": M(4, 1),
+    "plotting": M(20, 6),
+    "tseries": M(12, 3),
+    "window": M(6, 2),
+    "computation": M(8, 2),
+})
+
+# -- arrays (numpy analog; R-DV: 2.30x -> ~57% deferrable) -------------------
+_lib("fakelib_numpy", {
+    "": M(4, 2, imports=("fakelib_numpy.core", "fakelib_numpy.linalg",
+                         "fakelib_numpy.fft", "fakelib_numpy.polynomial",
+                         "fakelib_numpy.random", "fakelib_numpy.ma",
+                         "fakelib_numpy.testing"),
+          use=("core", "linalg"),
+          export=("core", "linalg", "fft", "random", "ma")),
+    "core": M(30, 10),
+    "linalg": M(8, 2),
+    "fft": M(14, 4),
+    "polynomial": M(12, 3),
+    "random": M(16, 5),
+    "ma": M(10, 3),
+    "testing": M(6, 1),
+})
+
+# -- scientific computing (scipy analog) -------------------------------------
+_lib("fakelib_scipy", {
+    "": M(4, 1, imports=("fakelib_scipy._lib", "fakelib_scipy.optimize",
+                         "fakelib_scipy.stats", "fakelib_scipy.sparse",
+                         "fakelib_scipy.signal",
+                         "fakelib_scipy.interpolate",
+                         "fakelib_scipy.integrate"),
+          use=("_lib", "optimize", "stats"),
+          export=("optimize", "stats", "sparse", "signal", "integrate")),
+    "_lib": M(8, 2),
+    "optimize": M(30, 8),
+    "stats": M(24, 6),
+    "sparse": M(8, 3),
+    "signal": M(7, 2),
+    "interpolate": M(5, 2),
+    "integrate": M(6, 2),
+})
+
+# -- image processing (skimage analog; depends on numpy) ---------------------
+_lib("fakelib_skimage", {
+    "": M(4, 1, imports=("fakelib_numpy", "fakelib_skimage.filters",
+                         "fakelib_skimage.color",
+                         "fakelib_skimage.morphology",
+                         "fakelib_skimage.segmentation",
+                         "fakelib_skimage.io"),
+          use=("fakelib_numpy", "filters", "color"),
+          export=("filters", "color", "morphology", "io")),
+    "filters": M(18, 4),
+    "color": M(10, 2),
+    "morphology": M(12, 3),
+    "segmentation": M(10, 3),
+    "io": M(8, 2),
+})
+
+# -- ML (sklearn analog) ------------------------------------------------------
+_lib("fakelib_sklearn", {
+    "": M(5, 2, imports=("fakelib_sklearn.base",
+                         "fakelib_sklearn.linear_model",
+                         "fakelib_sklearn.ensemble", "fakelib_sklearn.svm",
+                         "fakelib_sklearn.preprocessing",
+                         "fakelib_sklearn.metrics"),
+          use=("base", "linear_model", "preprocessing"),
+          export=("linear_model", "ensemble", "svm", "metrics")),
+    "base": M(10, 3),
+    "linear_model": M(20, 5),
+    "ensemble": M(15, 4),
+    "svm": M(12, 4),
+    "preprocessing": M(10, 2),
+    "metrics": M(8, 2),
+})
+
+# -- XML (xmlschema / elementpath analogs; CVE case study) --------------------
+_lib("fakelib_elementpath", {
+    "": M(5, 2, imports=("fakelib_elementpath.xpath",
+                         "fakelib_elementpath.parser"),
+          use=("xpath", "parser"), export=("xpath",)),
+    "xpath": M(12, 3),
+    "parser": M(8, 2),
+})
+
+_lib("fakelib_xmlschema", {
+    "": M(4, 1, imports=("fakelib_elementpath",
+                         "fakelib_xmlschema.validators",
+                         "fakelib_xmlschema.schema"),
+          use=("fakelib_elementpath", "validators", "schema"),
+          export=("validators", "schema")),
+    "validators": M(15, 4),
+    "schema": M(10, 3),
+})
+
+# -- the CVE tool's own package (imports xmlschema on its SBOM path) ----------
+_lib("fakelib_cvecore", {
+    "": M(3, 1, imports=("fakelib_cvecore.checkers",
+                         "fakelib_cvecore.scanner",
+                         "fakelib_cvecore.sbom"),
+          use=("checkers", "scanner"), export=("checkers", "scanner",
+                                               "sbom")),
+    "checkers": M(20, 5),
+    "scanner": M(15, 4),
+    "sbom": M(6, 2, imports=("fakelib_xmlschema",),
+              use=("fakelib_xmlschema",)),
+})
+
+# -- PDF (pdfminer analog; OCRmyPDF) ------------------------------------------
+_lib("fakelib_pdfminer", {
+    "": M(4, 1, imports=("fakelib_pdfminer.layout",
+                         "fakelib_pdfminer.converter",
+                         "fakelib_pdfminer.image", "fakelib_pdfminer.cmap",
+                         "fakelib_pdfminer.psparser"),
+          use=("layout", "converter", "psparser"),
+          export=("layout", "image", "cmap")),
+    "layout": M(15, 4),
+    "converter": M(12, 3),
+    "image": M(10, 3),
+    "cmap": M(18, 6),
+    "psparser": M(10, 2),
+})
+
+# -- forecasting (prophet analog; SensorTD: 1.99x) ----------------------------
+_lib("fakelib_prophet", {
+    "": M(5, 2, imports=("fakelib_prophet.forecaster",
+                         "fakelib_prophet.models", "fakelib_prophet.plot",
+                         "fakelib_prophet.diagnostics",
+                         "fakelib_prophet.serialize"),
+          use=("forecaster", "models"),
+          export=("forecaster", "plot", "diagnostics")),
+    "forecaster": M(25, 8),
+    "models": M(12, 4),
+    "plot": M(20, 6),
+    "diagnostics": M(15, 4),
+    "serialize": M(8, 2),
+})
+
+# -- package management (pkg_resources analog; FWB-CML: 1.17x) ----------------
+_lib("fakelib_pkgres", {
+    "": M(12, 3, imports=("fakelib_pkgres.working_set",
+                          "fakelib_pkgres.extern",
+                          "fakelib_pkgres._vendor"),
+          use=("working_set", "extern"), export=("working_set",)),
+    "working_set": M(20, 4),
+    "extern": M(8, 2),
+    "_vendor": M(7, 3),
+})
+
+# -- small fully-used libraries for the "clean" apps --------------------------
+_lib("fakelib_mathcore", {
+    "": M(3, 1, imports=("fakelib_mathcore.ops",), use=("ops",)),
+    "ops": M(6, 1),
+})
+_lib("fakelib_imgsmall", {
+    "": M(3, 1, imports=("fakelib_imgsmall.resize",), use=("resize",)),
+    "resize": M(7, 2),
+})
+_lib("fakelib_jsonlib", {
+    "": M(2, 1, imports=("fakelib_jsonlib.codec",), use=("codec",)),
+    "codec": M(5, 1),
+})
+_lib("fakelib_wordlib", {
+    "": M(2, 1, imports=("fakelib_wordlib.tokens",), use=("tokens",)),
+    "tokens": M(5, 1),
+})
+
+
+# ---------------------------------------------------------------------------
+# Applications (paper Table II + 5 clean apps)
+# ---------------------------------------------------------------------------
+
+H = HandlerSpec
+
+
+def _app(name: str, paper_id: str, suite: str, imports: tuple[str, ...],
+         handlers: tuple[HandlerSpec, ...], flagged: tuple[str, ...] = (),
+         target: float = 1.0) -> AppSpec:
+    return AppSpec(name=name, paper_id=paper_id, suite=suite,
+                   import_lines=imports, handlers=handlers,
+                   expected_flagged=flagged, target_init_speedup=target)
+
+
+APPS: dict[str, AppSpec] = {}
+
+for spec in [
+    # ---------------------------------------------------- RainbowCake
+    _app("dna_visualisation", "R-DV", "rainbowcake",
+         ("import fakelib_numpy",),
+         (H("visualise", 0.96, ("fakelib_numpy.core.work(22)",
+                                "fakelib_numpy.linalg.work(5)")),
+          H("spectrum", 0.04, ("fakelib_numpy.fft.work(4)",))),
+         flagged=("fakelib_numpy.polynomial", "fakelib_numpy.random",
+                  "fakelib_numpy.ma", "fakelib_numpy.fft"),
+         target=2.30),
+    _app("graph_bfs", "R-GB", "rainbowcake",
+         ("import fakelib_igraph",),
+         (H("bfs", 0.94, ("fakelib_igraph.core.work(20)",)),
+          H("stats", 0.03, ("fakelib_igraph.core.work(8)",)),
+          H("render", 0.03, ("fakelib_igraph.drawing.matplotlib.work(6)",))),
+         flagged=("fakelib_igraph.drawing", "fakelib_igraph.community",
+                  "fakelib_igraph.legacy"),
+         target=1.71),
+    _app("graph_mst", "R-GM", "rainbowcake",
+         ("import fakelib_igraph",),
+         (H("mst", 0.95, ("fakelib_igraph.core.work(22)",)),
+          H("render", 0.05, ("fakelib_igraph.drawing.cairo.work(5)",))),
+         flagged=("fakelib_igraph.drawing", "fakelib_igraph.community",
+                  "fakelib_igraph.legacy"),
+         target=1.74),
+    _app("graph_pagerank", "R-GPR", "rainbowcake",
+         ("import fakelib_igraph",),
+         (H("pagerank", 0.90, ("fakelib_igraph.core.work(18)",
+                               "fakelib_igraph.community.work(6)",)),
+          H("render", 0.10, ("fakelib_igraph.drawing.matplotlib.work(4)",))),
+         flagged=("fakelib_igraph.drawing", "fakelib_igraph.legacy"),
+         target=1.70),
+    _app("sentiment_analysis_r", "R-SA", "rainbowcake",
+         ("import fakelib_nltk", "import fakelib_textblob"),
+         (H("analyze", 0.92, ("fakelib_nltk.tokenize.work(14)",
+                              "fakelib_textblob.blob.work(6)",
+                              "fakelib_textblob.sentiments.work(5)")),
+          H("corpus_stats", 0.06, ("fakelib_nltk.corpus.work(6)",
+                                   "fakelib_nltk.data.work(4)")),
+          H("tag_text", 0.02, ("fakelib_nltk.tag.work(3)",))),
+         flagged=("fakelib_nltk.sem", "fakelib_nltk.stem",
+                  "fakelib_nltk.parse", "fakelib_nltk.tag"),
+         target=1.35),
+    # ------------------------------------------------------ FaaSLight
+    _app("price_ml_predict", "FL-PMP", "faaslight",
+         ("import fakelib_scipy",),
+         (H("predict", 0.95, ("fakelib_scipy.optimize.work(18)",
+                              "fakelib_scipy.stats.work(8)")),
+          H("integrate_curve", 0.05, ("fakelib_scipy.integrate.work(4)",))),
+         flagged=("fakelib_scipy.sparse", "fakelib_scipy.signal",
+                  "fakelib_scipy.interpolate"),
+         target=1.31),
+    _app("skimage_numpy", "FL-SN", "faaslight",
+         ("import fakelib_skimage", "import fakelib_numpy"),
+         (H("filter_image", 0.94, ("fakelib_skimage.filters.work(16)",
+                                   "fakelib_numpy.core.work(8)")),
+          H("recolor", 0.06, ("fakelib_skimage.color.work(5)",))),
+         flagged=("fakelib_skimage.morphology",
+                  "fakelib_skimage.segmentation",
+                  "fakelib_numpy.random"),
+         target=1.41),
+    _app("predict_wine_ml", "FL-PWM", "faaslight",
+         ("import fakelib_pandas",),
+         (H("predict", 0.97, ("fakelib_pandas.core.work(20)",
+                              "fakelib_pandas.io.work(6)")),
+          H("describe", 0.03, ("fakelib_pandas.computation.work(4)",))),
+         flagged=("fakelib_pandas.plotting", "fakelib_pandas.tseries",
+                  "fakelib_pandas.window"),
+         target=1.76),
+    _app("train_wine_ml", "FL-TWM", "faaslight",
+         ("import fakelib_pandas",),
+         (H("train", 0.96, ("fakelib_pandas.core.work(26)",
+                            "fakelib_pandas.io.work(8)")),
+          H("profile_data", 0.04, ("fakelib_pandas.computation.work(5)",))),
+         flagged=("fakelib_pandas.plotting", "fakelib_pandas.tseries",
+                  "fakelib_pandas.window"),
+         target=1.79),
+    _app("sentiment_analysis_fl", "FL-SA", "faaslight",
+         ("import fakelib_pandas", "import fakelib_scipy"),
+         (H("analyze", 0.98, ("fakelib_pandas.core.work(16)",
+                              "fakelib_scipy.stats.work(10)")),
+          H("aggregate", 0.02, ("fakelib_pandas.io.work(4)",))),
+         flagged=("fakelib_pandas.plotting", "fakelib_pandas.tseries",
+                  "fakelib_scipy.sparse", "fakelib_scipy.signal"),
+         target=2.01),
+    # -------------------------------------------------- FaaSWorkbench
+    _app("chameleon", "FWB-CML", "faasworkbench",
+         ("import fakelib_pkgres",),
+         (H("render_template", 0.97, ("fakelib_pkgres.working_set.work(18)",)),
+          H("list_plugins", 0.03, ("fakelib_pkgres.extern.work(4)",))),
+         flagged=("fakelib_pkgres._vendor",),
+         target=1.17),
+    _app("model_training", "FWB-MT", "faasworkbench",
+         ("import fakelib_scipy", "import fakelib_sklearn"),
+         (H("train", 0.95, ("fakelib_sklearn.linear_model.work(16)",
+                            "fakelib_scipy.optimize.work(10)",
+                            "fakelib_sklearn.preprocessing.work(5)")),
+          H("score", 0.05, ("fakelib_sklearn.metrics.work(4)",))),
+         flagged=("fakelib_sklearn.ensemble", "fakelib_sklearn.svm",
+                  "fakelib_scipy.sparse"),
+         target=1.21),
+    _app("model_serving", "FWB-MS", "faasworkbench",
+         ("import fakelib_scipy", "import fakelib_sklearn",
+          "import fakelib_numpy"),
+         (H("serve", 0.97, ("fakelib_sklearn.linear_model.work(14)",
+                            "fakelib_numpy.core.work(8)",
+                            "fakelib_scipy.stats.work(6)")),
+          H("batch_score", 0.03, ("fakelib_sklearn.metrics.work(4)",))),
+         flagged=("fakelib_sklearn.ensemble", "fakelib_sklearn.svm",
+                  "fakelib_numpy.random", "fakelib_numpy.fft"),
+         target=1.23),
+    # ----------------------------------------------------- Real-world
+    _app("ocrmypdf", "OCRmyPDF", "realworld",
+         ("import fakelib_pdfminer",),
+         (H("ocr", 0.94, ("fakelib_pdfminer.layout.work(14)",
+                          "fakelib_pdfminer.converter.work(8)",
+                          "fakelib_pdfminer.psparser.work(6)")),
+          H("extract_images", 0.06, ("fakelib_pdfminer.image.work(5)",))),
+         flagged=("fakelib_pdfminer.cmap", "fakelib_pdfminer.image"),
+         target=1.42),
+    _app("cve_bin_tool", "CVE-bin-tool", "realworld",
+         ("import fakelib_cvecore",),
+         (H("scan", 0.97, ("fakelib_cvecore.checkers.work(16)",
+                           "fakelib_cvecore.scanner.work(10)")),
+          H("sbom_scan", 0.03, ("fakelib_cvecore.sbom.work(4)",))),
+         flagged=("fakelib_xmlschema", "fakelib_cvecore.sbom"),
+         target=1.27),
+    _app("sensor_telemetry", "SensorTD", "realworld",
+         ("import fakelib_prophet",),
+         (H("forecast", 0.96, ("fakelib_prophet.forecaster.work(22)",
+                               "fakelib_prophet.models.work(8)")),
+          H("backtest", 0.04, ("fakelib_prophet.diagnostics.work(5)",))),
+         flagged=("fakelib_prophet.plot", "fakelib_prophet.diagnostics",
+                  "fakelib_prophet.serialize"),
+         target=1.99),
+    _app("heart_failure", "HFP", "realworld",
+         ("import fakelib_scipy", "import fakelib_sklearn"),
+         (H("predict_risk", 0.96, ("fakelib_sklearn.linear_model.work(14)",
+                                   "fakelib_scipy.stats.work(10)")),
+          H("cohort_stats", 0.04, ("fakelib_scipy.stats.work(6)",))),
+         flagged=("fakelib_scipy.sparse", "fakelib_scipy.signal",
+                  "fakelib_sklearn.ensemble", "fakelib_sklearn.svm"),
+         target=1.38),
+    # ----------------------------------------------------------- clean
+    _app("echo", "clean-1", "clean", (),
+         (H("echo", 1.0, ("len(str(event)) if event else 0",)),)),
+    _app("json_transform", "clean-2", "clean",
+         ("import fakelib_jsonlib",),
+         (H("transform", 1.0, ("fakelib_jsonlib.codec.work(12)",)),)),
+    _app("wordcount", "clean-3", "clean",
+         ("import fakelib_wordlib",),
+         (H("count", 1.0, ("fakelib_wordlib.tokens.work(12)",)),)),
+    _app("matrix_small", "clean-4", "clean",
+         ("import fakelib_mathcore",),
+         (H("multiply", 1.0, ("fakelib_mathcore.ops.work(14)",)),)),
+    _app("thumbnail", "clean-5", "clean",
+         ("import fakelib_imgsmall",),
+         (H("resize", 1.0, ("fakelib_imgsmall.resize.work(14)",)),)),
+]:
+    APPS[spec.name] = spec
+
+
+def lib_closure(libs: tuple[str, ...]) -> list[str]:
+    """Transitive fakelib dependencies (textblob -> nltk, etc.)."""
+    seen: list[str] = []
+    stack = list(libs)
+    while stack:
+        lib = stack.pop(0)
+        if lib in seen or lib not in LIBS:
+            continue
+        seen.append(lib)
+        for mod in LIBS[lib].modules.values():
+            for imp in mod.imports:
+                root = imp.split(".")[0]
+                if root != lib and root.startswith("fakelib_"):
+                    stack.append(root)
+    return seen
+
+
+PAPER_TABLE2 = {
+    # paper_id -> (init_speedup, e2e_speedup) from Table II, for
+    # side-by-side reporting in EXPERIMENTS.md.
+    "R-DV": (2.30, 2.26), "R-GB": (1.71, 1.66), "R-GM": (1.74, 1.70),
+    "R-GPR": (1.70, 1.62), "R-SA": (1.35, 1.33), "FL-PMP": (1.31, 1.30),
+    "FL-SN": (1.41, 1.36), "FL-PWM": (1.76, 1.68), "FL-TWM": (1.79, 1.50),
+    "FL-SA": (2.01, 2.01), "FWB-CML": (1.17, 1.05), "FWB-MT": (1.21, 1.09),
+    "FWB-MS": (1.23, 1.10), "OCRmyPDF": (1.42, 1.19),
+    "CVE-bin-tool": (1.27, 1.20), "SensorTD": (1.99, 1.09),
+    "HFP": (1.38, 1.30),
+}

@@ -1,0 +1,18 @@
+"""SLIMSTART — the paper's primary contribution.
+
+Profile-guided optimization of serverless cold starts:
+
+* ``repro.core.profiler`` — dynamic profiler: import-time hierarchy
+  (Eq. 1-3), sampling call-path profiler + CCT, utilization metric
+  (Eq. 4), inefficiency detection, reports, async collection.
+* ``repro.core.optimizer`` — automated code optimizer: AST
+  deferred-import transform, PEP 562 re-export shim, lazy-module proxy,
+  FaaSLight-style static baseline, and the Level-B actuators
+  (lazy weight materialization / deferred compilation).
+* ``repro.core.adaptive`` — Eq. 5-7 workload-shift monitor and the
+  CI/CD control loop.
+"""
+
+from repro.core import adaptive, optimizer, profiler  # noqa: F401
+
+__all__ = ["profiler", "optimizer", "adaptive"]

@@ -1,0 +1,11 @@
+"""Adaptive mechanism for evolving workloads (paper §IV-C)."""
+
+from repro.core.adaptive.monitor import WorkloadMonitor, MonitorConfig
+from repro.core.adaptive.controller import SlimStartController, ControllerConfig
+
+__all__ = [
+    "WorkloadMonitor",
+    "MonitorConfig",
+    "SlimStartController",
+    "ControllerConfig",
+]

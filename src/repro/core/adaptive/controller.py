@@ -1,0 +1,90 @@
+"""CI/CD-style control loop tying monitor -> profiler -> optimizer.
+
+The paper integrates SLIMSTART into the deployment pipeline: the
+adaptive monitor watches live traffic; when Eq. 7 fires, a profiling
+phase is scheduled, the analyzer regenerates the optimization report,
+and the code optimizer re-applies deferred imports for the *new*
+workload (previously deferred imports whose packages became hot are
+restored first — the ``.orig`` backups make the transform reversible).
+
+The controller is deliberately synchronous and callback-driven so the
+same code runs (a) in unit tests with a fake clock, (b) under the local
+serverless harness, and (c) inside the Level-B serving engine where the
+"optimizer" callback swaps lazy-materialization policies instead of
+rewriting source.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.core.adaptive.monitor import MonitorConfig, WindowStats, WorkloadMonitor
+from repro.core.profiler.report import OptimizationReport
+
+
+@dataclass
+class ControllerConfig:
+    monitor: MonitorConfig = field(default_factory=MonitorConfig)
+    # Cooldown: don't re-profile more often than this many seconds even if
+    # every window triggers (guards against oscillating workloads).
+    cooldown_s: float = 0.0
+    # Profile this many invocations when a profiling phase is scheduled.
+    profile_invocations: int = 200
+
+
+class SlimStartController:
+    """Adaptive profile->optimize loop.
+
+    Parameters
+    ----------
+    profile_fn:
+        Callable invoked to run a profiling phase; must return an
+        :class:`OptimizationReport`.
+    optimize_fn:
+        Callable applying the report (AST rewrite / lazy policy swap).
+    """
+
+    def __init__(
+        self,
+        profile_fn: Callable[[], OptimizationReport],
+        optimize_fn: Callable[[OptimizationReport], None],
+        config: ControllerConfig | None = None,
+        clock: Callable[[], float] = time.monotonic,
+    ) -> None:
+        self.config = config or ControllerConfig()
+        self.monitor = WorkloadMonitor(self.config.monitor, clock=clock)
+        self.profile_fn = profile_fn
+        self.optimize_fn = optimize_fn
+        self.clock = clock
+        self._last_profile_t: Optional[float] = None
+        self.reports: list[OptimizationReport] = []
+        self.profile_phases = 0
+
+    # ---------------------------------------------------------------- events
+    def on_invocation(self, handler: str, n: int = 1) -> Optional[WindowStats]:
+        """Feed one (or ``n``) invocation events; runs the re-profile loop
+        when the monitor fires."""
+        stats = self.monitor.record(handler, n)
+        if stats is not None and stats.triggered and self._cooldown_ok():
+            self._run_phase()
+        return stats
+
+    def force_profile(self) -> OptimizationReport:
+        """Initial deployment profiling phase (before any traffic shift)."""
+        return self._run_phase()
+
+    # -------------------------------------------------------------- internals
+    def _cooldown_ok(self) -> bool:
+        if self._last_profile_t is None or self.config.cooldown_s <= 0:
+            return True
+        return (self.clock() - self._last_profile_t) >= self.config.cooldown_s
+
+    def _run_phase(self) -> OptimizationReport:
+        report = self.profile_fn()
+        self.reports.append(report)
+        self.optimize_fn(report)
+        self._last_profile_t = self.clock()
+        self.profile_phases += 1
+        return report

@@ -1,0 +1,101 @@
+"""Data-driven adaptive profiling trigger (paper §IV-C, Eq. 5-7).
+
+Tracks per-handler invocation counts in fixed windows of width Δt.  At
+each window boundary it computes
+
+    p_i(t)  = N_i(t) / Σ_j N_j(t)                  (Eq. 5)
+    Δp_i(t) = p_i(t) - p_i(t - Δt)                 (Eq. 6)
+
+and signals a re-profile when
+
+    Σ_i |Δp_i(t)| > ε                              (Eq. 7)
+
+Handlers appearing or disappearing between windows contribute their full
+probability mass to the aggregate change (|p - 0|), so new entry points
+trigger profiling naturally.  The clock is injectable for tests and for
+trace replay (benchmarks/bench_adaptive.py replays an Azure-style trace
+through this exact code).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+
+@dataclass
+class MonitorConfig:
+    window_s: float = 12 * 3600.0  # paper uses 12-hour windows
+    epsilon: float = 0.002  # paper's ε
+    min_invocations: int = 1  # ignore empty windows
+
+
+@dataclass
+class WindowStats:
+    t_end: float
+    probabilities: dict[str, float]
+    total_invocations: int
+    aggregate_change: float
+    triggered: bool
+
+
+class WorkloadMonitor:
+    """Streaming Eq. 5-7 evaluator."""
+
+    def __init__(self, config: MonitorConfig | None = None,
+                 clock: Callable[[], float] = time.monotonic) -> None:
+        self.config = config or MonitorConfig()
+        self.clock = clock
+        self._counts: dict[str, int] = {}
+        self._window_start = clock()
+        self._prev_probs: Optional[dict[str, float]] = None
+        self.history: list[WindowStats] = []
+        self.triggers = 0
+
+    # --------------------------------------------------------------- record
+    def record(self, handler: str, n: int = 1) -> Optional[WindowStats]:
+        """Record ``n`` invocations of ``handler``.  If the current window
+        has elapsed, close it and return its stats (with the trigger
+        decision); otherwise return None."""
+        now = self.clock()
+        closed = None
+        if now - self._window_start >= self.config.window_s:
+            closed = self._close_window(now)
+        self._counts[handler] = self._counts.get(handler, 0) + n
+        return closed
+
+    def flush(self) -> Optional[WindowStats]:
+        """Force-close the current window (end of trace / shutdown)."""
+        return self._close_window(self.clock())
+
+    # ---------------------------------------------------------------- window
+    def _close_window(self, now: float) -> Optional[WindowStats]:
+        counts, self._counts = self._counts, {}
+        self._window_start = now
+        total = sum(counts.values())
+        if total < self.config.min_invocations:
+            return None
+        probs = {h: c / total for h, c in counts.items()}  # Eq. 5
+        if self._prev_probs is None:
+            change = 0.0
+            triggered = False
+        else:
+            keys = set(probs) | set(self._prev_probs)
+            change = sum(
+                abs(probs.get(k, 0.0) - self._prev_probs.get(k, 0.0))  # Eq. 6
+                for k in keys
+            )
+            triggered = change > self.config.epsilon  # Eq. 7
+        self._prev_probs = probs
+        stats = WindowStats(
+            t_end=now,
+            probabilities=probs,
+            total_invocations=total,
+            aggregate_change=change,
+            triggered=triggered,
+        )
+        self.history.append(stats)
+        if triggered:
+            self.triggers += 1
+        return stats

@@ -1,0 +1,40 @@
+"""SLIMSTART automated code optimizer (paper §IV-B).
+
+``ast_transform`` rewrites flagged *global* imports into *deferred*
+imports at their first usage points (function entry of every function
+that uses the binding), preserving functional correctness:
+
+* bindings that are only re-exported (no in-file usage) are served by a
+  generated PEP 562 module ``__getattr__`` shim, keeping the public API;
+* bindings used at module level / in lambdas / class bodies are left
+  untouched (unsafe to defer) and reported;
+* everything else: the global import is commented out and the statement
+  is re-inserted at the top of each using function.
+
+``static_baseline`` implements the FaaSLight-style comparison point:
+static reachability over the module import graph, removing only imports
+that no code path can reach — workload-blind by construction.
+
+``lazy_import`` provides the runtime proxy fallback, and ``lazy_params``
+/ ``lazy_compile`` are the Level-B actuators (deferred weight
+materialization and deferred entry-point compilation) — see DESIGN.md §2.
+"""
+
+from repro.core.optimizer.ast_transform import (
+    OptimizeResult,
+    optimize_source,
+    optimize_file,
+    optimize_tree,
+)
+from repro.core.optimizer.lazy_import import lazy_import, LazyModule
+from repro.core.optimizer.static_baseline import StaticReachability
+
+__all__ = [
+    "OptimizeResult",
+    "optimize_source",
+    "optimize_file",
+    "optimize_tree",
+    "lazy_import",
+    "LazyModule",
+    "StaticReachability",
+]

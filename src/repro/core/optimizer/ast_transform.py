@@ -1,0 +1,434 @@
+"""AST-based deferred-import transformation (paper §IV-B).
+
+Given a source file and a list of *defer targets* (dotted package names
+flagged by the profiler, e.g. ``nltk.sem``), the transformer:
+
+1. finds module-level import statements whose imported modules fall
+   inside a defer target's subtree;
+2. performs a scope-aware safety analysis of every name the statement
+   binds;
+3. comments out the global import and re-inserts the statement at the
+   top of each function that uses the binding ("first usage point" per
+   scope — lazy, and paid only by the code paths that need it);
+4. for bindings with *no* in-file usage (pure re-exports, the
+   ``igraph.__init__`` pattern), appends a PEP 562 ``__getattr__`` shim
+   so external attribute access still works;
+5. refuses (and reports) any import whose binding is used at module
+   level, in a class body, in a lambda, or rebound via ``global`` —
+   deferring those could change behaviour.
+
+The rewrite is *line surgery* guided by the AST rather than
+``ast.unparse`` so untouched code keeps its formatting, comments and
+line numbers (important for diffability in CI/CD integration).
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+SHIM_BEGIN = "# --- SLIMSTART deferred-import shim (auto-generated) ---"
+COMMENT_TAG = "# SLIMSTART: deferred"
+
+
+# --------------------------------------------------------------------------
+# Import statement model
+# --------------------------------------------------------------------------
+
+@dataclass
+class _Binding:
+    name: str  # name bound in the module namespace
+    import_module: str  # module whose import must be triggered
+    attr: Optional[str]  # attribute to fetch from import_module (from-imports)
+    root: Optional[str]  # for "import a.b": binding is root module "a"
+
+
+@dataclass
+class _ImportStmt:
+    node: ast.stmt
+    lineno: int  # 1-based first line
+    end_lineno: int
+    bindings: list[_Binding]
+    text: str  # deferred replacement statement (one per binding set)
+
+
+def _resolve_relative(module: Optional[str], level: int,
+                      module_name: Optional[str]) -> Optional[str]:
+    """Resolve a relative ``from . import x`` given the file's dotted name.
+
+    ``module_name`` should name the *module* the file defines
+    (e.g. ``fakelib_igraph`` for ``fakelib_igraph/__init__.py``,
+    ``fakelib_igraph.clustering`` for ``clustering.py``).  Packages
+    (``__init__``) resolve level 1 to themselves.
+    """
+    if level == 0:
+        return module
+    if module_name is None:
+        return None
+    parts = module_name.split(".")
+    # For a plain module, level 1 refers to its parent package.
+    # _resolve is called with is_pkg flag via module_name convention:
+    # callers pass the *package* path for __init__ files.
+    base = parts[: len(parts) - (level - 1)] if level > 1 else parts
+    if not base:
+        return None
+    prefix = ".".join(base)
+    return f"{prefix}.{module}" if module else prefix
+
+
+def _in_subtree(module: str, targets: Sequence[str]) -> bool:
+    return any(module == t or module.startswith(t + ".") for t in targets)
+
+
+def _collect_imports(tree: ast.Module, targets: Sequence[str],
+                     module_name: Optional[str],
+                     is_package: bool) -> list[_ImportStmt]:
+    """Module-level import statements matching a defer target.
+
+    Conditional imports (inside module-level ``if``/``try``) are *not*
+    collected — deferring them could change feature-detection behaviour.
+    """
+    out: list[_ImportStmt] = []
+    pkg_name = module_name if is_package else (
+        module_name.rsplit(".", 1)[0] if module_name and "." in module_name
+        else None)
+    for node in tree.body:
+        if isinstance(node, ast.Import):
+            bindings = []
+            for alias in node.names:
+                mod = alias.name
+                if not _in_subtree(mod, targets):
+                    continue
+                if alias.asname:
+                    bindings.append(_Binding(alias.asname, mod, None, None))
+                else:
+                    root = mod.split(".", 1)[0]
+                    bindings.append(_Binding(root, mod, None, root))
+            if bindings:
+                out.append(_ImportStmt(node, node.lineno, node.end_lineno,
+                                       bindings, ast.unparse(node)))
+        elif isinstance(node, ast.ImportFrom):
+            if any(a.name == "*" for a in node.names):
+                continue  # star imports are never safe to defer
+            resolved = _resolve_relative(
+                node.module, node.level,
+                module_name if is_package else pkg_name)
+            if resolved is None:
+                continue
+            # A from-import matches if the source module is in a target
+            # subtree, or if it imports a *submodule* that is.
+            direct = _in_subtree(resolved, targets)
+            bindings = []
+            for alias in node.names:
+                sub = f"{resolved}.{alias.name}"
+                if direct:
+                    bindings.append(
+                        _Binding(alias.asname or alias.name, resolved,
+                                 alias.name, None))
+                elif _in_subtree(sub, targets):
+                    # ``from pkg import heavy_submodule``
+                    bindings.append(
+                        _Binding(alias.asname or alias.name, sub, None, None))
+            if bindings and len(bindings) == len(node.names):
+                out.append(_ImportStmt(node, node.lineno, node.end_lineno,
+                                       bindings, ast.unparse(node)))
+            elif bindings:
+                # Mixed statement (some names deferred, some not): rewrite
+                # as two statements is possible; keep simple & safe — defer
+                # only if every alias matched (report otherwise).
+                pass
+    return out
+
+
+# --------------------------------------------------------------------------
+# Usage / safety analysis
+# --------------------------------------------------------------------------
+
+class _UsageVisitor(ast.NodeVisitor):
+    """Scope-aware usage analysis for a set of module-level bindings."""
+
+    def __init__(self, names: set[str]):
+        self.names = names
+        self.func_stack: list[ast.AST] = []
+        self.lambda_depth = 0
+        self.class_depth = 0
+        # name -> list of top-level-function nodes that read it
+        self.func_uses: dict[str, set[ast.AST]] = {n: set() for n in names}
+        # name -> True if used at module level / class body / lambda
+        self.unsafe: dict[str, bool] = {n: False for n in names}
+        # functions that rebind a name locally (no import needed there)
+        self.local_rebinds: dict[ast.AST, set[str]] = {}
+
+    # -- scope tracking
+    def _enter_func(self, node):
+        self.func_stack.append(node)
+        # Parameters / assignments shadow globals inside this function.
+        self.local_rebinds.setdefault(node, set())
+        for arg in list(getattr(node.args, "args", [])) + \
+                list(getattr(node.args, "posonlyargs", [])) + \
+                list(getattr(node.args, "kwonlyargs", [])):
+            if arg.arg in self.names:
+                self.local_rebinds[node].add(arg.arg)
+        self.generic_visit(node)
+        self.func_stack.pop()
+
+    def visit_FunctionDef(self, node):
+        # Decorators & default args evaluate in the enclosing scope.
+        for dec in node.decorator_list:
+            self.visit(dec)
+        for d in list(node.args.defaults) + [d for d in node.args.kw_defaults
+                                             if d is not None]:
+            self.visit(d)
+        self._enter_func(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Lambda(self, node):
+        self.lambda_depth += 1
+        self.generic_visit(node)
+        self.lambda_depth -= 1
+
+    def visit_ClassDef(self, node):
+        for dec in node.decorator_list:
+            self.visit(dec)
+        for base in node.bases + [kw.value for kw in node.keywords]:
+            self.visit(base)
+        self.class_depth += 1
+        for stmt in node.body:
+            self.visit(stmt)
+        self.class_depth -= 1
+
+    # -- usages
+    def visit_Name(self, node):
+        name = node.id
+        if name not in self.names:
+            return
+        if isinstance(node.ctx, ast.Load):
+            if self.lambda_depth > 0:
+                # Lambdas evaluate later; we cannot insert imports there.
+                if not self.func_stack:
+                    self.unsafe[name] = True
+                else:
+                    self.func_uses[name].add(self.func_stack[0])
+            elif not self.func_stack:
+                self.unsafe[name] = True  # module/class-level read
+            elif self.class_depth > 0 and self._class_inside_func():
+                self.func_uses[name].add(self.func_stack[0])
+            else:
+                self.func_uses[name].add(self.func_stack[0])
+        else:  # Store / Del
+            if self.func_stack:
+                self.local_rebinds.setdefault(
+                    self.func_stack[-1], set()).add(name)
+            else:
+                self.unsafe[name] = True  # module-level rebind
+
+    def _class_inside_func(self) -> bool:
+        return bool(self.func_stack)
+
+    def visit_Global(self, node):
+        for name in node.names:
+            if name in self.names:
+                self.unsafe[name] = True
+
+    def visit_Import(self, node):  # ignore the import statements themselves
+        pass
+
+    def visit_ImportFrom(self, node):
+        pass
+
+
+# --------------------------------------------------------------------------
+# Result / driver
+# --------------------------------------------------------------------------
+
+@dataclass
+class OptimizeResult:
+    deferred: list[str] = field(default_factory=list)  # statements deferred
+    shimmed: list[str] = field(default_factory=list)  # names served by shim
+    skipped: list[str] = field(default_factory=list)  # unsafe, left alone
+    n_insertions: int = 0
+    changed: bool = False
+
+
+def optimize_tree(source: str, targets: Sequence[str],
+                  module_name: Optional[str] = None,
+                  is_package: bool = False) -> tuple[str, OptimizeResult]:
+    """Pure-function core: returns (new_source, result)."""
+    res = OptimizeResult()
+    if not targets:
+        return source, res
+    tree = ast.parse(source)
+    imports = _collect_imports(tree, targets, module_name, is_package)
+    if not imports:
+        return source, res
+
+    names: set[str] = set()
+    for imp in imports:
+        names.update(b.name for b in imp.bindings)
+    visitor = _UsageVisitor(names)
+    visitor.visit(tree)
+
+    lines = source.splitlines(keepends=True)
+    # Edits: (line_index, kind, payload) applied bottom-up.
+    comment_ranges: list[tuple[int, int]] = []
+    insertions: dict[int, list[str]] = {}  # 0-based line -> stmts to insert
+    shim_entries: dict[str, tuple[tuple[str, ...], Optional[str], Optional[str]]] = {}
+
+    for imp in imports:
+        unsafe = [b.name for b in imp.bindings if visitor.unsafe[b.name]]
+        if unsafe:
+            res.skipped.append(
+                f"{imp.text} (module-level use of {', '.join(unsafe)})")
+            continue
+        res.deferred.append(imp.text)
+        comment_ranges.append((imp.lineno - 1, imp.end_lineno - 1))
+        for b in imp.bindings:
+            users = visitor.func_uses[b.name]
+            # Functions that locally rebind the name never read the global.
+            users = {
+                f for f in users
+                if b.name not in visitor.local_rebinds.get(f, set())
+            }
+            # Every deferred binding also gets a PEP 562 shim entry: the
+            # module's namespace is public API (``pkg.sub`` attribute
+            # access from outside must keep working even though the
+            # global import is gone).  The shim only fires when the name
+            # is absent from globals, so it costs nothing on the paths
+            # that imported it via the in-function deferred import.
+            prev = shim_entries.get(b.name)
+            mods = (prev[0] if prev else ()) + (b.import_module,)
+            shim_entries[b.name] = (mods, b.attr, b.root)
+            if not users:
+                res.shimmed.append(b.name)
+                continue
+            stmt = _binding_stmt(b)
+            for fn in users:
+                line0 = _body_insert_line(fn)
+                indent = _body_indent(fn, lines)
+                insertions.setdefault(line0, []).append(
+                    f"{indent}{stmt}  {COMMENT_TAG}\n")
+                res.n_insertions += 1
+
+    if not res.deferred:
+        return source, res
+
+    # Apply edits bottom-up so line numbers stay valid.
+    for line0 in sorted(insertions, reverse=True):
+        lines[line0:line0] = insertions[line0]
+    for lo, hi in sorted(comment_ranges, reverse=True):
+        for i in range(lo, hi + 1):
+            stripped = lines[i]
+            prefix_len = len(stripped) - len(stripped.lstrip())
+            lines[i] = (stripped[:prefix_len] + "# " +
+                        stripped[prefix_len:].rstrip("\n") +
+                        f"  {COMMENT_TAG}\n")
+
+    new_source = "".join(lines)
+    if shim_entries:
+        new_source += _render_shim(shim_entries)
+    res.changed = True
+    return new_source, res
+
+
+def _binding_stmt(b: _Binding) -> str:
+    if b.attr is not None:
+        return f"from {b.import_module} import {b.attr} as {b.name}"
+    if b.root is not None:  # plain ``import a.b`` binding root ``a``
+        return f"import {b.import_module}"
+    return f"import {b.import_module} as {b.name}"
+
+
+def _body_insert_line(fn: ast.AST) -> int:
+    """0-based line index of the first *non-docstring* body statement."""
+    body = fn.body
+    first = body[0]
+    if (isinstance(first, ast.Expr)
+            and isinstance(first.value, ast.Constant)
+            and isinstance(first.value.value, str) and len(body) > 1):
+        first = body[1]
+    return first.lineno - 1
+
+
+def _body_indent(fn: ast.AST, lines: list[str]) -> str:
+    line = lines[_body_insert_line(fn)]
+    return line[: len(line) - len(line.lstrip())]
+
+
+def _render_shim(entries: dict[str, tuple[tuple[str, ...], Optional[str],
+                                          Optional[str]]]) -> str:
+    rows = ",\n".join(
+        f"    {name!r}: ({mods!r}, {attr!r}, {root!r})"
+        for name, (mods, attr, root) in sorted(entries.items())
+    )
+    return f"""
+
+{SHIM_BEGIN}
+_SLIMSTART_DEFERRED = {{
+{rows},
+}}
+
+
+def __getattr__(_name):
+    _spec = _SLIMSTART_DEFERRED.get(_name)
+    if _spec is None:
+        raise AttributeError(_name)
+    import importlib as _il
+    import sys as _sys
+    for _m in _spec[0]:
+        _mod = _il.import_module(_m)
+    if _spec[1] is not None:
+        try:
+            # __dict__ lookup: must not re-enter this __getattr__ when the
+            # attribute is really a submodule of *this* package.
+            _val = _mod.__dict__[_spec[1]]
+        except KeyError:
+            _val = _il.import_module(_spec[0][-1] + "." + _spec[1])
+    elif _spec[2] is not None:
+        _val = _sys.modules[_spec[2]]
+    else:
+        _val = _mod
+    globals()[_name] = _val
+    return _val
+# --- end SLIMSTART shim ---
+"""
+
+
+def optimize_source(source: str, targets: Sequence[str],
+                    module_name: Optional[str] = None,
+                    is_package: bool = False
+                    ) -> tuple[str, OptimizeResult]:
+    """Alias for :func:`optimize_tree` (public API name)."""
+    return optimize_tree(source, targets, module_name, is_package)
+
+
+def optimize_file(path: str, targets: Sequence[str],
+                  module_name: Optional[str] = None,
+                  backup: bool = True) -> OptimizeResult:
+    """Rewrite ``path`` in place (writing ``path + '.orig'`` first)."""
+    with open(path) as fh:
+        source = fh.read()
+    is_package = os.path.basename(path) == "__init__.py"
+    new_source, res = optimize_tree(source, targets, module_name, is_package)
+    if res.changed:
+        if backup and not os.path.exists(path + ".orig"):
+            with open(path + ".orig", "w") as fh:
+                fh.write(source)
+        with open(path, "w") as fh:
+            fh.write(new_source)
+    return res
+
+
+def restore_file(path: str) -> bool:
+    """Undo :func:`optimize_file` using the ``.orig`` backup."""
+    orig = path + ".orig"
+    if not os.path.exists(orig):
+        return False
+    with open(orig) as fh:
+        source = fh.read()
+    with open(path, "w") as fh:
+        fh.write(source)
+    os.remove(orig)
+    return True

@@ -1,0 +1,90 @@
+"""Runtime lazy-module proxy.
+
+Fallback actuator for cases where the AST transform cannot prove a
+deferred import safe (module-level usage of the binding): the global
+import is replaced by ``name = lazy_import("pkg.mod")`` which defers the
+real import to the first *attribute access* instead of the first call.
+This is the importlib.util.LazyLoader idea with two additions we need:
+
+* the proxy is reentrant-safe (imports under a lock, then swaps itself
+  out of the caller's namespace is NOT attempted — attribute access
+  keeps going through the proxy, which is measurably cheap);
+* ``is_loaded`` / ``loaded_modules`` introspection so the profiler can
+  report which deferred imports actually fired under a workload.
+"""
+
+from __future__ import annotations
+
+import importlib
+import threading
+from typing import Any, Optional
+
+_REGISTRY: dict[str, "LazyModule"] = {}
+_REGISTRY_LOCK = threading.Lock()
+
+
+class LazyModule:
+    """Import-on-first-attribute-access module proxy."""
+
+    __slots__ = ("_lazy_name", "_lazy_module", "_lazy_lock")
+
+    def __init__(self, name: str) -> None:
+        object.__setattr__(self, "_lazy_name", name)
+        object.__setattr__(self, "_lazy_module", None)
+        object.__setattr__(self, "_lazy_lock", threading.Lock())
+
+    def _lazy_load(self):
+        mod = object.__getattribute__(self, "_lazy_module")
+        if mod is None:
+            lock = object.__getattribute__(self, "_lazy_lock")
+            with lock:
+                mod = object.__getattribute__(self, "_lazy_module")
+                if mod is None:
+                    name = object.__getattribute__(self, "_lazy_name")
+                    mod = importlib.import_module(name)
+                    object.__setattr__(self, "_lazy_module", mod)
+        return mod
+
+    def __getattr__(self, item: str) -> Any:
+        return getattr(self._lazy_load(), item)
+
+    def __setattr__(self, key: str, value: Any) -> None:
+        setattr(self._lazy_load(), key, value)
+
+    def __dir__(self):
+        return dir(self._lazy_load())
+
+    def __repr__(self) -> str:
+        name = object.__getattribute__(self, "_lazy_name")
+        loaded = object.__getattribute__(self, "_lazy_module") is not None
+        state = "loaded" if loaded else "deferred"
+        return f"<LazyModule {name!r} ({state})>"
+
+    @property
+    def is_loaded(self) -> bool:  # pragma: no cover - trivial
+        return object.__getattribute__(self, "_lazy_module") is not None
+
+
+def lazy_import(name: str) -> LazyModule:
+    """Return a (cached) lazy proxy for ``name``."""
+    with _REGISTRY_LOCK:
+        proxy = _REGISTRY.get(name)
+        if proxy is None:
+            proxy = LazyModule(name)
+            _REGISTRY[name] = proxy
+        return proxy
+
+
+def loaded_modules() -> dict[str, bool]:
+    """Which lazily-declared modules have actually been imported."""
+    with _REGISTRY_LOCK:
+        return {
+            name: object.__getattribute__(p, "_lazy_module") is not None
+            for name, p in _REGISTRY.items()
+        }
+
+
+def reset_registry() -> None:
+    """Test helper: forget all proxies (does not unimport modules)."""
+    with _REGISTRY_LOCK:
+        _REGISTRY.clear()

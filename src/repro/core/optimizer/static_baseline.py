@@ -1,0 +1,204 @@
+"""FaaSLight-style static-reachability baseline (paper §II-B, §V-d).
+
+The comparison point the paper evaluates against: a purely static
+analysis that
+
+1. parses every source file (application + vendored libraries) into an
+   import graph,
+2. marks an import edge *live* iff the binding it creates is referenced
+   anywhere in the importing module (over-approximating: any handler,
+   any code path — static analysis cannot know the workload),
+3. computes the set of modules reachable from the application entry
+   module over live edges,
+4. eliminates (defers) only imports of modules proven unreachable.
+
+Workload-dependent libraries — used by *some* rarely-invoked handler —
+are statically reachable and therefore kept, which is exactly the
+false-positive class SLIMSTART's dynamic profiling eliminates
+(paper Observation 2).  The baseline reuses the same AST rewriter as
+SLIMSTART so the measured difference is purely *which* imports each
+approach can prove removable.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass
+class _ModuleInfo:
+    name: str
+    path: str
+    # binding name -> absolute module it triggers
+    import_bindings: dict[str, str] = field(default_factory=dict)
+    # absolute modules imported regardless of binding use (side-effect
+    # position: ``from x import y`` always executes x)
+    hard_deps: set[str] = field(default_factory=set)
+    used_names: set[str] = field(default_factory=set)
+    exported_names: set[str] = field(default_factory=set)  # __all__
+
+
+def _module_name_for(path: str, root: str) -> Optional[str]:
+    rel = os.path.relpath(path, root)
+    if not rel.endswith(".py"):
+        return None
+    rel = rel[:-3]
+    parts = rel.split(os.sep)
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts) if parts else None
+
+
+class StaticReachability:
+    """Static import-graph reachability over a source tree."""
+
+    def __init__(self, roots: list[str]) -> None:
+        """``roots`` are directories scanned for ``.py`` files (the app dir
+        and its vendored library dirs)."""
+        self.roots = [os.path.abspath(r) for r in roots]
+        self.modules: dict[str, _ModuleInfo] = {}
+        self._scan()
+
+    # ------------------------------------------------------------------ scan
+    def _scan(self) -> None:
+        for root in self.roots:
+            for dirpath, _dirnames, filenames in os.walk(root):
+                for fn in filenames:
+                    if not fn.endswith(".py") or fn.endswith(".orig"):
+                        continue
+                    path = os.path.join(dirpath, fn)
+                    name = _module_name_for(path, root)
+                    if name:
+                        self.modules[name] = self._parse(name, path)
+        # Post-pass: ``from pkg import x`` binds the submodule pkg.x when
+        # that module exists in-tree, otherwise the attribute's package.
+        for info in self.modules.values():
+            for binding, mod in list(info.import_bindings.items()):
+                if "." in mod and mod not in self.modules:
+                    parent = mod.rsplit(".", 1)[0]
+                    if parent in self.modules:
+                        info.import_bindings[binding] = parent
+
+    def _parse(self, name: str, path: str) -> _ModuleInfo:
+        info = _ModuleInfo(name=name, path=path)
+        with open(path) as fh:
+            try:
+                tree = ast.parse(fh.read())
+            except SyntaxError:
+                return info
+        is_pkg = os.path.basename(path) == "__init__.py"
+        pkg = name if is_pkg else (name.rsplit(".", 1)[0]
+                                   if "." in name else "")
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    binding = alias.asname or alias.name.split(".", 1)[0]
+                    info.import_bindings[binding] = alias.name
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if node.level > 0:
+                    base = pkg.split(".") if pkg else []
+                    base = base[: len(base) - (node.level - 1)] \
+                        if node.level > 1 else base
+                    mod = ".".join(base + ([mod] if mod else []))
+                if not mod:
+                    continue
+                info.hard_deps.add(mod)
+                for alias in node.names:
+                    if alias.name == "*":
+                        info.used_names.add("*")
+                        continue
+                    binding = alias.asname or alias.name
+                    # ``from pkg import sub`` may bind a submodule; resolved
+                    # against the full module table in the _scan post-pass.
+                    info.import_bindings[binding] = f"{mod}.{alias.name}"
+            elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                info.used_names.add(node.id)
+            elif isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name) and tgt.id == "__all__":
+                        if isinstance(node.value, (ast.List, ast.Tuple)):
+                            for elt in node.value.elts:
+                                if isinstance(elt, ast.Constant) and \
+                                        isinstance(elt.value, str):
+                                    info.exported_names.add(elt.value)
+        return info
+
+    def add_module(self, path: str, name: str) -> None:
+        """Register an out-of-root source file (e.g. the app's
+        ``handler.py``) under an explicit module name."""
+        self.modules[name] = self._parse(name, path)
+        for info in self.modules.values():
+            for binding, mod in list(info.import_bindings.items()):
+                if "." in mod and mod not in self.modules:
+                    parent = mod.rsplit(".", 1)[0]
+                    if parent in self.modules:
+                        info.import_bindings[binding] = parent
+
+    # ----------------------------------------------------------- reachability
+    def _live_deps(self, info: _ModuleInfo) -> set[str]:
+        """Modules this module keeps alive under static analysis."""
+        live: set[str] = set(info.hard_deps)
+        star = "*" in info.used_names
+        for binding, mod in info.import_bindings.items():
+            # Static analysis must keep a binding if it is referenced
+            # anywhere in the file OR re-exported (__all__) OR the file
+            # star-imports (anything could be used downstream).
+            if star or binding in info.used_names \
+                    or binding in info.exported_names:
+                live.add(mod)
+        return live
+
+    def reachable_from(self, entry: str) -> set[str]:
+        """Set of in-tree modules statically reachable from ``entry``."""
+        seen: set[str] = set()
+        stack = [entry]
+        while stack:
+            cur = stack.pop()
+            if cur in seen:
+                continue
+            seen.add(cur)
+            info = self.modules.get(cur)
+            if info is None:
+                # Maybe a package whose __init__ exists under another key;
+                # also walk parent packages (importing a.b imports a).
+                continue
+            deps = self._live_deps(info)
+            for dep in deps:
+                # Importing a.b.c imports a and a.b as well.
+                parts = dep.split(".")
+                for i in range(1, len(parts) + 1):
+                    prefix = ".".join(parts[:i])
+                    if prefix in self.modules and prefix not in seen:
+                        stack.append(prefix)
+        return seen
+
+    def unreachable_imports(self, entry: str) -> dict[str, list[str]]:
+        """Per-module list of defer targets static analysis can prove.
+
+        Returns {module_name: [unreachable dotted targets]} — the input
+        the shared AST rewriter consumes for the STAT baseline.
+        """
+        reachable = self.reachable_from(entry)
+        out: dict[str, list[str]] = {}
+        for name in reachable:
+            info = self.modules.get(name)
+            if info is None:
+                continue
+            star = "*" in info.used_names
+            dead: list[str] = []
+            for binding, mod in info.import_bindings.items():
+                if star:
+                    continue
+                if binding in info.used_names or \
+                        binding in info.exported_names:
+                    continue
+                if mod in self.modules or \
+                        mod.split(".", 1)[0] in self.modules:
+                    dead.append(mod)
+            if dead:
+                out[name] = sorted(set(dead))
+        return out

@@ -1,0 +1,45 @@
+"""SLIMSTART dynamic profiler.
+
+The profiler has two halves, mirroring §IV-A of the paper:
+
+1. Hierarchical breakdown of initialization overhead (``import_timer``):
+   a ``sys.meta_path`` hook that times every module's top-level execution
+   exactly once, attributes self vs. cumulative time, and aggregates
+   module -> package -> library -> total (Eq. 1-3).
+
+2. Sampling-based call-path profiling (``sampler`` + ``cct``): an OS-timer
+   driven signal handler captures the interrupted call stack; call paths are
+   accumulated into a Calling Context Tree whose sample counts are escalated
+   toward the root, separating initialization samples from runtime samples.
+
+``utilization`` combines both halves into the U(L) metric (Eq. 4) and flags
+inefficient libraries; ``report`` renders Table IV/V-style reports;
+``collector`` batches profile records and ships them asynchronously.
+"""
+
+from repro.core.profiler.cct import CCT, CCTNode, Frame
+from repro.core.profiler.sampler import CallPathSampler, SamplerConfig
+from repro.core.profiler.import_timer import ImportTimer, ModuleInitRecord
+from repro.core.profiler.utilization import (
+    LibraryStats,
+    UtilizationAnalyzer,
+    InefficiencyFinding,
+)
+from repro.core.profiler.report import OptimizationReport, render_report
+from repro.core.profiler.collector import AsyncCollector
+
+__all__ = [
+    "CCT",
+    "CCTNode",
+    "Frame",
+    "CallPathSampler",
+    "SamplerConfig",
+    "ImportTimer",
+    "ModuleInitRecord",
+    "LibraryStats",
+    "UtilizationAnalyzer",
+    "InefficiencyFinding",
+    "OptimizationReport",
+    "render_report",
+    "AsyncCollector",
+]

@@ -1,0 +1,241 @@
+"""Calling Context Tree (CCT).
+
+The CCT captures hierarchical caller->callee relationships observed by the
+sampling profiler (paper §IV-A.2, Fig. 7).  Each node is one *calling
+context* — a function identified by (file, line, name) reached through a
+specific path from the root — so the same function invoked through two
+different paths occupies two nodes, which is what lets SLIMSTART
+distinguish per-path usage (paper TC-2, Lib-6 case).
+
+Sample counts live on the node where the sample's leaf frame landed
+(``self_samples``).  ``escalate()`` propagates counts upward so that
+orchestrator-style callers are credited with their callees' activity
+(paper TC-2, Lib-1 case); the propagated value is ``inclusive_samples``.
+
+Initialization-phase samples (any frame in the path is module top-level
+code or an importlib bootstrap frame) are tracked separately from runtime
+samples (paper TC-2, Lib-4 case).
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Iterator, Optional
+
+
+@dataclass(frozen=True, slots=True)
+class Frame:
+    """One stack frame: enough identity to attribute a sample."""
+
+    filename: str
+    lineno: int
+    funcname: str
+
+    def is_module_level(self) -> bool:
+        """True for frames executing module top-level code (imports)."""
+        return self.funcname == "<module>"
+
+    def is_import_machinery(self) -> bool:
+        f = self.filename
+        return (
+            "importlib" in f
+            or f.startswith("<frozen importlib")
+            or self.funcname == "_call_with_frames_removed"
+        )
+
+    def short(self) -> str:
+        return f"{self.filename}:{self.lineno} ({self.funcname})"
+
+
+def path_is_initialization(path: tuple[Frame, ...]) -> bool:
+    """A sample is an *initialization* sample if its call chain passes
+    through module top-level execution or the import machinery — i.e. the
+    work observed is import-time, not request-time (paper §IV-A.2,
+    "distinguishes samples originating from library initialization").
+
+    Real imports always run under importlib bootstrap frames, so the
+    machinery check is the precise signal.  Entry scripts and exec-based
+    launchers (pytest, WSGI, the Lambda bootstrap) also execute
+    ``<module>`` frames *without* machinery above them — those are not
+    imports.  As a belt for synthetic paths, a ``<module>`` frame of a
+    package ``__init__.py`` below the stack root also counts as
+    initialization (that is the paper's "__init__ methods of the
+    package" rule).
+    """
+    if any(fr.is_import_machinery() for fr in path):
+        return True
+    return any(
+        fr.is_module_level() and fr.filename.endswith("__init__.py")
+        for fr in path[1:]
+    )
+
+
+@dataclass(slots=True)
+class CCTNode:
+    frame: Frame
+    self_samples: int = 0
+    init_samples: int = 0  # subset of self_samples taken during import
+    inclusive_samples: int = 0  # filled by escalate()
+    inclusive_init_samples: int = 0
+    children: dict[Frame, "CCTNode"] = field(default_factory=dict)
+
+    def child(self, frame: Frame) -> "CCTNode":
+        node = self.children.get(frame)
+        if node is None:
+            node = CCTNode(frame)
+            self.children[frame] = node
+        return node
+
+    def walk(self) -> Iterator["CCTNode"]:
+        yield self
+        for c in self.children.values():
+            yield from c.walk()
+
+
+_ROOT = Frame("<root>", 0, "<root>")
+
+
+class CCT:
+    """Calling Context Tree accumulating sampled call paths."""
+
+    def __init__(self) -> None:
+        self.root = CCTNode(_ROOT)
+        self.total_samples = 0
+        self.total_init_samples = 0
+
+    # ------------------------------------------------------------------ build
+    def add_path(self, path: Iterable[Frame], count: int = 1) -> None:
+        """Insert one sampled call path (root -> leaf order)."""
+        path = tuple(path)
+        if not path:
+            return
+        is_init = path_is_initialization(path)
+        node = self.root
+        for fr in path:
+            node = node.child(fr)
+        node.self_samples += count
+        if is_init:
+            node.init_samples += count
+            self.total_init_samples += count
+        self.total_samples += count
+
+    def merge(self, other: "CCT") -> None:
+        """Merge another CCT into this one (used when aggregating samples
+        across invocations / batch-transferred shards)."""
+
+        def rec(dst: CCTNode, src: CCTNode) -> None:
+            dst.self_samples += src.self_samples
+            dst.init_samples += src.init_samples
+            for fr, schild in src.children.items():
+                rec(dst.child(fr), schild)
+
+        rec(self.root, other.root)
+        self.total_samples += other.total_samples
+        self.total_init_samples += other.total_init_samples
+
+    # -------------------------------------------------------------- escalate
+    def escalate(self) -> None:
+        """Propagate sample counts from leaves toward the root.
+
+        After this pass every node's ``inclusive_samples`` covers its own
+        samples plus all descendants' — the paper's sample-escalation step
+        that fixes attribution for cascading dependencies."""
+
+        def rec(node: CCTNode) -> tuple[int, int]:
+            inc, inc_init = node.self_samples, node.init_samples
+            for c in node.children.values():
+                ci, cii = rec(c)
+                inc += ci
+                inc_init += cii
+            node.inclusive_samples = inc
+            node.inclusive_init_samples = inc_init
+            return inc, inc_init
+
+        rec(self.root)
+
+    # ----------------------------------------------------------------- query
+    def leaf_self_samples(self) -> dict[Frame, int]:
+        """Aggregate self-sample counts per frame identity (across paths)."""
+        out: dict[Frame, int] = {}
+        for node in self.root.walk():
+            if node.self_samples:
+                out[node.frame] = out.get(node.frame, 0) + node.self_samples
+        return out
+
+    def runtime_self_samples_by(
+        self, key: Callable[[Frame], Optional[str]]
+    ) -> dict[str, int]:
+        """Sum *runtime* (non-init) self samples grouped by ``key(frame)``.
+
+        Frames for which ``key`` returns None are ignored.  This is the
+        quantity S(f) aggregated per library for Eq. 4."""
+        out: dict[str, int] = {}
+        for node in self.root.walk():
+            runtime = node.self_samples - node.init_samples
+            if runtime <= 0:
+                continue
+            k = key(node.frame)
+            if k is None:
+                continue
+            out[k] = out.get(k, 0) + runtime
+        return out
+
+    def paths_to(self, pred: Callable[[Frame], bool], limit: int = 5
+                 ) -> list[tuple[Frame, ...]]:
+        """Return up to ``limit`` distinct call paths whose leaf-most frame
+        matches ``pred`` — used for the report's Call Path section."""
+        found: list[tuple[Frame, ...]] = []
+
+        def rec(node: CCTNode, path: tuple[Frame, ...]) -> None:
+            if len(found) >= limit:
+                return
+            cur = path + (node.frame,)
+            if node.frame is not _ROOT and pred(node.frame):
+                found.append(cur[1:])  # drop synthetic root
+                return
+            for c in node.children.values():
+                rec(c, cur)
+
+        rec(self.root, ())
+        return found
+
+    # ------------------------------------------------------------- serialize
+    def to_dict(self) -> dict:
+        def rec(node: CCTNode) -> dict:
+            return {
+                "f": [node.frame.filename, node.frame.lineno, node.frame.funcname],
+                "s": node.self_samples,
+                "i": node.init_samples,
+                "c": [rec(c) for c in node.children.values()],
+            }
+
+        return {
+            "total": self.total_samples,
+            "total_init": self.total_init_samples,
+            "root": rec(self.root),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CCT":
+        cct = cls()
+
+        def rec(node: CCTNode, dd: dict) -> None:
+            for cd in dd["c"]:
+                fr = Frame(cd["f"][0], cd["f"][1], cd["f"][2])
+                child = node.child(fr)
+                child.self_samples = cd["s"]
+                child.init_samples = cd["i"]
+                rec(child, cd)
+
+        rec(cct.root, d["root"])
+        cct.total_samples = d["total"]
+        cct.total_init_samples = d["total_init"]
+        return cct
+
+    def dumps(self) -> str:
+        return json.dumps(self.to_dict(), separators=(",", ":"))
+
+    @classmethod
+    def loads(cls, s: str) -> "CCT":
+        return cls.from_dict(json.loads(s))

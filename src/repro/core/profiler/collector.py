@@ -1,0 +1,120 @@
+"""Asynchronous profile-record collector (paper TC-1, strategy 3).
+
+Profiling data is buffered locally and batch-transferred to an external
+collector off the critical path.  In production the sink would be
+DynamoDB/S3 (paper §IV-D); here the sink is a directory of JSONL shards,
+which the analysis side (``UtilizationAnalyzer``) merges exactly the way
+the paper aggregates samples across invocations.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import threading
+import time
+import uuid
+from typing import Any, Optional
+
+
+class AsyncCollector:
+    """Background-thread batch writer.
+
+    ``put(record)`` is O(queue append) on the hot path; a daemon thread
+    drains the queue and appends JSON lines to a shard file, rotating when
+    ``batch_size`` records have been written.
+    """
+
+    def __init__(self, sink_dir: str, batch_size: int = 256,
+                 flush_interval_s: float = 0.5) -> None:
+        self.sink_dir = sink_dir
+        self.batch_size = batch_size
+        self.flush_interval_s = flush_interval_s
+        os.makedirs(sink_dir, exist_ok=True)
+        self._q: "queue.Queue[Optional[dict]]" = queue.Queue()
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self.dropped = 0
+        self.written = 0
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> None:
+        if self._thread is not None:
+            return
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="slimstart-collector")
+        self._thread.start()
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._q.put(None)  # wake the drain loop
+        self._thread.join(timeout=10.0)
+        self._thread = None
+
+    def __enter__(self) -> "AsyncCollector":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -------------------------------------------------------------- hot path
+    def put(self, record: dict[str, Any]) -> None:
+        self._q.put(record)
+
+    # ------------------------------------------------------------ background
+    def _run(self) -> None:
+        batch: list[dict] = []
+        last_flush = time.monotonic()
+        while True:
+            timeout = max(0.01, self.flush_interval_s
+                          - (time.monotonic() - last_flush))
+            try:
+                item = self._q.get(timeout=timeout)
+            except queue.Empty:
+                item = False  # timeout sentinel
+            if item:
+                batch.append(item)
+            now = time.monotonic()
+            done = self._stop.is_set() and self._q.empty() and item in (None, False)
+            if (len(batch) >= self.batch_size
+                    or (batch and now - last_flush >= self.flush_interval_s)
+                    or (batch and done)):
+                self._flush(batch)
+                batch = []
+                last_flush = now
+            if done:
+                return
+
+    def _flush(self, batch: list[dict]) -> None:
+        shard = os.path.join(self.sink_dir,
+                             f"profile-{uuid.uuid4().hex[:12]}.jsonl")
+        tmp = shard + ".tmp"
+        try:
+            with open(tmp, "w") as fh:
+                for rec in batch:
+                    fh.write(json.dumps(rec, separators=(",", ":")) + "\n")
+            os.replace(tmp, shard)
+            self.written += len(batch)
+        except OSError:
+            self.dropped += len(batch)
+
+
+def read_shards(sink_dir: str) -> list[dict]:
+    """Analysis-side: read every JSONL shard in the sink directory."""
+    out: list[dict] = []
+    if not os.path.isdir(sink_dir):
+        return out
+    for name in sorted(os.listdir(sink_dir)):
+        if not name.endswith(".jsonl"):
+            continue
+        with open(os.path.join(sink_dir, name)) as fh:
+            for line in fh:
+                line = line.strip()
+                if line:
+                    out.append(json.loads(line))
+    return out

@@ -1,0 +1,252 @@
+"""Hierarchical breakdown of initialization overhead (paper §IV-A.1).
+
+A ``sys.meta_path`` hook wraps every module loader so the module's
+top-level execution is timed exactly once.  Nested imports are handled
+with an execution stack: a child's elapsed time is subtracted from the
+parent's *self* time but included in the parent's *cumulative* time,
+giving the paper's three-level decomposition
+
+    T_total = Σ_k T_library_k          (Eq. 1)
+    T_library = Σ_i T_module_i         (Eq. 2)
+    T_package = Σ_j T_module_j         (Eq. 3)
+
+where module self-times are the leaves.  The hook also records *who*
+imported each module and from which source line, which is what the
+optimization report renders as the Call Path section (Tables IV/V).
+"""
+
+from __future__ import annotations
+
+import importlib.abc
+import importlib.machinery
+import sys
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Iterable, Optional
+
+
+@dataclass(slots=True)
+class ModuleInitRecord:
+    """Timing record for one module's top-level execution."""
+
+    name: str  # dotted module name, e.g. "nltk.sem"
+    filename: str
+    self_s: float = 0.0  # time in this module's own top-level code
+    cumulative_s: float = 0.0  # includes nested imports it triggered
+    parent: Optional[str] = None  # module whose top-level import pulled us in
+    importer_file: Optional[str] = None  # source file of the import statement
+    importer_lineno: int = 0
+
+    @property
+    def library(self) -> str:
+        return self.name.split(".", 1)[0]
+
+
+@dataclass
+class _ExecEntry:
+    name: str
+    t0: float
+    child_s: float = 0.0
+
+
+class _TimedLoader(importlib.abc.Loader):
+    def __init__(self, inner, timer: "ImportTimer", fullname: str,
+                 importer: tuple[Optional[str], Optional[str], int]):
+        self._inner = inner
+        self._timer = timer
+        self._fullname = fullname
+        self._importer = importer
+
+    def create_module(self, spec):
+        create = getattr(self._inner, "create_module", None)
+        return create(spec) if create is not None else None
+
+    def exec_module(self, module) -> None:
+        timer = self._timer
+        tls = timer._tls
+        stack: list[_ExecEntry] = getattr(tls, "stack", None) or []
+        tls.stack = stack
+        parent = stack[-1].name if stack else None
+        entry = _ExecEntry(self._fullname, time.perf_counter())
+        stack.append(entry)
+        try:
+            self._inner.exec_module(module)
+        finally:
+            elapsed = time.perf_counter() - entry.t0
+            stack.pop()
+            if stack:
+                stack[-1].child_s += elapsed
+            p_name, imp_file, imp_lineno = self._importer
+            timer._record(
+                ModuleInitRecord(
+                    name=self._fullname,
+                    filename=getattr(module, "__file__", None) or "<none>",
+                    self_s=max(0.0, elapsed - entry.child_s),
+                    cumulative_s=elapsed,
+                    parent=parent if parent is not None else p_name,
+                    importer_file=imp_file,
+                    importer_lineno=imp_lineno,
+                )
+            )
+
+    def __getattr__(self, item):
+        return getattr(self._inner, item)
+
+
+class ImportTimer(importlib.abc.MetaPathFinder):
+    """Meta-path hook that times module initialization.
+
+    Usage::
+
+        with ImportTimer() as timer:
+            import heavy_library
+        print(timer.total_initialization_s())
+        print(timer.library_times())
+
+    Restrict measurement to specific roots (e.g. the app's vendored
+    dependencies) with ``only_prefixes=("nltk", "igraph")`` or by filesystem
+    location with ``only_under=(path,)``.
+    """
+
+    def __init__(self, only_prefixes: Iterable[str] = (),
+                 only_under: Iterable[str] = ()) -> None:
+        self.records: dict[str, ModuleInitRecord] = {}
+        self._only_prefixes = tuple(only_prefixes)
+        self._only_under = tuple(only_under)
+        self._tls = threading.local()
+        self._lock = threading.Lock()
+        self._installed = False
+
+    # ------------------------------------------------------------ meta_path
+    def find_spec(self, fullname, path, target=None):
+        if not self._interested(fullname):
+            return None
+        for finder in sys.meta_path:
+            if finder is self:
+                continue
+            find = getattr(finder, "find_spec", None)
+            if find is None:
+                continue
+            spec = find(fullname, path, target)
+            if spec is not None:
+                break
+        else:
+            return None
+        if spec.loader is not None and hasattr(spec.loader, "exec_module"):
+            if self._only_under and not self._file_interested(spec.origin):
+                return spec
+            spec.loader = _TimedLoader(
+                spec.loader, self, fullname, self._find_importer()
+            )
+        return spec
+
+    def _interested(self, fullname: str) -> bool:
+        if not self._only_prefixes:
+            return True
+        top = fullname.split(".", 1)[0]
+        return top in self._only_prefixes
+
+    def _file_interested(self, origin: Optional[str]) -> bool:
+        if origin is None:
+            return False
+        return any(origin.startswith(root) for root in self._only_under)
+
+    @staticmethod
+    def _find_importer() -> tuple[Optional[str], Optional[str], int]:
+        """Walk the stack to the import statement that triggered us."""
+        f = sys._getframe(1)
+        while f is not None:
+            fn = f.f_code.co_filename
+            if ("importlib" not in fn and not fn.startswith("<frozen")
+                    and "repro/core/profiler" not in fn):
+                return None, fn, f.f_lineno
+            f = f.f_back
+        return None, None, 0
+
+    def _record(self, rec: ModuleInitRecord) -> None:
+        with self._lock:
+            self.records[rec.name] = rec
+
+    # ------------------------------------------------------------ lifecycle
+    def install(self) -> None:
+        if not self._installed:
+            sys.meta_path.insert(0, self)
+            self._installed = True
+
+    def uninstall(self) -> None:
+        if self._installed:
+            try:
+                sys.meta_path.remove(self)
+            except ValueError:
+                pass
+            self._installed = False
+
+    def __enter__(self) -> "ImportTimer":
+        self.install()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.uninstall()
+
+    # ---------------------------------------------------------- aggregation
+    def total_initialization_s(self) -> float:
+        """Eq. 1: Σ over libraries (== Σ module self-times)."""
+        return sum(r.self_s for r in self.records.values())
+
+    def library_times(self) -> dict[str, float]:
+        """Eq. 2: per top-level library, summed module self-times."""
+        out: dict[str, float] = {}
+        for r in self.records.values():
+            out[r.library] = out.get(r.library, 0.0) + r.self_s
+        return out
+
+    def package_times(self) -> dict[str, float]:
+        """Eq. 3: per package prefix (every dotted prefix accumulates its
+        subtree), e.g. nltk, nltk.sem, nltk.sem.logic."""
+        out: dict[str, float] = {}
+        for r in self.records.values():
+            parts = r.name.split(".")
+            for i in range(1, len(parts) + 1):
+                prefix = ".".join(parts[:i])
+                out[prefix] = out.get(prefix, 0.0) + r.self_s
+        return out
+
+    def import_chain(self, name: str, max_depth: int = 32) -> list[ModuleInitRecord]:
+        """Chain of importers root -> ``name`` (Call Path in Tables IV/V)."""
+        chain: list[ModuleInitRecord] = []
+        cur = self.records.get(name)
+        while cur is not None and len(chain) < max_depth:
+            chain.append(cur)
+            cur = self.records.get(cur.parent) if cur.parent else None
+        chain.reverse()
+        return chain
+
+    # ------------------------------------------------------------ serialize
+    def to_dict(self) -> dict:
+        return {
+            name: {
+                "filename": r.filename,
+                "self_s": r.self_s,
+                "cumulative_s": r.cumulative_s,
+                "parent": r.parent,
+                "importer_file": r.importer_file,
+                "importer_lineno": r.importer_lineno,
+            }
+            for name, r in self.records.items()
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ImportTimer":
+        t = cls()
+        for name, rd in d.items():
+            t.records[name] = ModuleInitRecord(
+                name=name,
+                filename=rd["filename"],
+                self_s=rd["self_s"],
+                cumulative_s=rd["cumulative_s"],
+                parent=rd["parent"],
+                importer_file=rd["importer_file"],
+                importer_lineno=rd["importer_lineno"],
+            )
+        return t

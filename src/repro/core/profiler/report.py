@@ -1,0 +1,157 @@
+"""Optimization report (paper Tables IV/V).
+
+Serializes the analyzer output into the report the paper shows per
+application: a summary table (package, utilization %, init overhead %,
+file) plus the import call path for each flagged package, and feeds the
+automated code optimizer.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.profiler.utilization import (
+    InefficiencyFinding,
+    LibraryStats,
+    UtilizationAnalyzer,
+)
+
+
+@dataclass
+class OptimizationReport:
+    application: str
+    e2e_s: float
+    total_init_s: float
+    qualifies: bool
+    stats: list[LibraryStats] = field(default_factory=list)
+    findings: list[InefficiencyFinding] = field(default_factory=list)
+    defer_targets: list[str] = field(default_factory=list)
+
+    @classmethod
+    def from_analyzer(cls, application: str,
+                      analyzer: UtilizationAnalyzer) -> "OptimizationReport":
+        stats = sorted(analyzer.stats().values(), key=lambda s: -s.init_s)
+        return cls(
+            application=application,
+            e2e_s=analyzer.e2e_s,
+            total_init_s=analyzer.timer.total_initialization_s(),
+            qualifies=analyzer.qualifies(),
+            stats=stats,
+            findings=analyzer.findings(),
+            defer_targets=[f.package for f in analyzer.defer_targets()],
+        )
+
+    # ------------------------------------------------------------ serialize
+    def to_dict(self) -> dict:
+        return {
+            "application": self.application,
+            "e2e_s": self.e2e_s,
+            "total_init_s": self.total_init_s,
+            "qualifies": self.qualifies,
+            "stats": [
+                {
+                    "package": s.name,
+                    "utilization": s.utilization,
+                    "init_s": s.init_s,
+                    "init_share": s.init_share,
+                    "runtime_samples": s.runtime_samples,
+                    "file": s.file,
+                }
+                for s in self.stats
+            ],
+            "findings": [
+                {
+                    "package": f.package,
+                    "kind": f.kind,
+                    "utilization": f.utilization,
+                    "init_s": f.init_s,
+                    "init_share": f.init_share,
+                    "file": f.file,
+                    "call_path": [
+                        {
+                            "module": r.name,
+                            "importer_file": r.importer_file,
+                            "importer_lineno": r.importer_lineno,
+                        }
+                        for r in f.import_chain
+                    ],
+                }
+                for f in self.findings
+            ],
+            "defer_targets": self.defer_targets,
+        }
+
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as fh:
+            json.dump(self.to_dict(), fh, indent=2)
+
+    @classmethod
+    def load(cls, path: str) -> "OptimizationReport":
+        with open(path) as fh:
+            d = json.load(fh)
+        rep = cls(
+            application=d["application"],
+            e2e_s=d["e2e_s"],
+            total_init_s=d["total_init_s"],
+            qualifies=d["qualifies"],
+            defer_targets=list(d["defer_targets"]),
+        )
+        rep.stats = [
+            LibraryStats(
+                name=s["package"],
+                utilization=s["utilization"],
+                init_s=s["init_s"],
+                init_share=s["init_share"],
+                runtime_samples=s["runtime_samples"],
+                file=s["file"],
+            )
+            for s in d["stats"]
+        ]
+        rep.findings = [
+            InefficiencyFinding(
+                package=f["package"],
+                kind=f["kind"],
+                utilization=f["utilization"],
+                init_s=f["init_s"],
+                init_share=f["init_share"],
+                file=f["file"],
+            )
+            for f in d["findings"]
+        ]
+        return rep
+
+
+def render_report(report: OptimizationReport, top: int = 12) -> str:
+    """Human-readable rendering in the shape of paper Tables IV/V."""
+    lines: list[str] = []
+    add = lines.append
+    add("=" * 72)
+    add("SLIMSTART Summary")
+    add(f"Application: {report.application}")
+    add(f"End-to-end: {report.e2e_s * 1e3:.1f} ms   "
+        f"Library init: {report.total_init_s * 1e3:.1f} ms "
+        f"({100 * report.total_init_s / max(report.e2e_s, 1e-9):.1f}%)   "
+        f"qualifies: {report.qualifies}")
+    add("-" * 72)
+    add(f"{'Package':<32}{'Util.%':>8}{'Init.%':>8}  File")
+    flagged = {f.package for f in report.findings}
+    for s in report.stats[:top]:
+        mark = "+" if s.name in flagged else "-"
+        add(f"{mark} {s.name:<30}{100 * s.utilization:>7.2f}"
+            f"{100 * s.init_share:>8.2f}  {s.file}")
+    if report.findings:
+        add("-" * 72)
+        add("Call Paths")
+        for f in report.findings[:top]:
+            add(f"  {f.package} [{f.kind}]")
+            for rec in f.import_chain:
+                loc = (f"{rec.importer_file}:{rec.importer_lineno}"
+                       if rec.importer_file else "<unknown>")
+                add(f"    -> {rec.name}  (imported at {loc})")
+    add(f"Defer targets: {', '.join(report.defer_targets) or '(none)'}")
+    add("=" * 72)
+    return "\n".join(lines)

@@ -1,0 +1,203 @@
+"""Library utilization metric and inefficiency detection (paper §IV-A.2).
+
+Combines the two profiler halves:
+
+* ``ImportTimer`` gives the hierarchical init-time breakdown (Eq. 1-3),
+* the ``CCT`` gives runtime sample counts S(f) per function,
+
+into the utilization metric
+
+    U(L) = Σ_{f∈L} S(f) / Σ_{f∈F} S(f)      (Eq. 4)
+
+computed over *runtime* samples (initialization samples are excluded by
+construction — the CCT separates them, paper TC-2 solution 3).
+
+Detection policy (paper "Detecting inefficient library usage"):
+
+* the application qualifies if total library init time exceeds
+  ``app_gate`` (default 10 %) of end-to-end time;
+* packages are ranked by init time; a package is flagged **unused** when
+  it has measurable init overhead but zero runtime samples, and
+  **rarely-used** when its utilization is below ``util_threshold``
+  (default 2 % of samples).
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.profiler.cct import CCT, Frame
+from repro.core.profiler.import_timer import ImportTimer, ModuleInitRecord
+
+
+class ModuleMapper:
+    """Map source filenames to dotted module / library names.
+
+    ``roots`` are directories that play the role of ``site-packages``:
+    a file ``<root>/nltk/sem/__init__.py`` maps to module ``nltk.sem``
+    and library ``nltk``.  Files outside all roots map to None (app code
+    or stdlib — still counted in the U(L) denominator via ``app_key``).
+    """
+
+    def __init__(self, roots: tuple[str, ...]) -> None:
+        self.roots = tuple(os.path.abspath(r) for r in roots)
+
+    def module_of(self, filename: str) -> Optional[str]:
+        fn = os.path.abspath(filename) if not filename.startswith("<") else filename
+        for root in self.roots:
+            if fn.startswith(root + os.sep):
+                rel = fn[len(root) + 1:]
+                if rel.endswith(".py"):
+                    rel = rel[:-3]
+                parts = rel.split(os.sep)
+                if parts and parts[-1] == "__init__":
+                    parts = parts[:-1]
+                return ".".join(parts) if parts else None
+        return None
+
+    def library_of(self, filename: str) -> Optional[str]:
+        mod = self.module_of(filename)
+        return mod.split(".", 1)[0] if mod else None
+
+
+@dataclass(slots=True)
+class LibraryStats:
+    name: str  # dotted package prefix ("nltk", "nltk.sem", ...)
+    utilization: float  # U(name), fraction of runtime samples
+    init_s: float  # Eq. 2/3 init time for this prefix subtree
+    init_share: float  # init_s / e2e_s
+    runtime_samples: int
+    file: str  # representative file (the package __init__)
+
+    @property
+    def is_library(self) -> bool:
+        return "." not in self.name
+
+
+@dataclass(slots=True)
+class InefficiencyFinding:
+    package: str
+    kind: str  # "unused" | "rarely-used"
+    utilization: float
+    init_s: float
+    init_share: float
+    file: str
+    import_chain: list[ModuleInitRecord] = field(default_factory=list)
+
+
+@dataclass
+class AnalyzerConfig:
+    app_gate: float = 0.10  # total lib init must exceed 10% of e2e
+    util_threshold: float = 0.02  # 2% of samples => rarely used
+    min_init_share: float = 0.01  # ignore packages cheaper than 1% of e2e
+
+
+class UtilizationAnalyzer:
+    def __init__(
+        self,
+        import_timer: ImportTimer,
+        cct: CCT,
+        mapper: ModuleMapper,
+        e2e_s: float,
+        config: AnalyzerConfig | None = None,
+    ) -> None:
+        self.timer = import_timer
+        self.cct = cct
+        self.mapper = mapper
+        self.e2e_s = max(e2e_s, 1e-9)
+        self.config = config or AnalyzerConfig()
+        self._stats: Optional[dict[str, LibraryStats]] = None
+
+    # ------------------------------------------------------------- metrics
+    def qualifies(self) -> bool:
+        """Application-level gate: is library init >10% of e2e?"""
+        return (self.timer.total_initialization_s() / self.e2e_s
+                ) > self.config.app_gate
+
+    def _samples_by_prefix(self) -> tuple[dict[str, int], int]:
+        """Runtime self-samples per package prefix + app-wide total."""
+        per_module = self.cct.runtime_self_samples_by(
+            lambda fr: self.mapper.module_of(fr.filename) or "<app>"
+        )
+        total = sum(per_module.values())
+        by_prefix: dict[str, int] = {}
+        for mod, n in per_module.items():
+            if mod == "<app>":
+                continue
+            parts = mod.split(".")
+            for i in range(1, len(parts) + 1):
+                p = ".".join(parts[:i])
+                by_prefix[p] = by_prefix.get(p, 0) + n
+        return by_prefix, total
+
+    def stats(self) -> dict[str, LibraryStats]:
+        """Per-package-prefix stats table (libraries and sub-packages)."""
+        if self._stats is not None:
+            return self._stats
+        pkg_times = self.timer.package_times()
+        samples, total = self._samples_by_prefix()
+        total = max(total, 1)
+        files = {
+            r.name: r.filename for r in self.timer.records.values()
+        }
+        out: dict[str, LibraryStats] = {}
+        for pkg, t in pkg_times.items():
+            n = samples.get(pkg, 0)
+            out[pkg] = LibraryStats(
+                name=pkg,
+                utilization=n / total,
+                init_s=t,
+                init_share=t / self.e2e_s,
+                runtime_samples=n,
+                file=files.get(pkg, "<package>"),
+            )
+        self._stats = out
+        return out
+
+    # ------------------------------------------------------------ findings
+    def findings(self) -> list[InefficiencyFinding]:
+        """Flag unused / rarely-used packages, ranked by init time."""
+        cfg = self.config
+        if not self.qualifies():
+            return []
+        rows = sorted(self.stats().values(), key=lambda s: -s.init_s)
+        found: list[InefficiencyFinding] = []
+        for s in rows:
+            if s.init_share < cfg.min_init_share:
+                continue
+            if s.runtime_samples == 0:
+                kind = "unused"
+            elif s.utilization < cfg.util_threshold:
+                kind = "rarely-used"
+            else:
+                continue
+            found.append(
+                InefficiencyFinding(
+                    package=s.name,
+                    kind=kind,
+                    utilization=s.utilization,
+                    init_s=s.init_s,
+                    init_share=s.init_share,
+                    file=s.file,
+                    import_chain=self.timer.import_chain(s.name),
+                )
+            )
+        return found
+
+    def defer_targets(self) -> list[InefficiencyFinding]:
+        """Maximal flagged subtrees — what the code optimizer should defer.
+
+        If ``nltk`` itself is flagged, deferring ``nltk.sem`` too would be
+        redundant; we keep only findings whose ancestors are not flagged.
+        """
+        found = self.findings()
+        flagged = {f.package for f in found}
+
+        def has_flagged_ancestor(pkg: str) -> bool:
+            parts = pkg.split(".")
+            return any(".".join(parts[:i]) in flagged
+                       for i in range(1, len(parts)))
+
+        return [f for f in found if not has_flagged_ancestor(f.package)]

@@ -1,0 +1,6 @@
+"""Distribution substrate: logical-axis sharding rules, mesh helpers."""
+
+from repro.distributed.sharding import (  # noqa: F401
+    DEFAULT_RULES, ShardingRules, batch_pspec, cache_pspecs, opt_pspecs,
+    param_pspecs, param_shardings, resolve_axes,
+)

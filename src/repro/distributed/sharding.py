@@ -1,0 +1,228 @@
+"""Logical-axis sharding rules (MaxText-style) for the whole zoo.
+
+Parameters carry *logical* axis names from their ``ParamSpec`` (see
+``repro.models.layers``); this module resolves them to mesh axes under a
+rule table, with two safety properties:
+
+* a mesh axis is used at most once per array (first logical dim wins);
+* a dim is only sharded if its size divides the mesh-axis extent —
+  otherwise it silently falls back to replication (e.g. granite-moe's
+  vocab 49155 and whisper's 51866 are not 16-divisible and replicate,
+  while qwen/gemma vocabs row-shard).
+
+This keeps every assigned config compilable on the production meshes
+without per-arch special cases, while giving TP/EP/DP/SP where shapes
+allow.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from repro.models.model import logical_axes, layer_layout
+
+MeshAxes = Union[None, str, tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis name -> mesh axis (or tuple of mesh axes)."""
+    rules: dict[str, MeshAxes]
+
+    def get(self, name: Optional[str]) -> MeshAxes:
+        if name is None:
+            return None
+        return self.rules.get(name)
+
+
+# Default TP-over-"model", DP-over-("pod","data") layout.
+DEFAULT_RULES = ShardingRules({
+    "batch": ("pod", "data"),
+    "vocab": "model",       # row-sharded embeddings / logits
+    "embed": None,          # d_model replicated
+    "heads": "model",       # fused H*hd projections (always divisible)
+    "kv_heads": "model",    # fused K*hd projections
+    "ff": "model",          # MLP inner dim
+    "experts": "model",     # expert parallelism
+    "layers": None,         # scan dim
+    "seq": "model",         # sequence-parallel KV caches (decode)
+})
+
+
+def _axis_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+def _present(mesh: Mesh, axes: MeshAxes) -> Optional[MeshAxes]:
+    """Drop mesh axes that don't exist in this mesh (e.g. 'pod' on the
+    single-pod mesh)."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return axes if axes in mesh.shape else None
+    kept = tuple(a for a in axes if a in mesh.shape)
+    return kept if kept else None
+
+
+def resolve_axes(shape, log_axes, rules: ShardingRules, mesh: Mesh) -> P:
+    """Resolve one array's logical axes to a PartitionSpec."""
+    used: set[str] = set()
+    out = []
+    for dim, name in zip(shape, log_axes):
+        axes = _present(mesh, rules.get(name))
+        if axes is None:
+            out.append(None)
+            continue
+        tup = (axes,) if isinstance(axes, str) else axes
+        if any(a in used for a in tup):
+            out.append(None)
+            continue
+        size = _axis_size(mesh, tup)
+        if size <= 1 or dim % size != 0:
+            out.append(None)
+            continue
+        used.update(tup)
+        out.append(axes if isinstance(axes, str) else tuple(tup))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_pspecs(cfg: ArchConfig, mesh: Mesh,
+                 rules: ShardingRules = DEFAULT_RULES):
+    """PartitionSpec pytree mirroring ``init_params``."""
+    from repro.models.model import model_template
+    from repro.models.layers import ParamSpec
+
+    def spec(s: ParamSpec) -> P:
+        return resolve_axes(s.shape, s.axes, rules, mesh)
+
+    return jax.tree.map(spec, model_template(cfg),
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh,
+                    rules: ShardingRules = DEFAULT_RULES):
+    return jax.tree.map(lambda p: NamedSharding(mesh, p),
+                        param_pspecs(cfg, mesh, rules),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_pspecs(cfg: ArchConfig, mesh: Mesh,
+               rules: ShardingRules = DEFAULT_RULES):
+    """ZeRO-1 sharding for AdamW state (mirrors AdamWState).
+
+    Each fp32 master/mu/nu tensor takes its parameter's spec plus the
+    "data" axis on the first still-replicated dim that divides — so the
+    3x-fp32 optimizer memory scales with the whole mesh, not just TP.
+    """
+    from repro.training.adamw import AdamWState
+
+    data = _present(mesh, "data")
+    dsize = _axis_size(mesh, data)
+
+    def zero1(spec: P, shape) -> P:
+        if data is None or dsize <= 1:
+            return spec
+        out = list(spec) + [None] * (len(shape) - len(spec))
+        for i, (dim, cur) in enumerate(zip(shape, out)):
+            if cur is None and dim % dsize == 0:
+                out[i] = data
+                break
+        return P(*out)
+
+    from repro.models.model import model_template
+    from repro.models.layers import ParamSpec as PS
+
+    tmpl = model_template(cfg)
+    pspecs = param_pspecs(cfg, mesh, rules)
+    flat_t = jax.tree.leaves(tmpl, is_leaf=lambda x: isinstance(x, PS))
+    flat_p, tdef = jax.tree.flatten(pspecs,
+                                    is_leaf=lambda x: isinstance(x, P))
+    z = tdef.unflatten([zero1(p, t.shape)
+                        for p, t in zip(flat_p, flat_t)])
+    return AdamWState(step=P(), master=z, mu=z, nu=z)
+
+
+def batch_pspec(mesh: Mesh, rules: ShardingRules = DEFAULT_RULES,
+                batch_size: Optional[int] = None,
+                extra_dims: int = 1) -> P:
+    """Batch-leading activation spec: (batch, ...) -> P(dp_axes, ...)."""
+    axes = _present(mesh, rules.get("batch"))
+    if axes is not None and batch_size is not None:
+        tup = (axes,) if isinstance(axes, str) else tuple(axes)
+        # fall back to fewer axes (or none) when batch doesn't divide
+        while tup and batch_size % _axis_size(mesh, tup) != 0:
+            tup = tup[1:]
+        axes = tup if tup else None
+    return P(axes, *([None] * extra_dims))
+
+
+def cache_pspecs(cfg: ArchConfig, mesh: Mesh, batch: int, cache_len: int,
+                 rules: ShardingRules = DEFAULT_RULES,
+                 stacked: bool = True):
+    """PartitionSpec pytree mirroring ``init_cache``.
+
+    KV caches are sharded over batch plus — for the long-context decode
+    cells — one more axis: kv_heads when divisible by the model axis,
+    otherwise the sequence dim (XLA inserts the softmax/psum collectives
+    for sequence-parallel attention).  Recurrent states shard over batch
+    and, where divisible, the channel dim.
+    """
+    from repro.models.model import init_cache
+
+    shapes = jax.eval_shape(lambda: init_cache(cfg, batch, cache_len))
+    model_size = _axis_size(mesh, _present(mesh, "model"))
+    dp = batch_pspec(mesh, rules, batch_size=batch, extra_dims=0)
+    dp_axes = dp[0] if len(dp) else None
+    kv_on_heads = cfg.n_kv_heads % model_size == 0 if model_size > 1 \
+        else False
+
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = len(leaf.shape)
+        # leading layer-stack dim (scan groups) is never a mesh axis
+        lead = (None,) if (stacked and nd and _is_scan_path(path)) else ()
+        body: list = [None] * (nd - len(lead))
+        # batch dim is always right after the optional layer-stack dim
+        if body:
+            body[0] = dp_axes
+        if name in ("k", "v", "cross_k", "cross_v") and nd - len(lead) == 4:
+            if kv_on_heads:
+                body[2] = "model"
+            else:
+                body[1] = "model" if leaf.shape[len(lead) + 1] % \
+                    max(model_size, 1) == 0 and model_size > 1 else body[1]
+        elif name in ("k_scale", "v_scale") and nd - len(lead) == 3:
+            if not kv_on_heads and leaf.shape[len(lead) + 1] % \
+                    max(model_size, 1) == 0 and model_size > 1:
+                body[1] = "model"  # follow the seq-sharded codes
+        elif name == "pos":
+            pass  # (B, S) int32 — replicate the tiny position index
+        elif name in ("h", "conv") and nd - len(lead) >= 2:
+            if leaf.shape[-1] % max(model_size, 1) == 0 and model_size > 1:
+                body[-1] = "model"
+        return P(*(list(lead) + body)) if lead else P(*body)
+
+    return jax.tree_util.tree_map_with_path(spec_for, shapes)
+
+
+def _n_periods(cfg: ArchConfig) -> int:
+    return layer_layout(cfg)[1]
+
+
+def _is_scan_path(path) -> bool:
+    return any(getattr(p, "key", None) in ("scan", "rem_scan")
+               for p in path)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the serving hot spots.
+
+Each kernel ships as <name>.py (pl.pallas_call + BlockSpec), a jit'd
+wrapper in ops.py, and a pure-jnp oracle in ref.py.  On CPU the kernels
+run in interpret mode (the body executes in Python) — the TPU is the
+compilation target, the oracle the correctness contract.
+"""
+
+from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.decode_attention import decode_attention  # noqa: F401
+from repro.kernels.rglru_scan import rglru_scan  # noqa: F401
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,114 @@
+"""Single-token GQA decode attention Pallas kernel (TPU target).
+
+Streams a long KV cache (32k-500k tokens) through VMEM in blocks.  The
+query is one token per sequence; validity comes from an explicit
+slot-position array (``kv_pos``, -1 = empty slot) so the same kernel
+serves position-indexed global caches and ring-buffer local caches.
+
+Grid: (batch, kv_head, kv_blocks) — kv innermost, online-softmax state
+(acc/max/denominator for the G=H/K query heads of this kv head) carried
+in VMEM scratch.  Block ~ (block_kv x hd) = 128x256 fp32 = 128 KiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(qpos_ref, q_ref, k_ref, v_ref, kvpos_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, scale, window, softcap, block_kv,
+            n_kv_blocks):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bkv, hd)
+    v = v_ref[0, 0].astype(jnp.float32)          # (bkv, hd)
+    kv_pos = kvpos_ref[0]                        # (bkv,) int32
+    q_pos = qpos_ref[0, 0]                       # scalar int32
+
+    s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                        preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = (kv_pos >= 0) & (kv_pos <= q_pos)
+    if window is not None:
+        valid &= kv_pos > q_pos - window
+    s = jnp.where(valid[None, :], s, NEG_INF)    # (G, bkv)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap", "block_kv", "interpret"))
+def decode_attention(q, k, v, q_pos, kv_pos, *, window=None, softcap=None,
+                     block_kv=128, interpret=False):
+    """One-token GQA attention over a cached KV.
+
+    q: (B, K, G, hd) — the G query heads per kv head;
+    k, v: (B, K, S, hd) cache; q_pos: (B,) int32 current positions;
+    kv_pos: (B, S) int32 absolute positions per slot (-1 = empty).
+    Returns (B, K, G, hd).
+    """
+    B, K, G, hd = q.shape
+    S = k.shape[2]
+    scale = hd ** -0.5
+    bkv = min(block_kv, max(S, 8))
+    nkv = -(-S // bkv)
+    pad = nkv * bkv - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+    qp = q_pos.reshape(B, 1, 1).astype(jnp.int32)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, window=window, softcap=softcap,
+        block_kv=bkv, n_kv_blocks=nkv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, K, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1), lambda b, h, j: (b, 0, 0)),
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bkv, hd), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bkv, hd), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, bkv), lambda b, h, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, q, k, v, kv_pos)
+    return out

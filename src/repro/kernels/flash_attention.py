@@ -1,0 +1,140 @@
+"""Flash attention Pallas kernel (TPU target).
+
+Blocked online-softmax attention with causal masking, GQA, sliding
+windows (gemma local layers) and logit softcapping (gemma2).  Grid is
+(batch, q_head, q_blocks, kv_blocks); the kv dimension is innermost so
+the fp32 accumulator/max/denominator live in VMEM scratch across kv
+steps (TPU executes the innermost grid dimension sequentially per
+core).  Block shapes are MXU-aligned (q/kv tiles default 128) and sized
+so q/k/v/acc tiles fit comfortably in VMEM:
+  128x256 fp32 x 4 buffers ~= 512 KiB << 16 MiB.
+
+Validated against ``ref.py`` in interpret mode (see tests/test_kernels).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale, causal, window, softcap, block_q, block_kv, seq_q,
+            seq_kv, n_kv_blocks):
+    iq = pl.program_id(2)
+    ikv = pl.program_id(3)
+
+    @pl.when(ikv == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = iq * block_q + lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 0)
+    k_pos = ikv * block_kv + lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1)
+
+    # skip fully-masked tiles (below the causal diagonal / outside window)
+    run = k_pos[0, 0] < seq_kv  # tile begins inside the real sequence
+    if causal:
+        run = jnp.logical_and(run, ikv * block_kv <= iq * block_q
+                              + block_q - 1)
+    if window is not None:
+        run = jnp.logical_and(
+            run, (iq * block_q) - (ikv * block_kv + block_kv - 1) < window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bkv, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = (k_pos < seq_kv) & (q_pos < seq_q)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ikv == n_kv_blocks - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "block_q", "block_kv",
+                     "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    block_q=128, block_kv=128, interpret=False):
+    """q: (B, H, Sq, hd); k, v: (B, K, Skv, hd) with H % K == 0.
+
+    Returns (B, H, Sq, hd) in q.dtype.
+    """
+    B, H, Sq, hd = q.shape
+    _, K, Skv, _ = k.shape
+    assert H % K == 0, (H, K)
+    G = H // K
+    scale = hd ** -0.5
+
+    bq = min(block_q, max(Sq, 8))
+    bkv = min(block_kv, max(Skv, 8))
+    nq = -(-Sq // bq)
+    nkv = -(-Skv // bkv)
+    q_pad, kv_pad = nq * bq - Sq, nkv * bkv - Skv
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, q_pad), (0, 0)))
+    if kv_pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, kv_pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, kv_pad), (0, 0)))
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=bq, block_kv=bkv, seq_q=Sq, seq_kv=Skv,
+        n_kv_blocks=nkv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bkv, hd),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bkv, hd),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nq * bq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]

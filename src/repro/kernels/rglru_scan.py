@@ -1,0 +1,78 @@
+"""RG-LRU linear-recurrence Pallas kernel (TPU target).
+
+Computes h_t = a_t * h_{t-1} + b_t (elementwise, diagonal recurrence —
+the core of recurrentgemma's RG-LRU after gates are formed) over the
+time axis, with the state carried in VMEM scratch across sequential
+time tiles.  Grid: (batch, channel_blocks, time_blocks) — time
+innermost/sequential; channels are vector lanes.
+
+Unlike attention this is bandwidth-bound: the tile is (block_t x
+block_r) and each element is read/written once, so block shapes only
+need VPU lane alignment (block_r multiple of 128).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, h0_ref, o_ref, state_ref, *, block_t):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        state_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)  # (bt, br)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + b[t]
+        o_ref[0, t] = h.astype(o_ref.dtype)
+        return h
+
+    state_ref[...] = lax.fori_loop(0, block_t, step, state_ref[...])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_t", "block_r", "interpret"))
+def rglru_scan(a, b, h0=None, *, block_t=128, block_r=128,
+               interpret=False):
+    """a, b: (B, S, R) decay/input; h0: (B, R) initial state or None.
+
+    Returns h: (B, S, R) with h[:, t] = a[:, t] * h[:, t-1] + b[:, t].
+    """
+    B, S, R = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, R), a.dtype)
+    bt = min(block_t, max(S, 8))
+    br = min(block_r, max(R, 128))
+    nt, nr = -(-S // bt), -(-R // br)
+    pad_t, pad_r = nt * bt - S, nr * br - R
+    if pad_t or pad_r:
+        a = jnp.pad(a, ((0, 0), (0, pad_t), (0, pad_r)))
+        b = jnp.pad(b, ((0, 0), (0, pad_t), (0, pad_r)))
+        h0 = jnp.pad(h0, ((0, 0), (0, pad_r)))
+
+    kernel = functools.partial(_kernel, block_t=bt)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, nr, nt),
+        in_specs=[
+            pl.BlockSpec((1, bt, br), lambda bi, ir, it: (bi, it, ir)),
+            pl.BlockSpec((1, bt, br), lambda bi, ir, it: (bi, it, ir)),
+            pl.BlockSpec((1, br), lambda bi, ir, it: (bi, ir)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, br),
+                               lambda bi, ir, it: (bi, it, ir)),
+        out_shape=jax.ShapeDtypeStruct((B, nt * bt, nr * br), a.dtype),
+        scratch_shapes=[pltpu.VMEM((br,), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)
+    return out[:, :S, :R]

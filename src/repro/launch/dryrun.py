@@ -1,0 +1,389 @@
+import os
+if "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract the roofline terms.
+
+For each cell this builds ShapeDtypeStruct inputs (``input_specs`` — no
+allocation), resolves in/out shardings from the logical rules, then::
+
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., out_shardings=...,
+                           donate_argnums=...).lower(*specs)
+        compiled = lowered.compile()
+        compiled.memory_analysis()   # proves it fits per-device
+        compiled.cost_analysis()     # FLOPs / bytes for the roofline
+
+and parses the post-SPMD HLO for collective operand bytes.  Results are
+written incrementally to benchmarks/results/dryrun/<cell>.json so the
+sweep is resumable.  Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b \
+        --shape train_4k [--multi-pod] [--all] [--sp|--dp] [--accum N]
+"""
+
+import argparse
+import json
+import re
+import time
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.distributed import (
+    DEFAULT_RULES, batch_pspec, cache_pspecs, opt_pspecs, param_pspecs,
+)
+from repro.launch.mesh import HW, make_production_mesh
+from repro.models import SHAPES, applicable_shapes, input_specs
+from repro.models.config import ArchConfig, ShapeSpec
+from repro.models.model import init_params, param_count
+from repro.models.partition import use_act_mode
+from repro.training.adamw import adamw_init
+from repro.training.step import make_serve_steps, make_train_step
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / \
+    "results" / "dryrun"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(pred|[suf]\d+|bf16|c64|c128)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _split_computations(hlo_text: str):
+    """[(name, start, end)] spans of computation bodies in the text."""
+    headers = [(m.start(), m.group(1)) for m in re.finditer(
+        r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*?\)\s*->\s*[^{]+\{",
+        hlo_text, re.M)]
+    spans = []
+    for i, (pos, name) in enumerate(headers):
+        end = headers[i + 1][0] if i + 1 < len(headers) else len(hlo_text)
+        spans.append((name, pos, end))
+    return spans
+
+
+def _line_collective(line: str):
+    """(op, result_bytes) if this instruction is a collective.
+
+    Result-shape bytes are the per-device traffic proxy: a ring
+    all-gather delivers ~result bytes to each device; an all-reduce
+    moves ~2x its (equal-shaped) operand.  Async -start/-done pairs are
+    counted at -start only.
+    """
+    m = re.match(r"\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)", line)
+    if not m:
+        return None
+    rest = m.group(1)
+    for c in _COLLECTIVES:
+        if re.search(rf"[\]\}}]\s{c}-done\(", rest):
+            return c, 0
+        if re.search(rf"[\]\}}]\s{c}(-start)?\(", rest):
+            res = _SHAPE_RE.findall(rest)[:1]
+            return c, _shape_bytes(*res[0]) if res else 0
+    return None
+
+
+def _trip_count(cond_text: str) -> int:
+    """Loop bound from the condition: the constant in its compare
+    (double-buffered 'wide' loops carry a halved bound against a doubled
+    body, so bound x body stays consistent)."""
+    best = 1
+    for line in cond_text.splitlines():
+        if "compare" in line:
+            for m in re.finditer(r"constant\((\d+)\)", line):
+                best = max(best, int(m.group(1)))
+    if best == 1:
+        for m in re.finditer(r"constant\((\d+)\)", cond_text):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Loop-aware per-device collective traffic for one step.
+
+    The compiled module is the per-partition program; collectives inside
+    while bodies are multiplied by the loop trip count (parsed from the
+    loop condition), recursively for nested loops — XLA's cost analysis
+    counts loop bodies once, which would undercount e.g. a 21-period
+    layer scan under 4-way grad accumulation by ~84x.
+    """
+    spans = _split_computations(hlo_text)
+    span_of = {name: (s, e) for name, s, e in spans}
+
+    whiles = []  # (parent, cond, body)
+    for m in re.finditer(r"condition=%?([\w.\-]+), body=%?([\w.\-]+)",
+                         hlo_text):
+        parent = None
+        for name, s, e in spans:
+            if s <= m.start() < e:
+                parent = name
+                break
+        if parent is not None:
+            whiles.append((parent, m.group(1), m.group(2)))
+
+    def direct(name):
+        out = {k: 0 for k in _COLLECTIVES}
+        counts = {k: 0 for k in _COLLECTIVES}
+        s, e = span_of.get(name, (0, 0))
+        for line in hlo_text[s:e].splitlines():
+            r = _line_collective(line)
+            if r and r[1]:
+                out[r[0]] += r[1]
+                counts[r[0]] += 1
+        return out, counts
+
+    def total(name, depth=0):
+        if depth > 10:
+            return {k: 0 for k in _COLLECTIVES}
+        out, _ = direct(name)
+        for parent, cond, body in whiles:
+            if parent == name:
+                s, e = span_of.get(cond, (0, 0))
+                trips = _trip_count(hlo_text[s:e])
+                sub = total(body, depth + 1)
+                for k in _COLLECTIVES:
+                    out[k] += trips * sub[k]
+        return out
+
+    entry = next((n for n, _, _ in spans if n.startswith("main")), None)
+    if entry is None and spans:
+        bodies = {b for _, _, b in whiles} | {c for _, c, _ in whiles}
+        entry = next((n for n, _, _ in spans if n not in bodies), None)
+
+    out = total(entry) if entry else {k: 0 for k in _COLLECTIVES}
+    _, entry_counts = direct(entry) if entry else ({}, {})
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts_entry"] = entry_counts
+    out["n_while_loops"] = len(whiles)
+    return out
+
+
+def _sharding_tree(mesh, pspec_tree):
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
+               accum_steps: int = 1):
+    """Returns (fn, arg_structs, in_shardings, out_shardings, donate)."""
+    specs = input_specs(cfg, shape)
+    dp = batch_pspec(mesh, batch_size=shape.global_batch, extra_dims=0)
+    dp_axes = dp[0] if len(dp) else None
+
+    if shape.kind == "train":
+        params_s = jax.eval_shape(
+            lambda: init_params(cfg, jax.random.PRNGKey(0)))
+        opt_s = jax.eval_shape(adamw_init, params_s)
+        p_sh = _sharding_tree(mesh, param_pspecs(cfg, mesh))
+        o_pspecs = opt_pspecs(cfg, mesh)
+        o_sh = _sharding_tree(mesh, o_pspecs)
+        batch_sh = jax.tree.map(
+            lambda s: NamedSharding(
+                mesh, P(*([dp_axes] + [None] * (len(s.shape) - 1)))),
+            specs)
+        fn = make_train_step(cfg, accum_steps=accum_steps)
+        return (fn, (params_s, opt_s, specs),
+                (p_sh, o_sh, batch_sh),
+                (p_sh, o_sh, NamedSharding(mesh, P())),
+                (0, 1))
+
+    params_s = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    p_sh = _sharding_tree(mesh, param_pspecs(cfg, mesh))
+    prefill_fn, decode_fn = make_serve_steps(cfg)
+
+    if shape.kind == "prefill":
+        batch_sh = jax.tree.map(
+            lambda s: NamedSharding(
+                mesh, P(*([dp_axes] + [None] * (len(s.shape) - 1)))),
+            specs)
+        cache_sh = _sharding_tree(
+            mesh, cache_pspecs(cfg, mesh, shape.global_batch,
+                               shape.seq_len))
+        return (prefill_fn, (params_s, specs), (p_sh, batch_sh),
+                (NamedSharding(mesh, P(dp_axes)), cache_sh), ())
+
+    # decode: one token against a seq_len cache
+    cache_sh = _sharding_tree(
+        mesh, cache_pspecs(cfg, mesh, shape.global_batch, shape.seq_len))
+    tok_sh = NamedSharding(mesh, P(dp_axes, None))
+    pos_sh = NamedSharding(mesh, P(dp_axes))
+    logit_sh = NamedSharding(mesh, P(dp_axes))
+    return (decode_fn,
+            (params_s, specs["token"], specs["pos"], specs["caches"]),
+            (p_sh, tok_sh, pos_sh, cache_sh),
+            (tok_sh, logit_sh, cache_sh), (3,))
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod=False,
+             act_mode="dp", accum_steps=1, overrides=None,
+             tag="baseline", save=True) -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+
+    t0 = time.time()
+    with mesh, use_act_mode(act_mode):
+        fn, args, in_sh, out_sh, donate = build_cell(
+            cfg, shape, mesh, accum_steps=accum_steps)
+        jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                      donate_argnums=donate)
+        lowered = jfn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # pragma: no cover
+        mem_info = {"error": str(e)}
+
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        cost_info = {"flops": cost.get("flops"),
+                     "bytes_accessed": cost.get("bytes accessed")}
+    except Exception as e:  # pragma: no cover
+        cost_info = {"error": str(e)}
+
+    coll = collective_bytes(compiled.as_text())
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": list(mesh.shape.values()),
+        "mesh_axes": list(mesh.shape.keys()),
+        "n_devices": int(n_dev),
+        "multi_pod": multi_pod,
+        "act_mode": act_mode,
+        "accum_steps": accum_steps,
+        "overrides": overrides or {},
+        "tag": tag,
+        "kind": shape.kind,
+        "param_count": param_count(cfg),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem_info,
+        "cost": cost_info,
+        "collectives": coll,
+    }
+    if save:
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        pod = "mp" if multi_pod else "sp1"
+        out = RESULTS_DIR / f"{arch}__{shape_name}__{pod}__{tag}.json"
+        out.write_text(json.dumps(result, indent=2))
+    return result
+
+
+def cells(archs=None):
+    for arch in archs or ARCH_IDS:
+        cfg = get_config(arch)
+        for shape_name in applicable_shapes(cfg):
+            yield arch, shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every applicable (arch, shape) cell")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--act-mode", default=None, choices=["dp", "sp"])
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    todo = []
+    if args.all:
+        todo = list(cells([args.arch] if args.arch else None))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = []
+    for arch, shape_name in todo:
+        for mp in meshes:
+            # sequence-parallel activations for the long train/prefill
+            # cells by default; decode stays DP (one-token steps)
+            mode = args.act_mode or (
+                "sp" if SHAPES[shape_name].kind in ("train", "prefill")
+                else "dp")
+            # grad accumulation default: microbatch the big train cells
+            # (every production framework's memory lever of first resort);
+            # recurrent (ssm) archs also accumulate — their time-scan
+            # backward stores per-step residuals proportional to batch
+            accum = args.accum
+            if accum == 1 and SHAPES[shape_name].kind == "train":
+                cfg_ = get_config(arch)
+                pc = param_count(cfg_)
+                if pc > 2e10:
+                    # giant-vocab 27B+ (gemma3) needs deeper microbatching
+                    accum = 16 if cfg_.vocab > 200_000 else 8
+                elif pc > 5e9 or cfg_.family == "ssm":
+                    accum = 4
+                else:
+                    accum = 1
+            pod = "mp" if mp else "sp1"
+            out = RESULTS_DIR / f"{arch}__{shape_name}__{pod}__{args.tag}.json"
+            if args.skip_done and out.exists():
+                print(f"[skip] {arch} {shape_name} {pod}")
+                continue
+            try:
+                r = run_cell(arch, shape_name, multi_pod=mp,
+                             act_mode=mode, accum_steps=accum,
+                             tag=args.tag)
+                print(f"[ok] {arch} {shape_name} {pod} "
+                      f"compile={r['compile_s']}s "
+                      f"flops={r['cost'].get('flops')} "
+                      f"coll={r['collectives']['total']}")
+            except Exception as e:
+                failures.append((arch, shape_name, mp, str(e)))
+                print(f"[FAIL] {arch} {shape_name} {pod}: {e}")
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: "
+                         + "; ".join(f"{a}/{s}" for a, s, *_ in failures))
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to get placeholder devices.
+
+Mesh layout (TPU v5e pods, 256 chips each):
+  single pod:  (16, 16)      axes ("data", "model")
+  two pods:    (2, 16, 16)   axes ("pod", "data", "model")
+The "model" axis carries TP/EP/SP; "data" and "pod" carry DP (the
+gradient all-reduce crosses the pod axis — the slow inter-pod links —
+which is what the int8 gradient-compression path targets).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over however many (possibly fake) devices exist."""
+    return jax.make_mesh(shape, axes)
+
+
+# TPU v5e hardware constants used by the roofline analysis.
+HW = {
+    "peak_flops_bf16": 197e12,   # per chip
+    "hbm_bw": 819e9,             # bytes/s per chip
+    "ici_bw": 50e9,              # bytes/s per link (~per-axis budget)
+    "hbm_bytes": 16 * 1024**3,   # 16 GiB per chip
+}

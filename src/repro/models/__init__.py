@@ -1,0 +1,11 @@
+"""Model zoo: one configurable implementation for all assigned archs."""
+
+from repro.models.config import (  # noqa: F401
+    ArchConfig, MoEConfig, SHAPES, ShapeSpec, applicable_shapes,
+)
+from repro.models.model import (  # noqa: F401
+    block_pattern_of, decode_step, forward, init_cache, init_params,
+    layer_layout, logical_axes, loss_fn, model_template, param_count,
+    prefill,
+)
+from repro.models.inputs import input_specs, materialize  # noqa: F401

@@ -1,0 +1,83 @@
+"""ShapeDtypeStruct input stand-ins for every (arch, shape) cell.
+
+``input_specs`` is the single source of truth used by the multi-pod
+dry-run, the benchmarks, and the smoke tests (which call it with a
+reduced config + small shape and then materialize).  Decode-state specs
+are derived with ``jax.eval_shape`` over ``init_cache`` so they can
+never drift from the model's cache layout.  No device allocation.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig, ShapeSpec
+from repro.models.model import init_cache
+
+i32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _frontend_specs(cfg: ArchConfig, batch: int):
+    s = {}
+    if cfg.vision_tokens:
+        s["patch_embeds"] = _sds((batch, cfg.vision_tokens, cfg.d_model),
+                                 cfg.jdtype)
+    if cfg.encoder_layers:
+        s["enc_frames"] = _sds((batch, cfg.encoder_seq, cfg.d_model),
+                               cfg.jdtype)
+    return s
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """Inputs for the step function this cell lowers.
+
+    train  -> loss_fn/train_step batch:  tokens, labels (+frontends)
+    prefill-> prefill(tokens, ...)
+    decode -> decode_step(token, pos, caches): one new token against a
+              KV/recurrent cache of seq_len (the assigned semantics).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        text = S - (cfg.vision_tokens or 0)
+        spec = {"tokens": _sds((B, text), i32),
+                "labels": _sds((B, text), i32)}
+        spec.update(_frontend_specs(cfg, B))
+        return spec
+    if shape.kind == "prefill":
+        text = S - (cfg.vision_tokens or 0)
+        spec = {"tokens": _sds((B, text), i32)}
+        spec.update(_frontend_specs(cfg, B))
+        return spec
+    if shape.kind == "decode":
+        caches = jax.eval_shape(partial(init_cache, cfg, B, S))
+        return {"token": _sds((B, 1), i32),
+                "pos": _sds((B,), i32),
+                "caches": caches}
+    raise ValueError(shape.kind)
+
+
+def materialize(spec, seed: int = 0):
+    """Turn an input_specs pytree into real (tiny) arrays for smoke tests.
+
+    Token ids are uniform over the vocab-free range [0, 64); float leaves
+    are standard normal.  Deterministic in ``seed``.
+    """
+    leaves, treedef = jax.tree.flatten(spec)
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for i, leaf in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        if jnp.issubdtype(leaf.dtype, jnp.integer):
+            out.append(jax.random.randint(k, leaf.shape, 0, 64,
+                                          dtype=leaf.dtype))
+        else:
+            out.append(jax.random.normal(k, leaf.shape,
+                                         jnp.float32).astype(leaf.dtype))
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,107 @@
+"""Activation sharding constraints for model internals.
+
+``constrain(x, *logical_names)`` applies
+``jax.lax.with_sharding_constraint`` resolved against the *current* mesh
+context — and degrades to a no-op when there is no mesh (CPU smoke
+tests) or when a dim doesn't divide the mesh axis.  Model code can
+therefore sprinkle constraints freely; they only bind under the
+dry-run/launcher mesh.
+
+``act_mode`` switches the sequence rule:
+  "dp"  — activations sharded over batch only (default);
+  "sp"  — sequence dim additionally sharded over the model axis
+          (sequence parallelism for the long train/prefill cells; XLA
+          inserts the all-gather/reduce-scatter pairs around attention).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+ACT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": "model",       # only active in "sp" mode
+    "tokens": ("pod", "data", "model"),  # flattened (B*S) token dim
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "experts": "model",
+    "vocab": "model",
+    "layers": None,
+    None: None,
+}
+
+
+def act_mode() -> str:
+    return getattr(_state, "mode", "dp")
+
+
+@contextlib.contextmanager
+def use_act_mode(mode: str):
+    prev = act_mode()
+    _state.mode = mode
+    try:
+        yield
+    finally:
+        _state.mode = prev
+
+
+def _current_mesh():
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    try:  # classic `with mesh:` context
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def constrain(x, *names: Optional[str]):
+    """Best-effort sharding constraint by logical dim names."""
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    mode = act_mode()
+    used: set[str] = set()
+    spec = []
+    for dim, name in zip(x.shape, names):
+        if name == "seq" and mode != "sp":
+            spec.append(None)
+            continue
+        axes = ACT_RULES.get(name)
+        if axes is None:
+            spec.append(None)
+            continue
+        tup = (axes,) if isinstance(axes, str) else tuple(axes)
+        tup = tuple(a for a in tup if a in mesh.shape and a not in used)
+        size = 1
+        for a in tup:
+            size *= mesh.shape[a]
+        # drop leading axes until the dim divides
+        while tup and (size <= 1 or dim % size != 0):
+            size //= mesh.shape[tup[0]]
+            tup = tup[1:]
+        if not tup or size <= 1:
+            spec.append(None)
+            continue
+        used.update(tup)
+        spec.append(tup[0] if len(tup) == 1 else tup)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x

@@ -1,0 +1,14 @@
+"""Serverless model-serving runtime with SLIMSTART cold-start control.
+
+The engine decomposes a model server's cold start into *components*
+(weight groups, modality frontends, per-entry-point compilations) — the
+Level-B analogue of the paper's Python libraries — and applies the same
+profile-guided loop: hierarchical init-cost breakdown, utilization from
+live traffic, and lazy materialization of cold components.
+"""
+
+from repro.serving.components import (  # noqa: F401
+    Component, ComponentRegistry, LoadPolicy,
+)
+from repro.serving.engine import ServingEngine  # noqa: F401
+from repro.serving.batcher import ContinuousBatcher, Request  # noqa: F401

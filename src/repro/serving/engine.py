@@ -1,0 +1,272 @@
+"""Serverless serving engine with SLIMSTART-guided cold starts.
+
+Cold-start anatomy (the Level-B "library loading"):
+    import -> config -> weight materialization -> entry-point compilation
+Each stage is a named ``Component``; the engine materializes the eager
+set per ``LoadPolicy``, serves requests (materializing lazy components
+on first use, exactly like a deferred import), and tracks per-entry
+invocations + per-expert routing mass as the utilization signal for the
+profile-guided optimizer (``engine.report()`` -> ``LoadPolicy.from_report``).
+"""
+
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+from repro.models.model import (
+    decode_step, init_cache, init_params, model_template, prefill,
+)
+from repro.serving.components import Component, ComponentRegistry, LoadPolicy
+
+
+class ServingEngine:
+    """One model server instance ("function instance" in FaaS terms)."""
+
+    def __init__(self, cfg: ArchConfig, *, policy: Optional[LoadPolicy]
+                 = None, seed: int = 0, batch_size: int = 1,
+                 prefill_len: int = 32, max_len: int = 96):
+        self.cfg = cfg
+        self.policy = policy or LoadPolicy.eager_all()
+        self.seed = seed
+        self.B = batch_size
+        self.prefill_len = prefill_len
+        self.max_len = max_len
+        self.registry = ComponentRegistry()
+        self.entry_counts: dict[str, int] = {}
+        self.expert_mass: Optional[np.ndarray] = None
+        self._params = None
+        self.cold_start_s: Optional[float] = None
+        self._build_components()
+
+    # ------------------------------------------------------------ build
+    def _build_components(self):
+        cfg = self.cfg
+        reg = self.registry
+        key = jax.random.PRNGKey(self.seed)
+
+        def weights_builder():
+            params = init_params(cfg, key)
+            if cfg.moe is not None:
+                # expert FF weights are materialized per-expert instead
+                params = self._blank_experts(params)
+            return params
+
+        reg.add(Component("weights.core", "weights", weights_builder))
+
+        if cfg.moe is not None:
+            for e in range(cfg.moe.n_experts):
+                reg.add(Component(f"expert.{e}", "experts",
+                                  partial(self._expert_builder, e)))
+        if cfg.vision_tokens:
+            reg.add(Component("frontend.vision", "frontend",
+                              lambda: True))  # vision_proj kept in core;
+            # the *stub tower* cost is modeled by the patch embedder
+        if cfg.encoder_layers:
+            reg.add(Component("frontend.audio_encoder", "frontend",
+                              lambda: True))
+
+        # per-entry-point compilations (AOT: lower+compile counted as the
+        # component's init cost — the Level-B analogue of importing the
+        # module that serves this handler)
+        for entry in self.entries():
+            reg.add(Component(f"compile.{entry}", "compile",
+                              partial(self._compile_entry, entry)))
+
+    def entries(self) -> list[str]:
+        cfg = self.cfg
+        out = ["generate"]
+        if cfg.vision_tokens:
+            out.append("vision_generate")
+        if cfg.encoder_layers:
+            out.append("transcribe")
+        out.append("score")  # rarely-hit scoring/teacher-forcing handler
+        return out
+
+    # ---------------------------------------------------------- experts
+    def _blank_experts(self, params):
+        def blank(leaf_path_ok):
+            return leaf_path_ok
+
+        def visit(tree):
+            for k, v in tree.items():
+                if k == "moe":
+                    v["wi"] = jnp.zeros_like(v["wi"])
+                    v["wo"] = jnp.zeros_like(v["wo"])
+                elif isinstance(v, dict):
+                    visit(v)
+        visit(params["layers"])
+        return params
+
+    def _expert_builder(self, e: int):
+        """Materialize expert e's FF weights in every MoE layer and patch
+        them into the live param tree."""
+        cfg = self.cfg
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), 1000 + e)
+        params = self._params
+
+        def visit(tree, path=""):
+            for k, v in sorted(tree.items()):
+                if k == "moe":
+                    for w in ("wi", "wo"):
+                        shape = v[w].shape  # (n_stack, E, ...)
+                        sub = jax.random.normal(
+                            jax.random.fold_in(key, hash((path, w)) %
+                                               (2**31)),
+                            shape[:1] + shape[2:], jnp.float32)
+                        sub = (sub / np.sqrt(shape[2])).astype(v[w].dtype)
+                        v[w] = v[w].at[:, e].set(sub)
+                elif isinstance(v, dict):
+                    visit(v, path + "/" + k)
+        visit(params["layers"])
+        return e
+
+    # ------------------------------------------------------ compilation
+    def _entry_shapes(self, entry: str):
+        cfg = self.cfg
+        B = self.B
+        toks = jax.ShapeDtypeStruct((B, self.prefill_len), jnp.int32)
+        extras = {}
+        if entry == "vision_generate" and cfg.vision_tokens:
+            extras["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.vision_tokens, cfg.d_model), cfg.jdtype)
+        if entry == "transcribe" and cfg.encoder_layers:
+            extras["enc_frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), cfg.jdtype)
+        return toks, extras
+
+    def _compile_entry(self, entry: str):
+        cfg = self.cfg
+        toks, extras = self._entry_shapes(entry)
+        cache_len = self.max_len + (cfg.vision_tokens or 0)
+
+        if entry == "score":
+            def score_fn(params, tokens):
+                from repro.models.model import forward, _head
+                h, _, _ = forward(cfg, params, tokens)
+                return _head(cfg, params, h)
+            compiled = jax.jit(score_fn).lower(
+                self._param_shapes(), toks).compile()
+            return {"score": compiled}
+
+        def prefill_fn(params, tokens, extra):
+            logits, caches, aux = prefill(cfg, params, tokens,
+                                          cache_len=cache_len, **extra)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            load = aux.get("expert_load") if cfg.moe else None
+            return nxt, caches, load
+
+        def decode_fn(params, token, pos, caches):
+            logits, caches = decode_step(cfg, params, token, pos, caches)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt[:, None], caches
+
+        extra_shapes = {k: v for k, v in extras.items()}
+        pre_c = jax.jit(prefill_fn).lower(
+            self._param_shapes(), toks, extra_shapes).compile()
+        cache_shapes = jax.eval_shape(
+            lambda: init_cache(cfg, self.B, cache_len))
+        dec_c = jax.jit(decode_fn).lower(
+            self._param_shapes(),
+            jax.ShapeDtypeStruct((self.B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((self.B,), jnp.int32),
+            cache_shapes).compile()
+        return {"prefill": pre_c, "decode": dec_c}
+
+    def _param_shapes(self):
+        return jax.eval_shape(
+            lambda: init_params(self.cfg, jax.random.PRNGKey(0)))
+
+    # ---------------------------------------------------------- serving
+    def cold_start(self):
+        """Materialize the eager set; returns wall seconds."""
+        t0 = time.perf_counter()
+        self._params = self.registry["weights.core"].get()
+        self.registry["weights.core"].uses -= 1
+        self.registry.materialize_eager(self.policy)
+        self.cold_start_s = time.perf_counter() - t0
+        return self.cold_start_s
+
+    def _ensure(self, name: str):
+        comp = self.registry[name]
+        return comp.get()
+
+    def serve(self, entry: str, tokens: np.ndarray, *,
+              max_new_tokens: int = 8, extras: Optional[dict] = None):
+        """Serve one batched request; returns (tokens_out, latency_s)."""
+        t0 = time.perf_counter()
+        cfg = self.cfg
+        self.entry_counts[entry] = self.entry_counts.get(entry, 0) + 1
+        if self._params is None:
+            self._params = self.registry["weights.core"].get()
+            self.registry["weights.core"].uses -= 1  # counted below
+        exes = self._ensure(f"compile.{entry}")
+        if entry == "vision_generate":
+            self._ensure("frontend.vision")
+        if entry == "transcribe":
+            self._ensure("frontend.audio_encoder")
+
+        self.registry["weights.core"].uses += 1  # every request hits them
+        toks = jnp.asarray(tokens, jnp.int32)
+        if entry == "score":
+            out = exes["score"](self._params, toks)
+            jax.block_until_ready(out)
+            return np.asarray(out), time.perf_counter() - t0
+
+        extra = dict(extras or {})
+        _, extra_shapes = self._entry_shapes(entry)
+        for k, sds in extra_shapes.items():
+            if k not in extra:
+                extra[k] = jnp.zeros(sds.shape, sds.dtype)
+
+        nxt, caches, load = exes["prefill"](self._params, toks, extra)
+        if load is not None:
+            self._account_experts(np.asarray(load))
+        vt = cfg.vision_tokens if entry == "vision_generate" else 0
+        pos0 = toks.shape[1] + (vt or 0)
+        out = [nxt]
+        tok = nxt[:, None]
+        for i in range(max_new_tokens - 1):
+            pos = jnp.full((self.B,), pos0 + i, jnp.int32)
+            tok, caches = exes["decode"](self._params, tok, pos, caches)
+            out.append(tok[:, 0])
+        result = np.stack([np.asarray(o) for o in out], axis=1)
+        return result, time.perf_counter() - t0
+
+    # ----------------------------------------- utilization / SLIMSTART
+    def _account_experts(self, load: np.ndarray):
+        """Routing mass -> expert Component.uses; materialize experts
+        that received traffic but are still cold (lazy loading)."""
+        if self.expert_mass is None:
+            self.expert_mass = np.zeros_like(load)
+        self.expert_mass += load
+        for e, mass in enumerate(load):
+            name = f"expert.{e}"
+            if name in self.registry and mass > 0:
+                comp = self.registry[name]
+                if not comp.ready:
+                    comp.get()  # deferred materialization on first route
+                else:
+                    comp.uses += 1
+
+    def report(self) -> dict:
+        rep = self.registry.report()
+        rep["entry_counts"] = dict(self.entry_counts)
+        rep["cold_start_s"] = self.cold_start_s
+        if self.expert_mass is not None:
+            tot = float(self.expert_mass.sum()) or 1.0
+            rep["expert_utilization"] = {
+                f"expert.{e}": round(float(m) / tot, 4)
+                for e, m in enumerate(self.expert_mass)}
+            # fold routing mass into component utilization rows
+            for row in rep["components"]:
+                if row["component"].startswith("expert."):
+                    row["utilization"] = rep["expert_utilization"].get(
+                        row["component"], 0.0)
+        return rep

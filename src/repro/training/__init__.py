@@ -1,0 +1,4 @@
+"""Training substrate: optimizer, step functions, data, checkpoints."""
+
+from repro.training.adamw import adamw_init, adamw_update  # noqa: F401
+from repro.training.step import make_train_step, make_serve_steps  # noqa: F401

@@ -1,0 +1,72 @@
+"""Mixed-precision AdamW (pure JAX, no optax dependency).
+
+Keeps fp32 master weights and fp32 first/second moments; the model
+parameters stay in the model dtype (bf16) and are re-cast from the
+masters every step.  All optimizer state shards exactly like its
+parameter (same PartitionSpec), so TP/EP-sharded layers get sharded
+optimizer state for free (ZeRO-style along the model axis).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    master: Any  # fp32 parameter copies
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, f32)
+    # copy=True: for fp32 models .astype would alias the param buffer and
+    # break (params, opt_state) double-donation in the fused train step
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        master=jax.tree.map(lambda p: jnp.array(p, dtype=f32, copy=True),
+                            params),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr=3e-4, b1=0.9,
+                 b2=0.95, eps=1e-8, weight_decay=0.1, grad_clip=1.0):
+    """Returns (new_params, new_state).  Global-norm clipping included."""
+    step = state.step + 1
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(f32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    c1 = 1.0 - b1 ** step.astype(f32)
+    c2 = 1.0 - b2 ** step.astype(f32)
+
+    def upd(g, m, v, master):
+        g = g.astype(f32) * scale
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * jnp.square(g)
+        mhat = m / c1
+        vhat = v / c2
+        master = master - lr * (mhat / (jnp.sqrt(vhat) + eps)
+                                + weight_decay * master)
+        return m, v, master
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = tdef.flatten_up_to(state.mu)
+    flat_v = tdef.flatten_up_to(state.nu)
+    flat_ma = tdef.flatten_up_to(state.master)
+    out = [upd(g, m, v, ma)
+           for g, m, v, ma in zip(flat_g, flat_m, flat_v, flat_ma)]
+    mu = tdef.unflatten([o[0] for o in out])
+    nu = tdef.unflatten([o[1] for o in out])
+    master = tdef.unflatten([o[2] for o in out])
+    new_params = jax.tree.map(
+        lambda ma, p: ma.astype(p.dtype), master, params)
+    return new_params, AdamWState(step, master, mu, nu)

@@ -1,0 +1,96 @@
+"""Step functions lowered by the launcher and the multi-pod dry-run.
+
+``make_train_step`` builds the canonical fused step:
+    grads = grad(loss); AdamW update; metrics
+with optional microbatch gradient accumulation (scan over microbatches)
+and optional int8 cross-pod gradient compression (see compress.py).
+
+``make_serve_steps`` builds (prefill_fn, decode_fn) for the serving
+shapes; decode is greedy (argmax) one-token generation against the
+caller-provided KV/recurrent cache.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.model import (
+    constrain_like_params, decode_step, loss_fn, prefill,
+)
+from repro.training.adamw import AdamWState, adamw_update
+
+
+def make_train_step(cfg: ArchConfig, *, lr=3e-4, accum_steps: int = 1,
+                    compress_fn=None):
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics).
+
+    accum_steps > 1 splits the batch on the leading dim into
+    microbatches and accumulates grads in fp32 via lax.scan — the
+    activation-memory lever for the big train cells.
+    """
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+        return grads, metrics
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if accum_steps == 1:
+            grads, metrics = grads_of(params, batch)
+        else:
+            def micro(i, b):
+                return jax.tree.map(
+                    lambda x: x.reshape((accum_steps, -1) + x.shape[1:])[i],
+                    b)
+
+            def body(carry, i):
+                acc = carry
+                g, m = grads_of(params, micro(i, batch))
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32), acc, g)
+                return acc, m
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, ms = jax.lax.scan(body, zero,
+                                     jnp.arange(accum_steps))
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+        if compress_fn is not None:
+            grads = compress_fn(grads)
+        new_params, new_opt = adamw_update(grads, opt_state, params, lr=lr)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_serve_steps(cfg: ArchConfig, cache_len: Optional[int] = None):
+    """(prefill_fn, decode_fn) for serving.
+
+    prefill_fn(params, batch)  -> (next_token, caches)
+    decode_fn(params, token, pos, caches) -> (next_token, logits, caches)
+    """
+
+    def prefill_fn(params, batch):
+        logits, caches, _ = prefill(
+            cfg, params, batch["tokens"], cache_len=cache_len,
+            patch_embeds=batch.get("patch_embeds"),
+            enc_frames=batch.get("enc_frames"))
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+    def decode_fn(params, token, pos, caches):
+        logits, new_caches = decode_step(cfg, params, token, pos, caches)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt[:, None], logits, new_caches
+
+    return prefill_fn, decode_fn

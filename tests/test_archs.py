@@ -1,0 +1,153 @@
+"""Per-architecture smoke tests on reduced configs (CPU).
+
+For every assigned architecture:
+  * one train loss+grad step -> finite loss, no NaN grads, right shapes;
+  * prefill -> decode_step chain matches the teacher-forced full forward
+    (the strongest cache-correctness check a serving stack has).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_reduced
+from repro.models import (
+    SHAPES, decode_step, forward, init_params, input_specs, loss_fn,
+    materialize, prefill,
+)
+from repro.models.config import ShapeSpec
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _small_train_shape(cfg):
+    return ShapeSpec("smoke_train", 32 + (cfg.vision_tokens or 0), 2,
+                     "train")
+
+
+def _batch_for(cfg, shape, seed=0):
+    batch = materialize(input_specs(cfg, shape), seed=seed)
+    if "tokens" in batch:
+        batch["tokens"] = batch["tokens"] % cfg.vocab
+    if "labels" in batch:
+        batch["labels"] = batch["labels"] % cfg.vocab
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg = get_reduced(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch_for(cfg, _small_train_shape(cfg))
+
+    @jax.jit
+    def step(p, b):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p_: loss_fn(cfg, p_, b), has_aux=True)(p)
+        return loss, metrics, grads
+
+    loss, metrics, grads = step(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch}: loss is not finite"
+    flat = jax.tree.leaves(grads)
+    assert flat, f"{arch}: empty grads"
+    for g in flat:
+        assert np.all(np.isfinite(np.asarray(g, dtype=np.float32))), \
+            f"{arch}: NaN/inf grad"
+    # loss decreases under a plain SGD step (sanity that grads point
+    # somewhere useful)
+    params2 = jax.tree.map(lambda p, g: p - 0.01 * g.astype(p.dtype),
+                           params, grads)
+    loss2, _, _ = step(params2, batch)
+    assert float(loss2) < float(loss) + 1e-3
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_matches_forward(arch):
+    cfg = get_reduced(arch)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    B, T0, n_dec = 2, 8, 5
+    total = T0 + n_dec
+    key = jax.random.PRNGKey(2)
+    tokens = jax.random.randint(key, (B, total), 0, cfg.vocab, jnp.int32)
+    extra = {}
+    if cfg.vision_tokens:
+        extra["patch_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(3), (B, cfg.vision_tokens, cfg.d_model),
+            jnp.float32).astype(cfg.jdtype)
+    if cfg.encoder_layers:
+        extra["enc_frames"] = jax.random.normal(
+            jax.random.PRNGKey(4), (B, cfg.encoder_seq, cfg.d_model),
+            jnp.float32).astype(cfg.jdtype)
+
+    # teacher-forced logits for the whole sequence
+    from repro.models.model import _head  # noqa: PLC0415
+    h, _, _ = forward(cfg, params, tokens, **extra)
+    full_logits = _head(cfg, params, h)  # (B, S', V)
+
+    # prefill on the first T0 tokens, then decode the rest step by step
+    logits_p, caches, _ = jax.jit(
+        lambda p, t, e: prefill(cfg, p, t, cache_len=total +
+                                (cfg.vision_tokens or 0), **{
+                                    k: e[k] for k in e})
+    )(params, tokens[:, :T0], extra)
+    vt = cfg.vision_tokens or 0
+    np.testing.assert_allclose(
+        np.asarray(logits_p, np.float32),
+        np.asarray(full_logits[:, vt + T0 - 1], np.float32),
+        rtol=2e-3, atol=2e-3, err_msg=f"{arch}: prefill logits mismatch")
+
+    dec = jax.jit(lambda p, t, pos, c: decode_step(cfg, p, t, pos, c))
+    for i in range(n_dec):
+        pos = jnp.full((B,), vt + T0 + i, jnp.int32)
+        logits_d, caches = dec(params, tokens[:, T0 + i:T0 + i + 1], pos,
+                               caches)
+        np.testing.assert_allclose(
+            np.asarray(logits_d, np.float32),
+            np.asarray(full_logits[:, vt + T0 + i], np.float32),
+            rtol=2e-3, atol=2e-3,
+            err_msg=f"{arch}: decode step {i} logits mismatch")
+
+
+def test_chunked_attention_matches_plain():
+    """The online-softmax XLA path must agree with plain masked attention."""
+    from repro.models import layers as L
+    key = jax.random.PRNGKey(0)
+    B, S, K, G, hd = 2, 64, 2, 2, 16
+    q = jax.random.normal(key, (B, S, K, G, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, K, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, hd))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    for window, cap in [(None, None), (16, None), (None, 30.0)]:
+        plain = L.attention(q, k, v, q_positions=pos, kv_positions=pos,
+                            causal=True, window=window, softcap_val=cap)
+        chunked = L.attention(q, k, v, q_positions=pos, kv_positions=pos,
+                              causal=True, window=window, softcap_val=cap,
+                              chunk_q=16, chunk_kv=16)
+        np.testing.assert_allclose(np.asarray(chunked), np.asarray(plain),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_decode_past_local_window_ring_buffer():
+    """Ring-buffer local cache stays correct after wrapping the window."""
+    arch = "recurrentgemma-2b"
+    cfg = get_reduced(arch)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    B = 2
+    total = cfg.window_size + 12  # force wraparound
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, total), 0,
+                                cfg.vocab, jnp.int32)
+    from repro.models.model import _head
+    h, _, _ = forward(cfg, params, tokens)
+    full_logits = _head(cfg, params, h)
+
+    T0 = 4
+    _, caches, _ = prefill(cfg, params, tokens[:, :T0], cache_len=total)
+    dec = jax.jit(lambda p, t, pos, c: decode_step(cfg, p, t, pos, c))
+    for i in range(T0, total):
+        pos = jnp.full((B,), i, jnp.int32)
+        logits_d, caches = dec(params, tokens[:, i:i + 1], pos, caches)
+    np.testing.assert_allclose(
+        np.asarray(logits_d, np.float32),
+        np.asarray(full_logits[:, -1], np.float32), rtol=5e-3, atol=5e-3)

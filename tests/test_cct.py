@@ -1,0 +1,93 @@
+"""Unit tests for the Calling Context Tree (paper §IV-A.2, TC-2)."""
+
+import pytest
+
+from repro.core.profiler.cct import CCT, Frame, path_is_initialization
+
+APP = Frame("app/handler.py", 10, "handler")
+ORCH = Frame("libs/lib1/core.py", 5, "orchestrate")
+HEAVY = Frame("libs/lib2/work.py", 99, "crunch")
+HEAVY2 = Frame("libs/lib2/work.py", 120, "crunch_more")
+INIT = Frame("libs/lib4/__init__.py", 1, "<module>")
+
+
+def test_add_and_escalate_propagates_to_ancestors():
+    cct = CCT()
+    # orchestrator (1 self sample) delegates to heavy lib (99 samples)
+    cct.add_path([APP, ORCH], count=1)
+    cct.add_path([APP, ORCH, HEAVY], count=99)
+    cct.escalate()
+    app_node = cct.root.children[APP]
+    orch_node = app_node.children[ORCH]
+    assert orch_node.self_samples == 1
+    # Escalation credits the orchestrator with its callees' activity
+    # (paper Fig. 5, Lib-1 case).
+    assert orch_node.inclusive_samples == 100
+    assert app_node.inclusive_samples == 100
+    assert cct.total_samples == 100
+
+
+def test_multiple_call_paths_stay_distinct():
+    cct = CCT()
+    direct = (APP, HEAVY)
+    indirect = (APP, ORCH, HEAVY)
+    cct.add_path(direct, count=3)
+    cct.add_path(indirect, count=7)
+    cct.escalate()
+    # Same function, two contexts, two nodes (paper Lib-6 case).
+    app_node = cct.root.children[APP]
+    assert app_node.children[HEAVY].self_samples == 3
+    assert app_node.children[ORCH].children[HEAVY].self_samples == 7
+    agg = cct.leaf_self_samples()
+    assert agg[HEAVY] == 10
+
+
+def test_init_samples_separated_from_runtime():
+    cct = CCT()
+    cct.add_path([APP, INIT, HEAVY], count=5)  # during lib4 import
+    cct.add_path([APP, ORCH, HEAVY], count=5)  # runtime
+    cct.escalate()
+    assert cct.total_init_samples == 5
+    runtime = cct.runtime_self_samples_by(
+        lambda fr: "lib2" if "lib2" in fr.filename else None)
+    # Only the runtime path contributes to utilization (Lib-4 case).
+    assert runtime == {"lib2": 5}
+
+
+def test_path_is_initialization_detects_module_frames():
+    assert path_is_initialization((APP, INIT))
+    assert not path_is_initialization((APP, ORCH, HEAVY))
+    frozen = Frame("<frozen importlib._bootstrap>", 1, "_find_and_load")
+    assert path_is_initialization((APP, frozen, HEAVY))
+
+
+def test_merge_accumulates_across_invocations():
+    a, b = CCT(), CCT()
+    a.add_path([APP, HEAVY], count=2)
+    b.add_path([APP, HEAVY], count=3)
+    b.add_path([APP, ORCH], count=1)
+    a.merge(b)
+    a.escalate()
+    assert a.total_samples == 6
+    assert a.root.children[APP].children[HEAVY].self_samples == 5
+
+
+def test_serialization_roundtrip():
+    cct = CCT()
+    cct.add_path([APP, ORCH, HEAVY], count=4)
+    cct.add_path([APP, INIT], count=2)
+    s = cct.dumps()
+    back = CCT.loads(s)
+    back.escalate()
+    assert back.total_samples == 6
+    assert back.total_init_samples == 2
+    assert back.root.children[APP].children[ORCH].children[HEAVY].self_samples == 4
+
+
+def test_paths_to_finds_call_paths():
+    cct = CCT()
+    cct.add_path([APP, ORCH, HEAVY], count=1)
+    cct.add_path([APP, HEAVY2], count=1)
+    paths = cct.paths_to(lambda fr: "lib2" in fr.filename)
+    assert len(paths) == 2
+    assert all(p[0] == APP for p in paths)

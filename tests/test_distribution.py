@@ -1,0 +1,128 @@
+"""Distribution-layer tests: sharding rules, cache specs, input specs,
+and the loop-aware HLO collective parser used by the roofline."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.distributed.sharding import (
+    DEFAULT_RULES, cache_pspecs, opt_pspecs, param_pspecs, resolve_axes,
+)
+from repro.models import SHAPES, applicable_shapes, input_specs
+from repro.models.model import init_cache, model_template
+from repro.models.layers import ParamSpec
+
+
+def _mesh22():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_resolve_axes_divisibility_fallback():
+    mesh = jax.make_mesh((1,), ("model",))
+    # dims that don't divide the mesh axis fall back to replication
+    spec = resolve_axes((49155, 1024), ("vocab", "embed"), DEFAULT_RULES,
+                        mesh)
+    assert spec == P()  # model axis size 1 -> nothing to shard
+
+
+def test_param_pspecs_structure_matches_params():
+    for arch in ["gemma3-27b", "whisper-large-v3", "olmoe-1b-7b"]:
+        cfg = get_config(arch)
+        mesh = _mesh22()
+        specs = param_pspecs(cfg, mesh)
+        tmpl = model_template(cfg)
+        t1 = jax.tree.structure(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        t2 = jax.tree.structure(
+            tmpl, is_leaf=lambda x: isinstance(x, ParamSpec))
+        assert t1 == t2, arch
+
+
+def test_cache_pspecs_structure_matches_cache():
+    for arch in ["qwen2.5-32b", "recurrentgemma-2b", "xlstm-350m",
+                 "whisper-large-v3"]:
+        cfg = get_config(arch)
+        mesh = _mesh22()
+        shapes = jax.eval_shape(lambda c=cfg: init_cache(c, 4, 64))
+        specs = cache_pspecs(cfg, mesh, 4, 64)
+        t1 = jax.tree.structure(specs,
+                                is_leaf=lambda x: isinstance(x, P))
+        t2 = jax.tree.structure(shapes)
+        assert t1 == t2, arch
+        # every spec has rank <= leaf rank
+        for s, leaf in zip(
+                jax.tree.leaves(specs,
+                                is_leaf=lambda x: isinstance(x, P)),
+                jax.tree.leaves(shapes)):
+            assert len(s) <= len(leaf.shape)
+
+
+def test_opt_pspecs_zero1_adds_data_axis():
+    cfg = get_config("granite-8b")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    o = opt_pspecs(cfg, mesh)
+    # same tree structure as params for master/mu/nu
+    p = param_pspecs(cfg, mesh)
+    assert jax.tree.structure(
+        o.master, is_leaf=lambda x: isinstance(x, P)) == \
+        jax.tree.structure(p, is_leaf=lambda x: isinstance(x, P))
+
+
+def test_input_specs_all_cells_build():
+    """Every assigned (arch x applicable shape) cell has well-defined
+    ShapeDtypeStruct inputs — 32 cells, no allocation."""
+    n = 0
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape_name in applicable_shapes(cfg):
+            spec = input_specs(cfg, SHAPES[shape_name])
+            leaves = jax.tree.leaves(spec)
+            assert leaves and all(
+                isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+            if SHAPES[shape_name].kind == "decode":
+                assert "caches" in spec and "pos" in spec
+            n += 1
+    assert n == 32  # 3 shapes x 10 archs + long_500k x 2 subquadratic
+
+
+def test_long500k_applicability():
+    subq = [a for a in ARCH_IDS
+            if "long_500k" in applicable_shapes(get_config(a))]
+    assert sorted(subq) == ["recurrentgemma-2b", "xlstm-350m"]
+
+
+# ---------------------------------------------------------------- parser
+HLO_SAMPLE = """
+HloModule test
+
+%wide.cond (p: (s32[], bf16[4,8])) -> pred[] {
+  %iter = s32[] get-tuple-element(%p), index=0
+  ROOT %cmp = pred[] compare(%iter, s32[] constant(21)), direction=LT
+}
+
+%wide.body (p: (s32[], bf16[4,8])) -> (s32[], bf16[4,8]) {
+  %x = bf16[4,8]{1,0} get-tuple-element(%p), index=1
+  %ag = bf16[8,8]{1,0} all-gather(bf16[4,8]{1,0} %x), dimensions={0}
+  %ar = bf16[4,8]{1,0} all-reduce(bf16[4,8]{1,0} %x), to_apply=%sum
+  ROOT %t = (s32[], bf16[4,8]) tuple(%i, %ar)
+}
+
+ENTRY %main.1 (a: bf16[4,8]) -> bf16[4,8] {
+  %w = (s32[], bf16[4,8]) while(%init), condition=%wide.cond, body=%wide.body
+  %top = bf16[4,8]{1,0} all-reduce(bf16[4,8]{1,0} %a), to_apply=%sum
+  ROOT %r = bf16[4,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_parser_loop_aware():
+    from repro.launch.dryrun import collective_bytes
+    out = collective_bytes(HLO_SAMPLE)
+    # bytes = collective *result* shapes (per-device traffic proxy):
+    # in-loop x21: all-gather result (8,8) bf16 + all-reduce result (4,8)
+    # top-level: one all-reduce result (4,8)
+    assert out["all-gather"] == 21 * 8 * 8 * 2
+    assert out["all-reduce"] == 21 * 4 * 8 * 2 + 4 * 8 * 2
+    assert out["total"] == out["all-gather"] + out["all-reduce"]

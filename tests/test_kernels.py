@@ -1,0 +1,178 @@
+"""Pallas kernel validation: interpret-mode kernels vs pure-jnp oracles.
+
+Fixed cases cover block-boundary padding, GQA grouping, windows and
+softcaps across dtypes; hypothesis sweeps randomize shapes within CPU
+budget.  Tolerances: fp32 1e-5 / bf16 2e-2 (matmul rounding).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels import ref
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ----------------------------------------------------------------- flash
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,H,K,Sq,Skv,hd,causal,window,cap",
+    [
+        (2, 4, 2, 64, 64, 32, True, None, None),      # GQA
+        (1, 2, 2, 48, 48, 16, True, None, None),      # off-block seq
+        (1, 4, 1, 40, 40, 32, True, 16, None),        # MQA + window
+        (1, 2, 2, 33, 33, 16, True, None, 30.0),      # softcap + ragged
+        (1, 2, 2, 16, 80, 16, False, None, None),     # bidir, Sq != Skv
+    ])
+def test_flash_attention_vs_ref(B, H, K, Sq, Skv, hd, causal, window, cap,
+                                dtype):
+    key = jax.random.PRNGKey(0)
+    q = _rand(key, (B, H, Sq, hd), dtype)
+    k = _rand(jax.random.fold_in(key, 1), (B, K, Skv, hd), dtype)
+    v = _rand(jax.random.fold_in(key, 2), (B, K, Skv, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=cap, block_q=16, block_kv=16,
+                          interpret=True)
+    want = ref.ref_flash_attention(q, k, v, causal=causal, window=window,
+                                   softcap=cap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    B=st.integers(1, 2), K=st.integers(1, 2), G=st.integers(1, 3),
+    sq=st.integers(3, 40), hd=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(),
+    window=st.sampled_from([None, 8]),
+)
+def test_flash_attention_hypothesis(B, K, G, sq, hd, causal, window):
+    key = jax.random.PRNGKey(sq * hd + G)
+    H = K * G
+    q = _rand(key, (B, H, sq, hd), jnp.float32)
+    k = _rand(jax.random.fold_in(key, 1), (B, K, sq, hd), jnp.float32)
+    v = _rand(jax.random.fold_in(key, 2), (B, K, sq, hd), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=16, block_kv=16, interpret=True)
+    want = ref.ref_flash_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               **TOL[jnp.float32])
+
+
+# ---------------------------------------------------------------- decode
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,K,G,S,hd,window,cap,ring",
+    [
+        (2, 2, 2, 64, 32, None, None, False),
+        (1, 1, 4, 48, 16, None, None, False),   # MQA, ragged S
+        (2, 2, 1, 40, 16, 16, None, True),      # ring buffer + window
+        (1, 2, 2, 33, 16, None, 30.0, False),   # softcap
+    ])
+def test_decode_attention_vs_ref(B, K, G, S, hd, window, cap, ring, dtype):
+    key = jax.random.PRNGKey(1)
+    q = _rand(key, (B, K, G, hd), dtype)
+    k = _rand(jax.random.fold_in(key, 1), (B, K, S, hd), dtype)
+    v = _rand(jax.random.fold_in(key, 2), (B, K, S, hd), dtype)
+    if ring:
+        cur = S + 7  # wrapped ring: slot i holds position with slot == i%S
+        base = jnp.arange(S)
+        kv_pos = jnp.where(base <= cur % S, base + (cur // S) * S,
+                           base + (cur // S - 1) * S)
+        kv_pos = jnp.broadcast_to(kv_pos, (B, S))
+        q_pos = jnp.full((B,), cur, jnp.int32)
+    else:
+        n_valid = S - 5
+        kv_pos = jnp.where(jnp.arange(S) < n_valid, jnp.arange(S), -1)
+        kv_pos = jnp.broadcast_to(kv_pos, (B, S))
+        q_pos = jnp.full((B,), n_valid - 1, jnp.int32)
+    out = decode_attention(q, k, v, q_pos, kv_pos, window=window,
+                           softcap=cap, block_kv=16, interpret=True)
+    want = ref.ref_decode_attention(q, k, v, q_pos, kv_pos, window=window,
+                                    softcap=cap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@settings(max_examples=8, deadline=None)
+@given(B=st.integers(1, 2), K=st.integers(1, 2), G=st.integers(1, 4),
+       S=st.integers(4, 50), hd=st.sampled_from([8, 16]),
+       window=st.sampled_from([None, 8]))
+def test_decode_attention_hypothesis(B, K, G, S, hd, window):
+    key = jax.random.PRNGKey(S + hd)
+    q = _rand(key, (B, K, G, hd), jnp.float32)
+    k = _rand(jax.random.fold_in(key, 1), (B, K, S, hd), jnp.float32)
+    v = _rand(jax.random.fold_in(key, 2), (B, K, S, hd), jnp.float32)
+    kv_pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q_pos = jnp.full((B,), S - 1, jnp.int32)
+    out = decode_attention(q, k, v, q_pos, kv_pos, window=window,
+                           block_kv=16, interpret=True)
+    want = ref.ref_decode_attention(q, k, v, q_pos, kv_pos, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               **TOL[jnp.float32])
+
+
+# ---------------------------------------------------------------- rg-lru
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,R,with_h0", [
+    (2, 64, 128, False),
+    (1, 40, 130, True),   # ragged channel dim
+    (2, 17, 64, True),    # ragged time dim
+])
+def test_rglru_scan_vs_ref(B, S, R, with_h0, dtype):
+    key = jax.random.PRNGKey(2)
+    # decays in (0, 1) like real RG-LRU coefficients
+    a = jax.nn.sigmoid(_rand(key, (B, S, R), jnp.float32)).astype(dtype)
+    b = _rand(jax.random.fold_in(key, 1), (B, S, R), dtype)
+    h0 = (_rand(jax.random.fold_in(key, 2), (B, R), dtype)
+          if with_h0 else None)
+    out = rglru_scan(a, b, h0, block_t=16, block_r=128, interpret=True)
+    want = ref.ref_rglru_scan(a, b, h0)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@settings(max_examples=8, deadline=None)
+@given(B=st.integers(1, 2), S=st.integers(2, 40),
+       R=st.sampled_from([32, 100, 128]))
+def test_rglru_hypothesis(B, S, R):
+    key = jax.random.PRNGKey(S * R)
+    a = jax.nn.sigmoid(_rand(key, (B, S, R), jnp.float32))
+    b = _rand(jax.random.fold_in(key, 1), (B, S, R), jnp.float32)
+    out = rglru_scan(a, b, block_t=16, block_r=128, interpret=True)
+    want = ref.ref_rglru_scan(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------- ops layer consistency
+def test_attention_op_matches_model_layer():
+    """kernels.ops must agree with the model's XLA attention path."""
+    from repro.models import layers as L
+    from repro.kernels import ops
+    key = jax.random.PRNGKey(3)
+    B, S, K, G, hd = 2, 32, 2, 2, 16
+    q = _rand(key, (B, S, K, G, hd), jnp.float32)
+    k = _rand(jax.random.fold_in(key, 1), (B, S, K, hd), jnp.float32)
+    v = _rand(jax.random.fold_in(key, 2), (B, S, K, hd), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    for window, cap in [(None, None), (8, None), (None, 30.0)]:
+        xla = L.attention(q, k, v, q_positions=pos, kv_positions=pos,
+                          causal=True, window=window, softcap_val=cap)
+        pallas = ops.attention_op(q, k, v, causal=True, window=window,
+                                  softcap=cap)
+        np.testing.assert_allclose(np.asarray(pallas), np.asarray(xla),
+                                   rtol=2e-3, atol=2e-3)

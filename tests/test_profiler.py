@@ -1,0 +1,215 @@
+"""Unit tests: import timer (Eq. 1-3), sampler, utilization (Eq. 4),
+adaptive monitor (Eq. 5-7), async collector."""
+
+import os
+import sys
+import textwrap
+import time
+
+import pytest
+
+from repro.core.profiler.cct import CCT, Frame
+from repro.core.profiler.collector import AsyncCollector, read_shards
+from repro.core.profiler.import_timer import ImportTimer
+from repro.core.profiler.sampler import CallPathSampler, SamplerConfig
+from repro.core.profiler.utilization import (
+    AnalyzerConfig,
+    ModuleMapper,
+    UtilizationAnalyzer,
+)
+from repro.core.adaptive.monitor import MonitorConfig, WorkloadMonitor
+
+
+# ---------------------------------------------------------------- fixtures
+
+def make_fake_lib(root, name="fakelib", spin_ms=5):
+    """Create a tiny package with measurable import-time work."""
+    pkg = root / name
+    (pkg / "sub").mkdir(parents=True)
+    spin = textwrap.dedent(f"""\
+        import time as _t
+        _end = _t.perf_counter() + {spin_ms / 1000.0}
+        while _t.perf_counter() < _end:
+            pass
+    """)
+    (pkg / "__init__.py").write_text(spin + f"from {name} import core\n"
+                                     + f"from {name} import sub\n")
+    (pkg / "core.py").write_text(spin + "def work(n):\n"
+                                 "    s = 0\n"
+                                 "    for i in range(n):\n"
+                                 "        s += i * i\n"
+                                 "    return s\n")
+    (pkg / "sub" / "__init__.py").write_text(spin + "def unused():\n"
+                                             "    return 1\n")
+    return str(root)
+
+
+@pytest.fixture
+def fake_lib(tmp_path):
+    root = make_fake_lib(tmp_path)
+    sys.path.insert(0, root)
+    yield root
+    sys.path.remove(root)
+    for mod in [m for m in sys.modules if m.startswith("fakelib")]:
+        del sys.modules[mod]
+
+
+# ------------------------------------------------------------ import timer
+
+def test_import_timer_hierarchy(fake_lib):
+    with ImportTimer(only_prefixes=("fakelib",)) as timer:
+        import fakelib  # noqa: F401
+    # All three modules recorded
+    assert {"fakelib", "fakelib.core", "fakelib.sub"} <= set(timer.records)
+    # Eq.1: total == sum of self times, each ≥ spin time
+    total = timer.total_initialization_s()
+    assert total >= 3 * 0.004
+    # Eq.2: library time aggregates all modules
+    lib_times = timer.library_times()
+    assert abs(lib_times["fakelib"] - total) < 1e-9
+    # Eq.3: package prefixes
+    pkg = timer.package_times()
+    assert pkg["fakelib.sub"] >= 0.004
+    assert pkg["fakelib"] == pytest.approx(total)
+    # parent chain: fakelib.core was imported by fakelib's __init__
+    rec = timer.records["fakelib.core"]
+    assert rec.parent == "fakelib"
+    chain = timer.import_chain("fakelib.core")
+    assert [r.name for r in chain] == ["fakelib", "fakelib.core"]
+    # self-time excludes children: fakelib's self ~spin, not 3*spin
+    assert timer.records["fakelib"].self_s < 2.5 * 0.005 + 0.01
+
+
+def test_import_timer_untracked_prefix(fake_lib, tmp_path):
+    with ImportTimer(only_prefixes=("otherlib",)) as timer:
+        import fakelib  # noqa: F401
+    assert "fakelib" not in timer.records
+
+
+def test_import_timer_serialization(fake_lib):
+    with ImportTimer(only_prefixes=("fakelib",)) as timer:
+        import fakelib  # noqa: F401
+    back = ImportTimer.from_dict(timer.to_dict())
+    assert back.total_initialization_s() == pytest.approx(
+        timer.total_initialization_s())
+
+
+# ---------------------------------------------------------------- sampler
+
+def busy(duration_s):
+    end = time.process_time() + duration_s
+    x = 0
+    while time.process_time() < end:
+        x += 1
+    return x
+
+
+def test_sampler_captures_busy_function():
+    sampler = CallPathSampler(SamplerConfig(interval_s=0.005, timer="prof"))
+    with sampler:
+        busy(0.25)
+    cct = sampler.build_cct()
+    assert cct.total_samples >= 10
+    agg = cct.leaf_self_samples()
+    assert any(fr.funcname == "busy" for fr in agg), agg.keys()
+
+
+def test_sampler_stop_stops_sampling():
+    sampler = CallPathSampler(SamplerConfig(interval_s=0.005))
+    with sampler:
+        busy(0.05)
+    n = len(sampler.drain())
+    busy(0.1)
+    assert len(sampler.drain()) == 0 or len(sampler.drain()) < max(n, 2)
+
+
+# -------------------------------------------------------------- utilization
+
+def test_utilization_end_to_end(fake_lib, tmp_path):
+    with ImportTimer(only_prefixes=("fakelib",)) as timer:
+        import fakelib  # noqa: F401
+    sampler = CallPathSampler(SamplerConfig(interval_s=0.002, timer="prof"))
+    t0 = time.perf_counter()
+    with sampler:
+        fakelib.core.work(2_000_000)
+    e2e = time.perf_counter() - t0 + timer.total_initialization_s()
+    cct = sampler.build_cct()
+    mapper = ModuleMapper((fake_lib,))
+    # app_gate=0.01: the init/e2e wall-clock ratio is load-sensitive on a
+    # shared CPU; the mechanism under test (CCT attribution) is not
+    analyzer = UtilizationAnalyzer(
+        timer, cct, mapper, e2e_s=e2e,
+        config=AnalyzerConfig(min_init_share=0.001, app_gate=0.01))
+    assert analyzer.qualifies()
+    stats = analyzer.stats()
+    assert stats["fakelib.core"].runtime_samples > 0
+    assert stats["fakelib.sub"].runtime_samples == 0
+    findings = analyzer.findings()
+    flagged = {f.package for f in findings}
+    assert "fakelib.sub" in flagged
+    sub = next(f for f in findings if f.package == "fakelib.sub")
+    assert sub.kind == "unused"
+    # core is heavily used => not flagged
+    assert "fakelib.core" not in flagged
+
+
+def test_module_mapper(tmp_path):
+    mapper = ModuleMapper((str(tmp_path),))
+    f = str(tmp_path / "nltk" / "sem" / "__init__.py")
+    assert mapper.module_of(f) == "nltk.sem"
+    assert mapper.library_of(f) == "nltk"
+    f2 = str(tmp_path / "nltk" / "tokenize.py")
+    assert mapper.module_of(f2) == "nltk.tokenize"
+    assert mapper.module_of("/elsewhere/x.py") is None
+
+
+# ------------------------------------------------------------------ monitor
+
+def test_monitor_triggers_on_shift():
+    t = [0.0]
+    mon = WorkloadMonitor(MonitorConfig(window_s=10.0, epsilon=0.2),
+                          clock=lambda: t[0])
+    # window 1: all traffic to A
+    for _ in range(100):
+        mon.record("A")
+    t[0] = 11.0
+    mon.record("A")  # closes window 1 (baseline, no trigger)
+    for _ in range(99):
+        mon.record("A")
+    t[0] = 22.0
+    mon.record("B")  # closes window 2: still ~all A => no trigger
+    for _ in range(99):
+        mon.record("B")
+    t[0] = 33.0
+    stats = mon.record("B")  # closes window 3: A->B shift => trigger
+    assert stats is not None
+    assert stats.aggregate_change > 1.5  # ~|1-0| + |0-1| ≈ 2
+    assert stats.triggered
+    assert mon.triggers == 1
+
+
+def test_monitor_stable_workload_never_triggers():
+    t = [0.0]
+    mon = WorkloadMonitor(MonitorConfig(window_s=1.0, epsilon=0.05),
+                          clock=lambda: t[0])
+    for w in range(10):
+        for _ in range(50):
+            mon.record("A")
+        for _ in range(50):
+            mon.record("B")
+        t[0] += 1.01
+        mon.record("A")
+    assert mon.triggers == 0
+
+
+# ---------------------------------------------------------------- collector
+
+def test_collector_batches_and_persists(tmp_path):
+    sink = str(tmp_path / "sink")
+    with AsyncCollector(sink, batch_size=10, flush_interval_s=0.05) as col:
+        for i in range(25):
+            col.put({"i": i})
+    records = read_shards(sink)
+    assert len(records) == 25
+    assert sorted(r["i"] for r in records) == list(range(25))
+    assert col.written == 25 and col.dropped == 0
