@@ -5,6 +5,16 @@ a faithful analog of a new Lambda container: cold module cache, cold
 code objects, fresh heap.  Metrics are parsed from the runner's JSON
 stdout and aggregated into mean / p99 statistics (the paper reports
 both; p99 captures the tail that matters for SLAs).
+
+Two execution modes:
+
+* ``measure_cold_starts``  — fresh-process mode: every instance pays
+  full interpreter boot + library init.
+* ``measure_pool_starts``  — fork-pool mode: one zygote
+  (:class:`repro.pool.forkserver.ForkServer`) pre-imports a hot set
+  once, then every instance is a copy-on-write fork that only pays
+  ``fork() + import handler``.  Same metrics shape, so the two modes
+  compare directly (benchmarks/bench_pool_policies.py).
 """
 
 from __future__ import annotations
@@ -108,6 +118,29 @@ def measure_cold_starts(app_dir: str, n: int = 10, *,
         stats.init_ms.append(m["init_ms"])
         stats.e2e_ms.append(m["e2e_cold_ms"])
         stats.peak_rss_kb.append(m["peak_rss_kb"])
+    return stats
+
+
+def measure_pool_starts(app_dir: str, n: int = 10, *,
+                        preload: Optional[list[str]] = None,
+                        handler: Optional[str] = None,
+                        invocations: int = 1,
+                        seed0: int = 100) -> ColdStartStats:
+    """``n`` fork-pool warm starts through one zygote.
+
+    ``preload`` is the zygote's pre-import hot set (e.g. from
+    :func:`repro.pool.policies.hot_set_from_report`); ``None`` boots a
+    bare zygote, which still amortizes interpreter + ``repro`` imports.
+    """
+    from repro.pool.forkserver import ForkServer
+    stats = ColdStartStats(app=os.path.basename(app_dir.rstrip("/")), n=n)
+    with ForkServer(app_dir, preload=preload or []) as fs:
+        for i in range(n):
+            m = fs.exec(invocations=invocations, handler=handler,
+                        seed=seed0 + i)
+            stats.init_ms.append(m["init_ms"])
+            stats.e2e_ms.append(m["e2e_cold_ms"])
+            stats.peak_rss_kb.append(m["peak_rss_kb"])
     return stats
 
 

@@ -11,6 +11,16 @@ would be in production (paper §IV-D): the import timer hooks
 ``sys.meta_path`` before the handler import, the sampling profiler runs
 across init + invocations, and one instance-record is batch-written to
 the sink directory through the AsyncCollector.
+
+With ``--preimport mod1,mod2`` the listed modules are imported *before*
+the timed handler import — the in-process analog of a pre-warmed zygote
+(see ``repro.pool.forkserver``): the timed init then only covers the
+handler module plus whatever the hot set did not already pull in.
+
+The invocation loop and RSS measurement are exposed as module-level
+helpers (``run_invocations``, ``instance_rss_kb``, ``metrics_dict``) so
+the fork-server's forked children report metrics through the exact same
+code path as fresh-process cold starts.
 """
 
 from __future__ import annotations
@@ -25,6 +35,99 @@ import sys
 import time
 
 
+def instance_rss_kb() -> int:
+    """Best-available *per-instance* resident-set size in kB.
+
+    Preference order:
+
+    1. ``VmHWM`` from ``/proc/self/status`` — the per-mm high-water mark,
+       reset on execve: the faithful "peak memory of this cold instance".
+    2. ``VmRSS`` — current RSS.  Some kernels (notably gVisor-style
+       sandboxes) expose no VmHWM line; the benchsuite apps hold their
+       import-time ballast for the life of the instance, so end-of-run
+       VmRSS is an accurate stand-in for the peak.
+    3. ``ru_maxrss`` — last resort only: it is NOT reset by execve, so a
+       child spawned from a large parent (e.g. pytest) inherits the
+       parent's peak and floors the measurement at the parent's RSS.
+    """
+    hwm = rss = None
+    try:
+        with open("/proc/self/status") as fh:
+            for line in fh:
+                if line.startswith("VmHWM:"):
+                    hwm = int(line.split()[1])
+                elif line.startswith("VmRSS:"):
+                    rss = int(line.split()[1])
+    except (OSError, ValueError, IndexError):
+        pass
+    if hwm is not None:
+        return hwm
+    if rss is not None:
+        return rss
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+
+
+def setup_app_path(app_dir: str) -> str:
+    """Put ``app_dir`` and its vendored ``libs/`` on ``sys.path``;
+    returns the libs dir."""
+    app_dir = os.path.abspath(app_dir)
+    libs_dir = os.path.join(app_dir, "libs")
+    sys.path.insert(0, libs_dir)
+    sys.path.insert(0, app_dir)
+    return libs_dir
+
+
+def run_invocations(handler_mod, *, invocations: int = 1,
+                    handler: str | None = None, seed: int = 0,
+                    ) -> tuple[list[tuple[str, float]], dict[str, int]]:
+    """Invoke the handler module like a warm container serving requests.
+
+    Samples entry points from the module's ``WEIGHTS`` (or uses the
+    forced ``handler``); returns per-invocation ``(op, seconds)`` pairs
+    and per-op counts.
+    """
+    weights: dict[str, float] = getattr(handler_mod, "WEIGHTS", {})
+    rng = random.Random(seed)
+    names = list(weights) or ["handler"]
+    probs = [weights.get(n, 1.0) for n in names]
+
+    def pick() -> str:
+        if handler:
+            return handler
+        return rng.choices(names, weights=probs, k=1)[0]
+
+    invocation_s: list[tuple[str, float]] = []
+    counts: dict[str, int] = {}
+    for _ in range(max(1, invocations)):
+        op = pick()
+        ev = {"op": op}
+        t1 = time.perf_counter()
+        handler_mod.handler(ev)
+        invocation_s.append((op, time.perf_counter() - t1))
+        counts[op] = counts.get(op, 0) + 1
+    return invocation_s, counts
+
+
+def metrics_dict(init_s: float, invocation_s: list[tuple[str, float]],
+                 counts: dict[str, int], peak_rss_kb: int) -> dict:
+    """The runner's stdout JSON payload (shared with fork-pool children)."""
+    per_handler: dict[str, list[float]] = {}
+    for op, dt in invocation_s:
+        per_handler.setdefault(op, []).append(dt)
+    e2e_cold_s = init_s + invocation_s[0][1]
+    return {
+        "init_ms": init_s * 1e3,
+        "first_invoke_ms": invocation_s[0][1] * 1e3,
+        "e2e_cold_ms": e2e_cold_s * 1e3,
+        "mean_invoke_ms": 1e3 * sum(d for _, d in invocation_s)
+        / len(invocation_s),
+        "peak_rss_kb": peak_rss_kb,
+        "invocations": counts,
+        "per_handler_ms": {k: 1e3 * sum(v) / len(v)
+                           for k, v in per_handler.items()},
+    }
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--app-dir", required=True)
@@ -35,12 +138,19 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--profile", action="store_true")
     ap.add_argument("--sink", default=None, help="profile sink directory")
     ap.add_argument("--sample-interval", type=float, default=0.002)
+    ap.add_argument("--preimport", default=None,
+                    help="comma-separated modules imported before the "
+                         "timed handler import (pre-warmed hot set)")
     args = ap.parse_args(argv)
 
     app_dir = os.path.abspath(args.app_dir)
-    libs_dir = os.path.join(app_dir, "libs")
-    sys.path.insert(0, libs_dir)
-    sys.path.insert(0, app_dir)
+    libs_dir = setup_app_path(app_dir)
+
+    if args.preimport:
+        for mod in args.preimport.split(","):
+            mod = mod.strip()
+            if mod:
+                importlib.import_module(mod)
 
     timer = sampler = None
     if args.profile:
@@ -58,45 +168,18 @@ def main(argv: list[str] | None = None) -> int:
     init_s = time.perf_counter() - t0
     if timer is not None:
         timer.uninstall()
+    rss_after_init = instance_rss_kb()
 
     # --------------------------------------------------------- invocations
-    weights: dict[str, float] = getattr(handler_mod, "WEIGHTS", {})
-    rng = random.Random(args.seed)
-    names = list(weights) or ["handler"]
-    probs = [weights.get(n, 1.0) for n in names]
-
-    def pick() -> str:
-        if args.handler:
-            return args.handler
-        return rng.choices(names, weights=probs, k=1)[0]
-
-    invocation_s: list[tuple[str, float]] = []
-    counts: dict[str, int] = {}
-    for _ in range(max(1, args.invocations)):
-        op = pick()
-        ev = {"op": op}
-        t1 = time.perf_counter()
-        handler_mod.handler(ev)
-        invocation_s.append((op, time.perf_counter() - t1))
-        counts[op] = counts.get(op, 0) + 1
+    invocation_s, counts = run_invocations(
+        handler_mod, invocations=args.invocations, handler=args.handler,
+        seed=args.seed)
     e2e_cold_s = init_s + invocation_s[0][1]
 
     if sampler is not None:
         sampler.stop()
 
-    # NOTE: ru_maxrss is NOT reset by execve, so a child forked from a
-    # large parent (e.g. pytest) inherits the parent's peak and floors
-    # the measurement.  /proc/self/status VmHWM is per-mm and resets on
-    # exec — the faithful "peak memory of this cold instance" number.
-    peak_rss_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
-    try:
-        with open("/proc/self/status") as fh:
-            for line in fh:
-                if line.startswith("VmHWM:"):
-                    peak_rss_kb = int(line.split()[1])
-                    break
-    except OSError:
-        pass
+    peak_rss_kb = max(rss_after_init, instance_rss_kb())
 
     # ----------------------------------------------------------- profiling
     if args.profile and args.sink:
@@ -114,20 +197,8 @@ def main(argv: list[str] | None = None) -> int:
         with AsyncCollector(args.sink, batch_size=4) as col:
             col.put(record)
 
-    per_handler: dict[str, list[float]] = {}
-    for op, dt in invocation_s:
-        per_handler.setdefault(op, []).append(dt)
-    print(json.dumps({
-        "init_ms": init_s * 1e3,
-        "first_invoke_ms": invocation_s[0][1] * 1e3,
-        "e2e_cold_ms": e2e_cold_s * 1e3,
-        "mean_invoke_ms": 1e3 * sum(d for _, d in invocation_s)
-        / len(invocation_s),
-        "peak_rss_kb": peak_rss_kb,
-        "invocations": counts,
-        "per_handler_ms": {k: 1e3 * sum(v) / len(v)
-                           for k, v in per_handler.items()},
-    }))
+    print(json.dumps(metrics_dict(init_s, invocation_s, counts,
+                                  peak_rss_kb)))
     return 0
 
 

@@ -44,6 +44,13 @@ class SlimStartController:
         :class:`OptimizationReport`.
     optimize_fn:
         Callable applying the report (AST rewrite / lazy policy swap).
+    rewarm_fn:
+        Optional callable invoked with the fresh report *after* the
+        optimizer ran — hooks the warm pool into the adaptive loop so a
+        workload shift also re-warms the zygote's pre-import set (pass
+        ``ForkServer.rewarm`` or a pool manager's equivalent).  Rewarm
+        failures are recorded in ``rewarm_errors`` but never abort the
+        phase: a stale-but-running pool beats a dead control loop.
     """
 
     def __init__(
@@ -52,15 +59,19 @@ class SlimStartController:
         optimize_fn: Callable[[OptimizationReport], None],
         config: ControllerConfig | None = None,
         clock: Callable[[], float] = time.monotonic,
+        rewarm_fn: Optional[Callable[[OptimizationReport], object]] = None,
     ) -> None:
         self.config = config or ControllerConfig()
         self.monitor = WorkloadMonitor(self.config.monitor, clock=clock)
         self.profile_fn = profile_fn
         self.optimize_fn = optimize_fn
+        self.rewarm_fn = rewarm_fn
         self.clock = clock
         self._last_profile_t: Optional[float] = None
         self.reports: list[OptimizationReport] = []
         self.profile_phases = 0
+        self.rewarms = 0
+        self.rewarm_errors: list[str] = []
 
     # ---------------------------------------------------------------- events
     def on_invocation(self, handler: str, n: int = 1) -> Optional[WindowStats]:
@@ -85,6 +96,12 @@ class SlimStartController:
         report = self.profile_fn()
         self.reports.append(report)
         self.optimize_fn(report)
+        if self.rewarm_fn is not None:
+            try:
+                self.rewarm_fn(report)
+                self.rewarms += 1
+            except Exception as exc:
+                self.rewarm_errors.append(repr(exc))
         self._last_profile_t = self.clock()
         self.profile_phases += 1
         return report

@@ -1,0 +1,58 @@
+"""Warm-pool subsystem: amortizing initialization across instances.
+
+Four pieces (see each module's docstring):
+
+* :mod:`repro.pool.forkserver` — profile-guided zygote that pre-imports
+  the measured hot set and forks handler instances copy-on-write;
+* :mod:`repro.pool.policies`   — keep-alive / pool-sizing policies,
+  including the profile-guided one fed by ``OptimizationReport``;
+* :mod:`repro.pool.trace`      — synthetic invocation traces (poisson,
+  diurnal, bursty, handler-skewed) replayable in simulation and against
+  the real harness;
+* :mod:`repro.pool.simulator`  — trace-driven fleet simulator reporting
+  cold-start ratio, p50/p99 latency and memory GB-seconds per policy.
+"""
+
+from repro.pool.forkserver import ForkServer, ForkServerError
+from repro.pool.policies import (
+    FixedSizePolicy,
+    HistogramPolicy,
+    IdleTimeoutPolicy,
+    KeepAlivePolicy,
+    ProfileGuidedPolicy,
+    default_policies,
+    hot_set_from_report,
+)
+from repro.pool.simulator import AppProfile, FleetReport, FleetSimulator, sweep
+from repro.pool.trace import (
+    Request,
+    Trace,
+    bursty_trace,
+    diurnal_trace,
+    handler_skewed_trace,
+    poisson_trace,
+    standard_traces,
+)
+
+__all__ = [
+    "AppProfile",
+    "FixedSizePolicy",
+    "FleetReport",
+    "FleetSimulator",
+    "ForkServer",
+    "ForkServerError",
+    "HistogramPolicy",
+    "IdleTimeoutPolicy",
+    "KeepAlivePolicy",
+    "ProfileGuidedPolicy",
+    "Request",
+    "Trace",
+    "bursty_trace",
+    "default_policies",
+    "diurnal_trace",
+    "handler_skewed_trace",
+    "hot_set_from_report",
+    "poisson_trace",
+    "standard_traces",
+    "sweep",
+]

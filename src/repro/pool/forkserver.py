@@ -1,0 +1,311 @@
+"""Profile-guided fork-server (zygote) for warm instance pools.
+
+The paper removes library-loading cost from the cold path by *deferring*
+imports; this module removes it by *amortizing* them: one long-lived
+zygote process pre-imports the measured hot set (the packages an
+:class:`~repro.core.profiler.report.OptimizationReport` shows are
+actually exercised at runtime), then forks a fresh handler instance per
+request.  Forked children share the preloaded libraries copy-on-write,
+so their "cold" start only pays ``fork() + import handler`` — the
+handler module itself plus whatever the hot set did not already load —
+instead of the full library initialization.
+
+Run as a module, this file *is* the zygote::
+
+    python -m repro.pool.forkserver --app-dir .benchsuite/apps/graph_bfs \
+        --preload fakelib_igraph
+
+Protocol: newline-delimited JSON on stdin/stdout.  The zygote announces
+``{"ok": true, "event": "ready", ...}`` once the preload set is
+imported, then serves commands:
+
+    {"cmd": "exec", "invocations": N, "handler": H, "seed": S}
+        -> {"ok": true, "metrics": {... runner-format metrics ...}}
+    {"cmd": "preload", "modules": [...]}     # adaptive re-warm
+        -> {"ok": true, "preloaded": [...], "errors": [...]}
+    {"cmd": "ping"}      -> {"ok": true, "preloaded": [...]}
+    {"cmd": "shutdown"}  -> {"ok": true}  (zygote exits)
+
+Each ``exec`` forks; the child redirects its stdout to ``/dev/null`` (so
+handler prints cannot corrupt the control channel), imports ``handler``,
+runs the shared :func:`repro.benchsuite.runner.run_invocations` loop and
+ships :func:`repro.benchsuite.runner.metrics_dict` JSON back over a
+dedicated pipe.  Fork-to-ready time is measured against the zygote's
+clock (``time.perf_counter`` is CLOCK_MONOTONIC — system-wide, valid
+across ``fork``), so reported ``init_ms`` includes the fork itself.
+
+The in-process :class:`ForkServer` wraps the zygote for the harness:
+``start() -> exec()* -> stop()``, plus ``rewarm(report)`` which the
+adaptive :class:`~repro.core.adaptive.controller.SlimStartController`
+calls after a re-profile to preload the *new* workload's hot set.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import os
+import select
+import subprocess
+import sys
+import tempfile
+import time
+import traceback
+from typing import Optional, Sequence
+
+from repro.benchsuite import runner as _runner
+
+_REPRO_SRC = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+
+# ---------------------------------------------------------------------------
+# Zygote side
+# ---------------------------------------------------------------------------
+
+def _import_modules(modules: Sequence[str]) -> tuple[list[str], list[str]]:
+    done: list[str] = []
+    errors: list[str] = []
+    for mod in modules:
+        mod = mod.strip()
+        if not mod:
+            continue
+        try:
+            importlib.import_module(mod)
+            done.append(mod)
+        except Exception as exc:  # zygote must survive bad preloads
+            errors.append(f"{mod}: {exc!r}")
+    return done, errors
+
+
+def _fork_exec(cmd: dict) -> dict:
+    """Fork one instance; relay its metrics.  Runs inside the zygote."""
+    r, w = os.pipe()
+    t0 = time.perf_counter()
+    pid = os.fork()
+    if pid == 0:  # ---------------------------------------------- child
+        code = 1
+        try:
+            os.close(r)
+            devnull = os.open(os.devnull, os.O_WRONLY)
+            os.dup2(devnull, 1)
+            handler_mod = importlib.import_module("handler")
+            init_s = time.perf_counter() - t0
+            invocation_s, counts = _runner.run_invocations(
+                handler_mod,
+                invocations=int(cmd.get("invocations", 1)),
+                handler=cmd.get("handler"),
+                seed=int(cmd.get("seed", 0)))
+            metrics = _runner.metrics_dict(init_s, invocation_s, counts,
+                                           _runner.instance_rss_kb())
+            with os.fdopen(w, "w") as fh:
+                fh.write(json.dumps(metrics))
+            code = 0
+        except BaseException:
+            traceback.print_exc(file=sys.stderr)
+        finally:
+            os._exit(code)
+    # -------------------------------------------------------------- zygote
+    os.close(w)
+    with os.fdopen(r) as fh:
+        payload = fh.read()
+    _, status = os.waitpid(pid, 0)
+    if status != 0 or not payload:
+        return {"ok": False,
+                "error": f"forked instance pid={pid} wait-status={status}"}
+    return {"ok": True, "pid": pid, "metrics": json.loads(payload)}
+
+
+def zygote_main(argv: Optional[list[str]] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--app-dir", required=True)
+    ap.add_argument("--preload", default="",
+                    help="comma-separated modules imported at zygote boot")
+    args = ap.parse_args(argv)
+
+    if not hasattr(os, "fork"):
+        print(json.dumps({"ok": False, "error": "platform lacks fork()"}),
+              flush=True)
+        return 2
+
+    _runner.setup_app_path(os.path.abspath(args.app_dir))
+    preloaded, errors = _import_modules(args.preload.split(","))
+
+    def reply(obj: dict) -> None:
+        sys.stdout.write(json.dumps(obj) + "\n")
+        sys.stdout.flush()
+
+    reply({"ok": True, "event": "ready", "preloaded": preloaded,
+           "errors": errors, "pid": os.getpid()})
+    for line in sys.stdin:
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            cmd = json.loads(line)
+        except ValueError:
+            reply({"ok": False, "error": "bad json"})
+            continue
+        op = cmd.get("cmd")
+        if op == "exec":
+            reply(_fork_exec(cmd))
+        elif op == "preload":
+            done, errs = _import_modules(cmd.get("modules", []))
+            preloaded.extend(done)
+            reply({"ok": not errs, "preloaded": done, "errors": errs})
+        elif op == "ping":
+            reply({"ok": True, "preloaded": list(preloaded)})
+        elif op == "shutdown":
+            reply({"ok": True})
+            return 0
+        else:
+            reply({"ok": False, "error": f"unknown cmd {op!r}"})
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# Parent side
+# ---------------------------------------------------------------------------
+
+class ForkServerError(RuntimeError):
+    pass
+
+
+class ForkServer:
+    """Client for one zygote serving one deployed app."""
+
+    def __init__(self, app_dir: str, *, preload: Sequence[str] = (),
+                 timeout_s: float = 120.0) -> None:
+        self.app_dir = os.path.abspath(app_dir)
+        self.preload_modules = list(preload)
+        self.timeout_s = timeout_s
+        self.proc: Optional[subprocess.Popen] = None
+        self._stderr_file = None
+        self.ready: dict = {}
+        self.execs = 0
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> dict:
+        if self.proc is not None:
+            return self.ready
+        cmd = [sys.executable, "-m", "repro.pool.forkserver",
+               "--app-dir", self.app_dir]
+        if self.preload_modules:
+            cmd += ["--preload", ",".join(self.preload_modules)]
+        env = dict(os.environ)
+        env["PYTHONPATH"] = (_REPRO_SRC + os.pathsep
+                             + env.get("PYTHONPATH", ""))
+        # stderr goes to an unbuffered temp file, NOT a pipe: children
+        # print tracebacks there, and an undrained pipe would fill and
+        # deadlock the zygote mid-waitpid
+        self._stderr_file = tempfile.TemporaryFile()
+        self.proc = subprocess.Popen(
+            cmd, stdin=subprocess.PIPE, stdout=subprocess.PIPE,
+            stderr=self._stderr_file, text=True, env=env)
+        self.ready = self._read_reply()
+        if not self.ready.get("ok") or self.ready.get("errors"):
+            # a zygote that failed to preload its hot set would silently
+            # serve *bare* forks — fail loudly instead
+            detail = self.ready
+            self.stop()
+            raise ForkServerError(f"zygote failed to boot: {detail}")
+        return self.ready
+
+    def stop(self) -> None:
+        if self.proc is None:
+            return
+        try:
+            if self.proc.poll() is None:
+                self._request({"cmd": "shutdown"})
+        except (ForkServerError, OSError, ValueError):
+            pass
+        finally:
+            if self.proc.poll() is None:
+                self.proc.terminate()
+            try:
+                self.proc.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                self.proc.kill()
+                self.proc.wait()
+            self.proc = None
+            if self._stderr_file is not None:
+                self._stderr_file.close()
+                self._stderr_file = None
+
+    def __enter__(self) -> "ForkServer":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ------------------------------------------------------------- commands
+    def exec(self, *, invocations: int = 1, handler: Optional[str] = None,
+             seed: int = 0) -> dict:
+        """One forked warm instance; returns runner-format metrics."""
+        rep = self._request({"cmd": "exec", "invocations": invocations,
+                             "handler": handler, "seed": seed})
+        self.execs += 1
+        return rep["metrics"]
+
+    def preload(self, modules: Sequence[str]) -> dict:
+        rep = self._request({"cmd": "preload", "modules": list(modules)})
+        self.preload_modules.extend(rep.get("preloaded", []))
+        return rep
+
+    def rewarm(self, report) -> dict:
+        """Re-warm from a fresh OptimizationReport (adaptive loop
+        callback): preload the newly-hot packages."""
+        from repro.pool.policies import hot_set_from_report
+        mods = [m for m in hot_set_from_report(report)
+                if m not in self.preload_modules]
+        if not mods:
+            return {"ok": True, "preloaded": [], "errors": []}
+        return self.preload(mods)
+
+    def ping(self) -> dict:
+        return self._request({"cmd": "ping"})
+
+    # ------------------------------------------------------------- plumbing
+    def _request(self, obj: dict) -> dict:
+        if self.proc is None or self.proc.poll() is not None:
+            raise ForkServerError("zygote is not running")
+        self.proc.stdin.write(json.dumps(obj) + "\n")
+        self.proc.stdin.flush()
+        rep = self._read_reply()
+        if not rep.get("ok"):
+            raise ForkServerError(str(rep))
+        return rep
+
+    def _read_reply(self) -> dict:
+        # bound every protocol read by timeout_s: a wedged handler in a
+        # forked child would otherwise hang the zygote (and us) forever
+        ready, _, _ = select.select([self.proc.stdout], [], [],
+                                    self.timeout_s)
+        if not ready:
+            self.proc.kill()
+            raise ForkServerError(
+                f"zygote unresponsive after {self.timeout_s}s "
+                f"(hung forked instance?); killed")
+        line = self.proc.stdout.readline()
+        if not line:
+            raise ForkServerError(
+                f"zygote died (exit={self.proc.poll()}): "
+                f"{self._stderr_tail()}")
+        return json.loads(line)
+
+    def _stderr_tail(self, nbytes: int = 2000) -> str:
+        if self._stderr_file is None:
+            return ""
+        try:
+            self._stderr_file.seek(0, os.SEEK_END)
+            size = self._stderr_file.tell()
+            self._stderr_file.seek(max(0, size - nbytes))
+            return self._stderr_file.read().decode("utf-8", "replace")
+        except (OSError, ValueError):
+            return ""
+
+
+if __name__ == "__main__":
+    raise SystemExit(zygote_main())

@@ -1,0 +1,211 @@
+"""Keep-alive and pool-sizing policies for the warm-instance pool.
+
+A policy answers three questions the fleet (simulated or real) asks:
+
+* ``prewarm(app)``       — how many instances to keep provisioned as a
+  floor, even before any traffic arrives (they pay memory from t=0 but
+  turn the first requests warm);
+* ``keep_alive_s(app)``  — how long an *idle* warm instance survives
+  before the fleet reclaims it;
+* ``preload_modules(app)`` — which library modules the fork-server
+  zygote should pre-import so forked instances share them copy-on-write
+  (only the profile-guided policy has a real answer; the others return
+  an empty hot set and fall back to whole-process warm reuse).
+
+``observe_arrival`` lets adaptive policies (histogram) learn online from
+the request stream; stateless policies ignore it.
+
+Policies implemented:
+
+* :class:`FixedSizePolicy`     — classic provisioned concurrency: N
+  instances, never reclaimed.
+* :class:`IdleTimeoutPolicy`   — the industry default (e.g. a 10-minute
+  fixed keep-alive after the last request).
+* :class:`HistogramPolicy`     — "Serverless in the Wild"-style: learn
+  the inter-arrival-time distribution per app and keep instances alive
+  to a percentile of it, clamped to a budget.
+* :class:`ProfileGuidedPolicy` — SLIMSTART's contribution: sized from
+  the :class:`~repro.core.profiler.report.OptimizationReport` — the
+  zygote pre-imports exactly the measured hot set (packages with
+  runtime samples, minus defer targets), and keep-alive scales with the
+  measured init cost so expensive-to-build instances are retained
+  longer than cheap ones.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.profiler.report import OptimizationReport
+
+
+def hot_set_from_report(report: OptimizationReport) -> list[str]:
+    """The zygote pre-import list: top-level packages that the profile
+    shows are actually exercised at runtime (i.e. not defer targets and
+    not below the init-share floor).
+
+    Only maximal prefixes are returned — pre-importing ``fakelib_igraph``
+    already executes ``fakelib_igraph.core`` when ``__init__`` pulls it
+    in, and the import system resolves submodules from ``sys.modules``.
+    """
+    deferred = set(report.defer_targets)
+
+    def under_deferred(pkg: str) -> bool:
+        parts = pkg.split(".")
+        return any(".".join(parts[:i]) in deferred
+                   for i in range(1, len(parts) + 1))
+
+    hot = [s.name for s in report.stats
+           if s.runtime_samples > 0 and not under_deferred(s.name)]
+    # keep maximal prefixes only
+    hot_sorted = sorted(set(hot), key=lambda p: p.count("."))
+    keep: list[str] = []
+    for pkg in hot_sorted:
+        parts = pkg.split(".")
+        if not any(".".join(parts[:i]) in keep
+                   for i in range(1, len(parts))):
+            keep.append(pkg)
+    return keep
+
+
+class KeepAlivePolicy:
+    """Interface; subclasses override the decisions they care about."""
+
+    name = "base"
+
+    def prewarm(self, app: str) -> int:
+        return 0
+
+    def keep_alive_s(self, app: str) -> float:
+        return 0.0
+
+    def preload_modules(self, app: str) -> list[str]:
+        return []
+
+    def observe_arrival(self, app: str, t: float) -> None:
+        pass
+
+
+@dataclass
+class FixedSizePolicy(KeepAlivePolicy):
+    """Provisioned concurrency: ``size`` instances, never reclaimed."""
+
+    size: int = 2
+    name: str = "fixed"
+
+    def prewarm(self, app: str) -> int:
+        return self.size
+
+    def keep_alive_s(self, app: str) -> float:
+        return math.inf
+
+
+@dataclass
+class IdleTimeoutPolicy(KeepAlivePolicy):
+    """Fixed idle keep-alive after the last request (industry default)."""
+
+    timeout_s: float = 600.0
+    name: str = "idle-timeout"
+
+    def keep_alive_s(self, app: str) -> float:
+        return self.timeout_s
+
+
+@dataclass
+class HistogramPolicy(KeepAlivePolicy):
+    """Learn per-app inter-arrival times; keep alive to a percentile.
+
+    Until ``min_samples`` arrivals are seen the policy falls back to
+    ``default_s`` (cold-start-averse default).  The learned value is
+    clamped to ``[floor_s, cap_s]`` so one huge gap cannot pin memory
+    forever.
+    """
+
+    percentile: float = 0.95
+    default_s: float = 600.0
+    floor_s: float = 10.0
+    cap_s: float = 3600.0
+    min_samples: int = 8
+    name: str = "histogram"
+    _last_t: dict[str, float] = field(default_factory=dict, repr=False)
+    _iats: dict[str, list[float]] = field(default_factory=dict, repr=False)
+
+    def observe_arrival(self, app: str, t: float) -> None:
+        last = self._last_t.get(app)
+        if last is not None and t >= last:
+            self._iats.setdefault(app, []).append(t - last)
+        self._last_t[app] = t
+
+    def keep_alive_s(self, app: str) -> float:
+        iats = self._iats.get(app, [])
+        if len(iats) < self.min_samples:
+            return self.default_s
+        ys = sorted(iats)
+        idx = min(len(ys) - 1, int(self.percentile * (len(ys) - 1)))
+        return min(self.cap_s, max(self.floor_s, ys[idx]))
+
+
+@dataclass
+class ProfileGuidedPolicy(KeepAlivePolicy):
+    """Pool sizing and pre-import set derived from SLIMSTART profiles.
+
+    * ``preload_modules`` — the measured hot set from the report, so
+      zygote forks share exactly the libraries the workload uses.
+    * ``prewarm`` — Little's-law floor ``ceil(rate * service_s)`` from
+      the expected request rate and measured end-to-end time: enough
+      instances that the steady-state workload never queues cold.
+    * ``keep_alive_s`` — init cost amortization: an instance is kept
+      ``amortize`` times its measured init cost (clamped), so apps with
+      2 s inits are retained far longer than 20 ms ones instead of a
+      one-size-fits-all timeout.
+    """
+
+    reports: dict[str, OptimizationReport] = field(default_factory=dict)
+    rate_hint_per_s: float = 1.0
+    amortize: float = 400.0
+    floor_s: float = 30.0
+    cap_s: float = 3600.0
+    max_prewarm: int = 8
+    name: str = "profile-guided"
+
+    def add_report(self, report: OptimizationReport) -> None:
+        self.reports[report.application] = report
+
+    def prewarm(self, app: str) -> int:
+        rep = self.reports.get(app)
+        if rep is None:
+            return 0
+        n = math.ceil(self.rate_hint_per_s * rep.e2e_s)
+        return max(1, min(self.max_prewarm, n))
+
+    def keep_alive_s(self, app: str) -> float:
+        rep = self.reports.get(app)
+        if rep is None:
+            return self.floor_s
+        # after deferral only the hot set is rebuilt on a cold start
+        hot_init_s = max(rep.total_init_s
+                         - sum(s.init_s for s in rep.stats
+                               if s.name in set(rep.defer_targets)),
+                         0.0)
+        return min(self.cap_s, max(self.floor_s, self.amortize * hot_init_s))
+
+    def preload_modules(self, app: str) -> list[str]:
+        rep = self.reports.get(app)
+        return hot_set_from_report(rep) if rep is not None else []
+
+
+def default_policies(reports: Optional[dict[str, OptimizationReport]] = None,
+                     rate_hint_per_s: float = 1.0) -> list[KeepAlivePolicy]:
+    """The benchmark's standard policy panel."""
+    panel: list[KeepAlivePolicy] = [
+        FixedSizePolicy(size=2),
+        IdleTimeoutPolicy(timeout_s=600.0),
+        HistogramPolicy(),
+    ]
+    pg = ProfileGuidedPolicy(rate_hint_per_s=rate_hint_per_s)
+    for rep in (reports or {}).values():
+        pg.add_report(rep)
+    panel.append(pg)
+    return panel

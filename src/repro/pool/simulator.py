@@ -1,0 +1,205 @@
+"""Trace-driven fleet simulator for warm-pool policies.
+
+Replays a :class:`~repro.pool.trace.Trace` against a
+:class:`~repro.pool.policies.KeepAlivePolicy` using *measured* per-app
+latency/memory profiles (from the benchsuite harness or the fork
+server), and reports the fleet-level numbers a keep-alive paper cares
+about: cold-start ratio, p50/p99 end-to-end latency, and memory-seconds.
+
+Semantics follow FaaS platforms (one request per instance at a time):
+
+* a request is served by an idle warm instance if one exists — latency
+  is ``warm_init_ms + invoke_ms`` (fork-pool forks still pay a small
+  per-fork init; fresh-process pools pay ~0 warm init);
+* otherwise a new instance cold-starts — ``cold_init_ms + invoke_ms`` —
+  and joins the pool; there is no request queueing: concurrency spawns
+  instances, exactly like Lambda;
+* an instance idle longer than ``policy.keep_alive_s(app)`` is
+  reclaimed at ``idle_since + keep_alive`` (that moment, not the next
+  arrival, bounds its memory-seconds);
+* ``policy.prewarm(app)`` instances are provisioned at t=0 and never
+  reclaimed below the floor — they pay memory for the whole trace.
+
+Memory accounting integrates ``rss_mb`` over each instance's lifetime
+(birth to reclaim, or to trace end), i.e. MB-seconds, reported as
+GB-seconds — the unit serverless providers bill.
+"""
+
+from __future__ import annotations
+
+import math
+import statistics
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.pool.policies import KeepAlivePolicy
+from repro.pool.trace import Trace
+
+
+@dataclass(frozen=True)
+class AppProfile:
+    """Measured single-instance numbers driving the simulation."""
+
+    app: str
+    cold_init_ms: float
+    invoke_ms: float
+    warm_init_ms: float = 0.0
+    rss_mb: float = 128.0
+
+    @classmethod
+    def from_stats(cls, cold_stats, pool_stats=None,
+                   invoke_ms: Optional[float] = None) -> "AppProfile":
+        """Build from harness :class:`ColdStartStats` (and optionally the
+        fork-pool stats for the warm-path init)."""
+        inv = invoke_ms if invoke_ms is not None else max(
+            cold_stats.e2e_mean - cold_stats.init_mean, 0.0)
+        return cls(
+            app=cold_stats.app,
+            cold_init_ms=cold_stats.init_mean,
+            invoke_ms=inv,
+            warm_init_ms=(pool_stats.init_mean if pool_stats is not None
+                          else 0.0),
+            rss_mb=cold_stats.rss_mean_mb,
+        )
+
+
+@dataclass
+class _Instance:
+    born_t: float
+    busy_until: float = 0.0
+    idle_since: float = 0.0
+    prewarmed: bool = False
+    served: int = 0
+
+
+@dataclass
+class FleetReport:
+    policy: str
+    trace: str
+    n_requests: int
+    cold_starts: int
+    latencies_ms: list[float] = field(default_factory=list, repr=False)
+    memory_mb_s: float = 0.0
+    max_instances: int = 0
+    reclaims: int = 0
+
+    @property
+    def cold_start_ratio(self) -> float:
+        return self.cold_starts / max(self.n_requests, 1)
+
+    @property
+    def p50_ms(self) -> float:
+        return self._pct(0.50)
+
+    @property
+    def p99_ms(self) -> float:
+        return self._pct(0.99)
+
+    @property
+    def mean_ms(self) -> float:
+        return (statistics.fmean(self.latencies_ms)
+                if self.latencies_ms else math.nan)
+
+    @property
+    def memory_gb_s(self) -> float:
+        return self.memory_mb_s / 1024.0
+
+    def _pct(self, q: float) -> float:
+        if not self.latencies_ms:
+            return math.nan
+        ys = sorted(self.latencies_ms)
+        return ys[min(len(ys) - 1, max(0, round(q * (len(ys) - 1))))]
+
+    def summary(self) -> dict:
+        return {
+            "policy": self.policy,
+            "trace": self.trace,
+            "requests": self.n_requests,
+            "cold_starts": self.cold_starts,
+            "cold_ratio": round(self.cold_start_ratio, 4),
+            "p50_ms": round(self.p50_ms, 2),
+            "p99_ms": round(self.p99_ms, 2),
+            "mean_ms": round(self.mean_ms, 2),
+            "memory_gb_s": round(self.memory_gb_s, 3),
+            "max_instances": self.max_instances,
+            "reclaims": self.reclaims,
+        }
+
+
+class FleetSimulator:
+    """One app fleet under one policy.  ``run(trace)`` is pure: a fresh
+    pool every call, so the same simulator sweeps many traces."""
+
+    def __init__(self, profile: AppProfile, policy: KeepAlivePolicy) -> None:
+        self.profile = profile
+        self.policy = policy
+
+    # ------------------------------------------------------------------ run
+    def run(self, trace: Trace) -> FleetReport:
+        prof, policy = self.profile, self.policy
+        report = FleetReport(policy=policy.name, trace=trace.name,
+                             n_requests=len(trace), cold_starts=0)
+        pool: list[_Instance] = [
+            _Instance(born_t=0.0, prewarmed=True)
+            for _ in range(policy.prewarm(prof.app))
+        ]
+        report.max_instances = len(pool)
+
+        def reclaim_idle(now: float) -> None:
+            ka = policy.keep_alive_s(prof.app)
+            survivors: list[_Instance] = []
+            for inst in pool:
+                idle_from = max(inst.busy_until, inst.idle_since)
+                if (not inst.prewarmed and inst.busy_until <= now
+                        and now - idle_from > ka):
+                    died_at = idle_from + ka
+                    report.memory_mb_s += prof.rss_mb * (died_at
+                                                         - inst.born_t)
+                    report.reclaims += 1
+                else:
+                    survivors.append(inst)
+            pool[:] = survivors
+
+        for req in trace:
+            policy.observe_arrival(prof.app, req.t)
+            reclaim_idle(req.t)
+            warm = [i for i in pool if i.busy_until <= req.t]
+            if warm:
+                # prefer the most-recently-used instance (LIFO reuse
+                # keeps the rest of the pool aging toward reclaim)
+                inst = max(warm, key=lambda i: i.busy_until)
+                latency_ms = prof.warm_init_ms + prof.invoke_ms
+            else:
+                inst = _Instance(born_t=req.t)
+                pool.append(inst)
+                report.cold_starts += 1
+                latency_ms = prof.cold_init_ms + prof.invoke_ms
+            inst.busy_until = req.t + latency_ms / 1e3
+            inst.idle_since = inst.busy_until
+            inst.served += 1
+            report.latencies_ms.append(latency_ms)
+            report.max_instances = max(report.max_instances, len(pool))
+
+        # expire whatever the idle tail of the trace should have
+        # reclaimed, then account memory for everything still alive
+        end = trace.duration_s
+        reclaim_idle(end)
+        for inst in pool:
+            report.memory_mb_s += prof.rss_mb * (max(end, inst.busy_until)
+                                                 - inst.born_t)
+        return report
+
+
+def sweep(profile: AppProfile, policies: list[KeepAlivePolicy],
+          traces: dict[str, Trace],
+          policy_factory=None) -> list[FleetReport]:
+    """Every policy x every trace.  Stateful policies (histogram) must
+    not leak learned state across runs; pass ``policy_factory`` mapping
+    a policy to a fresh clone, or rely on the default which re-uses the
+    given instances (fine for stateless policies)."""
+    out: list[FleetReport] = []
+    for pol in policies:
+        for trace in traces.values():
+            p = policy_factory(pol) if policy_factory is not None else pol
+            out.append(FleetSimulator(profile, p).run(trace))
+    return out

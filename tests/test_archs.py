@@ -20,6 +20,9 @@ from repro.models.config import ShapeSpec
 
 jax.config.update("jax_enable_x64", False)
 
+# every case jit-compiles a full reduced model; minutes of wall clock
+pytestmark = pytest.mark.slow
+
 
 def _small_train_shape(cfg):
     return ShapeSpec("smoke_train", 32 + (cfg.vision_tokens or 0), 2,
@@ -55,12 +58,20 @@ def test_train_step_smoke(arch):
     for g in flat:
         assert np.all(np.isfinite(np.asarray(g, dtype=np.float32))), \
             f"{arch}: NaN/inf grad"
-    # loss decreases under a plain SGD step (sanity that grads point
-    # somewhere useful)
-    params2 = jax.tree.map(lambda p, g: p - 0.01 * g.astype(p.dtype),
-                           params, grads)
-    loss2, _, _ = step(params2, batch)
-    assert float(loss2) < float(loss) + 1e-3
+    # loss decreases under an SGD step for SOME step size (sanity that
+    # grads point in a descent direction).  A single fixed lr is not
+    # deterministic across archs: sharp-curvature models (whisper,
+    # xlstm) overshoot at 1e-2 even though the gradient is correct, so
+    # back off like a line search before declaring the grads useless.
+    for lr in (1e-2, 1e-3, 1e-4, 1e-5, 1e-6):
+        params2 = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                               params, grads)
+        loss2, _, _ = step(params2, batch)
+        if float(loss2) < float(loss) - 1e-4:
+            break
+    else:
+        pytest.fail(f"{arch}: no descent at any step size "
+                    f"(loss {float(loss)} -> {float(loss2)})")
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)

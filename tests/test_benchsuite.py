@@ -27,6 +27,8 @@ def suite_root_dir():
     return build_suite()
 
 
+# subprocess-per-cold-start integration tests; the full module is the
+# slow tier (spec/workload checks that need no subprocess stay fast)
 def test_spec_consistency():
     # every app's libs exist and close transitively
     for app in APPS.values():
@@ -42,6 +44,7 @@ def test_spec_consistency():
         assert sum(h.weight for h in app.handlers) == pytest.approx(1.0, abs=1e-6)
 
 
+@pytest.mark.slow
 def test_suite_builds_and_apps_run(suite_root_dir):
     apps = os.listdir(os.path.join(suite_root_dir, "apps"))
     assert len(apps) == len(APPS)
@@ -55,6 +58,7 @@ def test_suite_builds_and_apps_run(suite_root_dir):
             assert m["e2e_cold_ms"] >= m["init_ms"]
 
 
+@pytest.mark.slow
 def test_slimstart_pipeline_graph_bfs(suite_root_dir):
     pipe = SlimstartPipeline("graph_bfs", suite_root_dir)
     res = pipe.run(instances=2, invocations=80)
@@ -80,6 +84,7 @@ def test_slimstart_pipeline_graph_bfs(suite_root_dir):
         assert m["e2e_cold_ms"] > 0
 
 
+@pytest.mark.slow
 def test_static_baseline_misses_workload_dependent(suite_root_dir):
     """Paper Observation 2: static keeps reachable-but-unused libraries."""
     stat = StaticPipeline("graph_bfs", suite_root_dir).run()
@@ -95,6 +100,7 @@ def test_static_baseline_misses_workload_dependent(suite_root_dir):
     assert dyn_speedup > static_speedup + 0.2, (dyn_speedup, static_speedup)
 
 
+@pytest.mark.slow
 def test_clean_app_not_optimized(suite_root_dir):
     """Apps below the 10% init gate / with fully-used libs produce no
     defer targets (paper: 17 of 22 apps flagged, 5 clean)."""
@@ -103,6 +109,7 @@ def test_clean_app_not_optimized(suite_root_dir):
     assert res.report.defer_targets == []
 
 
+@pytest.mark.slow
 def test_profiler_overhead_within_budget(suite_root_dir):
     """Paper Fig. 9: sampling overhead ≤ ~10-15%."""
     app_dir = os.path.join(suite_root_dir, "apps", "graph_bfs")

@@ -1,0 +1,368 @@
+"""Warm-pool subsystem tests: traces, policies, simulator math, the
+fork-server against a real benchsuite app, and the adaptive controller's
+cooldown / pool-rewarm hooks."""
+
+import math
+import os
+
+import pytest
+
+from repro.benchsuite.genlibs import build_suite
+from repro.benchsuite.harness import measure_cold_starts, measure_pool_starts
+from repro.core.adaptive.controller import ControllerConfig, SlimStartController
+from repro.core.adaptive.monitor import MonitorConfig
+from repro.core.profiler.report import OptimizationReport
+from repro.core.profiler.utilization import LibraryStats
+from repro.pool import (
+    AppProfile,
+    FixedSizePolicy,
+    FleetSimulator,
+    ForkServer,
+    HistogramPolicy,
+    IdleTimeoutPolicy,
+    ProfileGuidedPolicy,
+    Request,
+    Trace,
+    bursty_trace,
+    diurnal_trace,
+    handler_skewed_trace,
+    hot_set_from_report,
+    poisson_trace,
+    standard_traces,
+)
+
+
+# ---------------------------------------------------------------------------
+# traces
+# ---------------------------------------------------------------------------
+
+def test_traces_deterministic_and_ordered():
+    for make in (lambda s: poisson_trace("a", rate_per_s=2.0,
+                                         duration_s=200.0, seed=s),
+                 lambda s: diurnal_trace("a", duration_s=400.0, seed=s),
+                 lambda s: bursty_trace("a", duration_s=400.0, seed=s)):
+        t1, t2, t3 = make(5), make(5), make(6)
+        assert [r.t for r in t1] == [r.t for r in t2]
+        assert [r.t for r in t1] != [r.t for r in t3]
+        ts = [r.t for r in t1]
+        assert ts == sorted(ts)
+        assert all(0.0 <= t < t1.duration_s for t in ts)
+
+
+def test_poisson_rate():
+    tr = poisson_trace("a", rate_per_s=5.0, duration_s=2000.0, seed=1)
+    assert tr.mean_rate_per_s == pytest.approx(5.0, rel=0.1)
+
+
+def test_diurnal_peak_vs_trough():
+    period = 400.0
+    tr = diurnal_trace("a", base_rate_per_s=0.1, peak_rate_per_s=5.0,
+                       period_s=period, duration_s=4 * period, seed=2)
+    # crest of the cycle is at period/2 (+k*period); trough at 0/period
+    crest = sum(1 for r in tr
+                if (r.t % period) > period * 0.35
+                and (r.t % period) < period * 0.65)
+    trough = sum(1 for r in tr
+                 if (r.t % period) < period * 0.15
+                 or (r.t % period) > period * 0.85)
+    assert crest > 3 * max(trough, 1)
+
+
+def test_bursty_is_overdispersed():
+    tr = bursty_trace("a", duration_s=2000.0, seed=3)
+    iats = tr.interarrivals()
+    assert len(iats) > 50
+    mean = sum(iats) / len(iats)
+    var = sum((x - mean) ** 2 for x in iats) / len(iats)
+    # Poisson would have CV ~ 1; on/off modulation must exceed it
+    assert math.sqrt(var) / mean > 1.5
+
+
+def test_handler_skewed_mix():
+    tr = handler_skewed_trace("a", ["h0", "h1", "h2"], rate_per_s=5.0,
+                              duration_s=1000.0, seed=4)
+    counts = {}
+    for r in tr:
+        assert r.handler in {"h0", "h1", "h2"}
+        counts[r.handler] = counts.get(r.handler, 0) + 1
+    assert counts["h0"] > counts["h1"] > counts["h2"]
+
+
+def test_standard_traces_shapes():
+    traces = standard_traces("a", ["h0", "h1"], duration_s=300.0)
+    assert set(traces) == {"poisson", "diurnal", "bursty", "handler_skewed"}
+    assert set(standard_traces("a", None, duration_s=300.0)) == {
+        "poisson", "diurnal", "bursty"}
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+
+def _fake_report() -> OptimizationReport:
+    def stat(name, samples, init_s):
+        return LibraryStats(name=name, utilization=samples / 100.0,
+                            init_s=init_s, init_share=init_s / 0.2,
+                            runtime_samples=samples, file="<x>")
+    return OptimizationReport(
+        application="app", e2e_s=0.2, total_init_s=0.15, qualifies=True,
+        stats=[stat("liba", 50, 0.08), stat("liba.sub", 20, 0.03),
+               stat("libb", 0, 0.05), stat("libb.viz", 0, 0.03),
+               stat("libc", 5, 0.02)],
+        defer_targets=["libb"],
+    )
+
+
+def test_hot_set_from_report_maximal_prefixes_minus_deferred():
+    hot = hot_set_from_report(_fake_report())
+    assert "libb" not in hot and "libb.viz" not in hot  # deferred subtree
+    assert "liba" in hot and "libc" in hot
+    assert "liba.sub" not in hot  # covered by the liba prefix
+
+
+def test_fixed_and_idle_policies():
+    fixed = FixedSizePolicy(size=3)
+    assert fixed.prewarm("app") == 3
+    assert fixed.keep_alive_s("app") == math.inf
+    idle = IdleTimeoutPolicy(timeout_s=42.0)
+    assert idle.prewarm("app") == 0
+    assert idle.keep_alive_s("app") == 42.0
+
+
+def test_histogram_policy_learns_interarrivals():
+    pol = HistogramPolicy(percentile=0.95, default_s=600.0, floor_s=10.0,
+                          min_samples=8)
+    assert pol.keep_alive_s("app") == 600.0  # no data yet -> default
+    for i in range(30):
+        pol.observe_arrival("app", 30.0 * i)
+    ka = pol.keep_alive_s("app")
+    assert 10.0 <= ka <= 31.0 and ka == pytest.approx(30.0, abs=1.0)
+    # a different app is tracked independently
+    assert pol.keep_alive_s("other") == 600.0
+
+
+def test_profile_guided_policy_from_report():
+    pol = ProfileGuidedPolicy(rate_hint_per_s=1.0)
+    pol.add_report(_fake_report())
+    assert pol.preload_modules("app") == hot_set_from_report(_fake_report())
+    assert pol.prewarm("app") == 1  # ceil(1.0 * 0.2 s)
+    # keep-alive amortizes the HOT (non-deferred) init: 0.15 - 0.05 = 0.1 s
+    assert pol.keep_alive_s("app") == pytest.approx(400.0 * 0.1)
+    # unknown app: conservative floor
+    assert pol.prewarm("other") == 0
+    assert pol.keep_alive_s("other") == pol.floor_s
+
+
+# ---------------------------------------------------------------------------
+# simulator
+# ---------------------------------------------------------------------------
+
+PROF = AppProfile(app="app", cold_init_ms=100.0, invoke_ms=10.0,
+                  warm_init_ms=5.0, rss_mb=1024.0)
+
+
+def _trace(times, duration):
+    return Trace("manual", [Request(t, "app") for t in times], duration)
+
+
+def test_simulator_cold_start_ratio_math():
+    # keep-alive 50 s, arrivals at 0, 10, 100: the 10 s gap stays warm,
+    # the 90 s gap expires -> 2 cold starts out of 3
+    sim = FleetSimulator(PROF, IdleTimeoutPolicy(timeout_s=50.0))
+    rep = sim.run(_trace([0.0, 10.0, 100.0], 120.0))
+    assert rep.n_requests == 3
+    assert rep.cold_starts == 2
+    assert rep.cold_start_ratio == pytest.approx(2 / 3)
+    assert rep.reclaims == 1
+    assert sorted(rep.latencies_ms) == [15.0, 110.0, 110.0]
+    assert rep.p50_ms == 110.0
+
+
+def test_simulator_prewarm_eliminates_cold_starts():
+    rep = FleetSimulator(PROF, FixedSizePolicy(size=1)).run(
+        _trace([0.0, 10.0, 100.0], 120.0))
+    assert rep.cold_starts == 0
+    assert all(lat == 15.0 for lat in rep.latencies_ms)
+    # one instance resident for the whole trace
+    assert rep.memory_mb_s == pytest.approx(1024.0 * 120.0, rel=1e-6)
+
+
+def test_simulator_concurrency_spawns_instances():
+    # two arrivals 1 ms apart: the warm instance is still busy (115 ms
+    # service), so the second must cold-start a new instance
+    rep = FleetSimulator(PROF, IdleTimeoutPolicy(timeout_s=1000.0)).run(
+        _trace([0.0, 0.001], 10.0))
+    assert rep.cold_starts == 2
+    assert rep.max_instances == 2
+
+
+def test_simulator_memory_accounts_reclaim_moment():
+    # keep-alive 10 s: each instance finishes 0.11 s after its arrival
+    # (110 ms cold latency) and dies 10 s later — neither is charged to
+    # trace end (100 s)
+    rep = FleetSimulator(PROF, IdleTimeoutPolicy(timeout_s=10.0)).run(
+        _trace([0.0, 50.0], 100.0))
+    assert rep.cold_starts == 2  # second arrival is past the reclaim
+    assert rep.reclaims == 2
+    expected = 1024.0 * 2 * (0.11 + 10.0)
+    assert rep.memory_mb_s == pytest.approx(expected, rel=1e-6)
+
+
+def test_simulator_reclaims_idle_tail_at_trace_end():
+    # a single request at t=0 with a 10 s keep-alive must be charged
+    # ~10.11 s of memory, not the full 100 s trace (the reclaim happens
+    # in the idle tail, after the last arrival)
+    rep = FleetSimulator(PROF, IdleTimeoutPolicy(timeout_s=10.0)).run(
+        _trace([0.0], 100.0))
+    assert rep.reclaims == 1
+    assert rep.memory_mb_s == pytest.approx(1024.0 * (0.11 + 10.0),
+                                            rel=1e-6)
+
+
+def test_app_profile_from_stats():
+    from repro.benchsuite.harness import ColdStartStats
+    c = ColdStartStats(app="x", n=2, init_ms=[100.0, 120.0],
+                       e2e_ms=[130.0, 150.0], peak_rss_kb=[2048, 2048])
+    p = ColdStartStats(app="x", n=2, init_ms=[10.0, 12.0],
+                       e2e_ms=[40.0, 42.0], peak_rss_kb=[2048, 2048])
+    prof = AppProfile.from_stats(c, p)
+    assert prof.cold_init_ms == pytest.approx(110.0)
+    assert prof.invoke_ms == pytest.approx(30.0)
+    assert prof.warm_init_ms == pytest.approx(11.0)
+    assert prof.rss_mb == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# fork-server against a real deployed app (subprocess-heavy)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def suite_root_dir():
+    return build_suite()
+
+
+@pytest.mark.slow
+def test_forkserver_warm_beats_fresh_cold(suite_root_dir):
+    app_dir = os.path.join(suite_root_dir, "apps", "graph_bfs")
+    fresh = measure_cold_starts(app_dir, n=2)
+    pool = measure_pool_starts(app_dir, n=2, preload=["fakelib_igraph"])
+    assert pool.init_mean < fresh.init_mean / 2  # the 2x acceptance bar
+    assert pool.n == 2 and len(pool.init_ms) == 2
+    assert all(m > 0 for m in pool.e2e_ms)
+
+
+@pytest.mark.slow
+def test_forkserver_bad_preload_fails_loudly(suite_root_dir):
+    """A typo'd hot set must not silently degrade to a bare zygote —
+    the benchmark would report bare-pool numbers as hot-pool ones."""
+    from repro.pool import ForkServerError
+    app_dir = os.path.join(suite_root_dir, "apps", "graph_bfs")
+    fs = ForkServer(app_dir, preload=["fakelib_igrap"])  # typo
+    with pytest.raises(ForkServerError, match="failed to boot"):
+        fs.start()
+    assert fs.proc is None  # boot failure tears the zygote down
+
+
+@pytest.mark.slow
+def test_forkserver_protocol_and_rewarm(suite_root_dir):
+    app_dir = os.path.join(suite_root_dir, "apps", "graph_bfs")
+    with ForkServer(app_dir) as fs:
+        assert fs.ready["ok"] and fs.ready["preloaded"] == []
+        m = fs.exec(invocations=2, handler="bfs", seed=1)
+        assert m["invocations"] == {"bfs": 2}
+        assert m["init_ms"] > 0 and m["peak_rss_kb"] > 0
+        # adaptive re-warm: a report whose hot set is fakelib_igraph
+        rep = OptimizationReport(
+            application="graph_bfs", e2e_s=0.1, total_init_s=0.05,
+            qualifies=True,
+            stats=[LibraryStats(name="fakelib_igraph", utilization=0.9,
+                                init_s=0.05, init_share=0.5,
+                                runtime_samples=90, file="<x>")])
+        out = fs.rewarm(rep)
+        assert out["preloaded"] == ["fakelib_igraph"]
+        assert fs.ping()["preloaded"] == ["fakelib_igraph"]
+        # preloaded zygote now forks warm instances
+        warm = fs.exec(invocations=1, handler="bfs", seed=2)
+        assert warm["init_ms"] < m["init_ms"]
+        # rewarm with the same report is a no-op
+        assert fs.rewarm(rep) == {"ok": True, "preloaded": [],
+                                  "errors": []}
+
+
+# ---------------------------------------------------------------------------
+# adaptive controller: cooldown + pool rewarm hook
+# ---------------------------------------------------------------------------
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _controller(clock, cooldown_s=0.0, rewarm_fn=None):
+    reports = iter([_fake_report() for _ in range(10)])
+    applied = []
+    ctl = SlimStartController(
+        profile_fn=lambda: next(reports),
+        optimize_fn=applied.append,
+        config=ControllerConfig(
+            monitor=MonitorConfig(window_s=1.0, epsilon=0.1),
+            cooldown_s=cooldown_s),
+        clock=clock,
+        rewarm_fn=rewarm_fn,
+    )
+    return ctl, applied
+
+
+def _drive_shift(ctl, clock, handler_a, handler_b):
+    """Two full windows of a, then windows of b -> monitor triggers."""
+    for _ in range(5):
+        ctl.on_invocation(handler_a)
+    clock.t += 1.1
+    ctl.on_invocation(handler_a)  # closes window 1 (baseline, no trigger)
+    clock.t += 1.1
+    ctl.on_invocation(handler_b)  # closes window 2 ({a}->{a}: no change)
+    clock.t += 1.1
+    ctl.on_invocation(handler_b)  # closes window 3 ({a}->{b}: trigger)
+
+
+def test_controller_cooldown_suppresses_reprofiles():
+    clock = _Clock()
+    ctl, applied = _controller(clock, cooldown_s=100.0)
+    _drive_shift(ctl, clock, "a", "b")
+    assert ctl.profile_phases == 1
+    # another shift right away: trigger fires but cooldown suppresses
+    _drive_shift(ctl, clock, "b", "a")
+    assert ctl.monitor.triggers >= 2
+    assert ctl.profile_phases == 1
+    # after the cooldown elapses the next trigger profiles again
+    clock.t += 200.0
+    _drive_shift(ctl, clock, "a", "b")
+    assert ctl.profile_phases == 2
+    assert len(applied) == 2
+
+
+def test_controller_rewarms_pool_after_optimize():
+    clock = _Clock()
+    seen = []
+    ctl, applied = _controller(clock, rewarm_fn=seen.append)
+    rep = ctl.force_profile()
+    assert applied == [rep]
+    assert seen == [rep]
+    assert ctl.rewarms == 1 and ctl.rewarm_errors == []
+
+
+def test_controller_rewarm_failure_does_not_abort_phase():
+    clock = _Clock()
+
+    def boom(report):
+        raise RuntimeError("zygote gone")
+
+    ctl, applied = _controller(clock, rewarm_fn=boom)
+    rep = ctl.force_profile()
+    assert applied == [rep]          # optimize still applied
+    assert ctl.profile_phases == 1   # phase completed
+    assert ctl.rewarms == 0
+    assert ctl.rewarm_errors and "zygote gone" in ctl.rewarm_errors[0]
