@@ -1,0 +1,200 @@
+"""Multi-app fleet benchmark: Azure-style trace replay through the
+simulated FleetManager and the real zygote fleet.
+
+The north-star claim this covers: at *equal memory budget*, the
+profile-guided fleet policy (zygote per app pre-importing the measured
+hot set, Little's-law prewarm, amortization-ranked eviction) beats the
+fixed-size and idle-timeout baselines on cold-start ratio, with per-app
+p99 and budget utilization reported.
+
+Three parts:
+
+1. **Measure** — run the SLIMSTART pipeline per app to get its report
+   and hot set, then fresh-process vs hot-fork-pool cold starts to build
+   the per-app :class:`AppProfile` (cold/fork init, invoke, RSS).
+2. **Simulate** — generate an Azure Functions-style trace (per-minute
+   counts, heavy-tailed app popularity, diurnal modulation) over the
+   measured apps and replay it under every keep-alive policy at the same
+   budget via :func:`repro.pool.fleet.fleet_sweep`.
+3. **Replay for real** — boot a :class:`ZygoteFleet` (one zygote per
+   app under the budget) and push a slice of the same trace through
+   ``dispatch``, reporting measured pool vs cold init latencies.
+
+``--smoke`` (or ``BENCH_QUICK=1``) shrinks everything for CI: fewer
+apps, fewer cold starts, shorter trace, a small real-replay slice.
+"""
+
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import os
+
+from repro.benchsuite.genlibs import build_suite
+from repro.benchsuite.harness import measure_cold_starts, measure_pool_starts
+from repro.benchsuite.pipeline import SlimstartPipeline
+from repro.pool.fleet import ZygoteFleet, fleet_sweep
+from repro.pool.policies import default_policies, hot_set_from_report
+from repro.pool.simulator import AppProfile
+from repro.pool.trace import azure_synthetic_rows, trace_from_azure_rows
+
+from benchmarks.common import (
+    APP_SHORT, N_COLD, N_INSTANCES, N_INVOKE, QUICK, save_result, table,
+)
+
+FLEET_APPS = ["graph_bfs", "sentiment_analysis_r", "graph_mst"]
+SMOKE_APPS = ["graph_bfs", "sentiment_analysis_r"]
+
+
+def measure_apps(root: str, apps: list[str], *, instances: int,
+                 invocations: int, n_cold: int) -> dict:
+    """Pipeline + harness measurements per app -> profiles/reports."""
+    measured = {}
+    for app in apps:
+        pipe = SlimstartPipeline(app, root)
+        res = pipe.run(instances=instances, invocations=invocations)
+        hot = hot_set_from_report(res.report)
+        app_dir = os.path.join(root, "apps", app)
+        fresh = measure_cold_starts(app_dir, n=n_cold)
+        warm = measure_pool_starts(app_dir, n=n_cold, preload=hot)
+        measured[app] = {
+            "report": res.report,
+            "hot_set": hot,
+            "profile": AppProfile.from_stats(fresh, warm),
+        }
+    return measured
+
+
+def build_fleet_trace(root: str, apps: list[str], *, minutes: int,
+                      peak_rpm: float, seed: int = 11):
+    """Azure-shaped trace over the suite apps with their real handlers."""
+    handlers = {}
+    for app in apps:
+        meta = json.load(open(os.path.join(root, "apps", app,
+                                           "meta.json")))
+        handlers[app] = list(meta["handlers"])
+    rows = azure_synthetic_rows(
+        apps, minutes=minutes, peak_rpm=peak_rpm, popularity_s=1.3,
+        diurnal_period_min=minutes, seed=seed, handlers=handlers)
+    return trace_from_azure_rows(rows, seed=seed + 1, name="azure")
+
+
+def run(smoke: bool = False) -> dict:
+    smoke = smoke or QUICK
+    apps = SMOKE_APPS if smoke else FLEET_APPS
+    minutes = 10 if smoke else 30
+    peak_rpm = 20.0 if smoke else 40.0
+    real_limit = 10 if smoke else 40
+
+    root = build_suite()
+
+    # ------------------------------------------------ part 1: measurement
+    measured = measure_apps(
+        root, apps, instances=max(1, N_INSTANCES // 2),
+        invocations=N_INVOKE, n_cold=N_COLD)
+    profiles = {a: m["profile"] for a, m in measured.items()}
+    reports = {a: m["report"] for a, m in measured.items()}
+    prof_rows = [{
+        "app": APP_SHORT.get(a, a),
+        "cold_init_ms": round(p.cold_init_ms, 1),
+        "fork_init_ms": round(p.warm_init_ms, 1),
+        "invoke_ms": round(p.invoke_ms, 1),
+        "rss_mb": round(p.rss_mb, 1),
+        "zygote_rss_mb": round(p.zygote_rss_mb, 1),
+        "hot_set": ",".join(measured[a]["hot_set"]),
+    } for a, p in profiles.items()]
+    print(table(prof_rows, ["app", "cold_init_ms", "fork_init_ms",
+                            "invoke_ms", "rss_mb", "zygote_rss_mb",
+                            "hot_set"],
+                "Measured per-app fleet profiles"))
+
+    # equal budget for every policy: ~1.2x one warm instance per app —
+    # tight enough that arbitration decides who stays warm (fixed-size
+    # wants 2/app and must leave someone cold), with enough margin that
+    # RSS measurement noise can't flip zygote admission run-to-run
+    budget_mb = 1.2 * sum(p.rss_mb for p in profiles.values())
+
+    # ------------------------------------------------ part 2: simulation
+    trace = build_fleet_trace(root, apps, minutes=minutes,
+                              peak_rpm=peak_rpm)
+    mean_rate = len(trace) / trace.duration_s
+    policies = default_policies(reports, rate_hint_per_s=mean_rate
+                                / max(len(apps), 1))
+    summaries = fleet_sweep(profiles, policies, trace,
+                            budget_mb=budget_mb,
+                            policy_factory=copy.deepcopy)
+    sim_rows = [s.summary() for s in summaries]
+    print()
+    print(table(sim_rows, ["policy", "requests", "cold_starts",
+                           "cold_ratio", "pool_starts", "p99_ms",
+                           "mean_ms", "budget_util", "evictions",
+                           "zygotes"],
+                f"Fleet policy sweep on Azure-style trace "
+                f"(budget {budget_mb:.0f} MB, {len(trace)} requests)"))
+    app_rows = []
+    for s in summaries:
+        for row in s.app_rows():
+            app_rows.append({"policy": s.policy, **row,
+                             "app": APP_SHORT.get(row["app"], row["app"])})
+    print()
+    print(table(app_rows, ["policy", "app", "requests", "cold_starts",
+                           "cold_ratio", "p50_ms", "p99_ms",
+                           "memory_gb_s", "max_instances"],
+                "Per-app breakdown (paper-style per-application rows)"))
+
+    by_policy = {s.policy: s for s in summaries}
+    pg = by_policy["profile-guided"]
+    beats_fixed = pg.cold_start_ratio < by_policy["fixed"].cold_start_ratio
+    beats_idle = (pg.cold_start_ratio
+                  < by_policy["idle-timeout"].cold_start_ratio)
+
+    # ------------------------------------------------ part 3: real replay
+    app_dirs = {a: os.path.join(root, "apps", a) for a in apps}
+    with ZygoteFleet(app_dirs, budget_mb=budget_mb,
+                     reports=reports) as fleet:
+        boot = {"zygotes": sorted(fleet.servers),
+                "skipped": list(fleet.skipped),
+                "used_mb": round(fleet.used_mb(), 1)}
+        real_rows = fleet.replay(trace, limit=real_limit)
+    print()
+    print(table(real_rows, ["app", "requests", "pool_starts",
+                            "cold_starts", "cold_ratio", "pool_init_ms",
+                            "cold_init_ms"],
+                f"Real zygote-fleet replay (first {real_limit} requests; "
+                f"zygotes: {','.join(boot['zygotes'])}; "
+                f"{boot['used_mb']} MB resident)"))
+
+    verdict = ("profile-guided fleet beats fixed-size and idle-timeout "
+               "on cold-start ratio at equal budget"
+               if beats_fixed and beats_idle else
+               "WARNING: profile-guided did NOT beat both baselines")
+    print(f"\n{verdict}")
+
+    payload = {
+        "claim": "at equal memory budget the profile-guided fleet "
+                 "policy has the lowest cold-start ratio, with per-app "
+                 "p99 and budget utilization reported",
+        "budget_mb": round(budget_mb, 1),
+        "trace": {"shape": "azure", "requests": len(trace),
+                  "duration_s": trace.duration_s,
+                  "apps": {a: sum(1 for r in trace if r.app == a)
+                           for a in apps}},
+        "profile_rows": prof_rows,
+        "sim_rows": sim_rows,
+        "per_app_rows": app_rows,
+        "real_boot": boot,
+        "real_rows": real_rows,
+        "profile_guided_beats_fixed": beats_fixed,
+        "profile_guided_beats_idle_timeout": beats_idle,
+    }
+    save_result("bench_fleet", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: fewer apps, shorter trace")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

@@ -28,10 +28,10 @@ def main():
 
     # import after BENCH_QUICK is set (common.py reads it at import)
     from benchmarks import (
-        bench_adaptive, bench_faaslight_compare, bench_init_ratio,
-        bench_memory, bench_profiler_overhead, bench_serving_coldstart,
-        bench_speedup_table, bench_static_vs_dynamic,
-        bench_workload_skew,
+        bench_adaptive, bench_faaslight_compare, bench_fleet,
+        bench_init_ratio, bench_memory, bench_profiler_overhead,
+        bench_serving_coldstart, bench_speedup_table,
+        bench_static_vs_dynamic, bench_workload_skew,
     )
 
     benches = [
@@ -44,6 +44,7 @@ def main():
         ("memory", bench_memory.run),                        # Fig. 8
         ("profiler_overhead", bench_profiler_overhead.run),  # Fig. 9
         ("serving_coldstart", bench_serving_coldstart.run),  # Level B
+        ("fleet", bench_fleet.run),                          # fleet scale
     ]
 
     results = {}

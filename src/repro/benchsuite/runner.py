@@ -32,6 +32,7 @@ import os
 import random
 import resource
 import sys
+import threading
 import time
 
 
@@ -65,6 +66,72 @@ def instance_rss_kb() -> int:
     if rss is not None:
         return rss
     return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+
+
+def current_rss_kb() -> int:
+    """Current VmRSS in kB (no high-water mark): the quantity a periodic
+    sampler must watch on kernels whose ``/proc`` lacks ``VmHWM``."""
+    try:
+        with open("/proc/self/status") as fh:
+            for line in fh:
+                if line.startswith("VmRSS:"):
+                    return int(line.split()[1])
+    except (OSError, ValueError, IndexError):
+        pass
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+
+
+class PeakRssSampler:
+    """Background thread tracking peak RSS by periodic sampling.
+
+    ``VmHWM`` already records the true peak on mainline kernels, but
+    sandboxed kernels (gVisor-style) expose only current ``VmRSS`` —
+    there, a workload that frees its ballast before exit would report
+    the *post-free* RSS as its "peak".  Sampling every ``interval_s``
+    while the instance runs recovers a true high-water mark (to sampling
+    resolution) on any kernel.  Use as a context manager or
+    ``start()``/``stop()``; ``peak_kb`` is valid during and after.
+    """
+
+    def __init__(self, interval_s: float = 0.02,
+                 read_kb=current_rss_kb) -> None:
+        self.interval_s = interval_s
+        self._read_kb = read_kb
+        self.peak_kb = 0
+        self.samples = 0
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    def _sample(self) -> None:
+        self.peak_kb = max(self.peak_kb, self._read_kb())
+        self.samples += 1
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.interval_s):
+            self._sample()
+
+    def start(self) -> "PeakRssSampler":
+        if self._thread is None:
+            self._sample()
+            self._stop.clear()
+            self._thread = threading.Thread(target=self._loop,
+                                            daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self) -> int:
+        if self._thread is not None:
+            self._stop.set()
+            self._thread.join(timeout=5.0)
+            self._thread = None
+        self._sample()
+        return self.peak_kb
+
+    def __enter__(self) -> "PeakRssSampler":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
 
 
 def setup_app_path(app_dir: str) -> str:
@@ -141,6 +208,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--preimport", default=None,
                     help="comma-separated modules imported before the "
                          "timed handler import (pre-warmed hot set)")
+    ap.add_argument("--rss-sample-interval", type=float, default=0.02,
+                    help="periodic RSS sampling period in seconds "
+                         "(0 disables the sampler)")
     args = ap.parse_args(argv)
 
     app_dir = os.path.abspath(args.app_dir)
@@ -162,6 +232,13 @@ def main(argv: list[str] | None = None) -> int:
             SamplerConfig(interval_s=args.sample_interval, timer="prof"))
         sampler.start()
 
+    # a workload can free its ballast before exit, so end-of-run VmRSS
+    # (the VmHWM-less fallback) would under-report the peak — sample
+    # RSS periodically across init + invocations for a true high-water
+    rss_sampler = None
+    if args.rss_sample_interval > 0:
+        rss_sampler = PeakRssSampler(args.rss_sample_interval).start()
+
     # ---------------------------------------------------------- cold start
     t0 = time.perf_counter()
     handler_mod = importlib.import_module("handler")
@@ -180,6 +257,8 @@ def main(argv: list[str] | None = None) -> int:
         sampler.stop()
 
     peak_rss_kb = max(rss_after_init, instance_rss_kb())
+    if rss_sampler is not None:
+        peak_rss_kb = max(peak_rss_kb, rss_sampler.stop())
 
     # ----------------------------------------------------------- profiling
     if args.profile and args.sink:

@@ -1,18 +1,28 @@
 """Warm-pool subsystem: amortizing initialization across instances.
 
-Four pieces (see each module's docstring):
+Five pieces (see each module's docstring and this package's README.md):
 
 * :mod:`repro.pool.forkserver` — profile-guided zygote that pre-imports
   the measured hot set and forks handler instances copy-on-write;
 * :mod:`repro.pool.policies`   — keep-alive / pool-sizing policies,
   including the profile-guided one fed by ``OptimizationReport``;
 * :mod:`repro.pool.trace`      — synthetic invocation traces (poisson,
-  diurnal, bursty, handler-skewed) replayable in simulation and against
-  the real harness;
-* :mod:`repro.pool.simulator`  — trace-driven fleet simulator reporting
-  cold-start ratio, p50/p99 latency and memory GB-seconds per policy.
+  diurnal, bursty, handler-skewed) plus Azure Functions-style
+  multi-app traces (per-minute counts, heavy-tailed app popularity),
+  replayable in simulation and against the real harness;
+* :mod:`repro.pool.simulator`  — single-app trace-driven simulator
+  reporting cold-start ratio, p50/p99 latency and memory GB-seconds;
+* :mod:`repro.pool.fleet`      — multi-app fleet manager: one zygote
+  per app under a shared memory budget, prewarm/evict arbitration
+  (simulated ``FleetManager`` and real-process ``ZygoteFleet``).
 """
 
+from repro.pool.fleet import (
+    FleetManager,
+    FleetSummary,
+    ZygoteFleet,
+    fleet_sweep,
+)
 from repro.pool.forkserver import ForkServer, ForkServerError
 from repro.pool.policies import (
     FixedSizePolicy,
@@ -25,20 +35,29 @@ from repro.pool.policies import (
 )
 from repro.pool.simulator import AppProfile, FleetReport, FleetSimulator, sweep
 from repro.pool.trace import (
+    AzureRow,
     Request,
     Trace,
+    azure_synthetic_rows,
+    azure_trace,
     bursty_trace,
     diurnal_trace,
     handler_skewed_trace,
+    load_azure_csv,
     poisson_trace,
     standard_traces,
+    trace_from_azure_rows,
+    write_azure_csv,
 )
 
 __all__ = [
     "AppProfile",
+    "AzureRow",
     "FixedSizePolicy",
+    "FleetManager",
     "FleetReport",
     "FleetSimulator",
+    "FleetSummary",
     "ForkServer",
     "ForkServerError",
     "HistogramPolicy",
@@ -47,12 +66,19 @@ __all__ = [
     "ProfileGuidedPolicy",
     "Request",
     "Trace",
+    "ZygoteFleet",
+    "azure_synthetic_rows",
+    "azure_trace",
     "bursty_trace",
     "default_policies",
     "diurnal_trace",
+    "fleet_sweep",
     "handler_skewed_trace",
     "hot_set_from_report",
+    "load_azure_csv",
     "poisson_trace",
     "standard_traces",
     "sweep",
+    "trace_from_azure_rows",
+    "write_azure_csv",
 ]

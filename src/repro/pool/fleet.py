@@ -1,0 +1,605 @@
+"""Multi-app zygote fleet manager under a shared memory budget.
+
+PR 1's pieces are single-app: one :class:`~repro.pool.forkserver.ForkServer`
+per process, one :class:`~repro.pool.simulator.FleetSimulator` per
+profile.  SLIMSTART's profile-guided optimization only pays off
+fleet-wide when *many* apps contend for one memory budget — the regime
+FaaSLight and HotSwap measure — so this module adds the arbiter:
+
+:class:`FleetManager` (simulation)
+    Replays a multi-app :class:`~repro.pool.trace.Trace` (e.g. an
+    Azure-style trace from :func:`~repro.pool.trace.azure_synthetic_rows`)
+    against one :class:`~repro.pool.policies.KeepAlivePolicy` shared by
+    every app, charging warm instances, prewarmed floors and resident
+    zygotes against ``budget_mb``.  Decisions:
+
+    * **prewarm** — the policy's per-app floor (profile-guided: Little's
+      law ``ceil(rate * service_s)``, with the rate learned online from
+      the arrival stream via ``policy.observe_rate``) is maintained in
+      priority order whenever budget allows, so the app about to miss
+      gets instances before traffic lands on it cold;
+    * **evict** — when retention exceeds the budget, the idle instance
+      (then zygote) of the app whose warm state *amortizes worst* —
+      lowest ``rate * init_saved_ms / rss_mb`` — is reclaimed first;
+    * **zygote residency** — apps whose policy pre-imports a hot set
+      (``policy.preload_modules(app)``) keep one zygote resident while
+      it fits; instance creation for those apps is a cheap fork
+      (``warm_init_ms``) counted as a *pool start*, not a cold start.
+
+    Demand-driven instances always spawn (serving beats retention,
+    exactly like Lambda); only *retained* state — idle instances,
+    prewarmed floors, zygotes — competes for the budget.
+
+:class:`ZygoteFleet` (real processes)
+    The same arbitration over real fork-servers: one zygote per app,
+    booted best-amortizing-first while measured zygote RSS fits the
+    budget; ``dispatch`` routes a request to the app's zygote (fork) and
+    falls back to a fresh-process cold start when the app has no
+    resident zygote or its zygote died; ``rewarm(report)`` is the
+    :class:`~repro.core.adaptive.controller.SlimStartController`
+    ``rewarm_fn`` hook — it re-preloads (and, after a crash, reboots)
+    the zygote of the re-profiled app.
+"""
+
+from __future__ import annotations
+
+import math
+import statistics
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+from repro.core.profiler.report import OptimizationReport
+from repro.pool.forkserver import ForkServer, ForkServerError
+from repro.pool.policies import KeepAlivePolicy, hot_set_from_report
+from repro.pool.simulator import AppProfile, FleetReport, percentile_ms
+from repro.pool.trace import Request, Trace
+
+
+# ---------------------------------------------------------------------------
+# Simulation side
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _FleetInstance:
+    app: str
+    born_t: float
+    busy_until: float = 0.0
+    prewarmed: bool = False
+    served: int = 0
+
+
+@dataclass
+class _AppState:
+    profile: AppProfile
+    report: FleetReport
+    instances: list[_FleetInstance] = field(default_factory=list)
+    zygote_up: bool = False
+    zygote_since: float = 0.0
+    zygote_mb_s: float = 0.0
+    zygote_evicted_t: float = -math.inf
+    pool_starts: int = 0
+    arrivals: deque = field(default_factory=deque)
+
+    def zygote_rss_mb(self) -> float:
+        return self.profile.zygote_rss_mb or self.profile.rss_mb
+
+
+@dataclass
+class FleetSummary:
+    """Fleet-level rollup of one multi-app replay."""
+
+    policy: str
+    trace: str
+    budget_mb: float
+    duration_s: float
+    per_app: dict[str, FleetReport]
+    pool_starts: int = 0
+    prewarm_spawns: int = 0
+    evictions: int = 0
+    zygote_evictions: int = 0
+    budget_violations: int = 0
+    memory_mb_s: float = 0.0
+    peak_mb: float = 0.0
+    zygote_apps: list[str] = field(default_factory=list)
+
+    @property
+    def n_requests(self) -> int:
+        return sum(r.n_requests for r in self.per_app.values())
+
+    @property
+    def cold_starts(self) -> int:
+        return sum(r.cold_starts for r in self.per_app.values())
+
+    @property
+    def cold_start_ratio(self) -> float:
+        return self.cold_starts / max(self.n_requests, 1)
+
+    @property
+    def p99_ms(self) -> float:
+        return percentile_ms([x for r in self.per_app.values()
+                              for x in r.latencies_ms], 0.99)
+
+    @property
+    def mean_ms(self) -> float:
+        lats = [x for r in self.per_app.values() for x in r.latencies_ms]
+        return statistics.fmean(lats) if lats else math.nan
+
+    @property
+    def budget_utilization(self) -> float:
+        """Time-averaged retained+running memory over the budget."""
+        if self.budget_mb <= 0 or self.duration_s <= 0:
+            return math.nan
+        return (self.memory_mb_s / self.duration_s) / self.budget_mb
+
+    def summary(self) -> dict:
+        return {
+            "policy": self.policy,
+            "trace": self.trace,
+            "budget_mb": round(self.budget_mb, 1),
+            "requests": self.n_requests,
+            "cold_starts": self.cold_starts,
+            "cold_ratio": round(self.cold_start_ratio, 4),
+            "pool_starts": self.pool_starts,
+            "p99_ms": round(self.p99_ms, 2),
+            "mean_ms": round(self.mean_ms, 2),
+            "budget_util": round(self.budget_utilization, 3),
+            "peak_mb": round(self.peak_mb, 1),
+            "evictions": self.evictions,
+            "prewarm_spawns": self.prewarm_spawns,
+            "zygotes": ",".join(self.zygote_apps) or "-",
+        }
+
+    def app_rows(self) -> list[dict]:
+        rows = []
+        for app, rep in sorted(self.per_app.items()):
+            rows.append({
+                "app": app,
+                "requests": rep.n_requests,
+                "cold_starts": rep.cold_starts,
+                "cold_ratio": round(rep.cold_start_ratio, 4),
+                "p50_ms": round(rep.p50_ms, 2),
+                "p99_ms": round(rep.p99_ms, 2),
+                "memory_gb_s": round(rep.memory_gb_s, 3),
+                "max_instances": rep.max_instances,
+            })
+        return rows
+
+
+class FleetManager:
+    """Arbitrates warm state for many apps under one memory budget.
+
+    ``replay(trace)`` is the simulation entry point; the decision
+    helpers (``amortization_score``, ``observed_rate_per_s``) are public
+    so the real :class:`ZygoteFleet` and tests share the same math.
+    """
+
+    def __init__(self, profiles: dict[str, AppProfile],
+                 policy: KeepAlivePolicy, *, budget_mb: float,
+                 rate_window_s: float = 120.0,
+                 zygote_retry_s: float = 60.0) -> None:
+        if budget_mb <= 0:
+            raise ValueError("budget_mb must be positive")
+        self.profiles = dict(profiles)
+        self.policy = policy
+        self.budget_mb = budget_mb
+        self.rate_window_s = rate_window_s
+        # hysteresis: a zygote evicted under budget pressure is not
+        # re-booted before this many seconds (prevents boot/evict thrash
+        # when zygotes and instances contend for a tight budget)
+        self.zygote_retry_s = zygote_retry_s
+        self._apps: dict[str, _AppState] = {}
+
+    # ------------------------------------------------------------- signals
+    def observed_rate_per_s(self, app: str, now: float) -> float:
+        """Arrival rate over the trailing window (0 before any traffic).
+        Prunes here, not just on arrival: a silent app's rate must decay
+        to zero or its dead warm state would outrank live apps."""
+        st = self._apps.get(app)
+        if st is None:
+            return 0.0
+        horizon = now - self.rate_window_s
+        while st.arrivals and st.arrivals[0] < horizon:
+            st.arrivals.popleft()
+        if not st.arrivals:
+            return 0.0
+        # early in the trace the window is the elapsed time, floored at
+        # 1 s so a burst at t=0 doesn't read as an infinite rate
+        window = min(self.rate_window_s, max(now, 1.0))
+        return len(st.arrivals) / window
+
+    def amortization_score(self, app: str, now: float) -> float:
+        """How well this app's warm state pays for its memory: init
+        milliseconds saved per second, per resident MB.  Ranks apps for
+        zygote admission and prewarm priority (descending)."""
+        prof = self.profiles[app]
+        saved = max(prof.cold_init_ms - prof.warm_init_ms, 0.0)
+        rate = self.observed_rate_per_s(app, now)
+        return rate * saved / max(prof.rss_mb, 1e-9)
+
+    def instance_evict_cost(self, app: str, now: float) -> float:
+        """Marginal cost of evicting one idle instance of ``app``: extra
+        init ms per second of traffic, per freed MB.  Crucially, an app
+        with a resident zygote falls back to a cheap fork — its idle
+        instances are nearly free to evict — while a zygote-less app's
+        warm instance shields a full cold start."""
+        st = self._apps[app]
+        prof = st.profile
+        fallback_ms = (prof.warm_init_ms if st.zygote_up
+                       else prof.cold_init_ms)
+        saved = max(fallback_ms - prof.warm_init_ms, 0.0)
+        rate = self.observed_rate_per_s(app, now)
+        return rate * saved / max(prof.rss_mb, 1e-9)
+
+    def zygote_evict_cost(self, app: str, now: float) -> float:
+        """Marginal cost of evicting ``app``'s zygote: every future
+        start degrades from fork to full cold, per freed MB."""
+        st = self._apps[app]
+        prof = st.profile
+        saved = max(prof.cold_init_ms - prof.warm_init_ms, 0.0)
+        rate = self.observed_rate_per_s(app, now)
+        return rate * saved / max(st.zygote_rss_mb(), 1e-9)
+
+    # -------------------------------------------------------------- replay
+    def replay(self, trace: Trace) -> FleetSummary:
+        self._reset(trace)
+        self._rebalance(0.0)
+        for req in trace:
+            if req.app not in self._apps:
+                raise KeyError(
+                    f"trace requests unknown app {req.app!r}; "
+                    f"fleet serves {sorted(self._apps)}")
+            self.policy.observe_arrival(req.app, req.t)
+            self._record_arrival(req.app, req.t)
+            self._reclaim_idle(req.t)
+            self._rebalance(req.t)
+            self._serve(req)
+        end = trace.duration_s
+        self._reclaim_idle(end)
+        self._finalize(end)
+        return self._summary
+
+    # ------------------------------------------------------------ internals
+    def _reset(self, trace: Trace) -> None:
+        self._apps = {
+            app: _AppState(
+                profile=prof,
+                report=FleetReport(policy=self.policy.name,
+                                   trace=trace.name, n_requests=0,
+                                   cold_starts=0))
+            for app, prof in self.profiles.items()
+        }
+        self._summary = FleetSummary(
+            policy=self.policy.name, trace=trace.name,
+            budget_mb=self.budget_mb, duration_s=trace.duration_s,
+            per_app={app: st.report for app, st in self._apps.items()})
+
+    def _record_arrival(self, app: str, t: float) -> None:
+        self._apps[app].arrivals.append(t)
+        self.policy.observe_rate(app, self.observed_rate_per_s(app, t))
+
+    def _used_mb(self, *, retained_only: bool = False,
+                 now: Optional[float] = None) -> float:
+        total = 0.0
+        for st in self._apps.values():
+            if st.zygote_up:
+                total += st.zygote_rss_mb()
+            insts = st.instances
+            if retained_only and now is not None:
+                insts = [i for i in insts if i.busy_until <= now]
+            total += st.profile.rss_mb * len(insts)
+        return total
+
+    def _note_peak(self) -> None:
+        self._summary.peak_mb = max(self._summary.peak_mb, self._used_mb())
+
+    def _reclaim_idle(self, now: float) -> None:
+        for app, st in self._apps.items():
+            ka = self.policy.keep_alive_s(app)
+            survivors = []
+            for inst in st.instances:
+                if (not inst.prewarmed and inst.busy_until <= now
+                        and now - inst.busy_until > ka):
+                    died_at = inst.busy_until + ka
+                    st.report.memory_mb_s += st.profile.rss_mb * (
+                        died_at - inst.born_t)
+                    st.report.reclaims += 1
+                else:
+                    survivors.append(inst)
+            st.instances = survivors
+
+    def _rebalance(self, now: float) -> None:
+        ranked = sorted(self._apps,
+                        key=lambda a: -self.amortization_score(a, now))
+        # 1) zygote residency for apps whose policy pre-imports a hot set
+        for app in ranked:
+            st = self._apps[app]
+            if st.zygote_up or not self.policy.preload_modules(app):
+                continue
+            if now - st.zygote_evicted_t < self.zygote_retry_s:
+                continue  # recently squeezed out: don't thrash
+            # admit only with headroom for at least one forked instance
+            # — a zygote that starves serving of memory is pure overhead
+            need = st.zygote_rss_mb() + st.profile.rss_mb
+            if self._used_mb() + need <= self.budget_mb:
+                st.zygote_up = True
+                st.zygote_since = now
+        # 2) prewarm floors, best amortizer first
+        for app in ranked:
+            st = self._apps[app]
+            floor = self.policy.prewarm(app)
+            while (len(st.instances) < floor
+                   and self._used_mb() + st.profile.rss_mb
+                   <= self.budget_mb):
+                self._spawn(st, now, prewarmed=True)
+                self._summary.prewarm_spawns += 1
+        # 3) evict retention back under the budget (worst amortizer first)
+        self._evict_to_budget(now)
+        self._note_peak()
+        if self._used_mb(retained_only=True, now=now) > self.budget_mb \
+                and self._any_retained(now):
+            self._summary.budget_violations += 1
+
+    def _any_retained(self, now: float) -> bool:
+        return any(st.zygote_up
+                   or any(i.busy_until <= now for i in st.instances)
+                   for st in self._apps.values())
+
+    def _evict_to_budget(self, now: float) -> None:
+        while self._used_mb() > self.budget_mb:
+            victim = self._eviction_victim(now)
+            if victim is None:
+                break  # only busy instances left: serving wins
+            app, kind = victim
+            st = self._apps[app]
+            if kind == "instance":
+                idle = [i for i in st.instances if i.busy_until <= now]
+                inst = min(idle, key=lambda i: i.busy_until)  # oldest idle
+                st.instances.remove(inst)
+                st.report.memory_mb_s += st.profile.rss_mb * (
+                    now - inst.born_t)
+                self._summary.evictions += 1
+            else:
+                st.zygote_up = False
+                st.zygote_evicted_t = now
+                st.zygote_mb_s += st.zygote_rss_mb() * (now
+                                                        - st.zygote_since)
+                self._summary.zygote_evictions += 1
+
+    def _eviction_victim(self, now: float) -> Optional[tuple[str, str]]:
+        """The retained item (idle instance or zygote, any app) whose
+        eviction costs the fleet least per freed MB — "the app whose
+        warm instance amortizes worst goes first"."""
+        best: Optional[tuple[float, str, str]] = None
+        for app, st in self._apps.items():
+            if any(i.busy_until <= now for i in st.instances):
+                cost = self.instance_evict_cost(app, now)
+                if best is None or cost < best[0]:
+                    best = (cost, app, "instance")
+            if st.zygote_up:
+                cost = self.zygote_evict_cost(app, now)
+                if best is None or cost < best[0]:
+                    best = (cost, app, "zygote")
+        return (best[1], best[2]) if best is not None else None
+
+    def _start_latency_ms(self, st: _AppState) -> tuple[float, bool]:
+        """(init latency for a brand-new instance, is_cold).  A resident
+        zygote turns the start into a cheap fork — a *pool start*."""
+        if st.zygote_up:
+            return st.profile.warm_init_ms, False
+        return st.profile.cold_init_ms, True
+
+    def _spawn(self, st: _AppState, now: float, *,
+               prewarmed: bool) -> _FleetInstance:
+        init_ms, cold = self._start_latency_ms(st)
+        inst = _FleetInstance(app=st.profile.app, born_t=now,
+                              prewarmed=prewarmed)
+        # a prewarmed instance becomes usable once its init completes;
+        # its init cost stays off every request's latency
+        inst.busy_until = now + init_ms / 1e3
+        st.instances.append(inst)
+        if not prewarmed:
+            if cold:
+                st.report.cold_starts += 1
+            else:
+                st.pool_starts += 1
+                self._summary.pool_starts += 1
+        st.report.max_instances = max(st.report.max_instances,
+                                      len(st.instances))
+        return inst
+
+    def _serve(self, req: Request) -> None:
+        st = self._apps[req.app]
+        prof = st.profile
+        st.report.n_requests += 1
+        idle = [i for i in st.instances if i.busy_until <= req.t]
+        if idle:
+            inst = max(idle, key=lambda i: i.busy_until)  # LIFO reuse
+            latency_ms = prof.warm_init_ms + prof.invoke_ms
+        else:
+            init_ms, _cold = self._start_latency_ms(st)
+            inst = self._spawn(st, req.t, prewarmed=False)
+            latency_ms = init_ms + prof.invoke_ms
+        inst.busy_until = req.t + latency_ms / 1e3
+        inst.served += 1
+        st.report.latencies_ms.append(latency_ms)
+        self._note_peak()
+
+    def _finalize(self, end: float) -> None:
+        zygote_apps = []
+        for app, st in self._apps.items():
+            for inst in st.instances:
+                st.report.memory_mb_s += st.profile.rss_mb * (
+                    max(end, inst.busy_until) - inst.born_t)
+            if st.zygote_up:
+                st.zygote_mb_s += st.zygote_rss_mb() * (end
+                                                        - st.zygote_since)
+            if st.zygote_up or st.zygote_mb_s > 0:
+                zygote_apps.append(app)
+            # zygote memory is fleet overhead attributed to the app
+            st.report.memory_mb_s += st.zygote_mb_s
+        self._summary.zygote_apps = sorted(zygote_apps)
+        self._summary.memory_mb_s = sum(
+            st.report.memory_mb_s for st in self._apps.values())
+
+
+def fleet_sweep(profiles: dict[str, AppProfile],
+                policies: Sequence[KeepAlivePolicy], trace: Trace, *,
+                budget_mb: float, policy_factory=None,
+                ) -> list[FleetSummary]:
+    """Replay one multi-app trace under every policy at the same budget.
+    Stateful policies must not leak learned state across runs: pass
+    ``policy_factory`` mapping a policy to a fresh clone (deepcopy is a
+    fine default for the standard panel)."""
+    out = []
+    for pol in policies:
+        p = policy_factory(pol) if policy_factory is not None else pol
+        out.append(FleetManager(profiles, p,
+                                budget_mb=budget_mb).replay(trace))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Real-process side
+# ---------------------------------------------------------------------------
+
+class ZygoteFleet:
+    """One real fork-server zygote per app under a shared memory budget.
+
+    ``apps`` maps app name -> deployed app directory.  ``reports``
+    (per-app :class:`OptimizationReport`) give each zygote its
+    profile-guided pre-import hot set; apps without a report boot bare
+    zygotes.  ``start`` boots zygotes in the given priority order while
+    *measured* zygote RSS fits ``budget_mb``; apps that don't fit are
+    recorded in ``skipped`` and serve fresh-process cold starts.
+    """
+
+    def __init__(self, apps: dict[str, str], *,
+                 budget_mb: Optional[float] = None,
+                 reports: Optional[dict[str, OptimizationReport]] = None,
+                 timeout_s: float = 180.0) -> None:
+        self.app_dirs = dict(apps)
+        self.budget_mb = budget_mb
+        self.reports = dict(reports or {})
+        self.timeout_s = timeout_s
+        self.servers: dict[str, ForkServer] = {}
+        self.skipped: list[str] = []
+        self.dispatches: dict[str, dict[str, int]] = {
+            app: {"pool": 0, "cold": 0, "fallback": 0}
+            for app in self.app_dirs}
+
+    # ----------------------------------------------------------- lifecycle
+    def start(self) -> dict:
+        budget_full = False
+        for app, app_dir in self.app_dirs.items():
+            if budget_full or (self.budget_mb is not None
+                               and self.used_mb() >= self.budget_mb):
+                self.skipped.append(app)
+                continue
+            rep = self.reports.get(app)
+            preload = hot_set_from_report(rep) if rep is not None else []
+            fs = ForkServer(app_dir, preload=preload,
+                            timeout_s=self.timeout_s)
+            fs.start()
+            self.servers[app] = fs
+            if self.budget_mb is not None and self.used_mb() > \
+                    self.budget_mb:
+                # measured RSS blew the budget: take this zygote back
+                # down, and stop admitting — apps are in priority order,
+                # so paying a full boot+kill cycle per remaining app
+                # just to confirm the budget is exhausted wastes seconds
+                fs.stop()
+                del self.servers[app]
+                self.skipped.append(app)
+                budget_full = True
+        return {"zygotes": sorted(self.servers),
+                "skipped": list(self.skipped),
+                "used_mb": round(self.used_mb(), 1)}
+
+    def stop(self) -> None:
+        for fs in self.servers.values():
+            fs.stop()
+
+    def __enter__(self) -> "ZygoteFleet":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def used_mb(self) -> float:
+        return sum(fs.rss_kb() for fs in self.servers.values()) / 1024.0
+
+    # ------------------------------------------------------------ serving
+    def dispatch(self, app: str, *, handler: Optional[str] = None,
+                 invocations: int = 1, seed: int = 0) -> dict:
+        """Serve one request: fork from the app's zygote if it is
+        resident and alive, else a fresh-process cold start.  Returns
+        runner-format metrics plus ``path`` ("pool" | "cold") and
+        ``fallback`` (True when a live zygote failed mid-exec)."""
+        if app not in self.app_dirs:
+            raise KeyError(f"unknown app {app!r}")
+        fs = self.servers.get(app)
+        fallback = False
+        if fs is not None and fs.alive:
+            try:
+                m = fs.exec(invocations=invocations, handler=handler,
+                            seed=seed)
+                self.dispatches[app]["pool"] += 1
+                return {**m, "path": "pool", "fallback": False}
+            except ForkServerError:
+                fallback = True
+                self.dispatches[app]["fallback"] += 1
+        from repro.benchsuite.harness import run_instance
+        m = run_instance(self.app_dirs[app], invocations=invocations,
+                         handler=handler, seed=seed,
+                         timeout_s=self.timeout_s)
+        self.dispatches[app]["cold"] += 1
+        return {**m, "path": "cold", "fallback": fallback}
+
+    def replay(self, trace: Trace, *, limit: Optional[int] = None,
+               seed0: int = 500) -> list[dict]:
+        """Time-compressed replay: every request dispatches immediately
+        (arrival gaps cost nothing; the point is real init latencies
+        down the pool vs cold paths).  Returns per-app rows."""
+        per_app: dict[str, dict[str, list[float]]] = {}
+        for i, req in enumerate(trace):
+            if limit is not None and i >= limit:
+                break
+            m = self.dispatch(req.app, handler=req.handler,
+                              seed=seed0 + i)
+            per_app.setdefault(req.app, {"pool": [], "cold": []})
+            per_app[req.app][m["path"]].append(m["init_ms"])
+        rows = []
+        for app, paths in sorted(per_app.items()):
+            pool, cold = paths["pool"], paths["cold"]
+            rows.append({
+                "app": app,
+                "requests": len(pool) + len(cold),
+                "pool_starts": len(pool),
+                "cold_starts": len(cold),
+                "cold_ratio": round(len(cold)
+                                    / max(len(pool) + len(cold), 1), 4),
+                "pool_init_ms": round(statistics.fmean(pool), 1)
+                if pool else math.nan,
+                "cold_init_ms": round(statistics.fmean(cold), 1)
+                if cold else math.nan,
+            })
+        return rows
+
+    # ------------------------------------------------------ adaptive hook
+    def rewarm(self, report: OptimizationReport) -> dict:
+        """``SlimStartController.rewarm_fn`` for a whole fleet: after a
+        re-profile, re-preload the re-profiled app's zygote (rebooting
+        it if it died).  An app the budget excluded stays excluded — a
+        re-profile is not a budget grant."""
+        app = report.application
+        if app not in self.app_dirs:
+            raise KeyError(f"rewarm for unknown app {app!r}")
+        self.reports[app] = report
+        fs = self.servers.get(app)
+        if fs is None:
+            return {"ok": True, "app": app, "skipped": True,
+                    "preloaded": [], "errors": []}
+        out = fs.rewarm(report)
+        return {"app": app, "skipped": False, **out}

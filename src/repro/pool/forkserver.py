@@ -90,6 +90,7 @@ def _fork_exec(cmd: dict) -> dict:
             os.close(r)
             devnull = os.open(os.devnull, os.O_WRONLY)
             os.dup2(devnull, 1)
+            rss_sampler = _runner.PeakRssSampler().start()
             handler_mod = importlib.import_module("handler")
             init_s = time.perf_counter() - t0
             invocation_s, counts = _runner.run_invocations(
@@ -97,8 +98,9 @@ def _fork_exec(cmd: dict) -> dict:
                 invocations=int(cmd.get("invocations", 1)),
                 handler=cmd.get("handler"),
                 seed=int(cmd.get("seed", 0)))
+            peak_kb = max(_runner.instance_rss_kb(), rss_sampler.stop())
             metrics = _runner.metrics_dict(init_s, invocation_s, counts,
-                                           _runner.instance_rss_kb())
+                                           peak_kb)
             with os.fdopen(w, "w") as fh:
                 fh.write(json.dumps(metrics))
             code = 0
@@ -186,9 +188,15 @@ class ForkServer:
         self.execs = 0
 
     # ------------------------------------------------------------ lifecycle
+    @property
+    def alive(self) -> bool:
+        return self.proc is not None and self.proc.poll() is None
+
     def start(self) -> dict:
-        if self.proc is not None:
+        if self.alive:
             return self.ready
+        if self.proc is not None:  # zygote died behind our back: clean up
+            self.stop()
         cmd = [sys.executable, "-m", "repro.pool.forkserver",
                "--app-dir", self.app_dir]
         if self.preload_modules:
@@ -233,6 +241,14 @@ class ForkServer:
                 self._stderr_file.close()
                 self._stderr_file = None
 
+    def restart(self, preload: Optional[Sequence[str]] = None) -> dict:
+        """Tear down (whatever is left of) the zygote and boot a fresh
+        one; ``preload`` replaces the pre-import set if given."""
+        self.stop()
+        if preload is not None:
+            self.preload_modules = list(dict.fromkeys(preload))
+        return self.start()
+
     def __enter__(self) -> "ForkServer":
         self.start()
         return self
@@ -256,16 +272,42 @@ class ForkServer:
 
     def rewarm(self, report) -> dict:
         """Re-warm from a fresh OptimizationReport (adaptive loop
-        callback): preload the newly-hot packages."""
+        callback): preload the newly-hot packages.  A zygote that died
+        since the last exec (OOM-killed, crashed handler fork taking it
+        down) is booted fresh with the merged hot set — the adaptive
+        loop doubles as the fleet's crash recovery."""
         from repro.pool.policies import hot_set_from_report
-        mods = [m for m in hot_set_from_report(report)
-                if m not in self.preload_modules]
+        hot = hot_set_from_report(report)
+        if not self.alive:
+            merged = list(dict.fromkeys([*self.preload_modules, *hot]))
+            # restart raises ForkServerError if the merged hot set fails
+            # to preload, so a bad re-warm surfaces instead of silently
+            # serving bare forks
+            ready = self.restart(preload=merged)
+            return {"ok": True, "preloaded": ready.get("preloaded", merged),
+                    "errors": list(ready.get("errors", [])),
+                    "restarted": True}
+        mods = [m for m in hot if m not in self.preload_modules]
         if not mods:
             return {"ok": True, "preloaded": [], "errors": []}
         return self.preload(mods)
 
     def ping(self) -> dict:
         return self._request({"cmd": "ping"})
+
+    def rss_kb(self) -> int:
+        """The zygote's current VmRSS in kB (0 if not running) — what a
+        fleet budget arbiter charges for keeping this zygote resident."""
+        if not self.alive:
+            return 0
+        try:
+            with open(f"/proc/{self.proc.pid}/status") as fh:
+                for line in fh:
+                    if line.startswith("VmRSS:"):
+                        return int(line.split()[1])
+        except (OSError, ValueError, IndexError):
+            pass
+        return 0
 
     # ------------------------------------------------------------- plumbing
     def _request(self, obj: dict) -> dict:

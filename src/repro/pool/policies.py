@@ -87,6 +87,11 @@ class KeepAlivePolicy:
     def observe_arrival(self, app: str, t: float) -> None:
         pass
 
+    def observe_rate(self, app: str, rate_per_s: float) -> None:
+        """Fleet feedback: the measured recent arrival rate.  Policies
+        that size pools from a rate (profile-guided Little's law) learn
+        from it; the rest ignore it."""
+
 
 @dataclass
 class FixedSizePolicy(KeepAlivePolicy):
@@ -155,7 +160,10 @@ class ProfileGuidedPolicy(KeepAlivePolicy):
       zygote forks share exactly the libraries the workload uses.
     * ``prewarm`` — Little's-law floor ``ceil(rate * service_s)`` from
       the expected request rate and measured end-to-end time: enough
-      instances that the steady-state workload never queues cold.
+      instances that the steady-state workload never queues cold.  The
+      rate starts at ``rate_hint_per_s`` and tracks the fleet's measured
+      arrival rate via ``observe_rate`` (EWMA), so a traffic ramp raises
+      the floor before requests start missing.
     * ``keep_alive_s`` — init cost amortization: an instance is kept
       ``amortize`` times its measured init cost (clamped), so apps with
       2 s inits are retained far longer than 20 ms ones instead of a
@@ -168,17 +176,30 @@ class ProfileGuidedPolicy(KeepAlivePolicy):
     floor_s: float = 30.0
     cap_s: float = 3600.0
     max_prewarm: int = 8
+    rate_ewma: float = 0.3
     name: str = "profile-guided"
+    _rates: dict[str, float] = field(default_factory=dict, repr=False)
 
     def add_report(self, report: OptimizationReport) -> None:
         self.reports[report.application] = report
+
+    def observe_rate(self, app: str, rate_per_s: float) -> None:
+        prev = self._rates.get(app)
+        if prev is None or not math.isfinite(prev):
+            self._rates[app] = max(rate_per_s, 0.0)
+        else:
+            self._rates[app] = ((1.0 - self.rate_ewma) * prev
+                                + self.rate_ewma * max(rate_per_s, 0.0))
+
+    def expected_rate_per_s(self, app: str) -> float:
+        return self._rates.get(app, self.rate_hint_per_s)
 
     def prewarm(self, app: str) -> int:
         rep = self.reports.get(app)
         if rep is None:
             return 0
-        n = math.ceil(self.rate_hint_per_s * rep.e2e_s)
-        return max(1, min(self.max_prewarm, n))
+        n = max(1, math.ceil(self.expected_rate_per_s(app) * rep.e2e_s))
+        return max(0, min(self.max_prewarm, n))  # never exceed the budget
 
     def keep_alive_s(self, app: str) -> float:
         rep = self.reports.get(app)

@@ -36,6 +36,15 @@ from repro.pool.policies import KeepAlivePolicy
 from repro.pool.trace import Trace
 
 
+def percentile_ms(latencies_ms: list[float], q: float) -> float:
+    """Nearest-rank percentile shared by per-app and fleet-level
+    reports (keeping the two from silently diverging)."""
+    if not latencies_ms:
+        return math.nan
+    ys = sorted(latencies_ms)
+    return ys[min(len(ys) - 1, max(0, round(q * (len(ys) - 1))))]
+
+
 @dataclass(frozen=True)
 class AppProfile:
     """Measured single-instance numbers driving the simulation."""
@@ -45,6 +54,9 @@ class AppProfile:
     invoke_ms: float
     warm_init_ms: float = 0.0
     rss_mb: float = 128.0
+    # resident cost of keeping a profile-guided zygote for this app (its
+    # pre-imported hot set stays paged in); 0 = no zygote modeled
+    zygote_rss_mb: float = 0.0
 
     @classmethod
     def from_stats(cls, cold_stats, pool_stats=None,
@@ -60,6 +72,8 @@ class AppProfile:
             warm_init_ms=(pool_stats.init_mean if pool_stats is not None
                           else 0.0),
             rss_mb=cold_stats.rss_mean_mb,
+            zygote_rss_mb=(pool_stats.rss_mean_mb
+                           if pool_stats is not None else 0.0),
         )
 
 
@@ -105,10 +119,7 @@ class FleetReport:
         return self.memory_mb_s / 1024.0
 
     def _pct(self, q: float) -> float:
-        if not self.latencies_ms:
-            return math.nan
-        ys = sorted(self.latencies_ms)
-        return ys[min(len(ys) - 1, max(0, round(q * (len(ys) - 1))))]
+        return percentile_ms(self.latencies_ms, q)
 
     def summary(self) -> dict:
         return {

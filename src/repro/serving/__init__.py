@@ -10,5 +10,5 @@ live traffic, and lazy materialization of cold components.
 from repro.serving.components import (  # noqa: F401
     Component, ComponentRegistry, LoadPolicy,
 )
-from repro.serving.engine import ServingEngine  # noqa: F401
+from repro.serving.engine import EnginePool, ServingEngine  # noqa: F401
 from repro.serving.batcher import ContinuousBatcher, Request  # noqa: F401

@@ -7,13 +7,21 @@ set per ``LoadPolicy``, serves requests (materializing lazy components
 on first use, exactly like a deferred import), and tracks per-entry
 invocations + per-expert routing mass as the utilization signal for the
 profile-guided optimizer (``engine.report()`` -> ``LoadPolicy.from_report``).
+
+:class:`EnginePool` adds the fleet layer on top: pool-aware dispatch
+across many models — requests route to a warm engine when one is
+resident, fall back to a cold start (building and admitting a fresh
+engine, evicting the worst-amortizing one past the budget), and the
+pool's ``rewarm`` method plugs into
+``SlimStartController(rewarm_fn=...)`` so a re-profile re-derives every
+warm engine's load policy from its live utilization.
 """
 
 from __future__ import annotations
 
 import time
 from functools import partial
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -270,3 +278,95 @@ class ServingEngine:
                     row["utilization"] = rep["expert_utilization"].get(
                         row["component"], 0.0)
         return rep
+
+
+class EnginePool:
+    """Pool-aware dispatch across warm :class:`ServingEngine` instances.
+
+    The Level-B analogue of the zygote fleet
+    (:class:`repro.pool.fleet.ZygoteFleet`): each *model* is an app,
+    a warm engine is a resident instance, and ``max_warm`` is the shared
+    budget.  ``dispatch`` routes a request to the model's warm engine;
+    on a miss it cold-starts a fresh engine (``builders[model]``), and
+    past the budget it evicts the warm engine that amortizes worst —
+    fewest cold-start milliseconds saved per dispatch since admission —
+    dropping its components so the memory is actually released.
+    """
+
+    def __init__(self, builders: dict[str, Callable[[], "ServingEngine"]],
+                 *, max_warm: int = 2) -> None:
+        if max_warm < 1:
+            raise ValueError("max_warm must be >= 1")
+        self.builders = dict(builders)
+        self.max_warm = max_warm
+        self.warm: dict[str, ServingEngine] = {}
+        self.hits = 0
+        self.misses = 0
+        self.evictions: list[str] = []
+        self._dispatches: dict[str, int] = {}
+
+    # ----------------------------------------------------------- dispatch
+    def dispatch(self, model: str, entry: str, tokens, **kw):
+        """Serve one request; returns ``(output, latency_s, path)`` with
+        ``path`` in {"warm", "cold"}.  Cold latency includes the
+        engine's cold start, exactly like a FaaS cold invocation."""
+        if model not in self.builders:
+            raise KeyError(f"unknown model {model!r}")
+        eng = self.warm.get(model)
+        if eng is not None:
+            self.hits += 1
+            self._dispatches[model] = self._dispatches.get(model, 0) + 1
+            out, lat = eng.serve(entry, tokens, **kw)
+            return out, lat, "warm"
+        self.misses += 1
+        eng = self.builders[model]()
+        cold_s = eng.cold_start()
+        self._admit(model, eng)
+        self._dispatches[model] = self._dispatches.get(model, 0) + 1
+        out, lat = eng.serve(entry, tokens, **kw)
+        return out, lat + cold_s, "cold"
+
+    def _admit(self, model: str, eng: "ServingEngine") -> None:
+        while len(self.warm) >= self.max_warm:
+            victim = min(self.warm, key=self._amortization)
+            dropped = self.warm.pop(victim)
+            for comp in dropped.registry.values():
+                comp.drop()
+            self.evictions.append(victim)
+            # a re-admitted model must not inherit its old residency's
+            # dispatch count, or its amortization score starts inflated
+            self._dispatches.pop(victim, None)
+        self.warm[model] = eng
+
+    def _amortization(self, model: str) -> float:
+        """Cold-start seconds this engine saves per dispatch it served —
+        low means the warm slot is wasted on it."""
+        eng = self.warm[model]
+        cold_s = eng.cold_start_s or 0.0
+        return cold_s * self._dispatches.get(model, 0)
+
+    # ------------------------------------------------------ adaptive hook
+    def rewarm(self, report=None) -> dict:
+        """``SlimStartController.rewarm_fn`` hook: after a re-profile,
+        re-derive every warm engine's :class:`LoadPolicy` from its own
+        live utilization report and materialize the new hot set (the
+        Level-A ``report`` argument is accepted for signature
+        compatibility; Level-B utilization lives in the engines)."""
+        from repro.serving.components import LoadPolicy
+        out = {}
+        for model, eng in self.warm.items():
+            policy = LoadPolicy.from_report(eng.report())
+            eng.policy = policy
+            eng.registry.materialize_eager(policy)
+            out[model] = sorted(policy.prewarm)
+        return out
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {
+            "warm_models": sorted(self.warm),
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_ratio": self.hits / max(total, 1),
+            "evictions": list(self.evictions),
+        }

@@ -117,6 +117,69 @@ def test_profiler_overhead_within_budget(suite_root_dir):
     assert prof_ms / base_ms < 1.25  # generous CI margin; bench reports exact
 
 
+# ---------------------------------------------------------------------------
+# periodic RSS sampling: true peaks for shrink-then-exit workloads
+# ---------------------------------------------------------------------------
+
+def test_peak_rss_sampler_sees_transient_ballast():
+    """A workload that frees its ballast before exit must still report a
+    true peak: the sampler watches current VmRSS (the only signal on
+    VmHWM-less kernels) while the ballast is held."""
+    import gc
+    import time
+
+    from repro.benchsuite.runner import PeakRssSampler, current_rss_kb
+
+    baseline_kb = current_rss_kb()
+    sampler = PeakRssSampler(interval_s=0.002)
+    with sampler:
+        ballast = bytearray(96 * 1024 * 1024)
+        ballast[::4096] = b"\x01" * len(ballast[::4096])  # fault pages in
+        time.sleep(0.05)  # hold while the sampler runs
+        del ballast
+        gc.collect()
+        time.sleep(0.01)
+    assert sampler.samples >= 2
+    # the 96 MB transient must be in the recorded peak even though it
+    # was freed before the sampler stopped
+    assert sampler.peak_kb >= baseline_kb + 60 * 1024
+    # stop() is idempotent and keeps the peak
+    assert sampler.stop() == sampler.peak_kb
+
+
+def test_peak_rss_sampler_with_injected_reader():
+    from repro.benchsuite.runner import PeakRssSampler
+
+    values = iter([100, 900, 200])
+    sampler = PeakRssSampler(interval_s=60.0,  # thread never fires
+                             read_kb=lambda: next(values, 200))
+    sampler.start()
+    assert sampler.peak_kb == 100  # initial sample taken at start()
+    sampler._sample()
+    sampler._sample()
+    assert sampler.stop() == 900  # transient maximum retained
+
+
+def test_runner_reports_peak_of_shrink_then_exit_child(tmp_path):
+    """End-to-end: a handler that allocates 80 MB, frees it, then
+    returns must report a peak_rss_kb covering the ballast."""
+    from repro.benchsuite.harness import run_instance
+
+    app_dir = tmp_path / "shrink_app"
+    app_dir.mkdir()
+    (app_dir / "handler.py").write_text(
+        "import time\n"
+        "WEIGHTS = {'burst': 1.0}\n"
+        "def handler(ev):\n"
+        "    ballast = bytearray(80 * 1024 * 1024)\n"
+        "    ballast[::4096] = b'\\x01' * len(ballast[::4096])\n"
+        "    time.sleep(0.06)  # the working phase that uses the ballast\n"
+        "    del ballast\n"
+        "    return {'ok': True}\n")
+    m = run_instance(str(app_dir), invocations=2, seed=1)
+    assert m["peak_rss_kb"] >= 80 * 1024
+
+
 def test_workload_generators():
     w = skewed_weights(["a", "b", "c", "d"])
     assert w["a"] > w["b"] > w["c"] > w["d"]

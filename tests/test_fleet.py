@@ -1,0 +1,380 @@
+"""Multi-app fleet manager tests: Azure-style traces, budget-arbitrated
+prewarm/evict decisions, zygote residency, the pool-aware serving
+dispatch (EnginePool), and the real ZygoteFleet (slow tier)."""
+
+import copy
+import csv
+import math
+import os
+
+import pytest
+
+from repro.core.adaptive.controller import SlimStartController
+from repro.core.profiler.report import OptimizationReport
+from repro.core.profiler.utilization import LibraryStats
+from repro.pool import (
+    AppProfile,
+    AzureRow,
+    FixedSizePolicy,
+    FleetManager,
+    IdleTimeoutPolicy,
+    ProfileGuidedPolicy,
+    Request,
+    Trace,
+    ZygoteFleet,
+    azure_synthetic_rows,
+    azure_trace,
+    default_policies,
+    fleet_sweep,
+    load_azure_csv,
+    trace_from_azure_rows,
+    write_azure_csv,
+)
+
+
+def _report(app: str, *, e2e_s: float = 0.2,
+            init_s: float = 0.15) -> OptimizationReport:
+    stat = LibraryStats(name="fakelib_hot", utilization=0.9, init_s=init_s,
+                        init_share=init_s / e2e_s, runtime_samples=90,
+                        file="<x>")
+    return OptimizationReport(application=app, e2e_s=e2e_s,
+                              total_init_s=init_s, qualifies=True,
+                              stats=[stat], defer_targets=[])
+
+
+PROF_A = AppProfile(app="a", cold_init_ms=100.0, invoke_ms=10.0,
+                    warm_init_ms=5.0, rss_mb=100.0, zygote_rss_mb=80.0)
+PROF_B = AppProfile(app="b", cold_init_ms=100.0, invoke_ms=10.0,
+                    warm_init_ms=5.0, rss_mb=100.0, zygote_rss_mb=80.0)
+
+
+def _trace(reqs, duration):
+    return Trace("manual", [Request(t, app) for t, app in reqs], duration)
+
+
+# ---------------------------------------------------------------------------
+# Azure-style traces
+# ---------------------------------------------------------------------------
+
+def test_azure_rows_deterministic_and_shaped():
+    rows1 = azure_synthetic_rows(["a", "b"], minutes=30, peak_rpm=20.0,
+                                 seed=5)
+    rows2 = azure_synthetic_rows(["a", "b"], minutes=30, peak_rpm=20.0,
+                                 seed=5)
+    assert rows1 == rows2
+    assert all(len(r.counts) == 30 for r in rows1)
+    assert rows1 != azure_synthetic_rows(["a", "b"], minutes=30,
+                                         peak_rpm=20.0, seed=6)
+
+
+def test_azure_popularity_is_heavy_tailed():
+    rows = azure_synthetic_rows(["a", "b", "c"], minutes=120,
+                                peak_rpm=60.0, popularity_s=1.5, seed=1)
+    totals = {r.app: r.total for r in rows}
+    assert totals["a"] > totals["b"] > totals["c"] > 0
+
+
+def test_azure_trace_materialization():
+    rows = azure_synthetic_rows(["a", "b"], minutes=10, peak_rpm=30.0,
+                                seed=2)
+    tr = trace_from_azure_rows(rows, seed=3)
+    assert len(tr) == sum(r.total for r in rows)
+    ts = [r.t for r in tr]
+    assert ts == sorted(ts)
+    assert tr.duration_s == 600.0
+    assert all(0.0 <= t < 600.0 for t in ts)
+    assert {r.app for r in tr} == {"a", "b"}
+
+
+def test_azure_handler_rows_and_trace():
+    rows = azure_synthetic_rows(
+        ["a"], minutes=60, peak_rpm=60.0, seed=4,
+        handlers={"a": ["h0", "h1"]})
+    assert [r.func for r in rows] == ["h0", "h1"]
+    assert rows[0].total > rows[1].total  # Zipf within the app
+    tr = trace_from_azure_rows(rows, seed=5)
+    assert {r.handler for r in tr} == {"h0", "h1"}
+
+
+def test_azure_csv_round_trip(tmp_path):
+    rows = azure_synthetic_rows(["app1", "app2"], minutes=15,
+                                peak_rpm=10.0, seed=7)
+    path = write_azure_csv(rows, str(tmp_path / "trace.csv"))
+    loaded = load_azure_csv(path)
+    assert [(r.app, r.func, r.counts) for r in loaded] == \
+        [(r.app, r.func or r.app, r.counts) for r in rows]
+
+
+def test_azure_csv_ignores_dataset_extra_columns(tmp_path):
+    # the real dataset carries HashOwner / Trigger columns; loading must
+    # key on the integer minute columns only
+    path = tmp_path / "azure.csv"
+    with open(path, "w", newline="") as fh:
+        w = csv.writer(fh)
+        w.writerow(["HashOwner", "HashApp", "HashFunction", "Trigger",
+                    "1", "2", "3"])
+        w.writerow(["own", "appX", "funcY", "http", "4", "0", "2"])
+    rows = load_azure_csv(str(path))
+    assert rows == [AzureRow(app="appX", func="funcY", counts=(4, 0, 2))]
+    tr = trace_from_azure_rows(rows, seed=0)
+    assert len(tr) == 6 and tr.duration_s == 180.0
+
+
+def test_diurnal_modulation_changes_counts():
+    flat = azure_synthetic_rows(["a"], minutes=60, peak_rpm=40.0, seed=9)
+    mod = azure_synthetic_rows(["a"], minutes=60, peak_rpm=40.0, seed=9,
+                               diurnal_period_min=60)
+    assert flat != mod
+    # troughs (minutes near 0 mod period) must be quieter than crests
+    counts = mod[0].counts
+    trough = sum(counts[:6]) + sum(counts[-6:])
+    crest = sum(counts[24:36])
+    assert crest > trough
+
+
+# ---------------------------------------------------------------------------
+# FleetManager (simulation)
+# ---------------------------------------------------------------------------
+
+def test_fleet_zygote_turns_cold_starts_into_pool_starts():
+    pol = ProfileGuidedPolicy(rate_hint_per_s=1.0)
+    pol.add_report(_report("a"))
+    fleet = FleetManager({"a": PROF_A}, pol, budget_mb=1000.0)
+    s = fleet.replay(_trace([(0.0, "a"), (5.0, "a")], 30.0))
+    assert s.zygote_apps == ["a"]
+    assert s.cold_starts == 0
+    assert s.pool_starts >= 1  # the t=0 demand start forked the zygote
+    assert s.per_app["a"].n_requests == 2
+    assert s.budget_violations == 0
+
+
+def test_fleet_no_zygote_without_preload():
+    pol = IdleTimeoutPolicy(timeout_s=1000.0)
+    fleet = FleetManager({"a": PROF_A}, pol, budget_mb=1000.0)
+    s = fleet.replay(_trace([(0.0, "a"), (5.0, "a")], 30.0))
+    assert s.zygote_apps == []
+    assert s.pool_starts == 0
+    assert s.per_app["a"].cold_starts == 1  # second request reuses warm
+
+
+def test_fleet_evicts_worst_amortizer_under_budget_pressure():
+    # budget fits one idle instance; app a is hot (4 arrivals), b is not
+    pol = IdleTimeoutPolicy(timeout_s=1000.0)
+    fleet = FleetManager({"a": PROF_A, "b": PROF_B}, pol, budget_mb=150.0)
+    s = fleet.replay(_trace(
+        [(0.0, "a"), (1.0, "a"), (2.0, "a"), (3.0, "a"),
+         (10.0, "b"), (20.0, "a"), (30.0, "b")], 60.0))
+    # b's idle instance was evicted to make room, so b cold-starts twice
+    assert s.per_app["b"].cold_starts == 2
+    assert s.per_app["a"].cold_starts == 1
+    assert s.evictions >= 1
+    assert s.budget_violations == 0
+
+
+def test_fleet_prewarm_floor_clamped_to_budget():
+    pol = FixedSizePolicy(size=4)
+    fleet = FleetManager({"a": PROF_A}, pol, budget_mb=250.0)
+    s = fleet.replay(_trace([(10.0, "a")], 30.0))
+    # floor wants 4 x 100 MB; budget admits only 2
+    assert s.prewarm_spawns == 2
+    assert s.per_app["a"].cold_starts == 0  # floor served the request
+    assert s.budget_violations == 0
+    assert s.peak_mb <= 250.0
+
+
+def test_fleet_summary_math_single_request():
+    pol = IdleTimeoutPolicy(timeout_s=5.0)
+    fleet = FleetManager({"a": PROF_A}, pol, budget_mb=1000.0)
+    s = fleet.replay(_trace([(0.0, "a")], 100.0))
+    rep = s.per_app["a"]
+    assert rep.latencies_ms == [110.0]
+    assert rep.cold_starts == 1 and s.cold_start_ratio == 1.0
+    # instance lives 0.11 s busy + 5 s keep-alive
+    assert rep.memory_mb_s == pytest.approx(100.0 * (0.11 + 5.0), rel=1e-6)
+    assert s.budget_utilization == pytest.approx(
+        (100.0 * 5.11) / 100.0 / 1000.0, rel=1e-6)
+    assert not math.isnan(s.p99_ms)
+
+
+def test_fleet_silent_app_rate_decays_and_loses_retention():
+    """An app that bursts then goes silent must not pin warm state: its
+    observed rate decays to zero once its arrivals age out, so budget
+    pressure from a live app evicts the dead app's instance."""
+    pol = IdleTimeoutPolicy(timeout_s=10_000.0)
+    fleet = FleetManager({"a": PROF_A, "b": PROF_B}, pol, budget_mb=150.0,
+                         rate_window_s=60.0)
+    reqs = [(float(i), "b") for i in range(10)]       # b bursts early...
+    reqs += [(200.0 + 5.0 * i, "a") for i in range(6)]  # ...then only a
+    s = fleet.replay(_trace(reqs, 300.0))
+    assert fleet.observed_rate_per_s("b", 300.0) == 0.0
+    # a's warm instance survives the budget squeeze, b's was evicted
+    assert s.per_app["a"].cold_starts == 1
+    assert s.evictions >= 1
+
+
+def test_fleet_unknown_app_raises():
+    fleet = FleetManager({"a": PROF_A}, IdleTimeoutPolicy(),
+                         budget_mb=100.0)
+    with pytest.raises(KeyError, match="unknown app"):
+        fleet.replay(_trace([(0.0, "zzz")], 10.0))
+
+
+def test_fleet_rate_feedback_reaches_profile_guided_policy():
+    pol = ProfileGuidedPolicy(rate_hint_per_s=0.01, max_prewarm=8)
+    pol.add_report(_report("a", e2e_s=1.0))
+    fleet = FleetManager({"a": PROF_A}, pol, budget_mb=5000.0,
+                         rate_window_s=10.0)
+    reqs = [(0.1 * i, "a") for i in range(200)]  # ~10 req/s for 20 s
+    s = fleet.replay(_trace(reqs, 25.0))
+    # Little's law with the learned (not hinted) rate: ceil(~10 * 1.0)
+    assert pol.expected_rate_per_s("a") > 2.0
+    assert pol.prewarm("a") > 1
+    assert s.prewarm_spawns > 1
+
+
+def test_fleet_sweep_profile_guided_beats_baselines_on_azure_trace():
+    """The acceptance-criteria regression in miniature: equal budget,
+    Azure-style multi-app trace, profile-guided fleet policy must beat
+    fixed-size and idle-timeout on cold-start ratio."""
+    profiles = {
+        "a": AppProfile(app="a", cold_init_ms=200.0, invoke_ms=10.0,
+                        warm_init_ms=8.0, rss_mb=256.0,
+                        zygote_rss_mb=200.0),
+        "b": AppProfile(app="b", cold_init_ms=50.0, invoke_ms=5.0,
+                        warm_init_ms=4.0, rss_mb=64.0, zygote_rss_mb=48.0),
+        "c": AppProfile(app="c", cold_init_ms=400.0, invoke_ms=20.0,
+                        warm_init_ms=12.0, rss_mb=512.0,
+                        zygote_rss_mb=400.0),
+    }
+    trace = azure_trace(list(profiles), minutes=20, peak_rpm=30.0, seed=3)
+    reports = {a: _report(a, e2e_s=0.25, init_s=0.2) for a in profiles}
+    panel = default_policies(reports, rate_hint_per_s=0.5)
+    sums = {s.policy: s for s in fleet_sweep(
+        profiles, panel, trace, budget_mb=1024.0,
+        policy_factory=copy.deepcopy)}
+    pg = sums["profile-guided"]
+    assert pg.cold_start_ratio < sums["fixed"].cold_start_ratio
+    assert pg.cold_start_ratio < sums["idle-timeout"].cold_start_ratio
+    assert pg.p99_ms <= sums["fixed"].p99_ms
+    assert all(s.budget_violations == 0 for s in sums.values())
+    # per-app rows are reportable for every app in the fleet
+    assert {r["app"] for r in pg.app_rows()} == set(profiles)
+
+
+# ---------------------------------------------------------------------------
+# EnginePool: pool-aware dispatch in the serving engine (Level B)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine_pool():
+    import numpy as np  # noqa: F401  (jax import cost paid once here)
+    from repro.configs import get_reduced
+    from repro.serving import EnginePool, ServingEngine
+
+    def builder(name):
+        def build():
+            return ServingEngine(get_reduced(name), batch_size=1,
+                                 prefill_len=8, max_len=24)
+        return build
+
+    return EnginePool({"qwen": builder("qwen2.5-32b"),
+                       "granite": builder("granite-8b")}, max_warm=1)
+
+
+def test_engine_pool_warm_vs_cold_dispatch(engine_pool):
+    import numpy as np
+    toks = np.ones((1, 8), dtype=np.int32)
+    out, lat_cold, path = engine_pool.dispatch("qwen", "generate", toks,
+                                               max_new_tokens=2)
+    assert path == "cold" and out.shape == (1, 2)
+    out, lat_warm, path = engine_pool.dispatch("qwen", "generate", toks,
+                                               max_new_tokens=2)
+    assert path == "warm"
+    assert lat_warm < lat_cold  # warm dispatch skips the cold start
+    assert engine_pool.stats()["hits"] == 1
+    assert engine_pool.stats()["misses"] == 1
+
+
+def test_engine_pool_evicts_over_budget_and_drops_components(engine_pool):
+    import numpy as np
+    toks = np.ones((1, 8), dtype=np.int32)
+    assert "qwen" in engine_pool.warm
+    qwen_engine = engine_pool.warm["qwen"]
+    out, _, path = engine_pool.dispatch("granite", "generate", toks,
+                                        max_new_tokens=2)
+    assert path == "cold"
+    # max_warm=1: qwen was evicted and its components actually dropped
+    assert list(engine_pool.warm) == ["granite"]
+    assert "qwen" in engine_pool.evictions
+    assert all(not c.ready for c in qwen_engine.registry.values())
+
+
+def test_engine_pool_rewarm_is_a_controller_hook(engine_pool):
+    reports = iter([_report("whatever") for _ in range(3)])
+    ctl = SlimStartController(profile_fn=lambda: next(reports),
+                              optimize_fn=lambda rep: None,
+                              rewarm_fn=engine_pool.rewarm)
+    ctl.force_profile()
+    assert ctl.rewarms == 1 and ctl.rewarm_errors == []
+    # the warm engine's policy was re-derived from live utilization:
+    # components every request touches (weights.core) are now prewarm
+    for eng in engine_pool.warm.values():
+        assert "weights.core" in eng.policy.prewarm
+
+
+def test_engine_pool_unknown_model_raises(engine_pool):
+    with pytest.raises(KeyError):
+        engine_pool.dispatch("no-such-model", "generate", None)
+
+
+# ---------------------------------------------------------------------------
+# ZygoteFleet + controller hook (no real zygotes needed)
+# ---------------------------------------------------------------------------
+
+def test_zygote_fleet_rewarm_hook_without_zygotes():
+    fleet = ZygoteFleet({"appx": "/nonexistent"})  # never started
+    ctl = SlimStartController(profile_fn=lambda: _report("appx"),
+                              optimize_fn=lambda rep: None,
+                              rewarm_fn=fleet.rewarm)
+    rep = ctl.force_profile()
+    assert ctl.rewarms == 1 and ctl.rewarm_errors == []
+    assert fleet.reports["appx"] is rep
+    with pytest.raises(KeyError):
+        fleet.rewarm(_report("unknown-app"))
+    with pytest.raises(KeyError):
+        fleet.dispatch("unknown-app")
+
+
+# ---------------------------------------------------------------------------
+# Real fork-server fleet (slow tier)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def suite_root_dir():
+    from repro.benchsuite.genlibs import build_suite
+    return build_suite()
+
+
+@pytest.mark.slow
+def test_zygote_fleet_real_dispatch_and_budget(suite_root_dir):
+    apps = {name: os.path.join(suite_root_dir, "apps", name)
+            for name in ["graph_bfs", "sentiment_analysis_r"]}
+    with ZygoteFleet(apps, budget_mb=4096.0) as fleet:
+        assert sorted(fleet.servers) == sorted(apps)
+        assert fleet.used_mb() > 0
+        m = fleet.dispatch("graph_bfs", handler="bfs", seed=1)
+        assert m["path"] == "pool" and m["init_ms"] > 0
+        rows = fleet.replay(
+            trace_from_azure_rows(
+                [AzureRow("graph_bfs", "bfs", (2,)),
+                 AzureRow("sentiment_analysis_r", None, (1,))], seed=2),
+            limit=3)
+        assert sum(r["requests"] for r in rows) == 3
+        assert all(r["pool_starts"] == r["requests"] for r in rows)
+
+    # a zero budget boots no zygotes: everything falls back to cold
+    fleet2 = ZygoteFleet({"graph_bfs": apps["graph_bfs"]}, budget_mb=1e-9)
+    fleet2.start()
+    assert fleet2.servers == {} and fleet2.skipped == ["graph_bfs"]
+    m = fleet2.dispatch("graph_bfs", handler="bfs", seed=3)
+    assert m["path"] == "cold" and m["init_ms"] > 0

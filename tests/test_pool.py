@@ -289,6 +289,73 @@ def test_forkserver_protocol_and_rewarm(suite_root_dir):
                                   "errors": []}
 
 
+@pytest.mark.slow
+def test_forkserver_zygote_crash_rewarm_recovers(suite_root_dir):
+    """Kill the zygote mid-run: exec must fail loudly, and the adaptive
+    ``rewarm`` hook must boot a fresh zygote (with the hot set merged
+    into the preload) after which forks succeed again."""
+    from repro.pool import ForkServerError
+    app_dir = os.path.join(suite_root_dir, "apps", "graph_bfs")
+    rep = OptimizationReport(
+        application="graph_bfs", e2e_s=0.1, total_init_s=0.05,
+        qualifies=True,
+        stats=[LibraryStats(name="fakelib_igraph", utilization=0.9,
+                            init_s=0.05, init_share=0.5,
+                            runtime_samples=90, file="<x>")])
+    fs = ForkServer(app_dir)
+    try:
+        fs.start()
+        assert fs.alive
+        m = fs.exec(invocations=1, handler="bfs", seed=1)
+        assert m["init_ms"] > 0
+
+        fs.proc.kill()  # the mid-run crash (OOM killer analog)
+        fs.proc.wait(timeout=10)
+        assert not fs.alive
+        with pytest.raises(ForkServerError):
+            fs.exec(invocations=1, handler="bfs", seed=2)
+
+        out = fs.rewarm(rep)
+        assert out.get("restarted") is True
+        assert "fakelib_igraph" in out["preloaded"]
+        assert fs.alive
+        assert fs.ping()["preloaded"] == ["fakelib_igraph"]
+        warm = fs.exec(invocations=1, handler="bfs", seed=3)
+        assert warm["init_ms"] > 0
+        assert warm["init_ms"] < m["init_ms"]  # hot set now preloaded
+    finally:
+        fs.stop()
+
+
+@pytest.mark.slow
+def test_zygote_fleet_crash_falls_back_cold_then_rewarms(suite_root_dir):
+    """Fleet-level recovery: a dead zygote degrades the app to cold
+    starts (dispatch never fails), and the controller's rewarm brings
+    the pool path back."""
+    from repro.pool import ZygoteFleet
+    app_dir = os.path.join(suite_root_dir, "apps", "graph_bfs")
+    rep = OptimizationReport(
+        application="graph_bfs", e2e_s=0.1, total_init_s=0.05,
+        qualifies=True,
+        stats=[LibraryStats(name="fakelib_igraph", utilization=0.9,
+                            init_s=0.05, init_share=0.5,
+                            runtime_samples=90, file="<x>")])
+    with ZygoteFleet({"graph_bfs": app_dir}) as fleet:
+        assert fleet.dispatch("graph_bfs", handler="bfs",
+                              seed=1)["path"] == "pool"
+        fs = fleet.servers["graph_bfs"]
+        fs.proc.kill()
+        fs.proc.wait(timeout=10)
+        m = fleet.dispatch("graph_bfs", handler="bfs", seed=2)
+        assert m["path"] == "cold"  # degraded, not broken
+        out = fleet.rewarm(rep)
+        assert out.get("restarted") is True and not out["skipped"]
+        assert fleet.dispatch("graph_bfs", handler="bfs",
+                              seed=3)["path"] == "pool"
+        assert fleet.dispatches["graph_bfs"] == {"pool": 2, "cold": 1,
+                                                 "fallback": 0}
+
+
 # ---------------------------------------------------------------------------
 # adaptive controller: cooldown + pool rewarm hook
 # ---------------------------------------------------------------------------

@@ -1,0 +1,171 @@
+"""Property-based tests for keep-alive policies and fleet arbitration.
+
+Like ``test_kernels``, hypothesis is optional: a CI image without it
+skips the sweeps instead of erroring at collection."""
+
+import math
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # CI image without hypothesis: skip sweeps only
+    st = None
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            def skipper():
+                pytest.skip("hypothesis not installed")
+            skipper.__name__ = fn.__name__
+            return skipper
+        return deco
+
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+from repro.core.profiler.report import OptimizationReport
+from repro.core.profiler.utilization import LibraryStats
+from repro.pool import (
+    AppProfile,
+    FleetManager,
+    HistogramPolicy,
+    IdleTimeoutPolicy,
+    ProfileGuidedPolicy,
+    Request,
+    Trace,
+)
+
+
+def _report(app: str, e2e_s: float, init_s: float) -> OptimizationReport:
+    stat = LibraryStats(name="libhot", utilization=0.9, init_s=init_s,
+                        init_share=init_s / max(e2e_s, 1e-9),
+                        runtime_samples=50, file="<x>")
+    return OptimizationReport(application=app, e2e_s=e2e_s,
+                              total_init_s=init_s, qualifies=True,
+                              stats=[stat], defer_targets=[])
+
+
+# ---------------------------------------------------------------------------
+# HistogramPolicy: keep-alive stays within its configured bounds
+# ---------------------------------------------------------------------------
+
+@given(
+    arrivals=st.lists(
+        st.floats(min_value=0.0, max_value=1e5, allow_nan=False,
+                  allow_infinity=False),
+        min_size=0, max_size=120),
+    percentile=st.floats(min_value=0.0, max_value=1.0),
+)
+@settings(max_examples=80, deadline=None)
+def test_histogram_keep_alive_within_percentile_bounds(arrivals,
+                                                       percentile):
+    floor_s, cap_s = 10.0, 3600.0
+    pol = HistogramPolicy(percentile=percentile, default_s=600.0,
+                          floor_s=floor_s, cap_s=cap_s, min_samples=8)
+    for t in sorted(arrivals):
+        pol.observe_arrival("app", t)
+    ka = pol.keep_alive_s("app")
+    # always inside the configured clamp (default_s also lies within it)
+    assert floor_s <= ka <= cap_s
+    iats = pol._iats.get("app", [])
+    if len(iats) >= pol.min_samples:
+        # a learned value can never exceed the clamped largest gap seen
+        assert ka <= max(floor_s, min(cap_s, max(iats)))
+        # ...and never undershoots the clamped smallest gap
+        assert ka >= min(cap_s, max(floor_s, min(iats)))
+
+
+@given(arrivals=st.lists(
+    st.floats(min_value=0.0, max_value=1e4, allow_nan=False,
+              allow_infinity=False), min_size=16, max_size=60))
+@settings(max_examples=50, deadline=None)
+def test_histogram_percentile_monotone_in_percentile(arrivals):
+    ts = sorted(arrivals)
+    lo = HistogramPolicy(percentile=0.5, min_samples=8)
+    hi = HistogramPolicy(percentile=0.99, min_samples=8)
+    for t in ts:
+        lo.observe_arrival("a", t)
+        hi.observe_arrival("a", t)
+    assert lo.keep_alive_s("a") <= hi.keep_alive_s("a")
+
+
+# ---------------------------------------------------------------------------
+# ProfileGuidedPolicy: prewarm never exceeds the budget
+# ---------------------------------------------------------------------------
+
+@given(
+    e2e_s=st.floats(min_value=1e-4, max_value=100.0),
+    init_s=st.floats(min_value=0.0, max_value=50.0),
+    rate=st.floats(min_value=0.0, max_value=1e4),
+    max_prewarm=st.integers(min_value=0, max_value=32),
+)
+@settings(max_examples=120, deadline=None)
+def test_profile_guided_prewarm_never_exceeds_budget(e2e_s, init_s, rate,
+                                                     max_prewarm):
+    pol = ProfileGuidedPolicy(rate_hint_per_s=1.0, max_prewarm=max_prewarm)
+    pol.add_report(_report("app", e2e_s, min(init_s, e2e_s)))
+    assert 0 <= pol.prewarm("app") <= max_prewarm
+    # any sequence of observed rates keeps the recommendation in budget
+    pol.observe_rate("app", rate)
+    pol.observe_rate("app", rate * 10.0)
+    assert 0 <= pol.prewarm("app") <= max_prewarm
+    assert pol.prewarm("unknown") == 0
+    ka = pol.keep_alive_s("app")
+    assert pol.floor_s <= ka <= pol.cap_s and math.isfinite(ka)
+
+
+# ---------------------------------------------------------------------------
+# FleetManager: retention never violates the shared budget
+# ---------------------------------------------------------------------------
+
+_PROFILES = {
+    "a": AppProfile(app="a", cold_init_ms=150.0, invoke_ms=10.0,
+                    warm_init_ms=5.0, rss_mb=100.0, zygote_rss_mb=80.0),
+    "b": AppProfile(app="b", cold_init_ms=60.0, invoke_ms=5.0,
+                    warm_init_ms=3.0, rss_mb=50.0, zygote_rss_mb=40.0),
+    "c": AppProfile(app="c", cold_init_ms=400.0, invoke_ms=25.0,
+                    warm_init_ms=10.0, rss_mb=300.0, zygote_rss_mb=250.0),
+}
+
+
+@given(
+    arrivals=st.lists(
+        st.tuples(st.floats(min_value=0.0, max_value=600.0,
+                            allow_nan=False, allow_infinity=False),
+                  st.sampled_from(sorted(_PROFILES))),
+        min_size=1, max_size=80),
+    budget_mb=st.sampled_from([60.0, 150.0, 500.0, 2000.0]),
+    policy_kind=st.sampled_from(["idle", "hist", "pg"]),
+)
+@settings(max_examples=60, deadline=None)
+def test_fleet_retention_respects_budget_for_any_arrivals(arrivals,
+                                                          budget_mb,
+                                                          policy_kind):
+    reqs = [Request(t, app) for t, app in sorted(arrivals,
+                                                 key=lambda x: x[0])]
+    trace = Trace("prop", reqs, 601.0)
+    if policy_kind == "idle":
+        policy = IdleTimeoutPolicy(timeout_s=120.0)
+    elif policy_kind == "hist":
+        policy = HistogramPolicy(min_samples=4)
+    else:
+        policy = ProfileGuidedPolicy(rate_hint_per_s=0.5)
+        for app in _PROFILES:
+            policy.add_report(_report(app, 0.2, 0.15))
+    fleet = FleetManager(_PROFILES, policy, budget_mb=budget_mb)
+    s = fleet.replay(trace)
+    # the arbiter never leaves retained state above the shared budget
+    assert s.budget_violations == 0
+    assert s.n_requests == len(reqs)
+    assert s.cold_starts + s.pool_starts <= s.n_requests + \
+        s.prewarm_spawns
+    assert all(lat > 0 for rep in s.per_app.values()
+               for lat in rep.latencies_ms)
+    assert s.memory_mb_s >= 0.0
+    assert s.evictions >= 0 and s.prewarm_spawns >= 0

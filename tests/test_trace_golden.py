@@ -1,0 +1,95 @@
+"""Golden-file regression tests for the trace generators.
+
+Every benchmark's workload flows through ``repro.pool.trace``; a silent
+change to a generator (different RNG consumption order, a tweaked
+default) would shift *every* benchmark's arrival pattern at once.  These
+tests pin each generator's exact output for a fixed seed against a
+checked-in golden file.
+
+If a change to the generators is *intentional*, regenerate the goldens
+with::
+
+    PYTHONPATH=src python tests/test_trace_golden.py --regenerate
+
+and commit the diff alongside the generator change.
+"""
+
+import json
+import os
+import sys
+
+import pytest
+
+from repro.pool import (
+    azure_synthetic_rows,
+    bursty_trace,
+    diurnal_trace,
+    handler_skewed_trace,
+    poisson_trace,
+    trace_from_azure_rows,
+)
+
+DATA_DIR = os.path.join(os.path.dirname(__file__), "data", "traces")
+
+
+def _golden_traces():
+    """The pinned generator calls — seeds and parameters must not drift."""
+    return {
+        "poisson": poisson_trace("app", rate_per_s=2.0, duration_s=30.0,
+                                 seed=7),
+        "diurnal": diurnal_trace("app", base_rate_per_s=0.2,
+                                 peak_rate_per_s=3.0, period_s=20.0,
+                                 duration_s=40.0, seed=7),
+        "bursty": bursty_trace("app", idle_rate_per_s=0.1,
+                               burst_rate_per_s=8.0, mean_burst_s=5.0,
+                               mean_idle_s=10.0, duration_s=60.0, seed=7),
+        "handler_skewed": handler_skewed_trace(
+            "app", ["h0", "h1", "h2"], rate_per_s=3.0, duration_s=30.0,
+            zipf_s=1.6, seed=7),
+        "azure": trace_from_azure_rows(
+            azure_synthetic_rows(["app0", "app1"], minutes=5,
+                                 peak_rpm=12.0, popularity_s=1.5,
+                                 diurnal_period_min=5, seed=7,
+                                 handlers={"app0": ["h0", "h1"]}),
+            seed=8),
+    }
+
+
+def _serialize(trace) -> dict:
+    return {
+        "name": trace.name,
+        "duration_s": trace.duration_s,
+        "requests": [[round(r.t, 6), r.app, r.handler] for r in trace],
+    }
+
+
+@pytest.mark.parametrize("shape", ["poisson", "diurnal", "bursty",
+                                   "handler_skewed", "azure"])
+def test_trace_generator_matches_golden(shape):
+    with open(os.path.join(DATA_DIR, f"{shape}.json")) as fh:
+        golden = json.load(fh)
+    got = _serialize(_golden_traces()[shape])
+    # JSON round-trips null -> None; normalize handlers for comparison
+    golden["requests"] = [[t, a, h] for t, a, h in golden["requests"]]
+    assert got["name"] == golden["name"]
+    assert got["duration_s"] == golden["duration_s"]
+    assert len(got["requests"]) == len(golden["requests"]), \
+        f"{shape}: request count drifted — workloads of every benchmark " \
+        f"replaying this shape just changed"
+    assert got["requests"] == golden["requests"]
+
+
+def _regenerate():
+    os.makedirs(DATA_DIR, exist_ok=True)
+    for name, tr in _golden_traces().items():
+        path = os.path.join(DATA_DIR, f"{name}.json")
+        with open(path, "w") as fh:
+            json.dump(_serialize(tr), fh, indent=1)
+        print(f"wrote {path} ({len(tr)} requests)")
+
+
+if __name__ == "__main__":
+    if "--regenerate" in sys.argv:
+        _regenerate()
+    else:
+        print(__doc__)
