@@ -11,9 +11,10 @@ from __future__ import annotations
 from repro.benchsuite.workload import ShiftingWorkload
 from repro.core.adaptive.monitor import MonitorConfig, WorkloadMonitor
 
-from benchmarks.common import save_result, table
+from benchmarks.common import bench, save_result, table
 
 
+@bench("adaptive", ref="Fig. 10", order=20)
 def run() -> dict:
     handlers = [f"h{i}" for i in range(6)]
     window_s = 100.0  # stands in for the paper's 12 h window

@@ -7,13 +7,13 @@ from __future__ import annotations
 
 import os
 
+from repro.api import SlimStart
 from repro.benchsuite.genlibs import build_suite
 from repro.benchsuite.harness import measure_cold_starts
-from repro.benchsuite.pipeline import SlimstartPipeline, StaticPipeline
 
 from benchmarks.common import (
-    APP_SHORT, FAASLIGHT, N_COLD, N_INSTANCES, N_INVOKE, save_result,
-    table,
+    APP_SHORT, FAASLIGHT, N_COLD, N_INSTANCES, N_INVOKE, bench,
+    save_result, table,
 )
 
 # FaaSLight's reported before/after (paper Table III), for side-by-side
@@ -26,16 +26,17 @@ PAPER_REPORTED = {
 }
 
 
+@bench("faaslight_compare", ref="Table III", order=60)
 def run() -> dict:
     root = build_suite()
     rows = []
     for app in FAASLIGHT:
         base_dir = os.path.join(root, "apps", app)
         base = measure_cold_starts(base_dir, n=N_COLD)
-        static_res = StaticPipeline(app, root).run()
+        static_res = SlimStart.static_baseline(app, root).run()
         static = measure_cold_starts(static_res.variant_dir, n=N_COLD)
-        slim_res = SlimstartPipeline(app, root).run(
-            instances=N_INSTANCES, invocations=N_INVOKE)
+        slim_res = SlimStart.profile_guided(
+            app, root, instances=N_INSTANCES, invocations=N_INVOKE).run()
         slim = measure_cold_starts(slim_res.variant_dir, n=N_COLD)
         rep = PAPER_REPORTED.get(app, {})
         rows.append({

@@ -31,16 +31,17 @@ import copy
 import json
 import os
 
+from repro.api import SlimStart
 from repro.benchsuite.genlibs import build_suite
 from repro.benchsuite.harness import measure_cold_starts, measure_pool_starts
-from repro.benchsuite.pipeline import SlimstartPipeline
 from repro.pool.fleet import ZygoteFleet, fleet_sweep
 from repro.pool.policies import default_policies, hot_set_from_report
 from repro.pool.simulator import AppProfile
 from repro.pool.trace import azure_synthetic_rows, trace_from_azure_rows
 
 from benchmarks.common import (
-    APP_SHORT, N_COLD, N_INSTANCES, N_INVOKE, QUICK, save_result, table,
+    APP_SHORT, N_COLD, N_INSTANCES, N_INVOKE, QUICK, bench, save_result,
+    table,
 )
 
 FLEET_APPS = ["graph_bfs", "sentiment_analysis_r", "graph_mst"]
@@ -52,8 +53,8 @@ def measure_apps(root: str, apps: list[str], *, instances: int,
     """Pipeline + harness measurements per app -> profiles/reports."""
     measured = {}
     for app in apps:
-        pipe = SlimstartPipeline(app, root)
-        res = pipe.run(instances=instances, invocations=invocations)
+        res = SlimStart.profile_guided(
+            app, root, instances=instances, invocations=invocations).run()
         hot = hot_set_from_report(res.report)
         app_dir = os.path.join(root, "apps", app)
         fresh = measure_cold_starts(app_dir, n=n_cold)
@@ -80,6 +81,7 @@ def build_fleet_trace(root: str, apps: list[str], *, minutes: int,
     return trace_from_azure_rows(rows, seed=seed + 1, name="azure")
 
 
+@bench("fleet", ref="fleet scale", order=100)
 def run(smoke: bool = False) -> dict:
     smoke = smoke or QUICK
     apps = SMOKE_APPS if smoke else FLEET_APPS

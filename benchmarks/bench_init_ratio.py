@@ -14,10 +14,11 @@ from repro.benchsuite.genlibs import build_suite
 from repro.benchsuite.harness import measure_cold_starts
 
 from benchmarks.common import (
-    ALL_OPT_APPS, APP_SHORT, LOW_INIT, N_COLD, save_result, table,
+    ALL_OPT_APPS, APP_SHORT, LOW_INIT, N_COLD, bench, save_result, table,
 )
 
 
+@bench("init_ratio", ref="Fig. 1", order=30)
 def run() -> dict:
     root = build_suite()
     rows = []

@@ -6,9 +6,10 @@ measured in the same cold-start runs — otherwise measures a subset.
 
 from __future__ import annotations
 
-from benchmarks.common import load_result, save_result, table
+from benchmarks.common import bench, load_result, save_result, table
 
 
+@bench("memory", ref="Fig. 8", order=70)
 def run() -> dict:
     tab = load_result("bench_speedup_table")
     if tab is None:

@@ -20,15 +20,16 @@ from __future__ import annotations
 import copy
 import os
 
+from repro.api import SlimStart
 from repro.benchsuite.genlibs import build_suite
 from repro.benchsuite.harness import measure_cold_starts, measure_pool_starts
-from repro.benchsuite.pipeline import SlimstartPipeline
 from repro.pool.policies import default_policies, hot_set_from_report
 from repro.pool.simulator import AppProfile, FleetSimulator
 from repro.pool.trace import standard_traces
 
 from benchmarks.common import (
-    APP_SHORT, N_COLD, N_INSTANCES, N_INVOKE, QUICK, save_result, table,
+    APP_SHORT, N_COLD, N_INSTANCES, N_INVOKE, QUICK, bench, save_result,
+    table,
 )
 
 POOL_APPS = ["graph_bfs", "sentiment_analysis_r"]
@@ -37,8 +38,8 @@ TRACE_DURATION_S = 600.0 if QUICK else 1200.0
 
 def measure_app(root: str, app: str) -> dict:
     """Pipeline -> hot set -> fresh vs bare-pool vs hot-pool starts."""
-    pipe = SlimstartPipeline(app, root)
-    res = pipe.run(instances=N_INSTANCES, invocations=N_INVOKE)
+    res = SlimStart.profile_guided(
+        app, root, instances=N_INSTANCES, invocations=N_INVOKE).run()
     hot = hot_set_from_report(res.report)
     app_dir = os.path.join(root, "apps", app)
     fresh = measure_cold_starts(app_dir, n=N_COLD)
@@ -54,6 +55,8 @@ def measure_app(root: str, app: str) -> dict:
     }
 
 
+@bench("pool_policies", ref="warm-pool policies", order=110,
+       default=False)
 def run() -> dict:
     root = build_suite()
 

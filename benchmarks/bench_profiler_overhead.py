@@ -12,10 +12,11 @@ from repro.benchsuite.genlibs import build_suite
 from repro.benchsuite.harness import measure_warm_overhead
 
 from benchmarks.common import (
-    ALL_OPT_APPS, APP_SHORT, N_INVOKE, QUICK, save_result, table,
+    ALL_OPT_APPS, APP_SHORT, N_INVOKE, QUICK, bench, save_result, table,
 )
 
 
+@bench("profiler_overhead", ref="Fig. 9", order=80)
 def run() -> dict:
     root = build_suite()
     apps = ALL_OPT_APPS if not QUICK else ALL_OPT_APPS[:6]

@@ -23,13 +23,14 @@ from repro.configs import get_reduced
 from repro.launch.serve import run_service, skewed_workload
 from repro.serving import LoadPolicy, ServingEngine
 
-from benchmarks.common import QUICK, save_result, table
+from benchmarks.common import QUICK, bench, save_result, table
 
 ARCHS = ["granite-moe-1b-a400m", "whisper-large-v3", "pixtral-12b"]
 if not QUICK:
     ARCHS += ["qwen2.5-32b"]
 
 
+@bench("serving_coldstart", ref="Level B", order=90)
 def run() -> dict:
     rows = []
     n_req = 12 if QUICK else 24

@@ -10,21 +10,21 @@ from __future__ import annotations
 
 import os
 
+from repro.api import SlimStart
 from repro.benchsuite.genlibs import build_suite
 from repro.benchsuite.harness import measure_cold_starts
-from repro.benchsuite.pipeline import SlimstartPipeline
 
 from benchmarks.common import (
-    ALL_OPT_APPS, APP_SHORT, N_COLD, N_INSTANCES, N_INVOKE, save_result,
-    table,
+    ALL_OPT_APPS, APP_SHORT, N_COLD, N_INSTANCES, N_INVOKE, bench,
+    save_result, table,
 )
 
 
 def optimize_and_measure(app: str, root: str) -> dict:
     base_dir = os.path.join(root, "apps", app)
     base = measure_cold_starts(base_dir, n=N_COLD)
-    pipe = SlimstartPipeline(app, root)
-    res = pipe.run(instances=N_INSTANCES, invocations=N_INVOKE)
+    res = SlimStart.profile_guided(
+        app, root, instances=N_INSTANCES, invocations=N_INVOKE).run()
     opt = measure_cold_starts(res.variant_dir, n=N_COLD)
     return {
         "app": APP_SHORT.get(app, app),
@@ -41,6 +41,7 @@ def optimize_and_measure(app: str, root: str) -> dict:
     }
 
 
+@bench("speedup_table", ref="Table II", order=50)
 def run(apps=None) -> dict:
     root = build_suite()
     rows = [optimize_and_measure(app, root)

@@ -12,16 +12,17 @@ from __future__ import annotations
 
 import os
 
+from repro.api import SlimStart
 from repro.benchsuite.genlibs import build_suite
 from repro.benchsuite.harness import measure_cold_starts
-from repro.benchsuite.pipeline import SlimstartPipeline, StaticPipeline
 
 from benchmarks.common import (
-    APP_SHORT, FAASLIGHT, N_COLD, N_INSTANCES, N_INVOKE, save_result,
-    table,
+    APP_SHORT, FAASLIGHT, N_COLD, N_INSTANCES, N_INVOKE, bench,
+    save_result, table,
 )
 
 
+@bench("static_vs_dynamic", ref="Fig. 2", order=40)
 def run() -> dict:
     root = build_suite()
     rows = []
@@ -29,12 +30,11 @@ def run() -> dict:
         base_dir = os.path.join(root, "apps", app)
         base = measure_cold_starts(base_dir, n=N_COLD)
 
-        static = StaticPipeline(app, root).run()
+        static = SlimStart.static_baseline(app, root).run()
         stat = measure_cold_starts(static.variant_dir, n=N_COLD)
 
-        dyn_pipe = SlimstartPipeline(app, root)
-        dyn_res = dyn_pipe.run(instances=N_INSTANCES,
-                               invocations=N_INVOKE)
+        dyn_res = SlimStart.profile_guided(
+            app, root, instances=N_INSTANCES, invocations=N_INVOKE).run()
         dyn = measure_cold_starts(dyn_res.variant_dir, n=N_COLD)
 
         rows.append({

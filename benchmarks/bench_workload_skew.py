@@ -14,9 +14,10 @@ import numpy as np
 
 from repro.benchsuite.genlibs import build_suite
 
-from benchmarks.common import save_result, table
+from benchmarks.common import bench, save_result, table
 
 
+@bench("workload_skew", ref="Fig. 3", order=10)
 def run() -> dict:
     root = build_suite()
     apps_dir = os.path.join(root, "apps")

@@ -1,13 +1,67 @@
-"""Shared helpers for the benchmark suite."""
+"""Shared helpers for the benchmark suite.
+
+Also home of the **bench registry**: each ``bench_*.py`` module
+decorates its ``run`` with :func:`bench`, and ``benchmarks/run.py``
+discovers the suite from :func:`registered_benches` instead of a
+hand-maintained list.  Results are written/read as versioned
+``bench_result`` artifacts (:mod:`repro.api.artifacts`); legacy raw
+payload JSONs under ``results/`` still load via the v1 migration path.
+"""
 
 from __future__ import annotations
 
-import json
 import os
 import time
+from dataclasses import dataclass
 from pathlib import Path
+from typing import Callable, Optional
+
+# one table renderer for benches and the CLI (see repro.api.render)
+from repro.api.render import fmt_cell as _fmt, table  # noqa: F401
 
 RESULTS = Path(__file__).resolve().parent / "results"
+
+
+# ---------------------------------------------------------------------------
+# Bench registry
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class BenchEntry:
+    name: str
+    fn: Callable[[], dict]
+    ref: str = ""  # which paper figure/table this reproduces
+    order: int = 100  # suite position (deps like memory<-speedup_table)
+    default: bool = True  # part of the default `-m benchmarks.run` sweep
+
+
+BENCHES: dict[str, BenchEntry] = {}
+
+
+def bench(name: str, *, ref: str = "", order: int = 100,
+          default: bool = True):
+    """Register a benchmark's ``run`` function with the suite."""
+    def deco(fn: Callable[[], dict]) -> Callable[[], dict]:
+        if name in BENCHES:
+            raise ValueError(f"duplicate bench registration {name!r}")
+        BENCHES[name] = BenchEntry(name=name, fn=fn, ref=ref,
+                                   order=order, default=default)
+        return fn
+    return deco
+
+
+def registered_benches(only: Optional[str] = None, *,
+                       include_non_default: bool = False
+                       ) -> list[BenchEntry]:
+    """Registry entries in suite order.  ``only`` selects one by name
+    (non-default entries included); ``include_non_default`` returns
+    the whole registry (for listings)."""
+    entries = sorted(BENCHES.values(), key=lambda e: (e.order, e.name))
+    if only is not None:
+        return [e for e in entries if e.name == only]
+    if include_non_default:
+        return entries
+    return [e for e in entries if e.default]
 
 # Suite-wide sizing: QUICK=1 trims cold-start repetitions so the whole
 # suite runs in minutes on one CPU core; the full setting mirrors the
@@ -42,37 +96,22 @@ APP_SHORT = {
 
 
 def save_result(name: str, payload) -> Path:
-    RESULTS.mkdir(parents=True, exist_ok=True)
+    """Write a ``bench_result`` artifact (atomic, schema-versioned)."""
+    from repro.api import save_bench_result
     path = RESULTS / f"{name}.json"
-    path.write_text(json.dumps(payload, indent=2))
+    save_bench_result(name, payload, str(path))
     return path
 
 
 def load_result(name: str):
+    """Load a ``bench_result`` artifact (legacy raw payloads migrate)."""
+    from repro.api import load_bench_result
     path = RESULTS / f"{name}.json"
     if path.exists():
-        return json.loads(path.read_text())
+        return load_bench_result(str(path))
     return None
 
 
-def table(rows: list[dict], cols: list[str], title: str = "") -> str:
-    if title:
-        out = [f"== {title} =="]
-    else:
-        out = []
-    widths = {c: max(len(c), *(len(_fmt(r.get(c))) for r in rows))
-              for c in cols} if rows else {c: len(c) for c in cols}
-    out.append("  ".join(c.ljust(widths[c]) for c in cols))
-    for r in rows:
-        out.append("  ".join(_fmt(r.get(c)).ljust(widths[c])
-                             for c in cols))
-    return "\n".join(out)
-
-
-def _fmt(v) -> str:
-    if isinstance(v, float):
-        return f"{v:.2f}"
-    return str(v)
 
 
 class timed:

@@ -1,67 +1,82 @@
-"""Benchmark orchestrator — one entry per paper table/figure.
+"""Benchmark orchestrator — one registry entry per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick]
+                                            [--list]
+
+The suite is discovered, not hand-maintained: every ``bench_*.py``
+module registers its ``run`` via the ``@bench(...)`` decorator in
+``benchmarks.common``; this orchestrator imports the modules and walks
+the registry in suite order.  ``--list`` prints the registry (including
+non-default entries, runnable via ``--only``).
 
 Level A (the paper, measured on this container's subprocess cells):
     Fig.1 init ratio, Fig.2 STAT/DYN, Fig.3 skew, Table II speedups,
     Table III FaaSLight, Fig.8 memory, Fig.9 overhead, Fig.10 adaptive.
 Level B (TPU-native adaptation): serving cold starts.
+Fleet: multi-app zygote fleet replay.
 Roofline: merged from the dry-run artifacts if present.
 """
 
 from __future__ import annotations
 
 import argparse
+import importlib
 import os
+import pkgutil
 import sys
 import time
 import traceback
+
+
+def _import_bench_modules() -> None:
+    """Import every benchmarks.bench_* module so @bench registers it."""
+    pkg_dir = os.path.dirname(os.path.abspath(__file__))
+    for info in pkgutil.iter_modules([pkg_dir]):
+        if info.name.startswith("bench_"):
+            importlib.import_module(f"benchmarks.{info.name}")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--list", action="store_true",
+                    help="print the bench registry and exit")
     args = ap.parse_args()
     if args.quick:
         os.environ["BENCH_QUICK"] = "1"
 
     # import after BENCH_QUICK is set (common.py reads it at import)
-    from benchmarks import (
-        bench_adaptive, bench_faaslight_compare, bench_fleet,
-        bench_init_ratio, bench_memory, bench_profiler_overhead,
-        bench_serving_coldstart, bench_speedup_table,
-        bench_static_vs_dynamic, bench_workload_skew,
-    )
+    from benchmarks.common import BENCHES, registered_benches
+    _import_bench_modules()
 
-    benches = [
-        ("workload_skew", bench_workload_skew.run),          # Fig. 3
-        ("adaptive", bench_adaptive.run),                    # Fig. 10
-        ("init_ratio", bench_init_ratio.run),                # Fig. 1
-        ("static_vs_dynamic", bench_static_vs_dynamic.run),  # Fig. 2
-        ("speedup_table", bench_speedup_table.run),          # Table II
-        ("faaslight_compare", bench_faaslight_compare.run),  # Table III
-        ("memory", bench_memory.run),                        # Fig. 8
-        ("profiler_overhead", bench_profiler_overhead.run),  # Fig. 9
-        ("serving_coldstart", bench_serving_coldstart.run),  # Level B
-        ("fleet", bench_fleet.run),                          # fleet scale
-    ]
+    if args.list:
+        for e in registered_benches(include_non_default=True):
+            flag = "" if e.default else "  [--only]"
+            print(f"{e.order:>4}  {e.name:<22} {e.ref}{flag}")
+        return
+
+    entries = registered_benches(only=args.only)
+    if args.only and not entries and args.only != "roofline":
+        print(f"unknown bench {args.only!r}; registered: "
+              f"{sorted(BENCHES)}", file=sys.stderr)
+        sys.exit(2)
 
     results = {}
     failures = []
-    for name, fn in benches:
-        if args.only and args.only != name:
-            continue
-        print(f"\n{'=' * 72}\n[bench] {name}\n{'=' * 72}", flush=True)
+    for entry in entries:
+        print(f"\n{'=' * 72}\n[bench] {entry.name}"
+              + (f" ({entry.ref})" if entry.ref else "")
+              + f"\n{'=' * 72}", flush=True)
         t0 = time.time()
         try:
-            results[name] = fn()
-            print(f"[bench] {name} done in {time.time() - t0:.1f}s",
+            results[entry.name] = entry.fn()
+            print(f"[bench] {entry.name} done in {time.time() - t0:.1f}s",
                   flush=True)
         except Exception as e:  # pragma: no cover
-            failures.append(name)
+            failures.append(entry.name)
             traceback.print_exc()
-            print(f"[bench] {name} FAILED: {e}")
+            print(f"[bench] {entry.name} FAILED: {e}")
 
     # roofline summary (reads dry-run artifacts if the sweep has run)
     if not args.only or args.only == "roofline":

@@ -11,9 +11,9 @@
 
 import os
 
+from repro.api import SlimStart
 from repro.benchsuite.genlibs import build_suite
 from repro.benchsuite.harness import measure_cold_starts
-from repro.benchsuite.pipeline import SlimstartPipeline
 
 APP = "graph_bfs"  # the paper's motivating example (igraph, Table I)
 
@@ -29,10 +29,10 @@ def level_a():
     print(f"baseline   : init {base.init_mean:7.1f} ms   "
           f"e2e {base.e2e_mean:7.1f} ms   rss {base.rss_mean_mb:.0f} MB")
 
-    pipe = SlimstartPipeline(APP, root)
-    res = pipe.run(instances=2, invocations=60)
+    res = SlimStart.profile_guided(APP, root, instances=2,
+                                   invocations=60).run()
     print(f"profiled   : {res.apply_summary['deferred']} imports deferred"
-          f" (report: {pipe.report_path})")
+          f" (report: {res.report_path})")
 
     opt = measure_cold_starts(res.variant_dir, n=3)
     print(f"optimized  : init {opt.init_mean:7.1f} ms   "

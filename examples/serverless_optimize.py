@@ -12,9 +12,9 @@ optimization and prints before/after.
 import os
 import sys
 
+from repro.api import SlimStart
 from repro.benchsuite.genlibs import build_suite
 from repro.benchsuite.harness import measure_cold_starts
-from repro.benchsuite.pipeline import SlimstartPipeline
 
 CASES = ["sentiment_analysis_r", "cve_bin_tool"]
 
@@ -23,8 +23,8 @@ def show_report(app: str, root: str):
     print("=" * 72)
     print(f"SLIMSTART Summary — {app}")
     print("=" * 72)
-    pipe = SlimstartPipeline(app, root)
-    res = pipe.run(instances=2, invocations=80)
+    res = SlimStart.profile_guided(app, root, instances=2,
+                                   invocations=80).run()
     rep = res.report
 
     print(f"{'':2s}{'Package':34s}{'Util.%':>8s}{'Init%':>8s}  File")

@@ -1,0 +1,98 @@
+"""Public SLIMSTART API: versioned artifacts, stages, and the facade.
+
+Three layers, one import::
+
+    from repro import api
+
+* **Artifacts** — every file the workflow exchanges is schema-versioned
+  JSON with atomic writes and a v1 migration path
+  (:mod:`repro.api.artifact` machinery, :mod:`repro.api.artifacts`
+  kinds).  Typed helpers: :func:`save_report` / :func:`load_report`,
+  :func:`save_trace` / :func:`load_trace`, :func:`save_stats` /
+  :func:`load_stats`, :func:`save_bench_result` /
+  :func:`load_bench_result`; :func:`as_report` normalizes
+  report-or-path arguments for ``rewarm``-style hooks.
+* **Stages** — :class:`ProfileStage` → :class:`AnalyzeStage` →
+  :class:`OptimizeStage` → :class:`WarmStage` → :class:`ReplayStage`
+  over one :class:`RunContext` (:mod:`repro.api.stages`).
+* **Facade** — :class:`SlimStart` chains stages;
+  ``python -m repro`` exposes the same workflow as a CLI.
+"""
+
+from repro.api.artifact import (
+    Artifact,
+    ArtifactError,
+    atomic_write_json,
+    load_any,
+    peek,
+    registered_kinds,
+)
+from repro.api.artifacts import (
+    BenchResultArtifact,
+    ColdStartStatsArtifact,
+    ReportArtifact,
+    TraceArtifact,
+    as_report,
+    load_bench_result,
+    load_report,
+    load_report_meta,
+    load_stats,
+    load_trace,
+    save_bench_result,
+    save_report,
+    save_stats,
+    save_trace,
+)
+from repro.api.facade import SlimStart
+from repro.api.stages import (
+    AnalyzeStage,
+    OptimizeStage,
+    ProfileStage,
+    ReplayStage,
+    RunContext,
+    Stage,
+    WarmStage,
+    analyze_sink,
+    apply_defer_targets,
+    fresh_variant,
+    profile_app,
+    restore_deployment,
+    static_defer_targets,
+)
+
+__all__ = [
+    "AnalyzeStage",
+    "Artifact",
+    "ArtifactError",
+    "BenchResultArtifact",
+    "ColdStartStatsArtifact",
+    "OptimizeStage",
+    "ProfileStage",
+    "ReplayStage",
+    "ReportArtifact",
+    "RunContext",
+    "SlimStart",
+    "Stage",
+    "TraceArtifact",
+    "WarmStage",
+    "analyze_sink",
+    "apply_defer_targets",
+    "as_report",
+    "atomic_write_json",
+    "fresh_variant",
+    "load_any",
+    "load_bench_result",
+    "load_report",
+    "load_report_meta",
+    "load_stats",
+    "load_trace",
+    "peek",
+    "profile_app",
+    "registered_kinds",
+    "restore_deployment",
+    "save_bench_result",
+    "save_report",
+    "save_stats",
+    "save_trace",
+    "static_defer_targets",
+]

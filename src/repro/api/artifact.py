@@ -1,0 +1,243 @@
+"""Schema-versioned artifact machinery for the SLIMSTART public API.
+
+Every file the workflow passes between stages — optimization reports,
+invocation traces, cold-start measurements, benchmark results — is an
+*artifact*: a JSON document wrapped in a two-key envelope::
+
+    {"kind": "optimization_report", "schema_version": 2, ...payload...}
+
+The envelope buys three properties the raw ``to_dict()`` dumps of the
+seed repo lacked:
+
+* **versioning** — consumers (pool, fleet, serving, CI) declare which
+  schema they understand; a file written by a newer producer fails
+  loudly instead of being half-parsed;
+* **migration** — a v1 (including legacy *unversioned*) file loads
+  through a chain of ``migrate_v{N}`` hooks with a
+  :class:`DeprecationWarning`, so old profiler output keeps working;
+* **atomicity** — ``save`` writes a temp file in the destination
+  directory and ``os.replace``\\ s it, so a crashed profiler run can
+  never leave a truncated JSON for the fleet to load.
+
+Subclass :class:`Artifact`, set ``kind`` / ``schema_version`` /
+``required_keys`` (and optionally ``optional_keys``), implement
+``to_payload`` / ``from_payload``, and add ``migrate_v{N}``
+classmethods that lift a version-``N`` payload to ``N+1``.  Concrete
+artifact types live in :mod:`repro.api.artifacts`.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import warnings
+from typing import Any, Callable, ClassVar, Optional
+
+ENVELOPE_KEYS = ("kind", "schema_version")
+
+
+class ArtifactError(ValueError):
+    """A file failed to load as the requested artifact.
+
+    Always carries the offending path so fleet operators see *which*
+    report/trace is bad, not just that one is.
+    """
+
+    def __init__(self, path: str, detail: str) -> None:
+        self.path = path
+        self.detail = detail
+        super().__init__(f"{path}: {detail}")
+
+
+def atomic_write_json(path: str, obj: Any, *, indent: int = 2) -> None:
+    """Serialize ``obj`` to ``path`` via temp-file + rename.
+
+    The temp file lives in the destination directory so the final
+    ``os.replace`` is atomic on POSIX (same filesystem); readers either
+    see the old file or the complete new one, never a torn write.
+    """
+    dirname = os.path.dirname(os.path.abspath(path))
+    os.makedirs(dirname, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(prefix=".artifact-", suffix=".tmp",
+                               dir=dirname)
+    try:
+        with os.fdopen(fd, "w") as fh:
+            json.dump(obj, fh, indent=indent)
+            fh.write("\n")
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+# Registry of artifact kinds (filled by Artifact.__init_subclass__) so
+# load_any() can dispatch a file to its class from the envelope alone.
+_KINDS: dict[str, type["Artifact"]] = {}
+
+
+class Artifact:
+    """Base class: one schema-versioned JSON document kind."""
+
+    kind: ClassVar[str] = ""
+    schema_version: ClassVar[int] = 1
+    # payload keys (envelope keys excluded) at the *latest* version
+    required_keys: ClassVar[tuple[str, ...]] = ()
+    optional_keys: ClassVar[tuple[str, ...]] = ()
+
+    def __init_subclass__(cls, **kw: Any) -> None:
+        super().__init_subclass__(**kw)
+        if cls.kind:
+            if cls.schema_version < 1:
+                raise TypeError(f"{cls.__name__}: schema_version >= 1")
+            _KINDS[cls.kind] = cls
+
+    # ------------------------------------------------------------ payload
+    def to_payload(self) -> dict:
+        raise NotImplementedError
+
+    @classmethod
+    def from_payload(cls, payload: dict) -> "Artifact":
+        raise NotImplementedError
+
+    # ---------------------------------------------------------- save/load
+    def save(self, path: str) -> str:
+        """Atomically write the enveloped payload; returns ``path``."""
+        payload = self.to_payload()
+        clash = set(payload) & set(ENVELOPE_KEYS)
+        if clash:
+            raise ValueError(
+                f"{type(self).__name__}.to_payload() uses reserved "
+                f"envelope keys {sorted(clash)}")
+        doc = {"kind": self.kind,
+               "schema_version": self.schema_version, **payload}
+        atomic_write_json(path, doc)
+        return path
+
+    @classmethod
+    def load(cls, path: str):
+        """Load + validate + (if needed) migrate an artifact file.
+
+        Raises :class:`ArtifactError` naming ``path`` on every failure
+        mode: unreadable/truncated JSON, wrong ``kind``, a version newer
+        than this code understands, or missing/unknown payload keys.
+        Unversioned files are treated as v1 legacy output and migrated
+        with a :class:`DeprecationWarning`.
+        """
+        return cls._from_doc(path, cls._read_doc(path))
+
+    @classmethod
+    def _from_doc(cls, path: str, doc: dict):
+        """The load path after the JSON is in hand (shared with
+        :func:`load_any`, which already parsed the file once)."""
+        version = cls._detect_version(path, doc)
+        payload = {k: v for k, v in doc.items() if k not in ENVELOPE_KEYS}
+        payload = cls._migrate(path, payload, version)
+        cls._validate_keys(path, payload)
+        try:
+            return cls.from_payload(payload)
+        except (KeyError, TypeError, ValueError) as exc:
+            raise ArtifactError(
+                path, f"malformed {cls.kind} payload: {exc!r}") from exc
+
+    # ----------------------------------------------------------- plumbing
+    @classmethod
+    def _read_doc(cls, path: str) -> dict:
+        try:
+            with open(path) as fh:
+                doc = json.load(fh)
+        except OSError as exc:
+            raise ArtifactError(path, f"cannot read: {exc}") from exc
+        except ValueError as exc:
+            raise ArtifactError(
+                path, f"invalid/truncated JSON: {exc}") from exc
+        if not isinstance(doc, dict):
+            raise ArtifactError(
+                path, f"expected a JSON object, got {type(doc).__name__}")
+        return doc
+
+    @classmethod
+    def _detect_version(cls, path: str, doc: dict) -> int:
+        kind = doc.get("kind")
+        if kind is not None and kind != cls.kind:
+            raise ArtifactError(
+                path, f"kind mismatch: file is {kind!r}, "
+                      f"expected {cls.kind!r}")
+        version = doc.get("schema_version")
+        if version is None:
+            warnings.warn(
+                f"{path}: unversioned (legacy v1) {cls.kind} file; "
+                f"loading via the v1 migration path — re-save with "
+                f"repro.api to upgrade it to "
+                f"schema_version={cls.schema_version}",
+                DeprecationWarning, stacklevel=3)
+            return 1
+        if not isinstance(version, int) or version < 1:
+            raise ArtifactError(
+                path, f"bad schema_version {version!r}")
+        if version > cls.schema_version:
+            raise ArtifactError(
+                path, f"schema_version {version} is newer than this "
+                      f"code understands (<= {cls.schema_version}); "
+                      f"upgrade repro to load it")
+        return version
+
+    @classmethod
+    def _migrate(cls, path: str, payload: dict, version: int) -> dict:
+        for v in range(version, cls.schema_version):
+            hook: Optional[Callable[[dict], dict]] = getattr(
+                cls, f"migrate_v{v}", None)
+            if hook is None:
+                raise ArtifactError(
+                    path, f"no migration from {cls.kind} v{v} to "
+                          f"v{v + 1}")
+            payload = hook(dict(payload))
+        return payload
+
+    @classmethod
+    def _validate_keys(cls, path: str, payload: dict) -> None:
+        keys = set(payload)
+        missing = set(cls.required_keys) - keys
+        unknown = keys - set(cls.required_keys) - set(cls.optional_keys)
+        if missing or unknown:
+            parts = []
+            if missing:
+                parts.append(f"missing keys {sorted(missing)}")
+            if unknown:
+                parts.append(f"unknown keys {sorted(unknown)}")
+            raise ArtifactError(
+                path, f"{cls.kind} v{cls.schema_version} schema "
+                      f"violation: {'; '.join(parts)}")
+
+
+def peek(path: str) -> tuple[Optional[str], Optional[int]]:
+    """Read just the envelope: ``(kind, schema_version)``.
+
+    ``(None, None)`` means a legacy unversioned file; raises
+    :class:`ArtifactError` on unreadable/invalid JSON.
+    """
+    doc = Artifact._read_doc(path)
+    return doc.get("kind"), doc.get("schema_version")
+
+
+def load_any(path: str) -> Artifact:
+    """Load a file as whatever registered artifact kind it declares."""
+    doc = Artifact._read_doc(path)
+    kind = doc.get("kind")
+    if kind is None:
+        raise ArtifactError(
+            path, "no 'kind' in envelope; load legacy files through "
+                  "their specific artifact class instead")
+    cls = _KINDS.get(kind)
+    if cls is None:
+        raise ArtifactError(
+            path, f"unknown artifact kind {kind!r} "
+                  f"(registered: {sorted(_KINDS)})")
+    return cls._from_doc(path, doc)
+
+
+def registered_kinds() -> dict[str, type[Artifact]]:
+    return dict(_KINDS)

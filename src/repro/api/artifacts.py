@@ -1,0 +1,288 @@
+"""Concrete schema-versioned artifacts of the SLIMSTART workflow.
+
+Four kinds cover everything the stages exchange on disk:
+
+====================  ===========================  =======
+kind                  wraps                         latest
+====================  ===========================  =======
+optimization_report   OptimizationReport            2
+trace                 repro.pool.trace.Trace        1
+cold_start_stats      ColdStartStats (harness)      1
+bench_result          benchmark payload dicts       2
+====================  ===========================  =======
+
+``optimization_report`` v1 is the seed repo's unversioned
+``OptimizationReport.to_dict()`` dump; v2 wraps the same fields in the
+envelope and adds an optional ``meta`` section (profiling parameters,
+free-form provenance).  ``bench_result`` v1 is the seed's raw payload
+JSON under ``benchmarks/results/``.
+
+Prefer the typed helpers (:func:`save_report` / :func:`load_report`,
+...) over the classes: they take and return the domain objects the rest
+of the codebase already speaks.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Optional, Union
+
+from repro.api.artifact import Artifact, ArtifactError
+from repro.benchsuite.harness import ColdStartStats
+from repro.core.profiler.import_timer import ModuleInitRecord
+from repro.core.profiler.report import OptimizationReport
+from repro.core.profiler.utilization import (
+    InefficiencyFinding,
+    LibraryStats,
+)
+from repro.pool.trace import Request, Trace
+
+ReportLike = Union[OptimizationReport, "ReportArtifact", str, os.PathLike]
+
+
+# ---------------------------------------------------------------------------
+# optimization_report (v2; v1 = legacy unversioned to_dict dump)
+# ---------------------------------------------------------------------------
+
+class ReportArtifact(Artifact):
+    kind = "optimization_report"
+    schema_version = 2
+    required_keys = ("application", "e2e_s", "total_init_s", "qualifies",
+                     "stats", "findings", "defer_targets")
+    optional_keys = ("meta",)
+
+    def __init__(self, report: OptimizationReport,
+                 meta: Optional[dict] = None) -> None:
+        self.report = report
+        self.meta = dict(meta or {})
+
+    @classmethod
+    def migrate_v1(cls, payload: dict) -> dict:
+        # v1 -> v2: same fields, explicit (empty) provenance section
+        payload.setdefault("meta", {})
+        return payload
+
+    def to_payload(self) -> dict:
+        # OptimizationReport.to_dict() is exactly the v2 payload minus
+        # the provenance section (and, enveloped-less, the v1 format)
+        return {**self.report.to_dict(), "meta": self.meta}
+
+    @classmethod
+    def from_payload(cls, payload: dict) -> "ReportArtifact":
+        meta = payload.get("meta") or {}
+        rep = OptimizationReport(
+            application=payload["application"],
+            e2e_s=payload["e2e_s"],
+            total_init_s=payload["total_init_s"],
+            qualifies=payload["qualifies"],
+            defer_targets=list(payload["defer_targets"]),
+        )
+        rep.stats = [
+            LibraryStats(
+                name=s["package"],
+                utilization=s["utilization"],
+                init_s=s["init_s"],
+                init_share=s["init_share"],
+                runtime_samples=s["runtime_samples"],
+                file=s["file"],
+            )
+            for s in payload["stats"]
+        ]
+        rep.findings = [
+            InefficiencyFinding(
+                package=f["package"],
+                kind=f["kind"],
+                utilization=f["utilization"],
+                init_s=f["init_s"],
+                init_share=f["init_share"],
+                file=f["file"],
+                import_chain=[
+                    ModuleInitRecord(
+                        name=r["module"], filename="",
+                        importer_file=r.get("importer_file"),
+                        importer_lineno=r.get("importer_lineno", 0))
+                    for r in f.get("call_path", [])
+                ],
+            )
+            for f in payload["findings"]
+        ]
+        return cls(rep, meta=meta)
+
+
+def save_report(report: OptimizationReport, path: str,
+                meta: Optional[dict] = None) -> str:
+    """Atomically save a report as a versioned artifact."""
+    return ReportArtifact(report, meta=meta).save(path)
+
+
+def load_report(path: str) -> OptimizationReport:
+    """Load a versioned (or legacy v1) report artifact."""
+    return ReportArtifact.load(path).report
+
+
+def load_report_meta(path: str) -> dict:
+    """The report artifact's ``meta`` section ({} for legacy files)."""
+    return ReportArtifact.load(path).meta
+
+
+def as_report(obj: ReportLike) -> OptimizationReport:
+    """Normalize 'some form of report' into an :class:`OptimizationReport`.
+
+    Accepts the report object itself, a :class:`ReportArtifact`, or a
+    path to a saved artifact — the currency of ``rewarm``-style hooks
+    that may be fed either an in-memory report (adaptive loop) or a
+    deployed artifact file (CLI / CI).
+    """
+    if isinstance(obj, OptimizationReport):
+        return obj
+    if isinstance(obj, ReportArtifact):
+        return obj.report
+    if isinstance(obj, (str, os.PathLike)):
+        return load_report(os.fspath(obj))
+    raise TypeError(
+        f"expected OptimizationReport, ReportArtifact or path, "
+        f"got {type(obj).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# trace (v1)
+# ---------------------------------------------------------------------------
+
+class TraceArtifact(Artifact):
+    kind = "trace"
+    schema_version = 1
+    required_keys = ("name", "duration_s", "requests")
+    optional_keys = ("meta",)
+
+    def __init__(self, trace: Trace, meta: Optional[dict] = None) -> None:
+        self.trace = trace
+        self.meta = dict(meta or {})
+
+    def to_payload(self) -> dict:
+        return {
+            "name": self.trace.name,
+            "duration_s": self.trace.duration_s,
+            "requests": [
+                {"t": r.t, "app": r.app, "handler": r.handler}
+                for r in self.trace.requests
+            ],
+            "meta": self.meta,
+        }
+
+    @classmethod
+    def from_payload(cls, payload: dict) -> "TraceArtifact":
+        reqs = [Request(t=r["t"], app=r["app"], handler=r.get("handler"))
+                for r in payload["requests"]]
+        return cls(Trace(payload["name"], reqs, payload["duration_s"]),
+                   meta=payload.get("meta") or {})
+
+
+def save_trace(trace: Trace, path: str,
+               meta: Optional[dict] = None) -> str:
+    return TraceArtifact(trace, meta=meta).save(path)
+
+
+def load_trace(path: str) -> Trace:
+    return TraceArtifact.load(path).trace
+
+
+# ---------------------------------------------------------------------------
+# cold_start_stats (v1)
+# ---------------------------------------------------------------------------
+
+class ColdStartStatsArtifact(Artifact):
+    kind = "cold_start_stats"
+    schema_version = 1
+    required_keys = ("app", "n", "init_ms", "e2e_ms", "peak_rss_kb")
+    optional_keys = ("meta",)
+
+    def __init__(self, stats: ColdStartStats,
+                 meta: Optional[dict] = None) -> None:
+        self.stats = stats
+        self.meta = dict(meta or {})
+
+    def to_payload(self) -> dict:
+        s = self.stats
+        return {"app": s.app, "n": s.n, "init_ms": list(s.init_ms),
+                "e2e_ms": list(s.e2e_ms),
+                "peak_rss_kb": list(s.peak_rss_kb), "meta": self.meta}
+
+    @classmethod
+    def from_payload(cls, payload: dict) -> "ColdStartStatsArtifact":
+        stats = ColdStartStats(
+            app=payload["app"], n=payload["n"],
+            init_ms=list(payload["init_ms"]),
+            e2e_ms=list(payload["e2e_ms"]),
+            peak_rss_kb=list(payload["peak_rss_kb"]))
+        return cls(stats, meta=payload.get("meta") or {})
+
+
+def save_stats(stats: ColdStartStats, path: str,
+               meta: Optional[dict] = None) -> str:
+    return ColdStartStatsArtifact(stats, meta=meta).save(path)
+
+
+def load_stats(path: str) -> ColdStartStats:
+    return ColdStartStatsArtifact.load(path).stats
+
+
+# ---------------------------------------------------------------------------
+# bench_result (v2; v1 = legacy raw payload JSON)
+# ---------------------------------------------------------------------------
+
+class BenchResultArtifact(Artifact):
+    kind = "bench_result"
+    schema_version = 2
+    required_keys = ("name", "data")
+    optional_keys = ("meta",)
+
+    def __init__(self, name: str, data: Any,
+                 meta: Optional[dict] = None) -> None:
+        self.name = name
+        self.data = data
+        self.meta = dict(meta or {})
+
+    @classmethod
+    def migrate_v1(cls, payload: dict) -> dict:
+        # v1 files *are* the raw benchmark payload (arbitrary keys):
+        # wrap them whole under "data"
+        return {"name": str(payload.get("figure")
+                            or payload.get("table") or ""),
+                "data": payload, "meta": {}}
+
+    def to_payload(self) -> dict:
+        return {"name": self.name, "data": self.data, "meta": self.meta}
+
+    @classmethod
+    def from_payload(cls, payload: dict) -> "BenchResultArtifact":
+        return cls(payload["name"], payload["data"],
+                   meta=payload.get("meta") or {})
+
+
+def save_bench_result(name: str, data: Any, path: str,
+                      meta: Optional[dict] = None) -> str:
+    return BenchResultArtifact(name, data, meta=meta).save(path)
+
+
+def load_bench_result(path: str) -> Any:
+    return BenchResultArtifact.load(path).data
+
+
+__all__ = [
+    "Artifact",
+    "ArtifactError",
+    "BenchResultArtifact",
+    "ColdStartStatsArtifact",
+    "ReportArtifact",
+    "TraceArtifact",
+    "as_report",
+    "load_bench_result",
+    "load_report",
+    "load_report_meta",
+    "load_stats",
+    "load_trace",
+    "save_bench_result",
+    "save_report",
+    "save_stats",
+    "save_trace",
+]

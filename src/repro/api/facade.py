@@ -1,0 +1,105 @@
+"""`SlimStart` — the one front door to the SLIMSTART workflow.
+
+The facade chains :mod:`repro.api.stages` over a single
+:class:`~repro.api.stages.RunContext`.  The two pipelines the seed repo
+wired by hand (``SlimstartPipeline`` / ``StaticPipeline``) are now just
+stage graphs::
+
+    SlimStart.profile_guided("graph_bfs").run()     # profile→analyze→optimize
+    SlimStart.static_baseline("graph_bfs").run()    # optimize(static) only
+
+and arbitrary graphs compose the same way::
+
+    SlimStart("graph_bfs", stages=[
+        ProfileStage(instances=2, invocations=80),
+        AnalyzeStage(),
+        OptimizeStage(),
+        WarmStage(n=5),                 # zygote + fork-pool measurement
+        ReplayStage(n_cold=5),          # re-measure speedup
+    ]).run()
+
+``run()`` returns the shared context: the versioned report artifact
+path, the optimized variant directory, per-stage results and timings.
+The ``python -m repro`` CLI is a thin shell over this class.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence
+
+from repro.api.stages import (
+    AnalyzeStage,
+    OptimizeStage,
+    ProfileStage,
+    ReplayStage,
+    RunContext,
+    Stage,
+    WarmStage,
+)
+from repro.core.profiler.utilization import AnalyzerConfig
+
+
+class SlimStart:
+    """Configurable stage-graph runner for one application."""
+
+    def __init__(self, app: str, root: Optional[str] = None, *,
+                 variant: str = "slimstart",
+                 stages: Optional[Sequence[Stage]] = None) -> None:
+        self.ctx = RunContext.for_app(app, root, variant=variant)
+        if stages is None:
+            stages = [ProfileStage(), AnalyzeStage(), OptimizeStage()]
+        self.stages: list[Stage] = list(stages)
+
+    # -------------------------------------------------------- composition
+    def add(self, stage: Stage) -> "SlimStart":
+        """Append a stage; returns self for chaining."""
+        self.stages.append(stage)
+        return self
+
+    # ---------------------------------------------------------- execution
+    def run(self) -> RunContext:
+        timings: dict[str, float] = {}
+        for stage in self.stages:
+            t0 = time.perf_counter()
+            stage.run(self.ctx)
+            timings[stage.name] = time.perf_counter() - t0
+        self.ctx.results["timings_s"] = timings
+        return self.ctx
+
+    # -------------------------------------------------------- constructors
+    @classmethod
+    def profile_guided(cls, app: str, root: Optional[str] = None, *,
+                       instances: int = 4, invocations: int = 150,
+                       config: Optional[AnalyzerConfig] = None,
+                       measure: bool = False,
+                       n_cold: int = 5) -> "SlimStart":
+        """The paper's tool: profile → analyze → optimize
+        (→ re-measure when ``measure``)."""
+        stages: list[Stage] = [
+            ProfileStage(instances=instances, invocations=invocations),
+            AnalyzeStage(config=config),
+            OptimizeStage(mode="profile"),
+        ]
+        if measure:
+            stages.append(ReplayStage(n_cold=n_cold))
+        return cls(app, root, stages=stages)
+
+    @classmethod
+    def static_baseline(cls, app: str, root: Optional[str] = None, *,
+                        variant: str = "static") -> "SlimStart":
+        """FaaSLight-style static-reachability baseline (no profiling)."""
+        return cls(app, root, variant=variant,
+                   stages=[OptimizeStage(mode="static")])
+
+    @classmethod
+    def warm_pool(cls, app: str, root: Optional[str] = None, *,
+                  instances: int = 4, invocations: int = 150,
+                  n: int = 5) -> "SlimStart":
+        """Profile → analyze → boot a hot-set zygote and measure
+        fork-pool starts (no source rewrite)."""
+        return cls(app, root, stages=[
+            ProfileStage(instances=instances, invocations=invocations),
+            AnalyzeStage(),
+            WarmStage(n=n),
+        ])

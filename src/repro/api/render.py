@@ -1,0 +1,29 @@
+"""Small text-rendering helpers shared by the CLI and the benchmarks.
+
+One implementation of the column-aligned table every surface prints —
+``benchmarks/common.py`` re-exports these so the bench scripts and
+``python -m repro`` cannot drift apart.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+
+def fmt_cell(v: object) -> str:
+    if isinstance(v, float):
+        return f"{v:.2f}"
+    return str(v)
+
+
+def table(rows: Sequence[dict], cols: Sequence[str],
+          title: str = "") -> str:
+    """Render list-of-dict ``rows`` as a column-aligned text table."""
+    out = [f"== {title} =="] if title else []
+    widths = {c: max(len(c), *(len(fmt_cell(r.get(c))) for r in rows))
+              for c in cols} if rows else {c: len(c) for c in cols}
+    out.append("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        out.append("  ".join(fmt_cell(r.get(c)).ljust(widths[c])
+                             for c in cols))
+    return "\n".join(out)

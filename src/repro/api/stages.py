@@ -1,0 +1,386 @@
+"""Composable pipeline stages for the SLIMSTART workflow.
+
+The paper's Fig. 4 loop — deploy → profile → analyze → optimize →
+re-measure — plus the warm-pool extensions become five reusable stages
+over one shared :class:`RunContext`:
+
+    ProfileStage   run N profiled cold instances into the sink
+    AnalyzeStage   merge shards → OptimizationReport (saved as a
+                   versioned artifact, see :mod:`repro.api.artifacts`)
+    OptimizeStage  AST deferred-import rewrite of a fresh deployment
+                   variant (profile-guided or static-reachability)
+    WarmStage      boot a profile-guided zygote and measure fork-pool
+                   starts against it
+    ReplayStage    re-measure baseline vs optimized cold starts, or
+                   replay an invocation trace through a real zygote
+
+A stage is anything with a ``name`` and ``run(ctx)`` (see
+:class:`Stage`); the :class:`~repro.api.facade.SlimStart` facade chains
+them.  The module-level helpers (``profile_app``, ``analyze_sink``,
+``apply_defer_targets``, ...) are the stage bodies, importable on their
+own — ``repro.benchsuite.pipeline`` re-exports them for legacy callers.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import statistics
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional, Protocol, runtime_checkable
+
+from repro.benchsuite.genlibs import build_suite
+from repro.benchsuite.harness import (
+    ColdStartStats,
+    measure_cold_starts,
+    measure_pool_starts,
+    run_instance,
+)
+from repro.core.optimizer.ast_transform import optimize_file, restore_file
+from repro.core.optimizer.static_baseline import StaticReachability
+from repro.core.profiler.cct import CCT
+from repro.core.profiler.collector import read_shards
+from repro.core.profiler.import_timer import ImportTimer
+from repro.core.profiler.report import OptimizationReport
+from repro.core.profiler.utilization import (
+    AnalyzerConfig,
+    ModuleMapper,
+    UtilizationAnalyzer,
+)
+
+
+# ---------------------------------------------------------------------------
+# Shared context
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RunContext:
+    """Everything the stages read and write for one app's workflow.
+
+    Paths follow the benchsuite layout: the deployed baseline lives in
+    ``<root>/apps/<app>``, profile shards in ``<root>/profiles/<app>``,
+    the versioned report artifact in ``<root>/reports/<app>.json`` and
+    the optimized deployment copy in ``<root>/variants/<app>/<variant>``.
+    """
+
+    app: str
+    root: str
+    variant: str = "slimstart"
+    app_dir: str = ""
+    sink: str = ""
+    report_path: str = ""
+    variant_dir: str = ""
+    report: Optional[OptimizationReport] = None
+    apply_summary: dict = field(default_factory=dict)
+    stats: dict[str, ColdStartStats] = field(default_factory=dict)
+    results: dict[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        self.app_dir = self.app_dir or os.path.join(
+            self.root, "apps", self.app)
+        self.sink = self.sink or os.path.join(
+            self.root, "profiles", self.app)
+        self.report_path = self.report_path or os.path.join(
+            self.root, "reports", f"{self.app}.json")
+        self.variant_dir = self.variant_dir or os.path.join(
+            self.root, "variants", self.app, self.variant)
+
+    @classmethod
+    def for_app(cls, app: str, root: Optional[str] = None,
+                variant: str = "slimstart") -> "RunContext":
+        return cls(app=app, root=root or build_suite(), variant=variant)
+
+    def require_report(self) -> OptimizationReport:
+        """The in-memory report, loading the saved artifact on demand."""
+        if self.report is None:
+            from repro.api.artifacts import load_report
+            if not os.path.exists(self.report_path):
+                raise FileNotFoundError(
+                    f"no report for {self.app!r}: run ProfileStage + "
+                    f"AnalyzeStage first (looked in {self.report_path})")
+            self.report = load_report(self.report_path)
+        return self.report
+
+
+@runtime_checkable
+class Stage(Protocol):
+    """One step of the workflow: mutate the context, record results."""
+
+    name: str
+
+    def run(self, ctx: RunContext) -> None: ...
+
+
+# ---------------------------------------------------------------------------
+# Profiling + analysis helpers (stage bodies)
+# ---------------------------------------------------------------------------
+
+def profile_app(app_dir: str, sink: str, *, instances: int = 4,
+                invocations: int = 150, seed0: int = 1000,
+                sample_interval: float = 0.002) -> None:
+    """Run ``instances`` profiled cold instances (sample aggregation
+    across invocations, paper TC-1 strategy 2)."""
+    os.makedirs(sink, exist_ok=True)
+    for i in range(instances):
+        run_instance(app_dir, invocations=invocations, seed=seed0 + i,
+                     profile=True, sink=sink,
+                     sample_interval=sample_interval)
+
+
+def _merge_import_timers(dicts: list[dict]) -> ImportTimer:
+    """Mean-merge per-module init times across instances."""
+    sums: dict[str, dict] = {}
+    counts: dict[str, int] = {}
+    for d in dicts:
+        for name, rec in d.items():
+            if name not in sums:
+                sums[name] = dict(rec)
+                counts[name] = 1
+            else:
+                sums[name]["self_s"] += rec["self_s"]
+                sums[name]["cumulative_s"] += rec["cumulative_s"]
+                counts[name] += 1
+    for name, rec in sums.items():
+        rec["self_s"] /= counts[name]
+        rec["cumulative_s"] /= counts[name]
+    return ImportTimer.from_dict(sums)
+
+
+def analyze_sink(app_name: str, sink: str, libs_dir: str,
+                 config: AnalyzerConfig | None = None) -> OptimizationReport:
+    """Merge profile shards and produce the optimization report."""
+    records = [r for r in read_shards(sink) if r.get("app")]
+    if not records:
+        raise RuntimeError(f"no profile shards in {sink}")
+    timer = _merge_import_timers([r["init_records"] for r in records])
+    cct = CCT()
+    for r in records:
+        cct.merge(CCT.from_dict(r["cct"]))
+    cct.escalate()
+    e2e = statistics.fmean(r["e2e_cold_s"] for r in records)
+    mapper = ModuleMapper((libs_dir,))
+    analyzer = UtilizationAnalyzer(timer, cct, mapper, e2e_s=e2e,
+                                   config=config)
+    return OptimizationReport.from_analyzer(app_name, analyzer)
+
+
+# ---------------------------------------------------------------------------
+# Deployment rewrite helpers (stage bodies)
+# ---------------------------------------------------------------------------
+
+def _deployment_py_files(deploy_dir: str):
+    libs_dir = os.path.join(deploy_dir, "libs")
+    yield os.path.join(deploy_dir, "handler.py"), "handler", False
+    for dirpath, _dirs, files in os.walk(libs_dir):
+        for fn in files:
+            if not fn.endswith(".py") or fn.endswith(".orig"):
+                continue
+            path = os.path.join(dirpath, fn)
+            rel = os.path.relpath(path, libs_dir)[:-3]
+            parts = rel.split(os.sep)
+            is_pkg = parts[-1] == "__init__"
+            if is_pkg:
+                parts = parts[:-1]
+            yield path, ".".join(parts), is_pkg
+
+
+def apply_defer_targets(deploy_dir: str,
+                        targets_by_module: dict[str, list[str]] | None = None,
+                        global_targets: list[str] | None = None) -> dict:
+    """Rewrite a deployment in place.
+
+    ``global_targets`` (SLIMSTART): every file is rewritten against the
+    full target list.  ``targets_by_module`` (static baseline): each
+    module only defers its own provably-dead imports.
+    """
+    summary = {"files_changed": 0, "deferred": 0, "skipped": 0}
+    for path, module_name, is_pkg in _deployment_py_files(deploy_dir):
+        if global_targets is not None:
+            targets = global_targets
+        else:
+            targets = (targets_by_module or {}).get(module_name, [])
+        if not targets:
+            continue
+        res = optimize_file(path, targets, module_name=module_name)
+        if res.changed:
+            summary["files_changed"] += 1
+        summary["deferred"] += len(res.deferred)
+        summary["skipped"] += len(res.skipped)
+    return summary
+
+
+def fresh_variant(base_dir: str, variant_dir: str) -> str:
+    """(Re)copy the deployed baseline into a variant directory."""
+    if os.path.isdir(variant_dir):
+        shutil.rmtree(variant_dir)
+    os.makedirs(os.path.dirname(variant_dir), exist_ok=True)
+    shutil.copytree(base_dir, variant_dir)
+    return variant_dir
+
+
+def restore_deployment(deploy_dir: str) -> dict:
+    """Undo :func:`apply_defer_targets`: restore every ``.orig`` backup
+    under ``deploy_dir`` (handler + vendored libs)."""
+    restored = 0
+    for dirpath, _dirs, files in os.walk(deploy_dir):
+        for fn in files:
+            if fn.endswith(".orig"):
+                if restore_file(os.path.join(dirpath, fn[:-5])):
+                    restored += 1
+    return {"restored": restored}
+
+
+def static_defer_targets(app_dir: str) -> dict[str, list[str]]:
+    """FaaSLight-style static reachability defer set (per module)."""
+    libs_dir = os.path.join(app_dir, "libs")
+    static = StaticReachability([libs_dir])
+    static.add_module(os.path.join(app_dir, "handler.py"), "handler")
+    return static.unreachable_imports("handler")
+
+
+# ---------------------------------------------------------------------------
+# Stages
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ProfileStage:
+    """Run profiled cold instances into the context's sink."""
+
+    instances: int = 4
+    invocations: int = 150
+    seed0: int = 1000
+    sample_interval: float = 0.002
+    fresh: bool = True
+    name: str = "profile"
+
+    def run(self, ctx: RunContext) -> None:
+        if self.fresh and os.path.isdir(ctx.sink):
+            shutil.rmtree(ctx.sink)
+        profile_app(ctx.app_dir, ctx.sink, instances=self.instances,
+                    invocations=self.invocations, seed0=self.seed0,
+                    sample_interval=self.sample_interval)
+        ctx.results[self.name] = {"instances": self.instances,
+                                  "invocations": self.invocations,
+                                  "sink": ctx.sink}
+
+
+@dataclass
+class AnalyzeStage:
+    """Merge profile shards into the report; save the versioned artifact."""
+
+    config: Optional[AnalyzerConfig] = None
+    save: bool = True
+    name: str = "analyze"
+
+    def run(self, ctx: RunContext) -> None:
+        libs_dir = os.path.join(ctx.app_dir, "libs")
+        ctx.report = analyze_sink(ctx.app, ctx.sink, libs_dir,
+                                  config=self.config)
+        out = {"defer_targets": list(ctx.report.defer_targets),
+               "qualifies": ctx.report.qualifies}
+        if self.save:
+            from repro.api.artifacts import save_report
+            meta = dict(ctx.results.get("profile") or {})
+            meta.pop("sink", None)
+            save_report(ctx.report, ctx.report_path, meta=meta)
+            out["report_path"] = ctx.report_path
+        ctx.results[self.name] = out
+
+
+@dataclass
+class OptimizeStage:
+    """Apply deferred-import rewrites to a fresh deployment variant.
+
+    ``mode="profile"`` uses the report's defer targets (the paper's
+    tool); ``mode="static"`` uses FaaSLight-style static reachability
+    and needs no profile at all.
+    """
+
+    mode: str = "profile"
+    name: str = "optimize"
+
+    def run(self, ctx: RunContext) -> None:
+        if self.mode not in ("profile", "static"):
+            raise ValueError(f"unknown OptimizeStage mode {self.mode!r}")
+        fresh_variant(ctx.app_dir, ctx.variant_dir)
+        if self.mode == "static":
+            ctx.apply_summary = apply_defer_targets(
+                ctx.variant_dir,
+                targets_by_module=static_defer_targets(ctx.app_dir))
+        else:
+            report = ctx.require_report()
+            ctx.apply_summary = apply_defer_targets(
+                ctx.variant_dir, global_targets=report.defer_targets)
+        ctx.results[self.name] = {"mode": self.mode,
+                                  "variant_dir": ctx.variant_dir,
+                                  **ctx.apply_summary}
+
+
+@dataclass
+class WarmStage:
+    """Boot a profile-guided zygote; measure fork-pool starts from it."""
+
+    n: int = 5
+    invocations: int = 1
+    use_variant: bool = False
+    name: str = "warm"
+
+    def run(self, ctx: RunContext) -> None:
+        from repro.pool.policies import hot_set_from_report
+        report = ctx.require_report()
+        app_dir = (ctx.variant_dir if self.use_variant
+                   and os.path.isdir(ctx.variant_dir) else ctx.app_dir)
+        stats = measure_pool_starts(
+            app_dir, n=self.n, invocations=self.invocations,
+            preload=hot_set_from_report(report))
+        ctx.stats["pool"] = stats
+        ctx.results[self.name] = stats.summary()
+
+
+@dataclass
+class ReplayStage:
+    """Re-measure the optimization (paper's last Fig. 4 arrow).
+
+    Without a trace: ``n_cold`` fresh cold starts of the baseline and
+    the optimized variant, recording the measured init/e2e speedups.
+    With a trace (a :class:`repro.pool.trace.Trace`): replay it through
+    a real single-app :class:`~repro.pool.fleet.ZygoteFleet` backed by
+    the optimized variant, recording pool vs cold dispatch rows.
+    """
+
+    n_cold: int = 5
+    invocations: int = 1
+    trace: Optional[Any] = None
+    limit: Optional[int] = None
+    name: str = "replay"
+
+    def run(self, ctx: RunContext) -> None:
+        if self.trace is not None:
+            self._replay_trace(ctx)
+            return
+        base = measure_cold_starts(ctx.app_dir, n=self.n_cold,
+                                   invocations=self.invocations)
+        target = (ctx.variant_dir if os.path.isdir(ctx.variant_dir)
+                  else ctx.app_dir)
+        opt = measure_cold_starts(target, n=self.n_cold,
+                                  invocations=self.invocations)
+        ctx.stats["baseline"] = base
+        ctx.stats["optimized"] = opt
+        ctx.results[self.name] = {
+            "init_speedup": base.init_mean / max(opt.init_mean, 1e-9),
+            "e2e_speedup": base.e2e_mean / max(opt.e2e_mean, 1e-9),
+            "base_init_ms": base.init_mean,
+            "opt_init_ms": opt.init_mean,
+        }
+
+    def _replay_trace(self, ctx: RunContext) -> None:
+        from repro.pool.fleet import ZygoteFleet
+        target = (ctx.variant_dir if os.path.isdir(ctx.variant_dir)
+                  else ctx.app_dir)
+        reports = {}
+        if ctx.report is not None or os.path.exists(ctx.report_path):
+            reports[ctx.app] = ctx.require_report()
+        with ZygoteFleet({ctx.app: target}, reports=reports) as fleet:
+            rows = fleet.replay(self.trace, limit=self.limit)
+        ctx.results[self.name] = {"trace": self.trace.name, "rows": rows}

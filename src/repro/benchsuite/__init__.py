@@ -16,8 +16,9 @@ structurally equivalent suite:
   profiler attached);
 * ``harness``  — spawns fresh subprocesses per cold start, aggregates
   distributions (mean + p99);
-* ``pipeline`` — the full SLIMSTART loop (profile → analyze → optimize →
-  re-measure) and the FaaSLight-style static baseline loop;
+* ``pipeline`` — deprecated shims over :mod:`repro.api` (the stage-based
+  ``SlimStart`` facade now owns the profile → analyze → optimize →
+  re-measure loop and the FaaSLight-style static baseline);
 * ``workload`` — skewed and time-varying handler-invocation distributions
   (paper Fig. 3 / Fig. 10).
 """

@@ -1,151 +1,39 @@
-"""End-to-end SLIMSTART and FaaSLight-baseline pipelines.
+"""Legacy pipeline entry points — thin shims over :mod:`repro.api`.
 
-SLIMSTART flow (paper Fig. 4):
+The SLIMSTART flow (paper Fig. 4) now lives in the stage-based public
+API: :class:`repro.api.SlimStart` chains ``ProfileStage → AnalyzeStage
+→ OptimizeStage`` (and optionally ``WarmStage`` / ``ReplayStage``) over
+one :class:`~repro.api.stages.RunContext`.  This module keeps the seed
+repo's names importable:
 
-    deploy (baseline apps/<app>)                 # cold-start measurable
-      -> profile: N instances x M invocations    # runner --profile
-      -> analyze: merge shards, U(L), findings   # UtilizationAnalyzer
-      -> optimize: AST deferred imports          # variants/<app>/slimstart
-      -> re-measure
+* the helper functions (``profile_app``, ``analyze_sink``,
+  ``apply_defer_targets``) are re-exported from
+  :mod:`repro.api.stages` unchanged;
+* :class:`SlimstartPipeline` / :class:`StaticPipeline` are deprecated
+  wrappers that emit a :class:`DeprecationWarning` and delegate to the
+  facade, preserving their old constructor and ``run()`` signatures and
+  the :class:`PipelineResult` return shape.
 
-Static (FaaSLight-style) flow: same deploy + same AST actuator, but the
-defer targets come from static reachability instead of runtime profiles,
-so workload-dependent libraries survive (paper Observation 2).
+New code should use ``repro.api`` (or ``python -m repro``) directly.
 """
 
 from __future__ import annotations
 
-import json
-import os
-import shutil
-import statistics
+import warnings
 from dataclasses import dataclass
 from typing import Optional
 
-from repro.benchsuite.genlibs import build_suite, suite_root
-from repro.benchsuite.harness import run_instance
-from repro.core.optimizer.ast_transform import optimize_file
-from repro.core.optimizer.static_baseline import StaticReachability
-from repro.core.profiler.cct import CCT
-from repro.core.profiler.collector import read_shards
-from repro.core.profiler.import_timer import ImportTimer
-from repro.core.profiler.report import OptimizationReport
-from repro.core.profiler.utilization import (
-    AnalyzerConfig,
-    ModuleMapper,
-    UtilizationAnalyzer,
+# Re-exports for legacy callers; the implementations moved to repro.api.
+from repro.api.stages import (  # noqa: F401
+    _merge_import_timers,
+    analyze_sink,
+    apply_defer_targets,
+    fresh_variant as _fresh_variant,
+    profile_app,
 )
+from repro.core.profiler.report import OptimizationReport
+from repro.core.profiler.utilization import AnalyzerConfig
 
-
-# ---------------------------------------------------------------------------
-# Profiling + analysis
-# ---------------------------------------------------------------------------
-
-def profile_app(app_dir: str, sink: str, *, instances: int = 4,
-                invocations: int = 150, seed0: int = 1000,
-                sample_interval: float = 0.002) -> None:
-    """Run ``instances`` profiled cold instances (sample aggregation
-    across invocations, paper TC-1 strategy 2)."""
-    os.makedirs(sink, exist_ok=True)
-    for i in range(instances):
-        run_instance(app_dir, invocations=invocations, seed=seed0 + i,
-                     profile=True, sink=sink,
-                     sample_interval=sample_interval)
-
-
-def _merge_import_timers(dicts: list[dict]) -> ImportTimer:
-    """Mean-merge per-module init times across instances."""
-    sums: dict[str, dict] = {}
-    counts: dict[str, int] = {}
-    for d in dicts:
-        for name, rec in d.items():
-            if name not in sums:
-                sums[name] = dict(rec)
-                counts[name] = 1
-            else:
-                sums[name]["self_s"] += rec["self_s"]
-                sums[name]["cumulative_s"] += rec["cumulative_s"]
-                counts[name] += 1
-    for name, rec in sums.items():
-        rec["self_s"] /= counts[name]
-        rec["cumulative_s"] /= counts[name]
-    return ImportTimer.from_dict(sums)
-
-
-def analyze_sink(app_name: str, sink: str, libs_dir: str,
-                 config: AnalyzerConfig | None = None) -> OptimizationReport:
-    """Merge profile shards and produce the optimization report."""
-    records = [r for r in read_shards(sink) if r.get("app")]
-    if not records:
-        raise RuntimeError(f"no profile shards in {sink}")
-    timer = _merge_import_timers([r["init_records"] for r in records])
-    cct = CCT()
-    for r in records:
-        cct.merge(CCT.from_dict(r["cct"]))
-    cct.escalate()
-    e2e = statistics.fmean(r["e2e_cold_s"] for r in records)
-    mapper = ModuleMapper((libs_dir,))
-    analyzer = UtilizationAnalyzer(timer, cct, mapper, e2e_s=e2e,
-                                   config=config)
-    return OptimizationReport.from_analyzer(app_name, analyzer)
-
-
-# ---------------------------------------------------------------------------
-# Applying optimizations to a deployment copy
-# ---------------------------------------------------------------------------
-
-def _deployment_py_files(deploy_dir: str):
-    libs_dir = os.path.join(deploy_dir, "libs")
-    yield os.path.join(deploy_dir, "handler.py"), "handler", False
-    for dirpath, _dirs, files in os.walk(libs_dir):
-        for fn in files:
-            if not fn.endswith(".py") or fn.endswith(".orig"):
-                continue
-            path = os.path.join(dirpath, fn)
-            rel = os.path.relpath(path, libs_dir)[:-3]
-            parts = rel.split(os.sep)
-            is_pkg = parts[-1] == "__init__"
-            if is_pkg:
-                parts = parts[:-1]
-            yield path, ".".join(parts), is_pkg
-
-
-def apply_defer_targets(deploy_dir: str,
-                        targets_by_module: dict[str, list[str]] | None = None,
-                        global_targets: list[str] | None = None) -> dict:
-    """Rewrite a deployment in place.
-
-    ``global_targets`` (SLIMSTART): every file is rewritten against the
-    full target list.  ``targets_by_module`` (static baseline): each
-    module only defers its own provably-dead imports.
-    """
-    summary = {"files_changed": 0, "deferred": 0, "skipped": 0}
-    for path, module_name, is_pkg in _deployment_py_files(deploy_dir):
-        if global_targets is not None:
-            targets = global_targets
-        else:
-            targets = (targets_by_module or {}).get(module_name, [])
-        if not targets:
-            continue
-        res = optimize_file(path, targets, module_name=module_name)
-        if res.changed:
-            summary["files_changed"] += 1
-        summary["deferred"] += len(res.deferred)
-        summary["skipped"] += len(res.skipped)
-    return summary
-
-
-def _fresh_variant(base_dir: str, variant_dir: str) -> str:
-    if os.path.isdir(variant_dir):
-        shutil.rmtree(variant_dir)
-    os.makedirs(os.path.dirname(variant_dir), exist_ok=True)
-    shutil.copytree(base_dir, variant_dir)
-    return variant_dir
-
-
-# ---------------------------------------------------------------------------
-# Pipelines
-# ---------------------------------------------------------------------------
 
 @dataclass
 class PipelineResult:
@@ -155,51 +43,62 @@ class PipelineResult:
     apply_summary: dict
 
 
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use {new} (see repro.api / "
+        f"`python -m repro`)", DeprecationWarning, stacklevel=3)
+
+
 class SlimstartPipeline:
-    """Profile-guided (dynamic) pipeline — the paper's tool."""
+    """Deprecated: use :meth:`repro.api.SlimStart.profile_guided`."""
 
     def __init__(self, app_name: str, root: str | None = None) -> None:
+        _deprecated("SlimstartPipeline", "SlimStart.profile_guided")
+        from repro.api import SlimStart
+        from repro.api.stages import RunContext
+        self._facade_cls = SlimStart
         self.app = app_name
-        self.root = root or build_suite()
-        self.app_dir = os.path.join(self.root, "apps", app_name)
-        self.sink = os.path.join(self.root, "profiles", app_name)
-        self.variant_dir = os.path.join(self.root, "variants", app_name,
-                                        "slimstart")
-        self.report_path = os.path.join(self.root, "reports",
-                                        f"{app_name}.json")
+        ctx = RunContext.for_app(app_name, root)
+        self.root = self._root = ctx.root
+        self.app_dir = ctx.app_dir
+        self.sink = ctx.sink
+        self.variant_dir = ctx.variant_dir
+        self.report_path = ctx.report_path
 
     def run(self, *, instances: int = 4, invocations: int = 150,
             config: AnalyzerConfig | None = None) -> PipelineResult:
-        if os.path.isdir(self.sink):
-            shutil.rmtree(self.sink)
-        profile_app(self.app_dir, self.sink, instances=instances,
-                    invocations=invocations)
-        libs_dir = os.path.join(self.app_dir, "libs")
-        report = analyze_sink(self.app, self.sink, libs_dir, config=config)
-        report.save(self.report_path)
-        _fresh_variant(self.app_dir, self.variant_dir)
-        summary = apply_defer_targets(self.variant_dir,
-                                      global_targets=report.defer_targets)
-        return PipelineResult(self.app, self.variant_dir, report, summary)
+        facade = self._facade_cls.profile_guided(
+            self.app, self._root, instances=instances,
+            invocations=invocations, config=config)
+        # honor path overrides callers made on the old attributes
+        facade.ctx.app_dir = self.app_dir
+        facade.ctx.sink = self.sink
+        facade.ctx.report_path = self.report_path
+        facade.ctx.variant_dir = self.variant_dir
+        ctx = facade.run()
+        return PipelineResult(ctx.app, ctx.variant_dir, ctx.report,
+                              ctx.apply_summary)
 
 
 class StaticPipeline:
-    """FaaSLight-style static baseline (paper §II-B comparison)."""
+    """Deprecated: use :meth:`repro.api.SlimStart.static_baseline`."""
 
     def __init__(self, app_name: str, root: str | None = None) -> None:
+        _deprecated("StaticPipeline", "SlimStart.static_baseline")
+        from repro.api import SlimStart
+        from repro.api.stages import RunContext
+        self._facade_cls = SlimStart
         self.app = app_name
-        self.root = root or build_suite()
-        self.app_dir = os.path.join(self.root, "apps", app_name)
-        self.variant_dir = os.path.join(self.root, "variants", app_name,
-                                        "static")
+        ctx = RunContext.for_app(app_name, root, variant="static")
+        self.root = self._root = ctx.root
+        self.app_dir = ctx.app_dir
+        self.variant_dir = ctx.variant_dir
 
     def run(self) -> PipelineResult:
-        libs_dir = os.path.join(self.app_dir, "libs")
-        static = StaticReachability([libs_dir])
-        static.add_module(os.path.join(self.app_dir, "handler.py"),
-                          "handler")
-        targets_by_module = static.unreachable_imports("handler")
-        _fresh_variant(self.app_dir, self.variant_dir)
-        summary = apply_defer_targets(self.variant_dir,
-                                      targets_by_module=targets_by_module)
-        return PipelineResult(self.app, self.variant_dir, None, summary)
+        facade = self._facade_cls.static_baseline(self.app, self._root)
+        # honor path overrides callers made on the old attributes
+        facade.ctx.app_dir = self.app_dir
+        facade.ctx.variant_dir = self.variant_dir
+        ctx = facade.run()
+        return PipelineResult(ctx.app, ctx.variant_dir, None,
+                              ctx.apply_summary)

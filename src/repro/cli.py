@@ -1,0 +1,413 @@
+"""``python -m repro`` — the SLIMSTART workflow as one CLI.
+
+The paper's pitch is CI/CD integration: one command a pipeline job can
+run per workload.  Every subcommand is a thin shell over
+:mod:`repro.api` (stages + versioned artifacts), so the CLI, the
+benchmarks and library callers share exactly one implementation:
+
+    profile APP        profile + analyze → versioned report artifact
+    report PATH        render a saved report artifact (Tables IV/V)
+    optimize APP       AST deferred-import rewrite → variant deployment
+    restore TARGET     undo an optimization from the .orig backups
+    pool serve         boot a profile-guided zygote, serve fork starts
+    fleet replay       replay a trace through the simulated fleet
+    ci-check APP       re-profile; exit 1 if the defer set diverged
+                       from the deployed report (the paper's CI gate)
+
+Exit codes: 0 ok / check passed, 1 ci-check divergence, 2 usage or
+artifact errors (bad/missing files, schema violations).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Optional, Sequence
+
+from repro.api import (
+    AnalyzeStage,
+    ArtifactError,
+    OptimizeStage,
+    ProfileStage,
+    ReplayStage,
+    ReportArtifact,
+    SlimStart,
+    load_report,
+    load_trace,
+    restore_deployment,
+)
+from repro.api.render import table
+from repro.benchsuite.genlibs import build_suite
+from repro.core.profiler.report import render_report
+
+
+def _resolve_root(args: argparse.Namespace) -> str:
+    """--root as given, else the (lazily generated) benchsuite root."""
+    return args.root or build_suite()
+
+
+def _print_rows(rows: Sequence[dict], cols: Sequence[str]) -> None:
+    if rows:
+        print(table(rows, list(cols)))
+
+
+# ---------------------------------------------------------------------------
+# Subcommands
+# ---------------------------------------------------------------------------
+
+def cmd_profile(args: argparse.Namespace) -> int:
+    root = _resolve_root(args)
+    facade = SlimStart(args.app, root, stages=[
+        ProfileStage(instances=args.instances,
+                     invocations=args.invocations),
+        AnalyzeStage(),
+    ])
+    if args.out:
+        facade.ctx.report_path = os.path.abspath(args.out)
+    ctx = facade.run()
+    if args.json:
+        print(json.dumps(ctx.results["analyze"], indent=2))
+    else:
+        print(render_report(ctx.report))
+        print(f"report artifact: {ctx.report_path}")
+    return 0
+
+
+def cmd_report(args: argparse.Namespace) -> int:
+    art = ReportArtifact.load(args.path)
+    if args.json:
+        print(json.dumps({"kind": art.kind,
+                          "schema_version": art.schema_version,
+                          **art.to_payload()}, indent=2))
+    else:
+        print(render_report(art.report))
+    return 0
+
+
+def cmd_optimize(args: argparse.Namespace) -> int:
+    root = _resolve_root(args)
+    if args.static:
+        if args.report:
+            print("optimize: --static uses static reachability; "
+                  "--report does not apply", file=sys.stderr)
+            return 2
+        facade = SlimStart.static_baseline(
+            args.app, root, variant=args.variant or "static")
+    else:
+        facade = SlimStart(args.app, root,
+                           variant=args.variant or "slimstart",
+                           stages=[OptimizeStage(mode="profile")])
+        if args.report:
+            facade.ctx.report_path = os.path.abspath(args.report)
+    if args.measure:
+        facade.add(ReplayStage(n_cold=args.n_cold))
+    ctx = facade.run()
+    out = {"variant_dir": ctx.variant_dir, **ctx.apply_summary}
+    if "replay" in ctx.results:
+        out["measured"] = {k: round(v, 3) if isinstance(v, float) else v
+                          for k, v in ctx.results["replay"].items()}
+    print(json.dumps(out, indent=2))
+    return 0
+
+
+def cmd_restore(args: argparse.Namespace) -> int:
+    target = args.target
+    if not os.path.isdir(target):
+        root = _resolve_root(args)
+        target = os.path.join(root, "variants", args.target, args.variant)
+        if not os.path.isdir(target):
+            print(f"restore: no such directory or app variant: "
+                  f"{args.target} (tried {target})", file=sys.stderr)
+            return 2
+    summary = restore_deployment(target)
+    print(json.dumps({"target": target, **summary}, indent=2))
+    return 0
+
+
+def cmd_pool_serve(args: argparse.Namespace) -> int:
+    from repro.pool.forkserver import ForkServer
+    from repro.pool.policies import hot_set_from_report
+    if args.app_dir:
+        app_dir = args.app_dir
+    else:
+        root = _resolve_root(args)
+        app_dir = os.path.join(root, "apps", args.app)
+    preload: list[str] = []
+    if args.report:
+        preload = hot_set_from_report(load_report(args.report))
+    rows = []
+    with ForkServer(app_dir, preload=preload) as fs:
+        print(f"zygote ready (pid {fs.ready.get('pid')}), preloaded: "
+              f"{fs.ready.get('preloaded') or '(bare)'}")
+        for i in range(args.requests):
+            m = fs.exec(invocations=args.invocations, seed=args.seed + i)
+            rows.append({"request": i, "init_ms": m["init_ms"],
+                         "e2e_ms": m["e2e_cold_ms"],
+                         "rss_mb": m["peak_rss_kb"] / 1024.0})
+    _print_rows(rows, ["request", "init_ms", "e2e_ms", "rss_mb"])
+    if rows:
+        mean = sum(r["init_ms"] for r in rows) / len(rows)
+        print(f"mean pool-start init: {mean:.1f} ms over {len(rows)} "
+              f"forked instances")
+    return 0
+
+
+def cmd_fleet_replay(args: argparse.Namespace) -> int:
+    from repro.pool.fleet import FleetManager
+    from repro.pool.policies import (
+        FixedSizePolicy, HistogramPolicy, IdleTimeoutPolicy,
+        ProfileGuidedPolicy,
+    )
+    from repro.pool.simulator import AppProfile
+    from repro.pool.trace import azure_synthetic_rows, trace_from_azure_rows
+
+    if args.trace:
+        trace = load_trace(args.trace)
+        apps = sorted({r.app for r in trace})
+    else:
+        apps = [a for a in args.apps.split(",") if a]
+        rows = azure_synthetic_rows(apps, minutes=args.minutes,
+                                    peak_rpm=args.peak_rpm,
+                                    seed=args.seed)
+        trace = trace_from_azure_rows(rows, name="azure-synthetic")
+
+    profiles = {app: AppProfile(app=app, cold_init_ms=args.cold_init_ms,
+                                warm_init_ms=args.warm_init_ms,
+                                invoke_ms=args.invoke_ms,
+                                rss_mb=args.rss_mb,
+                                zygote_rss_mb=args.zygote_rss_mb)
+                for app in apps}
+    if args.policy == "fixed":
+        policy = FixedSizePolicy(size=2)
+    elif args.policy == "histogram":
+        policy = HistogramPolicy()
+    elif args.policy == "profile":
+        policy = ProfileGuidedPolicy()
+        loaded = []
+        for app in apps:
+            path = os.path.join(args.reports_dir or "", f"{app}.json")
+            if args.reports_dir and os.path.exists(path):
+                policy.add_report(load_report(path))
+                loaded.append(app)
+        if args.reports_dir:
+            print(f"profile-guided: loaded report artifacts for "
+                  f"{loaded or 'no apps'}")
+    else:
+        policy = IdleTimeoutPolicy(timeout_s=args.idle_timeout_s)
+
+    summary = FleetManager(profiles, policy,
+                           budget_mb=args.budget_mb).replay(trace)
+    print(json.dumps(summary.summary(), indent=2))
+    _print_rows(summary.app_rows(),
+                ["app", "requests", "cold_starts", "cold_ratio",
+                 "p50_ms", "p99_ms", "max_instances"])
+    return 0
+
+
+def cmd_ci_check(args: argparse.Namespace) -> int:
+    """The paper's CI/CD gate: does a fresh profile still agree with
+    the deployed optimization?
+
+    The profiler samples, so a package sitting exactly on the
+    utilization threshold can flip between runs at small profiling
+    budgets.  ``--retries N`` demands *persistent* drift: a mismatch is
+    re-profiled up to N extra times and the check passes if any run
+    matches the deployed defer set.
+    """
+    deployed = load_report(args.deployed)
+    root = _resolve_root(args)
+    dep_set = sorted(deployed.defer_targets)
+    verdict: dict = {}
+    for attempt in range(args.retries + 1):
+        facade = SlimStart(args.app, root, stages=[
+            ProfileStage(instances=args.instances,
+                         invocations=args.invocations,
+                         seed0=1000 + 100 * attempt),
+            AnalyzeStage(save=bool(args.out)),
+        ])
+        if args.out:
+            facade.ctx.report_path = os.path.abspath(args.out)
+        ctx = facade.run()
+        new_set = sorted(ctx.report.defer_targets)
+        verdict = {
+            "app": args.app,
+            "attempt": attempt + 1,
+            "deployed_defer_targets": dep_set,
+            "fresh_defer_targets": new_set,
+            "newly_deferred": sorted(set(new_set) - set(dep_set)),
+            "no_longer_deferred": sorted(set(dep_set) - set(new_set)),
+            "match": dep_set == new_set,
+        }
+        if verdict["match"]:
+            break
+        if attempt < args.retries:
+            print(f"ci-check: defer set diverged on attempt "
+                  f"{attempt + 1}; re-profiling to rule out sampling "
+                  f"noise", file=sys.stderr)
+    print(json.dumps(verdict, indent=2))
+    if verdict["match"]:
+        print("ci-check: PASS — deployed defer set matches the fresh "
+              "profile")
+        return 0
+    print("ci-check: FAIL — workload drifted; re-run "
+          "`python -m repro optimize` and redeploy", file=sys.stderr)
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# Parser
+# ---------------------------------------------------------------------------
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro",
+        description="SLIMSTART profile-guided cold-start optimization")
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    def add_root(p: argparse.ArgumentParser) -> None:
+        p.add_argument("--root", default=None,
+                       help="benchsuite root (default: generated "
+                            ".benchsuite)")
+
+    def add_profiling(p: argparse.ArgumentParser) -> None:
+        p.add_argument("--instances", type=int, default=2,
+                       help="profiled cold instances (default 2)")
+        p.add_argument("--invocations", type=int, default=60,
+                       help="invocations per instance (default 60)")
+
+    p = sub.add_parser("profile",
+                       help="profile an app and save the report artifact")
+    p.add_argument("app")
+    add_root(p)
+    add_profiling(p)
+    p.add_argument("--out", default=None,
+                   help="report artifact path (default "
+                        "<root>/reports/<app>.json)")
+    p.add_argument("--json", action="store_true",
+                   help="machine-readable summary instead of the table")
+    p.set_defaults(func=cmd_profile)
+
+    p = sub.add_parser("report", help="render a saved report artifact")
+    p.add_argument("path")
+    p.add_argument("--json", action="store_true",
+                   help="dump the versioned payload as JSON")
+    p.set_defaults(func=cmd_report)
+
+    p = sub.add_parser("optimize",
+                       help="apply deferred imports to a variant copy")
+    p.add_argument("app")
+    add_root(p)
+    p.add_argument("--report", default=None,
+                   help="report artifact (default "
+                        "<root>/reports/<app>.json)")
+    p.add_argument("--static", action="store_true",
+                   help="FaaSLight-style static baseline (no profile)")
+    p.add_argument("--variant", default=None,
+                   help="variant name under <root>/variants/<app>/ "
+                        "(default: slimstart, or static with --static)")
+    p.add_argument("--measure", action="store_true",
+                   help="re-measure baseline vs optimized cold starts")
+    p.add_argument("--n-cold", type=int, default=3,
+                   help="cold starts per side for --measure")
+    p.set_defaults(func=cmd_optimize)
+
+    p = sub.add_parser("restore",
+                       help="undo an optimization (.orig backups)")
+    p.add_argument("target", help="deployment directory or app name")
+    add_root(p)
+    p.add_argument("--variant", default="slimstart")
+    p.set_defaults(func=cmd_restore)
+
+    pool = sub.add_parser("pool", help="warm-pool operations")
+    pool_sub = pool.add_subparsers(dest="pool_command", required=True)
+    p = pool_sub.add_parser("serve",
+                            help="boot a zygote and serve fork starts")
+    p.add_argument("app", nargs="?", default=None,
+                   help="benchsuite app name (or use --app-dir)")
+    p.add_argument("--app-dir", default=None,
+                   help="explicit deployed app directory")
+    add_root(p)
+    p.add_argument("--report", default=None,
+                   help="report artifact for the pre-import hot set")
+    p.add_argument("--requests", type=int, default=5)
+    p.add_argument("--invocations", type=int, default=1)
+    p.add_argument("--seed", type=int, default=100)
+    p.set_defaults(func=cmd_pool_serve)
+
+    fleet = sub.add_parser("fleet", help="multi-app fleet operations")
+    fleet_sub = fleet.add_subparsers(dest="fleet_command", required=True)
+    p = fleet_sub.add_parser("replay",
+                             help="replay a trace through the simulated "
+                                  "fleet")
+    p.add_argument("--trace", default=None,
+                   help="trace artifact JSON (default: synthetic "
+                        "Azure-style trace over --apps)")
+    p.add_argument("--apps", default="graph_bfs,sentiment_analysis_r,echo")
+    p.add_argument("--minutes", type=int, default=30)
+    p.add_argument("--peak-rpm", type=float, default=60.0)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--budget-mb", type=float, default=512.0)
+    p.add_argument("--policy", default="profile",
+                   choices=["fixed", "idle", "histogram", "profile"])
+    p.add_argument("--idle-timeout-s", type=float, default=600.0)
+    p.add_argument("--reports-dir", default=None,
+                   help="directory of per-app report artifacts for the "
+                        "profile-guided policy")
+    p.add_argument("--cold-init-ms", type=float, default=400.0)
+    p.add_argument("--warm-init-ms", type=float, default=40.0)
+    p.add_argument("--invoke-ms", type=float, default=30.0)
+    p.add_argument("--rss-mb", type=float, default=128.0)
+    p.add_argument("--zygote-rss-mb", type=float, default=96.0)
+    p.set_defaults(func=cmd_fleet_replay)
+
+    p = sub.add_parser("ci-check",
+                       help="re-profile and compare against the deployed "
+                            "report (exit 1 on drift)")
+    p.add_argument("app")
+    p.add_argument("--deployed", required=True,
+                   help="the report artifact the deployment was "
+                        "optimized from")
+    add_root(p)
+    add_profiling(p)
+    p.add_argument("--out", default=None,
+                   help="save the fresh report artifact here (for CI "
+                        "artifact upload)")
+    p.add_argument("--retries", type=int, default=0,
+                   help="re-profile a mismatch up to N times; fail "
+                        "only on persistent drift (default 0)")
+    p.set_defaults(func=cmd_ci_check)
+
+    return ap
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    if getattr(args, "func", None) is cmd_pool_serve \
+            and not (args.app or args.app_dir):
+        print("pool serve: need an app name or --app-dir",
+              file=sys.stderr)
+        return 2
+    try:
+        return args.func(args)
+    except ArtifactError as exc:
+        print(f"artifact error: {exc}", file=sys.stderr)
+        return 2
+    except FileNotFoundError as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
+    except KeyboardInterrupt:
+        return 130
+    except Exception as exc:
+        # exit code 1 is reserved for ci-check divergence; any other
+        # failure (broken profiling run, dead zygote, ...) must not be
+        # mistaken for workload drift by a CI wrapper
+        import traceback
+        traceback.print_exc()
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -8,10 +8,8 @@ automated code optimizer.
 
 from __future__ import annotations
 
-import json
-import os
+import warnings
 from dataclasses import dataclass, field
-from typing import Optional
 
 from repro.core.profiler.utilization import (
     InefficiencyFinding,
@@ -85,44 +83,26 @@ class OptimizationReport:
         }
 
     def save(self, path: str) -> None:
-        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        with open(path, "w") as fh:
-            json.dump(self.to_dict(), fh, indent=2)
+        """Deprecated shim: atomically writes the *versioned* artifact
+        (see :mod:`repro.api.artifacts`); prefer
+        :func:`repro.api.save_report`."""
+        warnings.warn(
+            "OptimizationReport.save is deprecated; use "
+            "repro.api.save_report", DeprecationWarning, stacklevel=2)
+        from repro.api.artifacts import save_report
+        save_report(self, path)
 
     @classmethod
     def load(cls, path: str) -> "OptimizationReport":
-        with open(path) as fh:
-            d = json.load(fh)
-        rep = cls(
-            application=d["application"],
-            e2e_s=d["e2e_s"],
-            total_init_s=d["total_init_s"],
-            qualifies=d["qualifies"],
-            defer_targets=list(d["defer_targets"]),
-        )
-        rep.stats = [
-            LibraryStats(
-                name=s["package"],
-                utilization=s["utilization"],
-                init_s=s["init_s"],
-                init_share=s["init_share"],
-                runtime_samples=s["runtime_samples"],
-                file=s["file"],
-            )
-            for s in d["stats"]
-        ]
-        rep.findings = [
-            InefficiencyFinding(
-                package=f["package"],
-                kind=f["kind"],
-                utilization=f["utilization"],
-                init_s=f["init_s"],
-                init_share=f["init_share"],
-                file=f["file"],
-            )
-            for f in d["findings"]
-        ]
-        return rep
+        """Deprecated shim: loads through the versioned artifact layer
+        (legacy v1 files migrate with a warning; schema violations
+        raise :class:`repro.api.ArtifactError` naming ``path``);
+        prefer :func:`repro.api.load_report`."""
+        warnings.warn(
+            "OptimizationReport.load is deprecated; use "
+            "repro.api.load_report", DeprecationWarning, stacklevel=2)
+        from repro.api.artifacts import load_report
+        return load_report(path)
 
 
 def render_report(report: OptimizationReport, top: int = 12) -> str:

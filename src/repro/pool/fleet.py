@@ -467,9 +467,10 @@ class ZygoteFleet:
     """One real fork-server zygote per app under a shared memory budget.
 
     ``apps`` maps app name -> deployed app directory.  ``reports``
-    (per-app :class:`OptimizationReport`) give each zygote its
-    profile-guided pre-import hot set; apps without a report boot bare
-    zygotes.  ``start`` boots zygotes in the given priority order while
+    (per-app :class:`OptimizationReport` objects or saved versioned
+    artifact paths, see :func:`repro.api.as_report`) give each zygote
+    its profile-guided pre-import hot set; apps without a report boot
+    bare zygotes.  ``start`` boots zygotes in the given priority order while
     *measured* zygote RSS fits ``budget_mb``; apps that don't fit are
     recorded in ``skipped`` and serve fresh-process cold starts.
     """
@@ -478,9 +479,12 @@ class ZygoteFleet:
                  budget_mb: Optional[float] = None,
                  reports: Optional[dict[str, OptimizationReport]] = None,
                  timeout_s: float = 180.0) -> None:
+        from repro.api.artifacts import as_report
         self.app_dirs = dict(apps)
         self.budget_mb = budget_mb
-        self.reports = dict(reports or {})
+        # each value may be the report object or a saved artifact path
+        self.reports = {app: as_report(rep)
+                        for app, rep in (reports or {}).items()}
         self.timeout_s = timeout_s
         self.servers: dict[str, ForkServer] = {}
         self.skipped: list[str] = []
@@ -588,11 +592,17 @@ class ZygoteFleet:
         return rows
 
     # ------------------------------------------------------ adaptive hook
-    def rewarm(self, report: OptimizationReport) -> dict:
+    def rewarm(self, report) -> dict:
         """``SlimStartController.rewarm_fn`` for a whole fleet: after a
         re-profile, re-preload the re-profiled app's zygote (rebooting
         it if it died).  An app the budget excluded stays excluded — a
-        re-profile is not a budget grant."""
+        re-profile is not a budget grant.
+
+        ``report`` is anything :func:`repro.api.as_report` accepts: the
+        :class:`OptimizationReport` itself (adaptive loop) or the path
+        of a saved versioned report artifact (CLI / CI redeploy)."""
+        from repro.api.artifacts import as_report
+        report = as_report(report)
         app = report.application
         if app not in self.app_dirs:
             raise KeyError(f"rewarm for unknown app {app!r}")

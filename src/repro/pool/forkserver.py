@@ -271,13 +271,17 @@ class ForkServer:
         return rep
 
     def rewarm(self, report) -> dict:
-        """Re-warm from a fresh OptimizationReport (adaptive loop
-        callback): preload the newly-hot packages.  A zygote that died
+        """Re-warm from a fresh report (adaptive loop callback):
+        preload the newly-hot packages.  ``report`` is anything
+        :func:`repro.api.as_report` accepts — the
+        :class:`~repro.core.profiler.report.OptimizationReport` itself
+        or the path of a saved versioned artifact.  A zygote that died
         since the last exec (OOM-killed, crashed handler fork taking it
         down) is booted fresh with the merged hot set — the adaptive
         loop doubles as the fleet's crash recovery."""
+        from repro.api.artifacts import as_report
         from repro.pool.policies import hot_set_from_report
-        hot = hot_set_from_report(report)
+        hot = hot_set_from_report(as_report(report))
         if not self.alive:
             merged = list(dict.fromkeys([*self.preload_modules, *hot]))
             # restart raises ForkServerError if the merged hot set fails

@@ -349,9 +349,17 @@ class EnginePool:
     def rewarm(self, report=None) -> dict:
         """``SlimStartController.rewarm_fn`` hook: after a re-profile,
         re-derive every warm engine's :class:`LoadPolicy` from its own
-        live utilization report and materialize the new hot set (the
-        Level-A ``report`` argument is accepted for signature
-        compatibility; Level-B utilization lives in the engines)."""
+        live utilization report and materialize the new hot set.
+
+        ``report`` takes anything :func:`repro.api.as_report` accepts
+        (an :class:`~repro.core.profiler.report.OptimizationReport` or
+        a saved versioned artifact path) for signature compatibility
+        with the Level-A hooks; Level-B utilization lives in the warm
+        engines themselves, so the artifact is validated but its
+        contents are not consulted."""
+        if report is not None:
+            from repro.api.artifacts import as_report
+            as_report(report)  # validate/normalize; Level-B ignores it
         from repro.serving.components import LoadPolicy
         out = {}
         for model, eng in self.warm.items():

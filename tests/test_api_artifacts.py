@@ -1,0 +1,236 @@
+"""Schema-versioned artifact layer: round-trips, golden v1 migration,
+error paths, and atomic writes (no subprocesses — fast tier)."""
+
+import json
+import os
+
+import pytest
+
+from repro.api import (
+    ArtifactError,
+    BenchResultArtifact,
+    ReportArtifact,
+    as_report,
+    load_any,
+    load_bench_result,
+    load_report,
+    load_report_meta,
+    load_stats,
+    load_trace,
+    peek,
+    save_bench_result,
+    save_report,
+    save_stats,
+    save_trace,
+)
+from repro.benchsuite.harness import ColdStartStats
+from repro.core.profiler.import_timer import ModuleInitRecord
+from repro.core.profiler.report import OptimizationReport
+from repro.core.profiler.utilization import (
+    InefficiencyFinding,
+    LibraryStats,
+)
+from repro.pool.trace import Request, Trace
+
+GOLDEN_V1 = os.path.join(os.path.dirname(__file__), "data", "artifacts",
+                         "optimization_report_v1.json")
+
+
+def make_report() -> OptimizationReport:
+    rep = OptimizationReport(application="test_app", e2e_s=0.3,
+                             total_init_s=0.2, qualifies=True,
+                             defer_targets=["libx.sub"])
+    rep.stats = [LibraryStats(name="libx", utilization=0.9, init_s=0.15,
+                              init_share=0.5, runtime_samples=20,
+                              file="libs/libx/__init__.py")]
+    rep.findings = [InefficiencyFinding(
+        package="libx.sub", kind="unused", utilization=0.0, init_s=0.05,
+        init_share=0.17, file="libs/libx/sub.py",
+        import_chain=[ModuleInitRecord(
+            name="libx.sub", filename="", importer_file="handler.py",
+            importer_lineno=3)])]
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# report round-trip + envelope
+# ---------------------------------------------------------------------------
+
+def test_report_roundtrip(tmp_path):
+    path = str(tmp_path / "rep.json")
+    save_report(make_report(), path, meta={"instances": 2})
+    kind, version = peek(path)
+    assert (kind, version) == ("optimization_report", 2)
+    rep = load_report(path)
+    assert rep.application == "test_app"
+    assert rep.defer_targets == ["libx.sub"]
+    assert rep.stats[0].name == "libx"
+    # call paths survive the round-trip (the v0 loader dropped them)
+    assert rep.findings[0].import_chain[0].importer_file == "handler.py"
+    assert load_report_meta(path) == {"instances": 2}
+
+
+def test_report_save_is_atomic_and_leaves_no_temp(tmp_path):
+    path = str(tmp_path / "rep.json")
+    save_report(make_report(), path)
+    good = open(path).read()
+    # a failing serialization must not clobber the good file
+    with pytest.raises(TypeError):
+        save_bench_result("x", {"bad": object()}, path)
+    assert open(path).read() == good
+    assert os.listdir(tmp_path) == ["rep.json"]  # no stray temp files
+
+
+def test_load_any_dispatch(tmp_path):
+    path = str(tmp_path / "rep.json")
+    save_report(make_report(), path)
+    art = load_any(path)
+    assert isinstance(art, ReportArtifact)
+    assert art.report.application == "test_app"
+
+
+def test_as_report_accepts_object_artifact_and_path(tmp_path):
+    rep = make_report()
+    assert as_report(rep) is rep
+    path = save_report(rep, str(tmp_path / "r.json"))
+    assert as_report(path).application == "test_app"
+    assert as_report(ReportArtifact(rep)) is rep
+    with pytest.raises(TypeError):
+        as_report(42)
+
+
+# ---------------------------------------------------------------------------
+# golden v1 -> v2 migration
+# ---------------------------------------------------------------------------
+
+def test_golden_v1_loads_with_deprecation_warning():
+    with pytest.warns(DeprecationWarning, match="unversioned"):
+        rep = load_report(GOLDEN_V1)
+    assert rep.application == "golden_app"
+    assert rep.defer_targets == ["fakelib_nltk.sem"]
+    assert [s.name for s in rep.stats] == ["fakelib_nltk",
+                                           "fakelib_nltk.sem"]
+    chain = rep.findings[0].import_chain
+    assert [r.name for r in chain] == ["fakelib_nltk", "fakelib_nltk.sem"]
+    assert chain[1].importer_lineno == 11
+
+
+def test_golden_v1_resave_upgrades_schema(tmp_path):
+    with pytest.warns(DeprecationWarning):
+        rep = load_report(GOLDEN_V1)
+    out = str(tmp_path / "upgraded.json")
+    save_report(rep, out)
+    assert peek(out) == ("optimization_report", 2)
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # no warning the second time
+        rep2 = load_report(out)
+    assert rep2.to_dict() == rep.to_dict()
+
+
+def test_deprecated_report_methods_still_work(tmp_path):
+    path = str(tmp_path / "r.json")
+    with pytest.warns(DeprecationWarning, match="save is deprecated"):
+        make_report().save(path)
+    with pytest.warns(DeprecationWarning, match="load is deprecated"):
+        rep = OptimizationReport.load(path)
+    assert rep.application == "test_app"
+
+
+# ---------------------------------------------------------------------------
+# error paths (satellite: clear errors with the offending path)
+# ---------------------------------------------------------------------------
+
+def _v1_payload() -> dict:
+    return json.load(open(GOLDEN_V1))
+
+
+def test_missing_key_raises_with_path(tmp_path):
+    bad = _v1_payload()
+    del bad["defer_targets"]
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps(bad))
+    with pytest.warns(DeprecationWarning), \
+            pytest.raises(ArtifactError, match="missing keys") as ei:
+        load_report(str(p))
+    assert str(p) in str(ei.value)
+    assert "defer_targets" in str(ei.value)
+
+
+def test_unknown_key_raises_with_path(tmp_path):
+    bad = _v1_payload()
+    bad["bogus_field"] = 1
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps(bad))
+    with pytest.warns(DeprecationWarning), \
+            pytest.raises(ArtifactError, match="unknown keys"):
+        load_report(str(p))
+
+
+def test_truncated_json_raises_artifact_error(tmp_path):
+    p = tmp_path / "trunc.json"
+    p.write_text('{"kind": "optimization_report", "schema_ver')
+    with pytest.raises(ArtifactError, match="truncated"):
+        load_report(str(p))
+
+
+def test_newer_schema_version_refused(tmp_path):
+    doc = {"kind": "optimization_report", "schema_version": 99,
+           **_v1_payload()}
+    p = tmp_path / "future.json"
+    p.write_text(json.dumps(doc))
+    with pytest.raises(ArtifactError, match="newer"):
+        load_report(str(p))
+
+
+def test_kind_mismatch_refused(tmp_path):
+    doc = {"kind": "trace", "schema_version": 1, **_v1_payload()}
+    p = tmp_path / "wrong.json"
+    p.write_text(json.dumps(doc))
+    with pytest.raises(ArtifactError, match="kind mismatch"):
+        load_report(str(p))
+
+
+def test_missing_file_raises_artifact_error(tmp_path):
+    with pytest.raises(ArtifactError, match="cannot read"):
+        load_report(str(tmp_path / "nope.json"))
+
+
+# ---------------------------------------------------------------------------
+# trace / stats / bench_result artifacts
+# ---------------------------------------------------------------------------
+
+def test_trace_roundtrip(tmp_path):
+    trace = Trace("t1", [Request(0.5, "appa", None),
+                         Request(1.25, "appb", "h2")], duration_s=10.0)
+    path = save_trace(trace, str(tmp_path / "t.json"), meta={"seed": 3})
+    assert peek(path) == ("trace", 1)
+    t2 = load_trace(path)
+    assert t2.name == "t1" and t2.duration_s == 10.0
+    assert t2.requests == trace.requests
+
+
+def test_stats_roundtrip(tmp_path):
+    stats = ColdStartStats(app="appa", n=2, init_ms=[10.0, 12.0],
+                           e2e_ms=[20.0, 22.0],
+                           peak_rss_kb=[1024.0, 2048.0])
+    path = save_stats(stats, str(tmp_path / "s.json"))
+    assert peek(path) == ("cold_start_stats", 1)
+    s2 = load_stats(path)
+    assert s2.app == "appa" and s2.init_ms == [10.0, 12.0]
+    assert s2.init_mean == pytest.approx(11.0)
+
+
+def test_bench_result_roundtrip_and_v1_migration(tmp_path):
+    path = str(tmp_path / "b.json")
+    save_bench_result("bench_x", {"rows": [1, 2]}, path)
+    assert peek(path) == ("bench_result", 2)
+    assert load_bench_result(path) == {"rows": [1, 2]}
+    # legacy raw payload (the seed's benchmarks/results format)
+    legacy = {"figure": "Fig. 1", "rows": [{"app": "a"}]}
+    p = tmp_path / "legacy.json"
+    p.write_text(json.dumps(legacy))
+    with pytest.warns(DeprecationWarning):
+        art = BenchResultArtifact.load(str(p))
+    assert art.data == legacy
+    assert art.name == "Fig. 1"

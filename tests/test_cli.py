@@ -1,0 +1,174 @@
+"""`python -m repro` CLI smoke tests.
+
+Fast tier: in-process ``repro.cli.main`` calls covering
+profile → report → optimize → restore and the ci-check gate on a
+generated benchsuite app (tiny profiling budgets).  Tests that spawn
+the CLI itself (or a zygote) as a subprocess are marked ``slow`` per
+the ROADMAP tiering rule.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.api import load_report, peek, save_report, save_trace
+from repro.benchsuite.genlibs import build_suite
+from repro.cli import main
+from repro.pool.trace import Request, Trace
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+
+@pytest.fixture(scope="module")
+def root(tmp_path_factory):
+    """An isolated suite root so CLI runs don't clobber .benchsuite."""
+    return build_suite(str(tmp_path_factory.mktemp("cli-suite")))
+
+
+def _deployment_files(deploy_dir):
+    out = {}
+    for dirpath, _dirs, files in os.walk(deploy_dir):
+        for fn in files:
+            if fn.endswith(".py"):
+                p = os.path.join(dirpath, fn)
+                out[os.path.relpath(p, deploy_dir)] = open(p).read()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fast tier: in-process CLI
+# ---------------------------------------------------------------------------
+
+def test_profile_report_optimize_restore(root, tmp_path, capsys):
+    out = str(tmp_path / "echo.json")
+    rc = main(["profile", "echo", "--root", root, "--instances", "1",
+               "--invocations", "10", "--out", out])
+    assert rc == 0
+    assert peek(out) == ("optimization_report", 2)
+    rep = load_report(out)
+    assert rep.application == "echo"
+
+    rc = main(["report", out])
+    assert rc == 0
+    assert "SLIMSTART Summary" in capsys.readouterr().out
+
+    rc = main(["report", out, "--json"])
+    assert rc == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["schema_version"] == 2
+
+    rc = main(["optimize", "echo", "--root", root, "--report", out])
+    assert rc == 0
+    summary = json.loads(capsys.readouterr().out)
+    assert os.path.isdir(summary["variant_dir"])
+
+    rc = main(["restore", "echo", "--root", root])
+    assert rc == 0
+
+
+def test_static_optimize_restore_roundtrip(root, capsys):
+    """optimize --static rewrites files; restore brings back the exact
+    original sources (the .orig round trip, deployment-wide)."""
+    app_dir = os.path.join(root, "apps", "graph_bfs")
+    baseline = _deployment_files(app_dir)
+    rc = main(["optimize", "graph_bfs", "--root", root, "--static"])
+    assert rc == 0
+    summary = json.loads(capsys.readouterr().out)
+    assert summary["deferred"] >= 1
+    variant = summary["variant_dir"]
+    changed = _deployment_files(variant)
+    assert changed != baseline  # the rewrite really happened
+
+    rc = main(["restore", variant])
+    assert rc == 0
+    restored = json.loads(capsys.readouterr().out)
+    assert restored["restored"] >= 1
+    assert _deployment_files(variant) == baseline  # exact round trip
+
+
+def test_ci_check_pass_then_drift(root, tmp_path, capsys):
+    deployed = str(tmp_path / "deployed.json")
+    rc = main(["profile", "echo", "--root", root, "--instances", "1",
+               "--invocations", "10", "--out", deployed, "--json"])
+    assert rc == 0
+    capsys.readouterr()
+
+    rc = main(["ci-check", "echo", "--root", root, "--deployed",
+               deployed, "--instances", "1", "--invocations", "10"])
+    assert rc == 0
+    assert "PASS" in capsys.readouterr().out
+
+    # simulate workload drift: the deployed report defers a package the
+    # fresh profile won't -> the CI gate must fail with exit code 1
+    rep = load_report(deployed)
+    rep.defer_targets = ["fakelib_pandas"]
+    save_report(rep, deployed)
+    rc = main(["ci-check", "echo", "--root", root, "--deployed",
+               deployed, "--instances", "1", "--invocations", "10"])
+    assert rc == 1
+    assert "no_longer_deferred" in capsys.readouterr().out
+
+    # --retries re-profiles a mismatch; persistent drift still fails
+    rc = main(["ci-check", "echo", "--root", root, "--deployed",
+               deployed, "--instances", "1", "--invocations", "10",
+               "--retries", "1"])
+    assert rc == 1
+    assert '"attempt": 2' in capsys.readouterr().out
+
+
+def test_fleet_replay_sim_and_trace_artifact(tmp_path, capsys):
+    rc = main(["fleet", "replay", "--minutes", "5", "--policy", "idle",
+               "--apps", "a,b"])
+    assert rc == 0
+    assert '"cold_starts"' in capsys.readouterr().out
+
+    trace = Trace("unit", [Request(0.0, "appx", None),
+                           Request(2.0, "appx", None)], duration_s=5.0)
+    tpath = save_trace(trace, str(tmp_path / "trace.json"))
+    rc = main(["fleet", "replay", "--trace", tpath, "--policy", "fixed"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert '"requests": 2' in out and "appx" in out
+
+
+def test_cli_error_exit_codes(root, tmp_path, capsys):
+    bad = tmp_path / "trunc.json"
+    bad.write_text('{"kind": "optimization_report", ')
+    assert main(["report", str(bad)]) == 2
+    assert main(["restore", "no_such_app", "--root", root]) == 2
+    assert main(["pool", "serve"]) == 2
+    # optimize without a saved report: clear failure, not a KeyError
+    assert main(["optimize", "graph_mst", "--root", root]) == 2
+    capsys.readouterr()
+
+
+# ---------------------------------------------------------------------------
+# slow tier: real subprocesses (zygote / module entry point)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_pool_serve_forks_instances(root, capsys):
+    rc = main(["pool", "serve", "echo", "--root", root,
+               "--requests", "2"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "zygote ready" in out
+    assert "mean pool-start init" in out
+
+
+@pytest.mark.slow
+def test_module_entrypoint_subprocess(root, tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = str(tmp_path / "echo.json")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro", "profile", "echo", "--root",
+         root, "--instances", "1", "--invocations", "5", "--out", out,
+         "--json"],
+        capture_output=True, text=True, env=env, timeout=180)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert peek(out) == ("optimization_report", 2)
