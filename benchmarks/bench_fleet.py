@@ -15,7 +15,12 @@ Three parts:
 2. **Simulate** — generate an Azure Functions-style trace (per-minute
    counts, heavy-tailed app popularity, diurnal modulation) over the
    measured apps and replay it under every keep-alive policy at the same
-   budget via :func:`repro.pool.fleet.fleet_sweep`.
+   budget via :func:`repro.pool.fleet.fleet_sweep` — once unbounded
+   (the headline cold-start-ratio claim) and once under the daemon's
+   bounded queues (``QueueConfig``), reporting shed rate and queue-wait
+   p99 alongside the cold-start ratio.  The bounded profile-guided run
+   is saved as a schema-versioned ``fleet_summary`` artifact
+   (``results/fleet_summary.json``, uploaded nightly).
 3. **Replay for real** — boot a :class:`ZygoteFleet` (one zygote per
    app under the budget) and push a slice of the same trace through
    ``dispatch``, reporting measured pool vs cold init latencies.
@@ -29,19 +34,22 @@ from __future__ import annotations
 import argparse
 import copy
 import json
+import math
 import os
 
-from repro.api import SlimStart
+from repro.api import SlimStart, save_fleet_summary
 from repro.benchsuite.genlibs import build_suite
 from repro.benchsuite.harness import measure_cold_starts, measure_pool_starts
-from repro.pool.fleet import ZygoteFleet, fleet_sweep
+from repro.pool.fleet import (
+    FleetManager, QueueConfig, ZygoteFleet, fleet_sweep,
+)
 from repro.pool.policies import default_policies, hot_set_from_report
 from repro.pool.simulator import AppProfile
 from repro.pool.trace import azure_synthetic_rows, trace_from_azure_rows
 
 from benchmarks.common import (
-    APP_SHORT, N_COLD, N_INSTANCES, N_INVOKE, QUICK, bench, save_result,
-    table,
+    APP_SHORT, N_COLD, N_INSTANCES, N_INVOKE, QUICK, RESULTS, bench,
+    save_result, table,
 )
 
 FLEET_APPS = ["graph_bfs", "sentiment_analysis_r", "graph_mst"]
@@ -151,6 +159,46 @@ def run(smoke: bool = False) -> dict:
     beats_idle = (pg.cold_start_ratio
                   < by_policy["idle-timeout"].cold_start_ratio)
 
+    # ------------------------------- part 2b: bounded queues (daemon mode)
+    # the same trace under the serve daemon's backpressure config:
+    # demand spawns stop at max_concurrency, overload queues (bounded)
+    # and sheds — the shed rate and queue-wait p99 are the cost of
+    # bounding memory that the unbounded sweep above never pays
+    queue_cfg = QueueConfig(depth=8, max_concurrency=2,
+                            shed_policy="reject-new")
+    queue_rows = []
+    queue_summaries = {}
+    for pol in default_policies(reports, rate_hint_per_s=mean_rate
+                                / max(len(apps), 1)):
+        s = FleetManager(profiles, copy.deepcopy(pol),
+                         budget_mb=budget_mb,
+                         queue=queue_cfg).replay(trace)
+        queue_summaries[s.policy] = s
+        queue_rows.append({
+            "policy": s.policy,
+            "requests": s.n_requests,
+            "served": s.served,
+            "cold_ratio": round(s.cold_start_ratio, 4),
+            "sheds": s.sheds,
+            "shed_rate": round(s.sheds / max(s.n_requests, 1), 4),
+            "queue_wait_p99_ms": round(s.queue_wait_p99_ms, 2)
+            if not math.isnan(s.queue_wait_p99_ms) else 0.0,
+            "p99_ms": round(s.p99_ms, 2),
+        })
+    print()
+    print(table(queue_rows, ["policy", "requests", "served",
+                             "cold_ratio", "sheds", "shed_rate",
+                             "queue_wait_p99_ms", "p99_ms"],
+                f"Bounded-queue sweep (depth={queue_cfg.depth}, "
+                f"max_concurrency={queue_cfg.max_concurrency}, "
+                f"{queue_cfg.shed_policy})"))
+    fleet_summary_path = save_fleet_summary(
+        queue_summaries["profile-guided"].artifact_payload(
+            source="bench"),
+        str(RESULTS / "fleet_summary.json"),
+        meta={"bench": "bench_fleet", "smoke": bool(smoke)})
+    print(f"fleet_summary artifact: {fleet_summary_path}")
+
     # ------------------------------------------------ part 3: real replay
     app_dirs = {a: os.path.join(root, "apps", a) for a in apps}
     with ZygoteFleet(app_dirs, budget_mb=budget_mb,
@@ -184,6 +232,8 @@ def run(smoke: bool = False) -> dict:
                            for a in apps}},
         "profile_rows": prof_rows,
         "sim_rows": sim_rows,
+        "queue_rows": queue_rows,
+        "queue_config": queue_cfg.to_dict(),
         "per_app_rows": app_rows,
         "real_boot": boot,
         "real_rows": real_rows,

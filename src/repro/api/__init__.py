@@ -30,15 +30,18 @@ from repro.api.artifact import (
 from repro.api.artifacts import (
     BenchResultArtifact,
     ColdStartStatsArtifact,
+    FleetSummaryArtifact,
     ReportArtifact,
     TraceArtifact,
     as_report,
     load_bench_result,
+    load_fleet_summary,
     load_report,
     load_report_meta,
     load_stats,
     load_trace,
     save_bench_result,
+    save_fleet_summary,
     save_report,
     save_stats,
     save_trace,
@@ -50,6 +53,7 @@ from repro.api.stages import (
     ProfileStage,
     ReplayStage,
     RunContext,
+    ServeStage,
     Stage,
     WarmStage,
     analyze_sink,
@@ -66,11 +70,13 @@ __all__ = [
     "ArtifactError",
     "BenchResultArtifact",
     "ColdStartStatsArtifact",
+    "FleetSummaryArtifact",
     "OptimizeStage",
     "ProfileStage",
     "ReplayStage",
     "ReportArtifact",
     "RunContext",
+    "ServeStage",
     "SlimStart",
     "Stage",
     "TraceArtifact",
@@ -82,6 +88,7 @@ __all__ = [
     "fresh_variant",
     "load_any",
     "load_bench_result",
+    "load_fleet_summary",
     "load_report",
     "load_report_meta",
     "load_stats",
@@ -91,6 +98,7 @@ __all__ = [
     "registered_kinds",
     "restore_deployment",
     "save_bench_result",
+    "save_fleet_summary",
     "save_report",
     "save_stats",
     "save_trace",

@@ -1,6 +1,6 @@
 """Concrete schema-versioned artifacts of the SLIMSTART workflow.
 
-Four kinds cover everything the stages exchange on disk:
+Five kinds cover everything the stages exchange on disk:
 
 ====================  ===========================  =======
 kind                  wraps                         latest
@@ -9,6 +9,7 @@ optimization_report   OptimizationReport            2
 trace                 repro.pool.trace.Trace        1
 cold_start_stats      ColdStartStats (harness)      1
 bench_result          benchmark payload dicts       2
+fleet_summary         fleet serve/replay rollups    1
 ====================  ===========================  =======
 
 ``optimization_report`` v1 is the seed repo's unversioned
@@ -268,20 +269,92 @@ def load_bench_result(path: str) -> Any:
     return BenchResultArtifact.load(path).data
 
 
+# ---------------------------------------------------------------------------
+# fleet_summary (v1)
+# ---------------------------------------------------------------------------
+
+class FleetSummaryArtifact(Artifact):
+    """Fleet-level rollup of one serve/replay run — the artifact both
+    ``python -m repro fleet serve`` (on drain/shutdown) and
+    ``fleet replay`` emit, and the nightly benchmark uploads.
+
+    The payload is flat: totals (arrivals vs served, cold/pool starts,
+    latency percentiles), backpressure accounting (``sheds`` — requests
+    dropped by the bounded queue, ``flushed`` — requests still queued
+    at drain, ``errors`` — real-mode dispatch failures, queue-wait
+    percentiles, the ``queue`` config that produced them), the
+    rewarm-tick count, and ``per_app`` breakdown rows.  Conservation:
+    ``requests == served + sheds + flushed + errors`` (``errors``
+    defaults to 0 when absent).  ``source`` names the producer
+    (``serve-sim`` / ``serve-real`` / ``replay-sim`` / ``replay-real``
+    / ``bench``).
+    """
+
+    kind = "fleet_summary"
+    schema_version = 1
+    required_keys = ("source", "requests", "served", "cold_starts",
+                     "cold_start_ratio", "p50_ms", "p99_ms", "sheds",
+                     "flushed", "queue_wait_p50_ms", "queue_wait_p99_ms",
+                     "per_app")
+    optional_keys = ("policy", "trace", "budget_mb", "duration_s",
+                     "pool_starts", "errors", "memory_gb_s",
+                     "rewarm_ticks", "queue", "zygotes", "skipped",
+                     "used_mb", "meta")
+
+    def __init__(self, payload: dict, meta: Optional[dict] = None) -> None:
+        self.data = dict(payload)
+        if meta is not None:
+            self.data["meta"] = {**self.data.get("meta", {}), **meta}
+
+    def to_payload(self) -> dict:
+        return dict(self.data)
+
+    def save(self, path: str) -> str:
+        # unlike the typed artifacts, this one wraps a raw payload
+        # dict, so a producer bug would otherwise only surface at load
+        # time on some other machine — validate at write time instead
+        self._validate_keys(path, self.to_payload())
+        return super().save(path)
+
+    @classmethod
+    def from_payload(cls, payload: dict) -> "FleetSummaryArtifact":
+        return cls(payload)
+
+    @property
+    def meta(self) -> dict:
+        return self.data.get("meta") or {}
+
+
+def save_fleet_summary(payload: dict, path: str,
+                       meta: Optional[dict] = None) -> str:
+    """Atomically save a ``fleet_summary`` payload (see
+    :meth:`repro.pool.fleet.FleetSummary.artifact_payload` and
+    :meth:`repro.pool.daemon.FleetDaemon.summary` for producers)."""
+    return FleetSummaryArtifact(payload, meta=meta).save(path)
+
+
+def load_fleet_summary(path: str) -> dict:
+    """Load a ``fleet_summary`` artifact; returns the payload dict."""
+    return FleetSummaryArtifact.load(path).data
+
+
 __all__ = [
     "Artifact",
     "ArtifactError",
     "BenchResultArtifact",
     "ColdStartStatsArtifact",
+    "FleetSummaryArtifact",
     "ReportArtifact",
     "TraceArtifact",
     "as_report",
     "load_bench_result",
+    "load_fleet_summary",
     "load_report",
     "load_report_meta",
     "load_stats",
     "load_trace",
     "save_bench_result",
+    "save_fleet_summary",
     "save_report",
     "save_stats",
     "save_trace",

@@ -2,12 +2,16 @@
 
 One implementation of the column-aligned table every surface prints —
 ``benchmarks/common.py`` re-exports these so the bench scripts and
-``python -m repro`` cannot drift apart.
+``python -m repro`` cannot drift apart.  Also home of the CLI-reference
+markdown generator behind ``python -m repro docs``: it walks the live
+argparse tree, so ``docs/cli.md`` can never drift from the real CLI
+(CI regenerates and diffs it).
 """
 
 from __future__ import annotations
 
-from typing import Sequence
+import argparse
+from typing import Iterator, Sequence
 
 
 def fmt_cell(v: object) -> str:
@@ -27,3 +31,93 @@ def table(rows: Sequence[dict], cols: Sequence[str],
         out.append("  ".join(fmt_cell(r.get(c)).ljust(widths[c])
                              for c in cols))
     return "\n".join(out)
+
+
+# ---------------------------------------------------------------------------
+# CLI reference generation (python -m repro docs)
+# ---------------------------------------------------------------------------
+
+def _subparser_actions(parser: argparse.ArgumentParser
+                       ) -> list[argparse._SubParsersAction]:
+    return [a for a in parser._actions
+            if isinstance(a, argparse._SubParsersAction)]
+
+
+def _walk_commands(parser: argparse.ArgumentParser, prefix: tuple[str, ...]
+                   = ()) -> Iterator[tuple[tuple[str, ...],
+                                           argparse.ArgumentParser, str]]:
+    """Yield ``(command path, parser, help)`` depth-first, in the order
+    subcommands were registered (deterministic: pure code order)."""
+    for spa in _subparser_actions(parser):
+        helps = {ca.dest: (ca.help or "") for ca in spa._choices_actions}
+        for name, sub in spa.choices.items():
+            path = prefix + (name,)
+            yield path, sub, helps.get(name, "")
+            yield from _walk_commands(sub, path)
+
+
+def _escape_md(text: str) -> str:
+    return (text or "").replace("|", "\\|").replace("\n", " ").strip()
+
+
+def _default_repr(action: argparse.Action) -> str:
+    if action.default is None or action.default is argparse.SUPPRESS:
+        return ""
+    if isinstance(action.default, bool):
+        return ""  # store_true flags: the default is the absence
+    return f"`{action.default}`"
+
+
+def _option_cell(action: argparse.Action) -> str:
+    opts = ", ".join(f"`{o}`" for o in action.option_strings)
+    if action.nargs == 0:
+        return opts
+    metavar = action.metavar or action.dest.upper()
+    return f"{opts} `{metavar}`"
+
+
+def cli_reference_markdown(parser: argparse.ArgumentParser) -> str:
+    """Render the whole subcommand tree as one markdown page."""
+    lines = [
+        "# `python -m repro` — CLI reference",
+        "",
+        "<!-- GENERATED FILE: regenerate with `python -m repro docs` "
+        "(CI fails on drift; see .github/workflows/ci.yml). -->",
+        "",
+        _escape_md(parser.description or ""),
+        "",
+        "Exit codes: `0` ok / check passed, `1` ci-check divergence, "
+        "`2` usage or artifact errors.",
+    ]
+    for path, sub, help_text in _walk_commands(parser):
+        cmd = " ".join(path)
+        lines += ["", f"## `python -m repro {cmd}`", ""]
+        desc = sub.description or help_text
+        if desc:
+            lines += [_escape_md(desc), ""]
+        positionals = [a for a in sub._actions
+                       if not a.option_strings
+                       and not isinstance(a, argparse._SubParsersAction)]
+        options = [a for a in sub._actions
+                   if a.option_strings and "-h" not in a.option_strings]
+        if positionals:
+            lines += ["| argument | description |", "|---|---|"]
+            for a in positionals:
+                name = a.metavar or a.dest
+                lines.append(f"| `{name}` | {_escape_md(a.help)} |")
+            lines.append("")
+        if options:
+            lines += ["| option | default | description |", "|---|---|---|"]
+            for a in options:
+                lines.append(f"| {_option_cell(a)} | {_default_repr(a)} "
+                             f"| {_escape_md(a.help)} |")
+            lines.append("")
+        spas = _subparser_actions(sub)
+        if spas:
+            subs = ", ".join(f"[`{cmd} {n}`](#python--m-repro-"
+                             f"{'-'.join(path + (n,))})"
+                             for spa in spas for n in spa.choices)
+            lines += [f"Subcommands: {subs}", ""]
+    while lines and lines[-1] == "":
+        lines.pop()
+    return "\n".join(lines) + "\n"

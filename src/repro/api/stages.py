@@ -13,6 +13,8 @@ over one shared :class:`RunContext`:
                    starts against it
     ReplayStage    re-measure baseline vs optimized cold starts, or
                    replay an invocation trace through a real zygote
+    ServeStage     drive the fleet daemon (bounded queues, rewarm
+                   timer) over a trace; emit a fleet_summary artifact
 
 A stage is anything with a ``name`` and ``run(ctx)`` (see
 :class:`Stage`); the :class:`~repro.api.facade.SlimStart` facade chains
@@ -384,3 +386,90 @@ class ReplayStage:
         with ZygoteFleet({ctx.app: target}, reports=reports) as fleet:
             rows = fleet.replay(self.trace, limit=self.limit)
         ctx.results[self.name] = {"trace": self.trace.name, "rows": rows}
+
+
+@dataclass
+class ServeStage:
+    """Serve a trace through the fleet daemon — the continuous loop
+    (bounded queues with backpressure, optional rewarm timer) run
+    one-shot inside a pipeline, emitting the same schema-versioned
+    ``fleet_summary`` artifact ``python -m repro fleet serve`` does.
+
+    ``sim=True`` drives a :class:`~repro.pool.fleet.FleetManager` from
+    the app's measured stats when earlier stages produced them
+    (``ctx.stats["baseline"]`` / ``ctx.stats["pool"]``), falling back
+    to generic latencies; ``sim=False`` boots a real single-app
+    :class:`~repro.pool.fleet.ZygoteFleet` on the optimized variant
+    (or the baseline deployment when no variant exists).
+    """
+
+    trace: Optional[Any] = None  # Trace object; None = synthetic poisson
+    sim: bool = True
+    queue_depth: int = 16
+    max_concurrency: int = 4
+    shed_policy: str = "reject-new"
+    rewarm_interval_s: float = 0.0
+    rate_per_s: float = 2.0
+    duration_s: float = 60.0
+    budget_mb: float = 512.0
+    save: bool = True
+    name: str = "serve"
+
+    def _sim_profile(self, ctx: RunContext):
+        from repro.pool.simulator import AppProfile
+        cold = ctx.stats.get("baseline") or ctx.stats.get("optimized")
+        pool = ctx.stats.get("pool")
+        if cold is not None:
+            return AppProfile.from_stats(cold, pool)
+        return AppProfile(app=ctx.app, cold_init_ms=400.0,
+                          warm_init_ms=40.0, invoke_ms=30.0,
+                          rss_mb=128.0, zygote_rss_mb=96.0)
+
+    def run(self, ctx: RunContext) -> None:
+        from repro.pool.daemon import (
+            FleetDaemon, RealFleetBackend, SimFleetBackend,
+        )
+        from repro.pool.fleet import FleetManager, QueueConfig, ZygoteFleet
+        from repro.pool.policies import ProfileGuidedPolicy
+        from repro.pool.trace import poisson_trace
+
+        trace = self.trace or poisson_trace(
+            ctx.app, rate_per_s=self.rate_per_s,
+            duration_s=self.duration_s, name="poisson")
+        queue = QueueConfig(depth=self.queue_depth,
+                            max_concurrency=self.max_concurrency,
+                            shed_policy=self.shed_policy)
+        have_report = (ctx.report is not None
+                       or os.path.exists(ctx.report_path))
+        if self.sim:
+            policy = ProfileGuidedPolicy()
+            if have_report:
+                policy.add_report(ctx.require_report())
+            manager = FleetManager({ctx.app: self._sim_profile(ctx)},
+                                   policy, budget_mb=self.budget_mb,
+                                   queue=queue)
+            backend = SimFleetBackend(
+                manager, reports_dir=os.path.dirname(ctx.report_path))
+        else:
+            target = (ctx.variant_dir if os.path.isdir(ctx.variant_dir)
+                      else ctx.app_dir)
+            reports = ({ctx.app: ctx.require_report()} if have_report
+                       else {})
+            fleet = ZygoteFleet({ctx.app: target},
+                                budget_mb=self.budget_mb,
+                                reports=reports)
+            backend = RealFleetBackend(
+                fleet, queue=queue,
+                reports_dir=os.path.dirname(ctx.report_path))
+        summary_path = None
+        if self.save:
+            summary_path = os.path.join(ctx.root, "fleet",
+                                        f"{ctx.app}.summary.json")
+        daemon = FleetDaemon(backend,
+                             rewarm_interval_s=self.rewarm_interval_s,
+                             summary_path=summary_path)
+        daemon.start(trace.name)
+        payload = daemon.run_trace(trace)
+        if summary_path:
+            payload["artifact_path"] = summary_path
+        ctx.results[self.name] = payload

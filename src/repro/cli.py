@@ -11,8 +11,14 @@ benchmarks and library callers share exactly one implementation:
     restore TARGET     undo an optimization from the .orig backups
     pool serve         boot a profile-guided zygote, serve fork starts
     fleet replay       replay a trace through the simulated fleet
+                       (--real: end-to-end over a live ZygoteFleet)
+    fleet serve        long-running daemon: bounded queues with
+                       backpressure, rewarm timer, SIGTERM drain,
+                       fleet_summary artifact on shutdown
     ci-check APP       re-profile; exit 1 if the defer set diverged
                        from the deployed report (the paper's CI gate)
+    docs               (re)generate docs/cli.md from this parser;
+                       --check exits 1 on drift (the CI docs gate)
 
 Exit codes: 0 ok / check passed, 1 ci-check divergence, 2 usage or
 artifact errors (bad/missing files, schema violations).
@@ -154,15 +160,10 @@ def cmd_pool_serve(args: argparse.Namespace) -> int:
     return 0
 
 
-def cmd_fleet_replay(args: argparse.Namespace) -> int:
-    from repro.pool.fleet import FleetManager
-    from repro.pool.policies import (
-        FixedSizePolicy, HistogramPolicy, IdleTimeoutPolicy,
-        ProfileGuidedPolicy,
-    )
-    from repro.pool.simulator import AppProfile
+def _fleet_trace(args: argparse.Namespace):
+    """The replay workload: a saved trace artifact or a synthetic
+    Azure-style one over ``--apps``.  Returns (trace, apps)."""
     from repro.pool.trace import azure_synthetic_rows, trace_from_azure_rows
-
     if args.trace:
         trace = load_trace(args.trace)
         apps = sorted({r.app for r in trace})
@@ -172,18 +173,19 @@ def cmd_fleet_replay(args: argparse.Namespace) -> int:
                                     peak_rpm=args.peak_rpm,
                                     seed=args.seed)
         trace = trace_from_azure_rows(rows, name="azure-synthetic")
+    return trace, apps
 
-    profiles = {app: AppProfile(app=app, cold_init_ms=args.cold_init_ms,
-                                warm_init_ms=args.warm_init_ms,
-                                invoke_ms=args.invoke_ms,
-                                rss_mb=args.rss_mb,
-                                zygote_rss_mb=args.zygote_rss_mb)
-                for app in apps}
+
+def _fleet_policy(args: argparse.Namespace, apps: Sequence[str]):
+    from repro.pool.policies import (
+        FixedSizePolicy, HistogramPolicy, IdleTimeoutPolicy,
+        ProfileGuidedPolicy,
+    )
     if args.policy == "fixed":
-        policy = FixedSizePolicy(size=2)
-    elif args.policy == "histogram":
-        policy = HistogramPolicy()
-    elif args.policy == "profile":
+        return FixedSizePolicy(size=2)
+    if args.policy == "histogram":
+        return HistogramPolicy()
+    if args.policy == "profile":
         policy = ProfileGuidedPolicy()
         loaded = []
         for app in apps:
@@ -193,16 +195,161 @@ def cmd_fleet_replay(args: argparse.Namespace) -> int:
                 loaded.append(app)
         if args.reports_dir:
             print(f"profile-guided: loaded report artifacts for "
-                  f"{loaded or 'no apps'}")
-    else:
-        policy = IdleTimeoutPolicy(timeout_s=args.idle_timeout_s)
+                  f"{loaded or 'no apps'}", file=sys.stderr)
+        return policy
+    return IdleTimeoutPolicy(timeout_s=args.idle_timeout_s)
 
-    summary = FleetManager(profiles, policy,
-                           budget_mb=args.budget_mb).replay(trace)
-    print(json.dumps(summary.summary(), indent=2))
-    _print_rows(summary.app_rows(),
-                ["app", "requests", "cold_starts", "cold_ratio",
-                 "p50_ms", "p99_ms", "max_instances"])
+
+def _fleet_profiles(args: argparse.Namespace, apps: Sequence[str]):
+    from repro.pool.simulator import AppProfile
+    return {app: AppProfile(app=app, cold_init_ms=args.cold_init_ms,
+                            warm_init_ms=args.warm_init_ms,
+                            invoke_ms=args.invoke_ms,
+                            rss_mb=args.rss_mb,
+                            zygote_rss_mb=args.zygote_rss_mb)
+            for app in apps}
+
+
+def _queue_config(args: argparse.Namespace):
+    from repro.pool.fleet import QueueConfig
+    return QueueConfig(depth=args.queue_depth,
+                       max_concurrency=args.max_concurrency,
+                       shed_policy=args.shed_policy)
+
+
+def _real_fleet(args: argparse.Namespace, apps: Sequence[str]):
+    """A (not yet started) ZygoteFleet over deployed benchsuite apps,
+    with per-app report artifacts from --reports-dir as preload sets."""
+    from repro.pool.fleet import ZygoteFleet
+    root = _resolve_root(args)
+    app_dirs = {}
+    for app in apps:
+        d = os.path.join(root, "apps", app)
+        if not os.path.isdir(d):
+            raise FileNotFoundError(f"no deployed app directory: {d}")
+        app_dirs[app] = d
+    reports = {}
+    for app in apps:
+        path = os.path.join(args.reports_dir or "", f"{app}.json")
+        if args.reports_dir and os.path.exists(path):
+            reports[app] = path  # as_report() resolves artifact paths
+    budget = args.budget_mb if args.budget_mb > 0 else None
+    return ZygoteFleet(app_dirs, budget_mb=budget, reports=reports)
+
+
+def cmd_fleet_replay(args: argparse.Namespace) -> int:
+    from repro.api.artifacts import save_fleet_summary
+    from repro.pool.fleet import FleetManager
+
+    trace, apps = _fleet_trace(args)
+    if args.real:
+        with _real_fleet(args, apps) as fleet:
+            rows = fleet.replay(trace, limit=args.limit)
+        payload = fleet.last_summary
+        print(json.dumps({k: v for k, v in payload.items()
+                          if k != "per_app"}, indent=2))
+        _print_rows(rows, ["app", "requests", "pool_starts",
+                           "cold_starts", "cold_ratio", "pool_init_ms",
+                           "cold_init_ms", "p99_ms"])
+    else:
+        queue = _queue_config(args) if args.queue_depth >= 0 else None
+        summary = FleetManager(_fleet_profiles(args, apps),
+                               _fleet_policy(args, apps),
+                               budget_mb=args.budget_mb,
+                               queue=queue).replay(trace)
+        payload = summary.artifact_payload(source="replay-sim")
+        print(json.dumps(summary.summary(), indent=2))
+        _print_rows(summary.app_rows(),
+                    ["app", "requests", "cold_starts", "cold_ratio",
+                     "p50_ms", "p99_ms", "max_instances", "sheds",
+                     "queue_wait_p99_ms"])
+    if args.out:
+        save_fleet_summary(payload, os.path.abspath(args.out))
+        print(f"fleet_summary artifact: {os.path.abspath(args.out)}")
+    return 0
+
+
+def cmd_fleet_serve(args: argparse.Namespace) -> int:
+    """The long-running daemon (see docs/daemon.md): bounded per-app
+    queues with backpressure, a rewarm timer re-loading deployed report
+    artifacts into the warm fleet, SIGTERM graceful drain, and a
+    ``fleet_summary`` artifact on the way out."""
+    import signal
+
+    from repro.pool.daemon import (
+        FleetDaemon, RealFleetBackend, SimFleetBackend,
+    )
+    from repro.pool.fleet import FleetManager
+
+    queue = _queue_config(args)
+    trace = None
+    if not args.stdin:
+        trace, apps = _fleet_trace(args)
+    else:
+        apps = [a for a in args.apps.split(",") if a]
+        if not apps:
+            print("fleet serve --stdin: need --apps", file=sys.stderr)
+            return 2
+
+    if args.sim:
+        manager = FleetManager(_fleet_profiles(args, apps),
+                               _fleet_policy(args, apps),
+                               budget_mb=args.budget_mb, queue=queue)
+        backend = SimFleetBackend(manager, reports_dir=args.reports_dir)
+    else:
+        backend = RealFleetBackend(_real_fleet(args, apps), queue=queue,
+                                   reports_dir=args.reports_dir)
+
+    daemon = FleetDaemon(backend,
+                         rewarm_interval_s=args.rewarm_interval_s,
+                         summary_path=(os.path.abspath(args.summary_out)
+                                       if args.summary_out else None),
+                         drain_timeout_s=args.drain_timeout_s)
+    signal.signal(signal.SIGTERM, daemon.request_shutdown)
+    signal.signal(signal.SIGINT, daemon.request_shutdown)
+
+    boot = daemon.start(trace.name if trace is not None else "live")
+    print(json.dumps({"ok": True, "event": "ready", **boot}),
+          file=sys.stderr, flush=True)
+    if args.stdin:
+        payload = daemon.run_stdin()
+    else:
+        payload = daemon.run_trace(trace, pace=args.pace)
+        print(json.dumps({k: v for k, v in payload.items()
+                          if k != "per_app"}, indent=2))
+        _print_rows(payload["per_app"],
+                    ["app", "requests", "cold_starts", "sheds",
+                     "flushed", "p99_ms", "queue_wait_p99_ms"])
+    if args.summary_out:
+        print(f"fleet_summary artifact: "
+              f"{os.path.abspath(args.summary_out)}", file=sys.stderr)
+    return 0
+
+
+def cmd_docs(args: argparse.Namespace) -> int:
+    """Generate (or verify) the committed CLI reference."""
+    from repro.api.render import cli_reference_markdown
+    generated = cli_reference_markdown(build_parser())
+    out = os.path.abspath(args.out)
+    if args.check:
+        try:
+            committed = open(out).read()
+        except OSError:
+            print(f"docs --check: {args.out} is missing; run "
+                  f"`python -m repro docs` and commit it",
+                  file=sys.stderr)
+            return 1
+        if committed != generated:
+            print(f"docs --check: {args.out} has drifted from the "
+                  f"argparse tree; run `python -m repro docs` and "
+                  f"commit the result", file=sys.stderr)
+            return 1
+        print(f"docs --check: {args.out} is up to date")
+        return 0
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as fh:
+        fh.write(generated)
+    print(f"wrote {args.out}")
     return 0
 
 
@@ -336,31 +483,104 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--seed", type=int, default=100)
     p.set_defaults(func=cmd_pool_serve)
 
+    def add_fleet_workload(p: argparse.ArgumentParser) -> None:
+        p.add_argument("--trace", default=None,
+                       help="trace artifact JSON (default: synthetic "
+                            "Azure-style trace over --apps)")
+        p.add_argument("--apps",
+                       default="graph_bfs,sentiment_analysis_r,echo",
+                       help="comma-separated app names for the "
+                            "synthetic trace / the served fleet")
+        p.add_argument("--minutes", type=int, default=30,
+                       help="synthetic trace length")
+        p.add_argument("--peak-rpm", type=float, default=60.0,
+                       help="synthetic trace peak invocations/minute")
+        p.add_argument("--seed", type=int, default=0)
+        p.add_argument("--budget-mb", type=float, default=512.0,
+                       help="shared fleet memory budget "
+                            "(<= 0 with --real: unbounded)")
+        p.add_argument("--reports-dir", default=None,
+                       help="directory of deployed per-app report "
+                            "artifacts (<app>.json): hot sets for "
+                            "zygotes / the profile-guided policy, and "
+                            "what the rewarm tick re-loads")
+
+    def add_fleet_sim_profile(p: argparse.ArgumentParser) -> None:
+        p.add_argument("--policy", default="profile",
+                       choices=["fixed", "idle", "histogram", "profile"],
+                       help="keep-alive policy (simulated fleet)")
+        p.add_argument("--idle-timeout-s", type=float, default=600.0)
+        p.add_argument("--cold-init-ms", type=float, default=400.0)
+        p.add_argument("--warm-init-ms", type=float, default=40.0)
+        p.add_argument("--invoke-ms", type=float, default=30.0)
+        p.add_argument("--rss-mb", type=float, default=128.0)
+        p.add_argument("--zygote-rss-mb", type=float, default=96.0)
+
+    def add_queue_knobs(p: argparse.ArgumentParser,
+                        default_depth: int) -> None:
+        p.add_argument("--queue-depth", type=int, default=default_depth,
+                       help="bounded per-app queue depth "
+                            f"(default {default_depth}"
+                            + ("; < 0 disables queueing)"
+                               if default_depth < 0 else ")"))
+        p.add_argument("--max-concurrency", type=int, default=4,
+                       help="demand-spawn cap per app (simulated fleet)")
+        p.add_argument("--shed-policy", default="reject-new",
+                       choices=["reject-new", "drop-oldest"],
+                       help="who is dropped when the queue is full")
+
     fleet = sub.add_parser("fleet", help="multi-app fleet operations")
     fleet_sub = fleet.add_subparsers(dest="fleet_command", required=True)
     p = fleet_sub.add_parser("replay",
-                             help="replay a trace through the simulated "
-                                  "fleet")
-    p.add_argument("--trace", default=None,
-                   help="trace artifact JSON (default: synthetic "
-                        "Azure-style trace over --apps)")
-    p.add_argument("--apps", default="graph_bfs,sentiment_analysis_r,echo")
-    p.add_argument("--minutes", type=int, default=30)
-    p.add_argument("--peak-rpm", type=float, default=60.0)
-    p.add_argument("--seed", type=int, default=0)
-    p.add_argument("--budget-mb", type=float, default=512.0)
-    p.add_argument("--policy", default="profile",
-                   choices=["fixed", "idle", "histogram", "profile"])
-    p.add_argument("--idle-timeout-s", type=float, default=600.0)
-    p.add_argument("--reports-dir", default=None,
-                   help="directory of per-app report artifacts for the "
-                        "profile-guided policy")
-    p.add_argument("--cold-init-ms", type=float, default=400.0)
-    p.add_argument("--warm-init-ms", type=float, default=40.0)
-    p.add_argument("--invoke-ms", type=float, default=30.0)
-    p.add_argument("--rss-mb", type=float, default=128.0)
-    p.add_argument("--zygote-rss-mb", type=float, default=96.0)
+                             help="replay a trace through the fleet "
+                                  "(simulated, or --real zygotes)")
+    add_fleet_workload(p)
+    add_fleet_sim_profile(p)
+    add_queue_knobs(p, default_depth=-1)
+    p.add_argument("--real", action="store_true",
+                   help="replay through a live ZygoteFleet over the "
+                        "deployed benchsuite apps (one zygote per app "
+                        "under --budget-mb)")
+    add_root(p)
+    p.add_argument("--limit", type=int, default=None,
+                   help="with --real: replay only the first N requests")
+    p.add_argument("--out", default=None,
+                   help="save the fleet_summary artifact here")
     p.set_defaults(func=cmd_fleet_replay)
+
+    p = fleet_sub.add_parser(
+        "serve",
+        help="long-running daemon: bounded queues, rewarm timer, "
+             "SIGTERM graceful drain",
+        description="Own a fleet (simulated with --sim, real zygotes "
+                    "otherwise) and serve invocations continuously: "
+                    "replayed from a trace, or fed as JSONL on stdin "
+                    "with --stdin.  Bounded per-app queues shed "
+                    "overload; every rewarm tick re-loads deployed "
+                    "report artifacts into the warm fleet; SIGTERM "
+                    "drains gracefully and emits a fleet_summary "
+                    "artifact (see docs/daemon.md).")
+    add_fleet_workload(p)
+    add_fleet_sim_profile(p)
+    add_queue_knobs(p, default_depth=16)
+    add_root(p)
+    p.add_argument("--sim", action="store_true",
+                   help="simulated fleet (FleetManager) instead of "
+                        "real zygotes")
+    p.add_argument("--stdin", action="store_true",
+                   help="serve a JSONL invocation feed from stdin "
+                        "instead of replaying a trace")
+    p.add_argument("--pace", type=float, default=0.0,
+                   help="scale trace arrival gaps into real time "
+                        "(0 = as fast as possible, 1 = real time)")
+    p.add_argument("--rewarm-interval-s", type=float, default=0.0,
+                   help="rewarm-tick period (0 disables the timer)")
+    p.add_argument("--drain-timeout-s", type=float, default=30.0,
+                   help="max seconds to wind queues down at shutdown")
+    p.add_argument("--summary-out", default=None,
+                   help="write the fleet_summary artifact here on "
+                        "drain/shutdown")
+    p.set_defaults(func=cmd_fleet_serve)
 
     p = sub.add_parser("ci-check",
                        help="re-profile and compare against the deployed "
@@ -378,6 +598,16 @@ def build_parser() -> argparse.ArgumentParser:
                    help="re-profile a mismatch up to N times; fail "
                         "only on persistent drift (default 0)")
     p.set_defaults(func=cmd_ci_check)
+
+    p = sub.add_parser("docs",
+                       help="(re)generate docs/cli.md from this parser "
+                            "(--check: exit 1 on drift)")
+    p.add_argument("--out", default="docs/cli.md",
+                   help="where the CLI reference lives")
+    p.add_argument("--check", action="store_true",
+                   help="verify the committed file matches the "
+                        "generated one instead of writing it")
+    p.set_defaults(func=cmd_docs)
 
     return ap
 

@@ -17,9 +17,15 @@ Five pieces (see each module's docstring and this package's README.md):
   (simulated ``FleetManager`` and real-process ``ZygoteFleet``).
 """
 
+from repro.pool.daemon import (
+    FleetDaemon,
+    RealFleetBackend,
+    SimFleetBackend,
+)
 from repro.pool.fleet import (
     FleetManager,
     FleetSummary,
+    QueueConfig,
     ZygoteFleet,
     fleet_sweep,
 )
@@ -54,6 +60,7 @@ __all__ = [
     "AppProfile",
     "AzureRow",
     "FixedSizePolicy",
+    "FleetDaemon",
     "FleetManager",
     "FleetReport",
     "FleetSimulator",
@@ -64,7 +71,10 @@ __all__ = [
     "IdleTimeoutPolicy",
     "KeepAlivePolicy",
     "ProfileGuidedPolicy",
+    "QueueConfig",
+    "RealFleetBackend",
     "Request",
+    "SimFleetBackend",
     "Trace",
     "ZygoteFleet",
     "azure_synthetic_rows",

@@ -1,0 +1,605 @@
+"""Long-running fleet daemon: the continuous controller + fleet loop.
+
+Everything before this module runs the fleet *one-shot*: replay a
+trace, print a summary, exit.  SLIMSTART's pitch is continuous,
+CI/CD-integrated optimization — profiles evolve with the workload and
+the warm pool adapts online — so :class:`FleetDaemon` keeps the fleet
+resident and serves invocations for as long as the process lives:
+
+* **bounded admission** — every app gets a FIFO queue capped by
+  :class:`~repro.pool.fleet.QueueConfig` (``depth`` + shed policy);
+  overload is *shed* and accounted, never allowed to spawn unbounded
+  demand instances;
+* **rewarm timer** — every ``rewarm_interval_s`` the daemon re-loads
+  the deployed per-app report artifacts and re-preloads the matching
+  zygotes (``ZygoteFleet.rewarm_from_dir``), so defer-set drift picked
+  up by an external ``python -m repro profile`` / ``ci-check`` run
+  reaches the running fleet without a restart;
+* **graceful drain** — on SIGTERM (or an explicit ``drain``), the
+  daemon stops admitting, lets in-flight invocations finish, flushes
+  still-queued requests into the summary, and emits a schema-versioned
+  ``fleet_summary`` artifact (:mod:`repro.api.artifacts`).
+
+Two backends share the daemon shell:
+
+:class:`SimFleetBackend`
+    Drives a :class:`~repro.pool.fleet.FleetManager` incrementally
+    (``begin -> offer -> finish``).  Queueing/shedding happens in
+    simulated time, so a whole replayed trace runs in milliseconds —
+    this is ``python -m repro fleet serve --sim`` and the fast test
+    tier.
+
+:class:`RealFleetBackend`
+    Owns a :class:`~repro.pool.fleet.ZygoteFleet` plus one worker
+    thread per app pulling from that app's bounded queue (the zygote
+    control channel is single-flight, so per-app dispatch is
+    serialized; ``QueueConfig.max_concurrency`` only shapes the
+    simulation).  Queue waits here are real wall-clock milliseconds.
+"""
+
+from __future__ import annotations
+
+import json
+import queue
+import sys
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Optional, TextIO
+
+from repro.pool.fleet import FleetManager, QueueConfig, ZygoteFleet
+from repro.pool.simulator import percentile_ms
+from repro.pool.trace import Request, Trace
+
+
+# ---------------------------------------------------------------------------
+# Simulation backend
+# ---------------------------------------------------------------------------
+
+class SimFleetBackend:
+    """Incremental :class:`FleetManager` behind the daemon interface.
+
+    ``submit`` must see non-decreasing request times (trace replay or a
+    wall clock both qualify).  ``reports_dir`` names the directory of
+    deployed ``<app>.json`` report artifacts the rewarm tick re-loads
+    into the keep-alive policy (only policies with ``add_report``, i.e.
+    the profile-guided one, consume them).
+    """
+
+    def __init__(self, manager: FleetManager, *,
+                 reports_dir: Optional[str] = None) -> None:
+        self.manager = manager
+        self.reports_dir = reports_dir
+        self._lock = threading.Lock()
+        self._started = False
+
+    @property
+    def apps(self) -> list[str]:
+        return sorted(self.manager.profiles)
+
+    def start(self, trace_name: str = "live") -> dict:
+        with self._lock:
+            self.manager.begin(trace_name)
+            self._started = True
+        return {"mode": "sim", "apps": self.apps}
+
+    def submit(self, req: Request) -> str:
+        with self._lock:
+            return self.manager.offer(req)
+
+    def drain(self, timeout_s: Optional[float] = None, *,
+              flush: bool = True) -> None:
+        pass  # simulated queues drain inside finish()
+
+    def finish(self, end_t: Optional[float] = None) -> dict:
+        with self._lock:
+            summary = self.manager.finish(end_t)
+            self._started = False
+        return summary.artifact_payload(source="serve-sim")
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            reps = self.manager._apps
+            return {
+                "requests": sum(s.report.n_requests for s in reps.values()),
+                "cold_starts": sum(s.report.cold_starts
+                                   for s in reps.values()),
+                "sheds": sum(s.report.sheds for s in reps.values()),
+                "queued": sum(len(s.queue) for s in reps.values()),
+            }
+
+    def rewarm(self) -> dict:
+        """Re-load deployed report artifacts into the policy's hot
+        sets — the simulated analogue of re-preloading zygotes."""
+        if not self.reports_dir:
+            return {}
+        from repro.api.artifacts import load_report
+        import os
+        policy = self.manager.policy
+        if not hasattr(policy, "add_report"):
+            return {}
+        out = {}
+        for app in self.apps:
+            path = os.path.join(self.reports_dir, f"{app}.json")
+            if not os.path.exists(path):
+                continue
+            try:
+                policy.add_report(load_report(path))
+                out[app] = {"ok": True}
+            except Exception as exc:  # a bad artifact must not kill serving
+                out[app] = {"ok": False, "error": repr(exc)}
+        return out
+
+    def stop(self) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Real-process backend
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _AppServeStats:
+    arrivals: int = 0
+    served: int = 0
+    sheds: int = 0
+    flushed: int = 0
+    pool: int = 0
+    cold: int = 0
+    errors: int = 0
+    init_ms: list = field(default_factory=list)
+    e2e_ms: list = field(default_factory=list)
+    queue_waits_ms: list = field(default_factory=list)
+
+
+class RealFleetBackend:
+    """Bounded per-app queues + worker threads over a ZygoteFleet."""
+
+    def __init__(self, fleet: ZygoteFleet, *, queue: QueueConfig,
+                 reports_dir: Optional[str] = None,
+                 seed0: int = 500) -> None:
+        self.fleet = fleet
+        self.queue_cfg = queue
+        self.reports_dir = reports_dir
+        self.seed0 = seed0
+        self._cond = threading.Condition()
+        self._queues: dict[str, deque] = {}
+        self._in_flight: dict[str, int] = {}
+        self._stats: dict[str, _AppServeStats] = {}
+        self._workers: list[threading.Thread] = []
+        self._draining = False
+        self._seed = seed0
+        self.boot: dict = {}
+
+    @property
+    def apps(self) -> list[str]:
+        return sorted(self.fleet.app_dirs)
+
+    # ----------------------------------------------------------- lifecycle
+    def start(self, trace_name: str = "live") -> dict:
+        self.boot = self.fleet.start()
+        self._trace_name = trace_name
+        self._t0 = time.monotonic()
+        for app in self.apps:
+            self._queues[app] = deque()
+            self._in_flight[app] = 0
+            self._stats[app] = _AppServeStats()
+            w = threading.Thread(target=self._worker, args=(app,),
+                                 name=f"fleet-serve-{app}", daemon=True)
+            w.start()
+            self._workers.append(w)
+        return {"mode": "real", "apps": self.apps, **self.boot}
+
+    def submit(self, req: Request) -> str:
+        qc = self.queue_cfg
+        with self._cond:
+            if self._draining:
+                return "shed"
+            if req.app not in self._queues:
+                raise KeyError(f"unknown app {req.app!r}; fleet serves "
+                               f"{self.apps}")
+            st = self._stats[req.app]
+            st.arrivals += 1
+            q = self._queues[req.app]
+            if len(q) >= qc.depth:
+                if qc.shed_policy == "drop-oldest" and q:
+                    q.popleft()
+                    st.sheds += 1
+                    q.append((time.monotonic(), req))
+                    self._cond.notify_all()
+                    return "queued"
+                st.sheds += 1
+                return "shed"
+            q.append((time.monotonic(), req))
+            self._cond.notify_all()
+            return "queued"
+
+    def _worker(self, app: str) -> None:
+        while True:
+            with self._cond:
+                while not self._queues[app] and not self._draining:
+                    self._cond.wait(timeout=0.2)
+                if not self._queues[app]:
+                    if self._draining:
+                        return
+                    continue
+                enq_t, req = self._queues[app].popleft()
+                self._in_flight[app] += 1
+                seed = self._seed
+                self._seed += 1
+            wait_ms = (time.monotonic() - enq_t) * 1e3
+            st = self._stats[app]
+            try:
+                m = self.fleet.dispatch(app, handler=req.handler,
+                                        seed=seed)
+            except Exception:
+                with self._cond:
+                    st.errors += 1
+                    self._in_flight[app] -= 1
+                    self._cond.notify_all()
+                continue
+            with self._cond:
+                st.served += 1
+                st.queue_waits_ms.append(wait_ms)
+                st.init_ms.append(m["init_ms"])
+                st.e2e_ms.append(wait_ms + m["e2e_cold_ms"])
+                if m["path"] == "pool":
+                    st.pool += 1
+                else:
+                    st.cold += 1
+                self._in_flight[app] -= 1
+                self._cond.notify_all()
+
+    def drain(self, timeout_s: Optional[float] = 30.0, *,
+              flush: bool = True) -> None:
+        """Stop admitting and wind the queues down.
+
+        ``flush=True`` (SIGTERM semantics): queued requests are *not*
+        run — they are counted as flushed in the summary; only in-flight
+        dispatches finish.  ``flush=False`` (end-of-feed semantics): the
+        workers keep serving until the queues are empty (or
+        ``timeout_s`` expires, flushing whatever is left).
+        """
+        deadline = (time.monotonic() + timeout_s
+                    if timeout_s is not None else None)
+
+        def _remaining() -> Optional[float]:
+            if deadline is None:
+                return None
+            return max(deadline - time.monotonic(), 0.0)
+
+        if not flush:
+            with self._cond:
+                while any(self._queues.values()) \
+                        or any(self._in_flight.values()):
+                    rem = _remaining()
+                    if rem == 0.0:
+                        break
+                    self._cond.wait(timeout=min(rem or 0.2, 0.2))
+        with self._cond:
+            self._draining = True
+            for app, q in self._queues.items():
+                self._stats[app].flushed += len(q)
+                q.clear()
+            self._cond.notify_all()
+            while any(self._in_flight.values()):
+                rem = _remaining()
+                if rem == 0.0:
+                    break
+                self._cond.wait(timeout=min(rem or 0.2, 0.2))
+        for w in self._workers:
+            w.join(timeout=5.0)
+
+    def finish(self, end_t: Optional[float] = None) -> dict:
+        per_app = []
+        e2e_all: list[float] = []
+        waits_all: list[float] = []
+        tot = _AppServeStats()
+        with self._cond:
+            # a dispatch still blocked past the drain timeout (hung
+            # handler) is lost traffic: charge it to errors so the
+            # conservation invariant survives an abandoned drain
+            for app, n in self._in_flight.items():
+                if n > 0:
+                    self._stats[app].errors += n
+                    self._in_flight[app] = 0
+        for app in self.apps:
+            st = self._stats.get(app) or _AppServeStats()
+            e2e_all.extend(st.e2e_ms)
+            waits_all.extend(st.queue_waits_ms)
+            tot.arrivals += st.arrivals
+            tot.served += st.served
+            tot.sheds += st.sheds
+            tot.flushed += st.flushed
+            tot.pool += st.pool
+            tot.cold += st.cold
+            tot.errors += st.errors
+            per_app.append({
+                "app": app,
+                "requests": st.arrivals,
+                "pool_starts": st.pool,
+                "cold_starts": st.cold,
+                "errors": st.errors,
+                # arrivals denominator, like every other producer
+                "cold_ratio": round(st.cold / max(st.arrivals, 1), 4),
+                "p50_ms": round(percentile_ms(st.e2e_ms, 0.50), 2)
+                if st.e2e_ms else 0.0,
+                "p99_ms": round(percentile_ms(st.e2e_ms, 0.99), 2)
+                if st.e2e_ms else 0.0,
+                "sheds": st.sheds,
+                "flushed": st.flushed,
+                "queue_wait_p99_ms":
+                    round(percentile_ms(st.queue_waits_ms, 0.99), 2)
+                    if st.queue_waits_ms else 0.0,
+            })
+        from repro.pool.fleet import make_fleet_summary_payload
+        return make_fleet_summary_payload(
+            source="serve-real",
+            requests=tot.arrivals,
+            served=tot.served,
+            cold_starts=tot.cold,
+            p50_ms=round(percentile_ms(e2e_all, 0.50), 2)
+            if e2e_all else 0.0,
+            p99_ms=round(percentile_ms(e2e_all, 0.99), 2)
+            if e2e_all else 0.0,
+            sheds=tot.sheds,
+            flushed=tot.flushed,
+            queue_wait_p50_ms=round(percentile_ms(waits_all, 0.50), 2)
+            if waits_all else 0.0,
+            queue_wait_p99_ms=round(percentile_ms(waits_all, 0.99), 2)
+            if waits_all else 0.0,
+            per_app=per_app,
+            policy="zygote-fleet",
+            trace=getattr(self, "_trace_name", "live"),
+            budget_mb=self.fleet.budget_mb,
+            duration_s=round(time.monotonic()
+                             - getattr(self, "_t0", time.monotonic()),
+                             3),
+            pool_starts=tot.pool,
+            # dispatch failures (crashed handler, dead zygote + failed
+            # cold fallback): neither served nor shed — without this
+            # field the conservation invariant would silently miscount
+            # lost traffic (requests == served + sheds + flushed + errors)
+            errors=tot.errors,
+            memory_gb_s=None,
+            rewarm_ticks=0,
+            queue=self.queue_cfg.to_dict(),
+            zygotes=sorted(self.fleet.servers),
+            skipped=list(self.fleet.skipped),
+            used_mb=round(self.fleet.used_mb(), 1),
+        )
+
+    def snapshot(self) -> dict:
+        with self._cond:
+            return {
+                "requests": sum(s.arrivals for s in self._stats.values()),
+                "cold_starts": sum(s.cold for s in self._stats.values()),
+                "sheds": sum(s.sheds for s in self._stats.values()),
+                "queued": sum(len(q) for q in self._queues.values()),
+                "in_flight": sum(self._in_flight.values()),
+            }
+
+    def rewarm(self) -> dict:
+        if not self.reports_dir:
+            return {}
+        return self.fleet.rewarm_from_dir(self.reports_dir)
+
+    def stop(self) -> None:
+        self.fleet.stop()
+
+
+# ---------------------------------------------------------------------------
+# The daemon shell
+# ---------------------------------------------------------------------------
+
+class FleetDaemon:
+    """Lifecycle shell around a serve backend.
+
+    ``start() -> submit()*/run_trace()/run_stdin() -> shutdown()``.
+    ``request_shutdown`` is async-signal-safe (it only sets an event):
+    install it as the SIGTERM/SIGINT handler and the serve loop drains
+    gracefully — in-flight invocations finish, queued ones are flushed
+    into the emitted ``fleet_summary`` artifact.
+    """
+
+    def __init__(self, backend, *, rewarm_interval_s: float = 0.0,
+                 rewarm_fn: Optional[Callable[[], dict]] = None,
+                 summary_path: Optional[str] = None,
+                 drain_timeout_s: Optional[float] = 30.0) -> None:
+        self.backend = backend
+        self.rewarm_interval_s = rewarm_interval_s
+        # default rewarm action: whatever the backend's tick does
+        self.rewarm_fn = rewarm_fn or backend.rewarm
+        self.summary_path = summary_path
+        self.drain_timeout_s = drain_timeout_s
+        self.rewarm_ticks = 0
+        self.rewarm_errors: list[str] = []
+        self._stop_evt = threading.Event()
+        self._interrupted = False
+        self._rewarm_thread: Optional[threading.Thread] = None
+        self._finished: Optional[dict] = None
+        self._extra_meta: dict = {}
+        self._lock = threading.Lock()
+
+    # ----------------------------------------------------------- lifecycle
+    def start(self, trace_name: str = "live") -> dict:
+        boot = self.backend.start(trace_name)
+        if self.rewarm_interval_s > 0:
+            self._rewarm_thread = threading.Thread(
+                target=self._rewarm_loop, name="fleet-rewarm",
+                daemon=True)
+            self._rewarm_thread.start()
+        return boot
+
+    def __enter__(self) -> "FleetDaemon":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    def request_shutdown(self, *_args) -> None:
+        """Signal-handler entry point: flag the drain, return at once.
+        A shutdown requested this way *flushes* queued requests (they
+        land in the summary as ``flushed``, unserved) — only in-flight
+        invocations finish."""
+        self._interrupted = True
+        self._stop_evt.set()
+
+    @property
+    def draining(self) -> bool:
+        return self._stop_evt.is_set()
+
+    def shutdown(self, *, end_t: Optional[float] = None,
+                 flush: Optional[bool] = None) -> dict:
+        """Graceful drain: stop admitting, finish in-flight work, then
+        emit the summary artifact.  ``flush`` defaults to True when the
+        shutdown came from a signal (queued work is flushed) and False
+        when the feed simply ended (queued work is served first).
+        Idempotent."""
+        if flush is None:
+            flush = self._interrupted
+        self._stop_evt.set()
+        with self._lock:
+            if self._finished is not None:
+                return self._finished
+            if self._rewarm_thread is not None:
+                self._rewarm_thread.join(timeout=5.0)
+            self.backend.drain(timeout_s=self.drain_timeout_s,
+                               flush=flush)
+            payload = self.backend.finish(end_t)
+            payload["rewarm_ticks"] = self.rewarm_ticks
+            if self._extra_meta:  # must land before the artifact save
+                payload.setdefault("meta", {}).update(self._extra_meta)
+            self.backend.stop()
+            if self.summary_path:
+                from repro.api.artifacts import save_fleet_summary
+                save_fleet_summary(payload, self.summary_path)
+            self._finished = payload
+        return payload
+
+    # ------------------------------------------------------------- serving
+    def submit(self, req: Request) -> str:
+        if self._stop_evt.is_set():
+            return "draining"
+        return self.backend.submit(req)
+
+    def run_trace(self, trace: Trace, *, pace: float = 0.0,
+                  end_t: Optional[float] = None) -> dict:
+        """Feed a whole trace through the daemon, then drain.
+
+        ``pace`` scales arrival gaps into real sleeps (0 = as fast as
+        possible; 1 = real time).  With the sim backend, request times
+        are the trace's own, so the replay is deterministic regardless
+        of pace.
+        """
+        outcomes = {"served": 0, "queued": 0, "shed": 0, "draining": 0}
+        prev_t = 0.0
+        for req in trace:
+            if self._stop_evt.is_set():
+                break
+            if pace > 0 and req.t > prev_t:
+                self._stop_evt.wait((req.t - prev_t) * pace)
+            prev_t = req.t
+            outcomes[self.submit(req)] += 1
+        self._extra_meta["admission"] = outcomes
+        return self.shutdown(
+            end_t=trace.duration_s if end_t is None else end_t)
+
+    def run_stdin(self, in_stream: Optional[TextIO] = None,
+                  out_stream: Optional[TextIO] = None,
+                  clock: Callable[[], float] = time.monotonic) -> dict:
+        """Serve a JSONL feed until EOF / ``shutdown`` / SIGTERM.
+
+        Events: ``{"app": ..., "handler": ...}`` submits an invocation
+        (its arrival time is the wall clock); ``{"cmd": "stats"}``
+        prints a live snapshot; ``{"cmd": "rewarm"}`` forces a rewarm
+        tick; ``{"cmd": "drain"}`` / ``{"cmd": "shutdown"}`` ends the
+        loop.  Every event is answered with one JSON line.
+        """
+        fin = in_stream if in_stream is not None else sys.stdin
+        fout = out_stream if out_stream is not None else sys.stdout
+        t0 = clock()
+
+        def reply(obj: dict) -> None:
+            fout.write(json.dumps(obj) + "\n")
+            fout.flush()
+
+        # A blocking readline would swallow a SIGTERM for as long as the
+        # feed stays silent (and select() on a *buffered* text stream
+        # misses lines already pulled into the Python-side buffer), so a
+        # reader thread feeds a queue the loop polls every 200 ms.
+        lines: queue.Queue = queue.Queue()
+
+        def _reader() -> None:
+            try:
+                for raw in fin:
+                    lines.put(raw)
+            except (OSError, ValueError):
+                pass
+            lines.put(None)  # EOF sentinel
+
+        threading.Thread(target=_reader, name="fleet-stdin",
+                         daemon=True).start()
+
+        while not self._stop_evt.is_set():
+            try:
+                line = lines.get(timeout=0.2)
+            except queue.Empty:
+                continue
+            if line is None:
+                break  # EOF
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                evt = json.loads(line)
+            except ValueError:
+                reply({"ok": False, "error": "bad json"})
+                continue
+            cmd = evt.get("cmd")
+            if cmd == "stats":
+                reply({"ok": True, "stats": self.backend.snapshot(),
+                       "rewarm_ticks": self.rewarm_ticks})
+            elif cmd == "rewarm":
+                reply({"ok": True, "rewarm": self.rewarm_now()})
+            elif cmd in ("drain", "shutdown"):
+                reply({"ok": True, "event": "draining"})
+                break
+            elif cmd is not None:
+                reply({"ok": False, "error": f"unknown cmd {cmd!r}"})
+            elif "app" not in evt:
+                reply({"ok": False, "error": "need 'app' or 'cmd'"})
+            else:
+                req = Request(t=clock() - t0, app=evt["app"],
+                              handler=evt.get("handler"))
+                try:
+                    outcome = self.submit(req)
+                except KeyError as exc:
+                    reply({"ok": False, "error": str(exc)})
+                    continue
+                # "draining": a shutdown raced the read — the request
+                # was never admitted, so the ack must not claim success
+                reply({"ok": outcome not in ("shed", "draining"),
+                       "outcome": outcome})
+        payload = self.shutdown(end_t=clock() - t0)
+        reply({"ok": True, "event": "summary", "summary": payload})
+        return payload
+
+    # -------------------------------------------------------------- rewarm
+    def rewarm_now(self) -> dict:
+        """One rewarm tick (also what the timer thread calls): re-load
+        deployed report artifacts and re-preload warm state.  Failures
+        are recorded, never raised — in-flight work is untouched."""
+        try:
+            out = self.rewarm_fn()
+            self.rewarm_ticks += 1
+            return out if isinstance(out, dict) else {"ok": True}
+        except Exception as exc:
+            self.rewarm_errors.append(repr(exc))
+            return {"ok": False, "error": repr(exc)}
+
+    def _rewarm_loop(self) -> None:
+        while not self._stop_evt.wait(self.rewarm_interval_s):
+            self.rewarm_now()

@@ -27,8 +27,17 @@ FaaSLight and HotSwap measure — so this module adds the arbiter:
       (``warm_init_ms``) counted as a *pool start*, not a cold start.
 
     Demand-driven instances always spawn (serving beats retention,
-    exactly like Lambda); only *retained* state — idle instances,
-    prewarmed floors, zygotes — competes for the budget.
+    exactly like Lambda) *unless* a :class:`QueueConfig` bounds them:
+    with queueing enabled, demand spawns stop at
+    ``max_concurrency`` instances per app, excess requests wait in a
+    bounded FIFO (their queue wait lands in the reported latency), and
+    arrivals past ``depth`` are **shed** per the configured policy —
+    the backpressure regime a long-running daemon needs instead of
+    unbounded spawns.
+
+    ``replay(trace)`` is one-shot; the long-running daemon
+    (:mod:`repro.pool.daemon`) drives the same machinery incrementally
+    through ``begin() -> offer(request)* -> finish(end_t)``.
 
 :class:`ZygoteFleet` (real processes)
     The same arbitration over real fork-servers: one zygote per app,
@@ -44,6 +53,7 @@ FaaSLight and HotSwap measure — so this module adds the arbiter:
 from __future__ import annotations
 
 import math
+import os
 import statistics
 from collections import deque
 from dataclasses import dataclass, field
@@ -54,6 +64,79 @@ from repro.pool.forkserver import ForkServer, ForkServerError
 from repro.pool.policies import KeepAlivePolicy, hot_set_from_report
 from repro.pool.simulator import AppProfile, FleetReport, percentile_ms
 from repro.pool.trace import Request, Trace
+
+
+# ---------------------------------------------------------------------------
+# Queueing / backpressure configuration (shared by sim + real daemon)
+# ---------------------------------------------------------------------------
+
+SHED_POLICIES = ("reject-new", "drop-oldest")
+
+
+def make_fleet_summary_payload(*, source: str, requests: int,
+                               served: int, cold_starts: int,
+                               p50_ms: float, p99_ms: float, sheds: int,
+                               flushed: int, queue_wait_p50_ms: float,
+                               queue_wait_p99_ms: float, per_app: list,
+                               **optional) -> dict:
+    """The one constructor for ``fleet_summary`` artifact payloads.
+
+    Every producer (sim replay, real replay, the serve daemon, the
+    bench) goes through here so the required fields and their
+    *semantics* cannot drift — in particular ``cold_start_ratio`` is
+    always ``cold_starts / requests`` (arrivals, not served), matching
+    docs/artifacts.md.  Extra schema-optional fields pass through
+    ``optional`` verbatim.
+    """
+    return {
+        "source": source,
+        "requests": requests,
+        "served": served,
+        "cold_starts": cold_starts,
+        "cold_start_ratio": round(cold_starts / max(requests, 1), 4),
+        "p50_ms": p50_ms,
+        "p99_ms": p99_ms,
+        "sheds": sheds,
+        "flushed": flushed,
+        "queue_wait_p50_ms": queue_wait_p50_ms,
+        "queue_wait_p99_ms": queue_wait_p99_ms,
+        "per_app": per_app,
+        **optional,
+    }
+
+
+@dataclass(frozen=True)
+class QueueConfig:
+    """Bounded per-app admission: how much demand may pile up.
+
+    ``max_concurrency`` caps demand-driven instances per app (prewarm
+    floors may exceed it — the cap applies to spawning under load, not
+    to retained state).  ``depth`` bounds the per-app FIFO of requests
+    waiting for an instance to free.  ``shed_policy`` decides who is
+    dropped once the queue is full: ``reject-new`` sheds the arriving
+    request (classic load shedding), ``drop-oldest`` sheds the
+    longest-waiting queued request and admits the new one (freshness
+    beats fairness, e.g. for timeout-bound clients).
+    """
+
+    depth: int = 16
+    max_concurrency: int = 4
+    shed_policy: str = "reject-new"
+
+    def __post_init__(self) -> None:
+        if self.depth < 0:
+            raise ValueError("queue depth must be >= 0")
+        if self.max_concurrency < 1:
+            raise ValueError("max_concurrency must be >= 1")
+        if self.shed_policy not in SHED_POLICIES:
+            raise ValueError(
+                f"unknown shed_policy {self.shed_policy!r} "
+                f"(choose from {SHED_POLICIES})")
+
+    def to_dict(self) -> dict:
+        return {"depth": self.depth,
+                "max_concurrency": self.max_concurrency,
+                "shed_policy": self.shed_policy}
 
 
 # ---------------------------------------------------------------------------
@@ -80,6 +163,8 @@ class _AppState:
     zygote_evicted_t: float = -math.inf
     pool_starts: int = 0
     arrivals: deque = field(default_factory=deque)
+    # bounded-queue state: (enqueue_t, Request) FIFO of waiting requests
+    queue: deque = field(default_factory=deque)
 
     def zygote_rss_mb(self) -> float:
         return self.profile.zygote_rss_mb or self.profile.rss_mb
@@ -102,6 +187,8 @@ class FleetSummary:
     memory_mb_s: float = 0.0
     peak_mb: float = 0.0
     zygote_apps: list[str] = field(default_factory=list)
+    queue: Optional[QueueConfig] = None
+    rewarm_ticks: int = 0
 
     @property
     def n_requests(self) -> int:
@@ -112,8 +199,35 @@ class FleetSummary:
         return sum(r.cold_starts for r in self.per_app.values())
 
     @property
+    def sheds(self) -> int:
+        return sum(r.sheds for r in self.per_app.values())
+
+    @property
+    def flushed(self) -> int:
+        return sum(r.flushed for r in self.per_app.values())
+
+    @property
+    def served(self) -> int:
+        return sum(r.served for r in self.per_app.values())
+
+    @property
+    def queue_wait_p50_ms(self) -> float:
+        return percentile_ms([w for r in self.per_app.values()
+                              for w in r.queue_waits_ms], 0.50)
+
+    @property
+    def queue_wait_p99_ms(self) -> float:
+        return percentile_ms([w for r in self.per_app.values()
+                              for w in r.queue_waits_ms], 0.99)
+
+    @property
     def cold_start_ratio(self) -> float:
         return self.cold_starts / max(self.n_requests, 1)
+
+    @property
+    def p50_ms(self) -> float:
+        return percentile_ms([x for r in self.per_app.values()
+                              for x in r.latencies_ms], 0.50)
 
     @property
     def p99_ms(self) -> float:
@@ -148,9 +262,16 @@ class FleetSummary:
             "evictions": self.evictions,
             "prewarm_spawns": self.prewarm_spawns,
             "zygotes": ",".join(self.zygote_apps) or "-",
+            "sheds": self.sheds,
+            "queue_wait_p99_ms": round(self.queue_wait_p99_ms, 2)
+            if not math.isnan(self.queue_wait_p99_ms) else 0.0,
         }
 
     def app_rows(self) -> list[dict]:
+        def _num(x: float) -> float:
+            # strict-JSON safe: a silent app has no latencies -> 0.0
+            return 0.0 if math.isnan(x) else round(x, 2)
+
         rows = []
         for app, rep in sorted(self.per_app.items()):
             rows.append({
@@ -158,12 +279,48 @@ class FleetSummary:
                 "requests": rep.n_requests,
                 "cold_starts": rep.cold_starts,
                 "cold_ratio": round(rep.cold_start_ratio, 4),
-                "p50_ms": round(rep.p50_ms, 2),
-                "p99_ms": round(rep.p99_ms, 2),
+                "p50_ms": _num(rep.p50_ms),
+                "p99_ms": _num(rep.p99_ms),
                 "memory_gb_s": round(rep.memory_gb_s, 3),
                 "max_instances": rep.max_instances,
+                "sheds": rep.sheds,
+                "flushed": rep.flushed,
+                "queue_wait_p99_ms": round(rep.queue_wait_p99_ms, 2)
+                if rep.queue_waits_ms else 0.0,
             })
         return rows
+
+    def artifact_payload(self, *, source: str = "replay-sim",
+                         rewarm_ticks: Optional[int] = None) -> dict:
+        """The schema-versioned ``fleet_summary`` artifact payload (see
+        :class:`repro.api.artifacts.FleetSummaryArtifact`) for this
+        replay — what ``fleet serve`` / ``fleet replay`` emit."""
+
+        def _num(x: float) -> float:
+            return 0.0 if math.isnan(x) else round(x, 3)
+
+        return make_fleet_summary_payload(
+            source=source,
+            requests=self.n_requests,
+            served=self.served,
+            cold_starts=self.cold_starts,
+            p50_ms=_num(self.p50_ms),
+            p99_ms=_num(self.p99_ms),
+            sheds=self.sheds,
+            flushed=self.flushed,
+            queue_wait_p50_ms=_num(self.queue_wait_p50_ms),
+            queue_wait_p99_ms=_num(self.queue_wait_p99_ms),
+            per_app=self.app_rows(),
+            policy=self.policy,
+            trace=self.trace,
+            budget_mb=round(self.budget_mb, 1),
+            duration_s=round(self.duration_s, 3),
+            pool_starts=self.pool_starts,
+            memory_gb_s=round(self.memory_mb_s / 1024.0, 3),
+            rewarm_ticks=(self.rewarm_ticks if rewarm_ticks is None
+                          else rewarm_ticks),
+            queue=self.queue.to_dict() if self.queue else None,
+        )
 
 
 class FleetManager:
@@ -177,7 +334,8 @@ class FleetManager:
     def __init__(self, profiles: dict[str, AppProfile],
                  policy: KeepAlivePolicy, *, budget_mb: float,
                  rate_window_s: float = 120.0,
-                 zygote_retry_s: float = 60.0) -> None:
+                 zygote_retry_s: float = 60.0,
+                 queue: Optional[QueueConfig] = None) -> None:
         if budget_mb <= 0:
             raise ValueError("budget_mb must be positive")
         self.profiles = dict(profiles)
@@ -188,7 +346,11 @@ class FleetManager:
         # re-booted before this many seconds (prevents boot/evict thrash
         # when zygotes and instances contend for a tight budget)
         self.zygote_retry_s = zygote_retry_s
+        # None = unbounded demand spawns (Lambda-style); a QueueConfig
+        # bounds concurrency per app and sheds past the queue depth
+        self.queue = queue
         self._apps: dict[str, _AppState] = {}
+        self._last_t = 0.0
 
     # ------------------------------------------------------------- signals
     def observed_rate_per_s(self, app: str, now: float) -> float:
@@ -242,37 +404,68 @@ class FleetManager:
 
     # -------------------------------------------------------------- replay
     def replay(self, trace: Trace) -> FleetSummary:
-        self._reset(trace)
-        self._rebalance(0.0)
+        self.begin(trace.name)
         for req in trace:
-            if req.app not in self._apps:
-                raise KeyError(
-                    f"trace requests unknown app {req.app!r}; "
-                    f"fleet serves {sorted(self._apps)}")
-            self.policy.observe_arrival(req.app, req.t)
-            self._record_arrival(req.app, req.t)
-            self._reclaim_idle(req.t)
-            self._rebalance(req.t)
-            self._serve(req)
-        end = trace.duration_s
+            self.offer(req)
+        return self.finish(trace.duration_s)
+
+    # ------------------------------------------------- incremental serving
+    # The daemon (repro.pool.daemon) drives the same machinery one
+    # arrival at a time: begin() -> offer(req)* -> finish(end_t).
+    # Offers must be time-ordered (wall clock or trace time).
+
+    def begin(self, trace_name: str = "live") -> None:
+        """Reset state for a fresh (incremental or one-shot) run."""
+        self._reset(trace_name)
+        self._rebalance(0.0)
+
+    def offer(self, req: Request) -> str:
+        """Feed one arrival; returns the admission outcome:
+        ``"served"`` (warm/cold/pool start or demand spawn),
+        ``"queued"`` (waiting for an instance) or ``"shed"``."""
+        if req.app not in self._apps:
+            raise KeyError(
+                f"trace requests unknown app {req.app!r}; "
+                f"fleet serves {sorted(self._apps)}")
+        self._last_t = max(self._last_t, req.t)
+        self.policy.observe_arrival(req.app, req.t)
+        self._record_arrival(req.app, req.t)
+        for st in self._apps.values():
+            self._drain_queue(st, req.t)
+        self._reclaim_idle(req.t)
+        self._rebalance(req.t)
+        return self._serve(req)
+
+    def finish(self, end_t: Optional[float] = None) -> FleetSummary:
+        """Drain queues, account trailing memory, return the summary.
+        Requests still queued at ``end_t`` (nothing freed up in time)
+        are *flushed*: counted, never served."""
+        end = self._last_t if end_t is None else max(end_t, self._last_t)
+        for st in self._apps.values():
+            self._drain_queue(st, end)
+            st.report.flushed += len(st.queue)
+            st.queue.clear()
         self._reclaim_idle(end)
         self._finalize(end)
+        self._summary.duration_s = max(self._summary.duration_s, end)
         return self._summary
 
     # ------------------------------------------------------------ internals
-    def _reset(self, trace: Trace) -> None:
+    def _reset(self, trace_name: str) -> None:
         self._apps = {
             app: _AppState(
                 profile=prof,
                 report=FleetReport(policy=self.policy.name,
-                                   trace=trace.name, n_requests=0,
+                                   trace=trace_name, n_requests=0,
                                    cold_starts=0))
             for app, prof in self.profiles.items()
         }
+        self._last_t = 0.0
         self._summary = FleetSummary(
-            policy=self.policy.name, trace=trace.name,
-            budget_mb=self.budget_mb, duration_s=trace.duration_s,
-            per_app={app: st.report for app, st in self._apps.items()})
+            policy=self.policy.name, trace=trace_name,
+            budget_mb=self.budget_mb, duration_s=0.0,
+            per_app={app: st.report for app, st in self._apps.items()},
+            queue=self.queue)
 
     def _record_arrival(self, app: str, t: float) -> None:
         self._apps[app].arrivals.append(t)
@@ -408,22 +601,71 @@ class FleetManager:
                                       len(st.instances))
         return inst
 
-    def _serve(self, req: Request) -> None:
+    def _drain_queue(self, st: _AppState, now: float) -> None:
+        """Start queued requests on instances that freed up before
+        ``now`` (in free-time order, so FIFO requests chain onto the
+        earliest available instance with no idle gap)."""
+        while st.queue:
+            if not st.instances:
+                break
+            inst = min(st.instances, key=lambda i: i.busy_until)
+            free_t = inst.busy_until
+            if free_t > now:
+                break
+            enq_t, _qreq = st.queue.popleft()
+            start = max(free_t, enq_t)
+            wait_ms = (start - enq_t) * 1e3
+            latency_ms = wait_ms + st.profile.warm_init_ms \
+                + st.profile.invoke_ms
+            inst.busy_until = start + (st.profile.warm_init_ms
+                                       + st.profile.invoke_ms) / 1e3
+            inst.served += 1
+            st.report.queue_waits_ms.append(wait_ms)
+            st.report.latencies_ms.append(latency_ms)
+
+    def _serve(self, req: Request) -> str:
         st = self._apps[req.app]
         prof = st.profile
+        qc = self.queue
         st.report.n_requests += 1
-        idle = [i for i in st.instances if i.busy_until <= req.t]
-        if idle:
-            inst = max(idle, key=lambda i: i.busy_until)  # LIFO reuse
-            latency_ms = prof.warm_init_ms + prof.invoke_ms
-        else:
-            init_ms, _cold = self._start_latency_ms(st)
-            inst = self._spawn(st, req.t, prewarmed=False)
-            latency_ms = init_ms + prof.invoke_ms
-        inst.busy_until = req.t + latency_ms / 1e3
-        inst.served += 1
-        st.report.latencies_ms.append(latency_ms)
-        self._note_peak()
+        if not st.queue:  # FIFO: nobody may overtake a queued request
+            idle = [i for i in st.instances if i.busy_until <= req.t]
+            if idle:
+                inst = max(idle, key=lambda i: i.busy_until)  # LIFO reuse
+                latency_ms = prof.warm_init_ms + prof.invoke_ms
+                inst.busy_until = req.t + latency_ms / 1e3
+                inst.served += 1
+                st.report.latencies_ms.append(latency_ms)
+                self._note_peak()
+                return "served"
+            if qc is None or len(st.instances) < qc.max_concurrency:
+                init_ms, _cold = self._start_latency_ms(st)
+                inst = self._spawn(st, req.t, prewarmed=False)
+                latency_ms = init_ms + prof.invoke_ms
+                inst.busy_until = req.t + latency_ms / 1e3
+                inst.served += 1
+                st.report.latencies_ms.append(latency_ms)
+                self._note_peak()
+                return "served"
+        elif len(st.instances) < qc.max_concurrency:
+            # queued work exists but the concurrency cap has room (an
+            # instance was evicted/reclaimed while requests waited):
+            # spawn a demand instance — the queue head chains onto it
+            # once its init completes (init lands inside that request's
+            # measured queue wait)
+            self._spawn(st, req.t, prewarmed=False)
+        # no instance available: queue (bounded) or shed
+        assert qc is not None  # unbounded mode always spawned above
+        if len(st.queue) < qc.depth:
+            st.queue.append((req.t, req))
+            return "queued"
+        if qc.shed_policy == "drop-oldest" and st.queue:
+            st.queue.popleft()
+            st.report.sheds += 1
+            st.queue.append((req.t, req))
+            return "queued"
+        st.report.sheds += 1  # reject-new
+        return "shed"
 
     def _finalize(self, end: float) -> None:
         zygote_apps = []
@@ -488,6 +730,7 @@ class ZygoteFleet:
         self.timeout_s = timeout_s
         self.servers: dict[str, ForkServer] = {}
         self.skipped: list[str] = []
+        self.last_summary: Optional[dict] = None
         self.dispatches: dict[str, dict[str, int]] = {
             app: {"pool": 0, "cold": 0, "fallback": 0}
             for app in self.app_dirs}
@@ -565,15 +808,21 @@ class ZygoteFleet:
                seed0: int = 500) -> list[dict]:
         """Time-compressed replay: every request dispatches immediately
         (arrival gaps cost nothing; the point is real init latencies
-        down the pool vs cold paths).  Returns per-app rows."""
+        down the pool vs cold paths).  Returns per-app rows; the full
+        schema-versioned ``fleet_summary`` payload of the run lands in
+        ``self.last_summary``."""
         per_app: dict[str, dict[str, list[float]]] = {}
+        n = 0
         for i, req in enumerate(trace):
             if limit is not None and i >= limit:
                 break
             m = self.dispatch(req.app, handler=req.handler,
                               seed=seed0 + i)
-            per_app.setdefault(req.app, {"pool": [], "cold": []})
-            per_app[req.app][m["path"]].append(m["init_ms"])
+            st = per_app.setdefault(
+                req.app, {"pool": [], "cold": [], "e2e": []})
+            st[m["path"]].append(m["init_ms"])
+            st["e2e"].append(m["e2e_cold_ms"])
+            n += 1
         rows = []
         for app, paths in sorted(per_app.items()):
             pool, cold = paths["pool"], paths["cold"]
@@ -584,12 +833,56 @@ class ZygoteFleet:
                 "cold_starts": len(cold),
                 "cold_ratio": round(len(cold)
                                     / max(len(pool) + len(cold), 1), 4),
+                # null, not NaN: these rows land verbatim in the
+                # strict-JSON fleet_summary artifact
                 "pool_init_ms": round(statistics.fmean(pool), 1)
-                if pool else math.nan,
+                if pool else None,
                 "cold_init_ms": round(statistics.fmean(cold), 1)
-                if cold else math.nan,
+                if cold else None,
+                "p50_ms": round(percentile_ms(paths["e2e"], 0.50), 2),
+                "p99_ms": round(percentile_ms(paths["e2e"], 0.99), 2),
+                "sheds": 0,
+                "flushed": 0,
+                "queue_wait_p99_ms": 0.0,
             })
+        self.last_summary = self._summary_payload(trace.name, per_app,
+                                                  rows, n)
         return rows
+
+    def _summary_payload(self, trace_name: str,
+                         per_app: dict[str, dict[str, list[float]]],
+                         rows: list[dict], n: int) -> dict:
+        """``fleet_summary`` payload for one synchronous real replay
+        (no queueing: dispatch blocks, so sheds/waits are zero — the
+        daemon's threaded loop fills those in its own summary)."""
+        e2e = [x for paths in per_app.values() for x in paths["e2e"]]
+        cold = sum(len(p["cold"]) for p in per_app.values())
+        pool = sum(len(p["pool"]) for p in per_app.values())
+        return make_fleet_summary_payload(
+            source="replay-real",
+            requests=n,
+            served=n,
+            cold_starts=cold,
+            p50_ms=round(percentile_ms(e2e, 0.50), 2) if e2e else 0.0,
+            p99_ms=round(percentile_ms(e2e, 0.99), 2) if e2e else 0.0,
+            sheds=0,
+            flushed=0,
+            queue_wait_p50_ms=0.0,
+            queue_wait_p99_ms=0.0,
+            per_app=rows,
+            policy="zygote-fleet",
+            trace=trace_name,
+            budget_mb=round(self.budget_mb, 1)
+            if self.budget_mb is not None else None,
+            duration_s=None,
+            pool_starts=pool,
+            memory_gb_s=None,
+            rewarm_ticks=0,
+            queue=None,
+            zygotes=sorted(self.servers),
+            skipped=list(self.skipped),
+            used_mb=round(self.used_mb(), 1),
+        )
 
     # ------------------------------------------------------ adaptive hook
     def rewarm(self, report) -> dict:
@@ -613,3 +906,22 @@ class ZygoteFleet:
                     "preloaded": [], "errors": []}
         out = fs.rewarm(report)
         return {"app": app, "skipped": False, **out}
+
+    def rewarm_from_dir(self, reports_dir: str) -> dict:
+        """Daemon rewarm tick: re-load every ``<app>.json`` report
+        artifact under ``reports_dir`` (e.g. regenerated by an external
+        ``python -m repro profile`` / ``ci-check --out`` run) and
+        re-preload the matching zygotes.  Apps without a saved report
+        are untouched; per-app rewarm failures are reported, never
+        raised — a stale zygote beats a dead serve loop."""
+        out: dict[str, dict] = {}
+        for app in sorted(self.app_dirs):
+            path = os.path.join(reports_dir, f"{app}.json")
+            if not os.path.exists(path):
+                continue
+            try:
+                out[app] = self.rewarm(path)
+            except Exception as exc:
+                out[app] = {"ok": False, "app": app,
+                            "error": repr(exc)}
+        return out

@@ -50,6 +50,7 @@ import select
 import subprocess
 import sys
 import tempfile
+import threading
 import time
 import traceback
 from typing import Optional, Sequence
@@ -186,6 +187,10 @@ class ForkServer:
         self._stderr_file = None
         self.ready: dict = {}
         self.execs = 0
+        # the zygote protocol is strictly request/reply on one pipe
+        # pair: concurrent callers (a serve worker + the daemon's
+        # rewarm tick) must not interleave writes or steal replies
+        self._lock = threading.RLock()
 
     # ------------------------------------------------------------ lifecycle
     @property
@@ -193,6 +198,10 @@ class ForkServer:
         return self.proc is not None and self.proc.poll() is None
 
     def start(self) -> dict:
+        with self._lock:
+            return self._start_locked()
+
+    def _start_locked(self) -> dict:
         if self.alive:
             return self.ready
         if self.proc is not None:  # zygote died behind our back: clean up
@@ -221,6 +230,10 @@ class ForkServer:
         return self.ready
 
     def stop(self) -> None:
+        with self._lock:
+            self._stop_locked()
+
+    def _stop_locked(self) -> None:
         if self.proc is None:
             return
         try:
@@ -244,10 +257,11 @@ class ForkServer:
     def restart(self, preload: Optional[Sequence[str]] = None) -> dict:
         """Tear down (whatever is left of) the zygote and boot a fresh
         one; ``preload`` replaces the pre-import set if given."""
-        self.stop()
-        if preload is not None:
-            self.preload_modules = list(dict.fromkeys(preload))
-        return self.start()
+        with self._lock:
+            self._stop_locked()
+            if preload is not None:
+                self.preload_modules = list(dict.fromkeys(preload))
+            return self._start_locked()
 
     def __enter__(self) -> "ForkServer":
         self.start()
@@ -282,6 +296,10 @@ class ForkServer:
         from repro.api.artifacts import as_report
         from repro.pool.policies import hot_set_from_report
         hot = hot_set_from_report(as_report(report))
+        with self._lock:
+            return self._rewarm_locked(hot)
+
+    def _rewarm_locked(self, hot: list) -> dict:
         if not self.alive:
             merged = list(dict.fromkeys([*self.preload_modules, *hot]))
             # restart raises ForkServerError if the merged hot set fails
@@ -315,11 +333,12 @@ class ForkServer:
 
     # ------------------------------------------------------------- plumbing
     def _request(self, obj: dict) -> dict:
-        if self.proc is None or self.proc.poll() is not None:
-            raise ForkServerError("zygote is not running")
-        self.proc.stdin.write(json.dumps(obj) + "\n")
-        self.proc.stdin.flush()
-        rep = self._read_reply()
+        with self._lock:
+            if self.proc is None or self.proc.poll() is not None:
+                raise ForkServerError("zygote is not running")
+            self.proc.stdin.write(json.dumps(obj) + "\n")
+            self.proc.stdin.flush()
+            rep = self._read_reply()
         if not rep.get("ok"):
             raise ForkServerError(str(rep))
         return rep

@@ -96,10 +96,27 @@ class FleetReport:
     memory_mb_s: float = 0.0
     max_instances: int = 0
     reclaims: int = 0
+    # bounded-queue accounting (zero/empty when replay ran unbounded)
+    sheds: int = 0
+    flushed: int = 0
+    queue_waits_ms: list[float] = field(default_factory=list, repr=False)
 
     @property
     def cold_start_ratio(self) -> float:
         return self.cold_starts / max(self.n_requests, 1)
+
+    @property
+    def served(self) -> int:
+        """Requests that actually ran (arrivals minus shed/flushed)."""
+        return self.n_requests - self.sheds - self.flushed
+
+    @property
+    def queue_wait_p50_ms(self) -> float:
+        return percentile_ms(self.queue_waits_ms, 0.50)
+
+    @property
+    def queue_wait_p99_ms(self) -> float:
+        return percentile_ms(self.queue_waits_ms, 0.99)
 
     @property
     def p50_ms(self) -> float:
@@ -134,6 +151,9 @@ class FleetReport:
             "memory_gb_s": round(self.memory_gb_s, 3),
             "max_instances": self.max_instances,
             "reclaims": self.reclaims,
+            "sheds": self.sheds,
+            "queue_wait_p99_ms": round(self.queue_wait_p99_ms, 2)
+            if self.queue_waits_ms else 0.0,
         }
 
 

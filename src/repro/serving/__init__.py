@@ -10,5 +10,7 @@ live traffic, and lazy materialization of cold components.
 from repro.serving.components import (  # noqa: F401
     Component, ComponentRegistry, LoadPolicy,
 )
-from repro.serving.engine import EnginePool, ServingEngine  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    EnginePool, PoolSaturated, ServingEngine,
+)
 from repro.serving.batcher import ContinuousBatcher, Request  # noqa: F401

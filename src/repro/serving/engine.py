@@ -19,6 +19,7 @@ warm engine's load policy from its live utilization.
 
 from __future__ import annotations
 
+import threading
 import time
 from functools import partial
 from typing import Any, Callable, Optional
@@ -280,6 +281,11 @@ class ServingEngine:
         return rep
 
 
+class PoolSaturated(RuntimeError):
+    """Backpressure: a model's cold-start wait queue is full, the
+    request was shed instead of piling more load on a cold pool."""
+
+
 class EnginePool:
     """Pool-aware dispatch across warm :class:`ServingEngine` instances.
 
@@ -291,27 +297,57 @@ class EnginePool:
     past the budget it evicts the warm engine that amortizes worst —
     fewest cold-start milliseconds saved per dispatch since admission —
     dropping its components so the memory is actually released.
+
+    ``queue_depth`` turns on **queue-aware dispatch** for concurrent
+    callers: while one thread cold-starts a model, other requests for
+    the same model *wait* for that one engine instead of each building
+    a duplicate (single-flight), at most ``queue_depth`` of them — the
+    next raises :class:`PoolSaturated` and is counted as a shed.
+    Waiters return with path ``"queued"`` and their wait recorded in
+    ``queue_waits_s``.  ``queue_depth=None`` (default) keeps the
+    legacy single-threaded behavior.
     """
 
     def __init__(self, builders: dict[str, Callable[[], "ServingEngine"]],
-                 *, max_warm: int = 2) -> None:
+                 *, max_warm: int = 2,
+                 queue_depth: Optional[int] = None) -> None:
         if max_warm < 1:
             raise ValueError("max_warm must be >= 1")
+        if queue_depth is not None and queue_depth < 0:
+            raise ValueError("queue_depth must be >= 0")
         self.builders = dict(builders)
         self.max_warm = max_warm
+        self.queue_depth = queue_depth
         self.warm: dict[str, ServingEngine] = {}
         self.hits = 0
         self.misses = 0
+        self.sheds = 0
         self.evictions: list[str] = []
+        self.queue_waits_s: list[float] = []
         self._dispatches: dict[str, int] = {}
+        self._lock = threading.Lock()
+        # model -> Event set once its in-flight cold start finishes
+        self._cold_events: dict[str, threading.Event] = {}
+        self._cold_waiters: dict[str, int] = {}
+        # queue mode only: engines with serves in flight must not have
+        # their components dropped under them by a concurrent eviction
+        # — the drop is deferred until the last serve returns
+        self._serving: dict[int, int] = {}          # id(engine) -> count
+        self._drop_pending: dict[int, "ServingEngine"] = {}
 
     # ----------------------------------------------------------- dispatch
     def dispatch(self, model: str, entry: str, tokens, **kw):
         """Serve one request; returns ``(output, latency_s, path)`` with
-        ``path`` in {"warm", "cold"}.  Cold latency includes the
-        engine's cold start, exactly like a FaaS cold invocation."""
+        ``path`` in {"warm", "cold", "queued"}.  Cold latency includes
+        the engine's cold start, exactly like a FaaS cold invocation;
+        queued latency includes the wait for the in-flight one."""
         if model not in self.builders:
             raise KeyError(f"unknown model {model!r}")
+        if self.queue_depth is None:
+            return self._dispatch_unlocked(model, entry, tokens, **kw)
+        return self._dispatch_queued(model, entry, tokens, **kw)
+
+    def _dispatch_unlocked(self, model: str, entry: str, tokens, **kw):
         eng = self.warm.get(model)
         if eng is not None:
             self.hits += 1
@@ -326,16 +362,105 @@ class EnginePool:
         out, lat = eng.serve(entry, tokens, **kw)
         return out, lat + cold_s, "cold"
 
+    def _dispatch_queued(self, model: str, entry: str, tokens, **kw):
+        t0 = time.perf_counter()
+        waited = False
+        wait_s = 0.0
+        while True:
+            evt: Optional[threading.Event] = None
+            with self._lock:
+                eng = self.warm.get(model)
+                if eng is not None:
+                    self.hits += 1
+                    self._dispatches[model] = \
+                        self._dispatches.get(model, 0) + 1
+                    if waited:
+                        wait_s = time.perf_counter() - t0
+                        self.queue_waits_s.append(wait_s)
+                    path = "queued" if waited else "warm"
+                elif model not in self._cold_events:
+                    # we are the builder: single-flight the cold start
+                    self._cold_events[model] = threading.Event()
+                    path = "build"
+                else:
+                    if self._cold_waiters.get(model, 0) \
+                            >= self.queue_depth:
+                        self.sheds += 1
+                        raise PoolSaturated(
+                            f"model {model!r}: {self.queue_depth} "
+                            f"requests already wait on its cold start")
+                    self._cold_waiters[model] = \
+                        self._cold_waiters.get(model, 0) + 1
+                    evt = self._cold_events[model]
+                    path = "wait"
+            if path in ("warm", "queued"):
+                out, lat = self._serve_counted(eng, entry, tokens, **kw)
+                return out, lat + wait_s, path
+            if path == "build":
+                try:
+                    eng = self.builders[model]()
+                    cold_s = eng.cold_start()
+                    with self._lock:
+                        self.misses += 1
+                        self._admit(model, eng)
+                        self._dispatches[model] = \
+                            self._dispatches.get(model, 0) + 1
+                finally:
+                    # wake waiters even on a failed build — one of them
+                    # retries as the next builder
+                    with self._lock:
+                        self._cold_events.pop(model).set()
+                out, lat = self._serve_counted(eng, entry, tokens, **kw)
+                return out, lat + cold_s, "cold"
+            # path == "wait": block until the in-flight build finishes
+            evt.wait()
+            with self._lock:
+                self._cold_waiters[model] = max(
+                    self._cold_waiters.get(model, 1) - 1, 0)
+            waited = True
+
+    def _serve_counted(self, eng: "ServingEngine", entry: str, tokens,
+                       **kw):
+        """Serve while holding an in-flight ticket on the engine so a
+        concurrent eviction defers its component drop (queue mode)."""
+        key = id(eng)
+        with self._lock:
+            self._serving[key] = self._serving.get(key, 0) + 1
+        try:
+            return eng.serve(entry, tokens, **kw)
+        finally:
+            with self._lock:
+                n = self._serving.get(key, 1) - 1
+                if n > 0:
+                    self._serving[key] = n
+                else:
+                    self._serving.pop(key, None)
+                    pending = self._drop_pending.pop(key, None)
+                    if pending is not None:
+                        for comp in pending.registry.values():
+                            comp.drop()
+
     def _admit(self, model: str, eng: "ServingEngine") -> None:
         while len(self.warm) >= self.max_warm:
             victim = min(self.warm, key=self._amortization)
             dropped = self.warm.pop(victim)
-            for comp in dropped.registry.values():
-                comp.drop()
+            if self._serving.get(id(dropped), 0) > 0:
+                # a thread is mid-serve on the victim: dropping its
+                # components now would yield None mid-request — defer
+                # to the last in-flight serve's exit
+                self._drop_pending[id(dropped)] = dropped
+            else:
+                for comp in dropped.registry.values():
+                    comp.drop()
             self.evictions.append(victim)
             # a re-admitted model must not inherit its old residency's
             # dispatch count, or its amortization score starts inflated
             self._dispatches.pop(victim, None)
+        # a builder may hand back the same engine object that was
+        # evicted earlier (cached/singleton builders): cancel any
+        # still-pending deferred drop or it would fire after this
+        # re-admission and gut a warm engine
+        self._drop_pending.pop(id(eng), None)
         self.warm[model] = eng
 
     def _amortization(self, model: str) -> float:
@@ -371,10 +496,17 @@ class EnginePool:
 
     def stats(self) -> dict:
         total = self.hits + self.misses
+        waits = sorted(self.queue_waits_s)
         return {
             "warm_models": sorted(self.warm),
             "hits": self.hits,
             "misses": self.misses,
             "hit_ratio": self.hits / max(total, 1),
             "evictions": list(self.evictions),
+            "sheds": self.sheds,
+            "coalesced": len(self.queue_waits_s),
+            "queue_wait_p99_s": (
+                waits[min(len(waits) - 1,
+                          max(0, round(0.99 * (len(waits) - 1))))]
+                if waits else 0.0),
         }

@@ -234,3 +234,78 @@ def test_bench_result_roundtrip_and_v1_migration(tmp_path):
         art = BenchResultArtifact.load(str(p))
     assert art.data == legacy
     assert art.name == "Fig. 1"
+
+
+# ---------------------------------------------------------------------------
+# fleet_summary
+# ---------------------------------------------------------------------------
+
+def _fleet_summary_payload(**over):
+    payload = {
+        "source": "serve-sim", "requests": 10, "served": 8,
+        "cold_starts": 2, "cold_start_ratio": 0.2, "p50_ms": 50.0,
+        "p99_ms": 120.0, "sheds": 1, "flushed": 1,
+        "queue_wait_p50_ms": 5.0, "queue_wait_p99_ms": 30.0,
+        "per_app": [{"app": "a", "requests": 10}],
+        "queue": {"depth": 4, "max_concurrency": 2,
+                  "shed_policy": "reject-new"},
+    }
+    payload.update(over)
+    return payload
+
+
+def test_fleet_summary_roundtrip_and_load_any(tmp_path):
+    from repro.api import (FleetSummaryArtifact, load_fleet_summary,
+                           save_fleet_summary)
+    path = str(tmp_path / "fs.json")
+    save_fleet_summary(_fleet_summary_payload(), path,
+                       meta={"run": "unit"})
+    assert peek(path) == ("fleet_summary", 1)
+    data = load_fleet_summary(path)
+    assert data["served"] == 8 and data["queue"]["depth"] == 4
+    assert data["meta"] == {"run": "unit"}
+    art = load_any(path)
+    assert isinstance(art, FleetSummaryArtifact)
+    assert art.meta == {"run": "unit"}
+
+
+def test_fleet_summary_schema_violations(tmp_path):
+    import json as _json
+
+    from repro.api import load_fleet_summary, save_fleet_summary
+    path = str(tmp_path / "fs.json")
+    bad = _fleet_summary_payload()
+    del bad["sheds"]  # missing required key: fails at *write* time
+    with pytest.raises(ArtifactError, match="missing keys.*sheds"):
+        save_fleet_summary(bad, path)
+    # a foreign/unknown key fails at load time, naming the path
+    doc = {"kind": "fleet_summary", "schema_version": 1,
+           **_fleet_summary_payload(), "unexpected": 1}
+    with open(path, "w") as fh:
+        _json.dump(doc, fh)
+    with pytest.raises(ArtifactError, match="unknown keys.*unexpected"):
+        load_fleet_summary(path)
+    save_fleet_summary(_fleet_summary_payload(), path)
+    assert load_fleet_summary(path)["requests"] == 10
+
+
+def test_fleet_summary_from_live_replay_validates(tmp_path):
+    """What FleetManager.artifact_payload emits must satisfy the
+    schema the artifact declares — producers and schema can't drift."""
+    from repro.api import load_fleet_summary, save_fleet_summary
+    from repro.pool import (AppProfile, FleetManager, IdleTimeoutPolicy,
+                            QueueConfig, Request, Trace)
+    prof = {"a": AppProfile(app="a", cold_init_ms=100.0, invoke_ms=10.0,
+                            warm_init_ms=5.0, rss_mb=64.0)}
+    fm = FleetManager(prof, IdleTimeoutPolicy(timeout_s=30.0),
+                      budget_mb=256.0,
+                      queue=QueueConfig(depth=2, max_concurrency=1))
+    summary = fm.replay(Trace("t", [Request(0.01 * i, "a")
+                                    for i in range(10)], 10.0))
+    path = str(tmp_path / "live.json")
+    save_fleet_summary(summary.artifact_payload(source="replay-sim"),
+                       path)
+    data = load_fleet_summary(path)
+    assert data["requests"] == 10
+    assert data["requests"] == (data["served"] + data["sheds"]
+                                + data["flushed"])

@@ -172,3 +172,67 @@ def test_module_entrypoint_subprocess(root, tmp_path):
         capture_output=True, text=True, env=env, timeout=180)
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert peek(out) == ("optimization_report", 2)
+
+
+def test_fleet_replay_out_writes_summary_artifact(tmp_path, capsys):
+    from repro.api import load_fleet_summary
+    out = str(tmp_path / "summary.json")
+    rc = main(["fleet", "replay", "--minutes", "5", "--policy", "idle",
+               "--apps", "a,b", "--queue-depth", "4",
+               "--max-concurrency", "1", "--out", out])
+    assert rc == 0
+    capsys.readouterr()
+    data = load_fleet_summary(out)
+    assert data["source"] == "replay-sim"
+    assert data["queue"]["depth"] == 4
+    assert data["requests"] == (data["served"] + data["sheds"]
+                                + data["flushed"])
+
+
+def test_fleet_serve_sim_trace_mode(tmp_path, capsys):
+    from repro.api import load_fleet_summary
+    out = str(tmp_path / "serve.json")
+    rc = main(["fleet", "serve", "--sim", "--apps", "a,b",
+               "--minutes", "3", "--peak-rpm", "30",
+               "--queue-depth", "8", "--summary-out", out])
+    assert rc == 0
+    assert '"source": "serve-sim"' in capsys.readouterr().out
+    data = load_fleet_summary(out)
+    assert data["requests"] > 0
+    assert data["requests"] == (data["served"] + data["sheds"]
+                                + data["flushed"])
+
+
+def test_fleet_serve_stdin_needs_apps(capsys):
+    rc = main(["fleet", "serve", "--sim", "--stdin", "--apps", ""])
+    assert rc == 2
+    capsys.readouterr()
+
+
+def test_docs_generate_and_check(tmp_path, capsys):
+    out = str(tmp_path / "cli.md")
+    assert main(["docs", "--out", out]) == 0
+    content = open(out).read()
+    assert "GENERATED FILE" in content
+    assert "fleet serve" in content and "--queue-depth" in content
+    assert main(["docs", "--check", "--out", out]) == 0
+    # drift: edited file must fail the check
+    open(out, "a").write("\nstale edit\n")
+    assert main(["docs", "--check", "--out", out]) == 1
+    # missing file must fail the check too
+    assert main(["docs", "--check",
+                 "--out", str(tmp_path / "nope.md")]) == 1
+    capsys.readouterr()
+
+
+def test_committed_cli_reference_is_current(capsys):
+    """The repo's own docs/cli.md must match the argparse tree — the
+    same gate CI runs."""
+    repo_root = os.path.dirname(SRC)
+    cwd = os.getcwd()
+    os.chdir(repo_root)
+    try:
+        assert main(["docs", "--check"]) == 0
+    finally:
+        os.chdir(cwd)
+    capsys.readouterr()

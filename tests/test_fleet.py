@@ -378,3 +378,94 @@ def test_zygote_fleet_real_dispatch_and_budget(suite_root_dir):
     assert fleet2.servers == {} and fleet2.skipped == ["graph_bfs"]
     m = fleet2.dispatch("graph_bfs", handler="bfs", seed=3)
     assert m["path"] == "cold" and m["init_ms"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Bounded queues / backpressure (QueueConfig) in the simulated fleet
+# ---------------------------------------------------------------------------
+
+def test_queue_config_validation():
+    from repro.pool import QueueConfig
+    with pytest.raises(ValueError):
+        QueueConfig(depth=-1)
+    with pytest.raises(ValueError):
+        QueueConfig(max_concurrency=0)
+    with pytest.raises(ValueError):
+        QueueConfig(shed_policy="lifo")
+    assert QueueConfig().to_dict()["shed_policy"] == "reject-new"
+
+
+def test_fleet_queue_bounds_concurrency_and_sheds():
+    from repro.pool import QueueConfig
+    pol = IdleTimeoutPolicy(timeout_s=1000.0)
+    fleet = FleetManager({"a": PROF_A}, pol, budget_mb=5000.0,
+                         queue=QueueConfig(depth=2, max_concurrency=1))
+    # 10 arrivals in 0.1 s; service is 115 ms, capacity ~1 instance
+    s = fleet.replay(_trace([(0.01 * i, "a") for i in range(10)], 30.0))
+    rep = s.per_app["a"]
+    assert rep.max_instances == 1           # cap held, no demand spawns
+    assert s.sheds > 0                      # overload was shed
+    assert s.n_requests == s.served + s.sheds + s.flushed
+    assert rep.queue_waits_ms              # queued requests waited
+    # queue wait is part of the served latency, so p99 >> warm latency
+    assert s.p99_ms > PROF_A.warm_init_ms + PROF_A.invoke_ms
+    assert s.budget_violations == 0
+
+
+def test_fleet_queue_drains_in_arrival_gaps():
+    """Queued requests start the moment an instance frees, not at the
+    next arrival: a short burst then silence still serves everyone."""
+    from repro.pool import QueueConfig
+    pol = IdleTimeoutPolicy(timeout_s=1000.0)
+    fleet = FleetManager({"a": PROF_A}, pol, budget_mb=5000.0,
+                         queue=QueueConfig(depth=8, max_concurrency=1))
+    s = fleet.replay(_trace([(0.0, "a"), (0.01, "a"), (0.02, "a")], 30.0))
+    assert s.sheds == 0 and s.flushed == 0
+    assert s.served == 3
+    waits = s.per_app["a"].queue_waits_ms
+    assert len(waits) == 2 and waits[0] < waits[1]  # FIFO chaining
+
+
+def test_fleet_queue_flushes_tail_at_finish():
+    from repro.pool import QueueConfig
+    pol = IdleTimeoutPolicy(timeout_s=1000.0)
+    fleet = FleetManager({"a": PROF_A}, pol, budget_mb=5000.0,
+                         queue=QueueConfig(depth=8, max_concurrency=1))
+    # burst right at the horizon: nothing frees before duration_s
+    s = fleet.replay(_trace([(9.99, "a"), (9.995, "a"), (9.999, "a")],
+                            10.0))
+    assert s.flushed > 0
+    assert s.n_requests == s.served + s.sheds + s.flushed
+
+
+def test_fleet_incremental_offer_matches_replay():
+    """begin/offer/finish (the daemon path) and one-shot replay are the
+    same machinery: identical summaries for the same trace."""
+    pol = IdleTimeoutPolicy(timeout_s=30.0)
+    trace = azure_trace(["a", "b"], minutes=10, peak_rpm=30.0, seed=5)
+    fleet1 = FleetManager({"a": PROF_A, "b": PROF_B}, pol,
+                          budget_mb=350.0)
+    s1 = fleet1.replay(trace)
+    fleet2 = FleetManager({"a": PROF_A, "b": PROF_B},
+                          copy.deepcopy(pol), budget_mb=350.0)
+    fleet2.begin(trace.name)
+    for req in trace:
+        fleet2.offer(req)
+    s2 = fleet2.finish(trace.duration_s)
+    assert s1.summary() == s2.summary()
+    assert s1.app_rows() == s2.app_rows()
+
+
+def test_fleet_offer_outcomes():
+    from repro.pool import QueueConfig
+    fleet = FleetManager({"a": PROF_A}, IdleTimeoutPolicy(timeout_s=30.0),
+                         budget_mb=5000.0,
+                         queue=QueueConfig(depth=1, max_concurrency=1))
+    fleet.begin("unit")
+    assert fleet.offer(Request(0.0, "a")) == "served"
+    assert fleet.offer(Request(0.01, "a")) == "queued"
+    assert fleet.offer(Request(0.02, "a")) == "shed"
+    with pytest.raises(KeyError, match="unknown app"):
+        fleet.offer(Request(0.03, "zzz"))
+    s = fleet.finish(10.0)
+    assert (s.served, s.sheds, s.flushed) == (2, 1, 0)

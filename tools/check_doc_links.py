@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Relative-link checker for the markdown docs (stdlib only).
+
+Walks the given files/directories for ``*.md``, extracts inline
+markdown links, and verifies every **relative** target resolves to an
+existing file (anchors are stripped; ``http(s):``/``mailto:`` links
+are ignored — CI must not flake on the network).  Exit 1 with one line
+per broken link.
+
+    python tools/check_doc_links.py README.md docs src/repro/pool
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# inline links [text](target); images ![alt](target) match too.
+# Skips autolinks/code spans by construction (no markdown parser, but
+# the docs stick to plain inline links).
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def md_files(paths: list[str]) -> tuple[list[str], list[str]]:
+    """Expand args to markdown files; a named path that is missing or
+    not markdown is an error (a typo in CI must not silently shrink
+    the gate's coverage)."""
+    out: list[str] = []
+    bad: list[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for dirpath, _dirs, files in os.walk(p):
+                out.extend(os.path.join(dirpath, f) for f in files
+                           if f.endswith(".md"))
+        elif p.endswith(".md") and os.path.isfile(p):
+            out.append(p)
+        else:
+            bad.append(p)
+    return sorted(set(out)), bad
+
+
+def broken_links(path: str) -> list[tuple[int, str]]:
+    bad: list[tuple[int, str]] = []
+    base = os.path.dirname(os.path.abspath(path))
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(SKIP_PREFIXES):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                if not os.path.exists(os.path.join(base, rel)):
+                    bad.append((lineno, target))
+    return bad
+
+
+def main(argv: list[str]) -> int:
+    paths = argv or ["README.md", "docs"]
+    files, bad_args = md_files(paths)
+    for p in bad_args:
+        print(f"check_doc_links: no such markdown file or directory: "
+              f"{p}", file=sys.stderr)
+    if bad_args:
+        return 1
+    if not files:
+        print("check_doc_links: no markdown files found", file=sys.stderr)
+        return 1
+    failures = 0
+    for f in files:
+        for lineno, target in broken_links(f):
+            print(f"{f}:{lineno}: broken relative link -> {target}")
+            failures += 1
+    if failures:
+        print(f"check_doc_links: {failures} broken link(s) in "
+              f"{len(files)} file(s)", file=sys.stderr)
+        return 1
+    print(f"check_doc_links: OK ({len(files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
