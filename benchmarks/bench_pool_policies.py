@@ -23,13 +23,15 @@ import os
 from repro.api import SlimStart
 from repro.benchsuite.genlibs import build_suite
 from repro.benchsuite.harness import measure_cold_starts, measure_pool_starts
+from repro.pool.forkserver import BaseZygote
 from repro.pool.policies import default_policies, hot_set_from_report
+from repro.pool.sharing import compute_shared_hot_set, shared_search_paths
 from repro.pool.simulator import AppProfile, FleetSimulator
 from repro.pool.trace import standard_traces
 
 from benchmarks.common import (
-    APP_SHORT, N_COLD, N_INSTANCES, N_INVOKE, QUICK, bench, save_result,
-    table,
+    APP_SHORT, N_COLD, N_INSTANCES, N_INVOKE, QUICK, bench,
+    measure_boot_pair, save_result, table,
 )
 
 POOL_APPS = ["graph_bfs", "sentiment_analysis_r"]
@@ -82,6 +84,36 @@ def run() -> dict:
                        "hot_set"],
                 "Fork-pool vs fresh-process cold starts"))
 
+    # ------------------------------- part 1b: shared-base zygote boot
+    # the two-tier column: boot each app's zygote fresh (interpreter +
+    # hot set) vs fork it from one shared base — the per-app *zygote
+    # boot* cost the fleet pays on deploy, rewarm and crash recovery
+    app_dirs = {a: os.path.join(root, "apps", a) for a in POOL_APPS}
+    shared = compute_shared_hot_set(
+        {a: m["report"] for a, m in measured.items()}, min_apps=2)
+    base = BaseZygote(preload=shared.modules,
+                      search_paths=shared_search_paths(app_dirs))
+    base.start()
+    boot_rows = []
+    try:
+        for app in POOL_APPS:
+            hot = measured[app]["hot_set"]
+            pair = measure_boot_pair(app_dirs[app], hot,
+                                     shared.delta(app, hot), base)
+            boot_rows.append({
+                "app": APP_SHORT.get(app, app),
+                "boot_fresh_ms": pair["boot_fresh_ms"],
+                "boot_shared_ms": pair["boot_shared_ms"],
+                "boot_speedup": pair["boot_speedup"],
+            })
+    finally:
+        base.stop()
+    print()
+    print(table(boot_rows, ["app", "boot_fresh_ms", "boot_shared_ms",
+                            "boot_speedup"],
+                f"Zygote boot: fresh vs forked from shared base (base "
+                f"pre-imports {','.join(shared.modules) or 'nothing'})"))
+
     # -------------------------------------------- part 2: fleet simulation
     sim_rows = []
     for app in POOL_APPS:
@@ -109,10 +141,14 @@ def run() -> dict:
     payload = {
         "claim": "fork-pool warm starts >=2x faster than fresh cold "
                  "starts; profile-guided policy trades memory for "
-                 "cold-start ratio",
+                 "cold-start ratio; shared-base forks boot zygotes "
+                 "faster than fresh interpreter boots",
         "pool_rows": rows,
+        "boot_rows": boot_rows,
+        "shared_modules": list(shared.modules),
         "sim_rows": sim_rows,
         "min_speedup_hot": min(r["speedup_hot"] for r in rows),
+        "min_boot_speedup": min(r["boot_speedup"] for r in boot_rows),
         "trace_shapes": sorted({r["trace"] for r in sim_rows}),
     }
     save_result("bench_pool_policies", payload)

@@ -114,6 +114,44 @@ def load_result(name: str):
 
 
 
+def measure_boot_pair(app_dir: str, hot: list, delta: list, base) -> dict:
+    """Time one app's zygote boot both ways: fresh interpreter +
+    full hot set vs forked from the shared ``base`` + private delta.
+
+    Shared by ``bench_fleet`` and ``bench_pool_policies`` so the
+    timing boundaries (ForkServer.start() to ready, zygote torn down
+    between measurements) cannot drift between the two benchmarks.
+    Returns ``{"boot_fresh_ms", "boot_shared_ms", "boot_speedup",
+    "fresh_rss_mb", "incremental_mb"}`` — ``incremental_mb`` is the
+    spawned zygote's private pages when the kernel reports a real
+    split, else its RSS increment over the base.
+    """
+    from repro.pool.forkserver import ForkServer
+    t0 = time.perf_counter()
+    fs = ForkServer(app_dir, preload=hot)
+    fs.start()
+    fresh_ms = (time.perf_counter() - t0) * 1e3
+    fresh_rss_mb = fs.rss_kb() / 1024.0
+    fs.stop()
+    base_rss_mb = base.rss_kb() / 1024.0
+    t0 = time.perf_counter()
+    fs2 = ForkServer(app_dir, preload=delta, base=base)
+    fs2.start()
+    spawn_ms = (time.perf_counter() - t0) * 1e3
+    mem = fs2.memory_kb()
+    incremental_mb = (mem["private_kb"] / 1024.0 if mem["pss_kb"] > 0
+                      else max(mem["rss_kb"] / 1024.0 - base_rss_mb,
+                               0.0))
+    fs2.stop()
+    return {
+        "boot_fresh_ms": round(fresh_ms, 1),
+        "boot_shared_ms": round(spawn_ms, 1),
+        "boot_speedup": round(fresh_ms / max(spawn_ms, 1e-9), 2),
+        "fresh_rss_mb": round(fresh_rss_mb, 1),
+        "incremental_mb": round(incremental_mb, 1),
+    }
+
+
 class timed:
     def __init__(self, label):
         self.label = label

@@ -32,17 +32,20 @@ from repro.api.artifacts import (
     ColdStartStatsArtifact,
     FleetSummaryArtifact,
     ReportArtifact,
+    SharedHotSetArtifact,
     TraceArtifact,
     as_report,
     load_bench_result,
     load_fleet_summary,
     load_report,
     load_report_meta,
+    load_shared_hot_set,
     load_stats,
     load_trace,
     save_bench_result,
     save_fleet_summary,
     save_report,
+    save_shared_hot_set,
     save_stats,
     save_trace,
 )
@@ -77,6 +80,7 @@ __all__ = [
     "ReportArtifact",
     "RunContext",
     "ServeStage",
+    "SharedHotSetArtifact",
     "SlimStart",
     "Stage",
     "TraceArtifact",
@@ -91,6 +95,7 @@ __all__ = [
     "load_fleet_summary",
     "load_report",
     "load_report_meta",
+    "load_shared_hot_set",
     "load_stats",
     "load_trace",
     "peek",
@@ -100,6 +105,7 @@ __all__ = [
     "save_bench_result",
     "save_fleet_summary",
     "save_report",
+    "save_shared_hot_set",
     "save_stats",
     "save_trace",
     "static_defer_targets",

@@ -1,6 +1,6 @@
 """Concrete schema-versioned artifacts of the SLIMSTART workflow.
 
-Five kinds cover everything the stages exchange on disk:
+Six kinds cover everything the stages exchange on disk:
 
 ====================  ===========================  =======
 kind                  wraps                         latest
@@ -10,6 +10,7 @@ trace                 repro.pool.trace.Trace        1
 cold_start_stats      ColdStartStats (harness)      1
 bench_result          benchmark payload dicts       2
 fleet_summary         fleet serve/replay rollups    1
+shared_hot_set        repro.pool.sharing plan       1
 ====================  ===========================  =======
 
 ``optimization_report`` v1 is the seed repo's unversioned
@@ -36,6 +37,7 @@ from repro.core.profiler.utilization import (
     InefficiencyFinding,
     LibraryStats,
 )
+from repro.pool.sharing import SharedHotSet
 from repro.pool.trace import Request, Trace
 
 ReportLike = Union[OptimizationReport, "ReportArtifact", str, os.PathLike]
@@ -299,7 +301,8 @@ class FleetSummaryArtifact(Artifact):
     optional_keys = ("policy", "trace", "budget_mb", "duration_s",
                      "pool_starts", "errors", "memory_gb_s",
                      "rewarm_ticks", "queue", "zygotes", "skipped",
-                     "used_mb", "meta")
+                     "used_mb", "shared_base_mb", "base_gb_s",
+                     "shared_base", "meta")
 
     def __init__(self, payload: dict, meta: Optional[dict] = None) -> None:
         self.data = dict(payload)
@@ -338,6 +341,52 @@ def load_fleet_summary(path: str) -> dict:
     return FleetSummaryArtifact.load(path).data
 
 
+# ---------------------------------------------------------------------------
+# shared_hot_set (v1)
+# ---------------------------------------------------------------------------
+
+class SharedHotSetArtifact(Artifact):
+    """The fleet's two-tier pre-import plan (see
+    :mod:`repro.pool.sharing`): which modules boot the shared
+    :class:`~repro.pool.forkserver.BaseZygote` and what private delta
+    each per-app zygote layers on top after forking from it.  Produced
+    by intersecting the deployed ``optimization_report`` artifacts;
+    consumed by ``fleet serve --shared-base`` boot and its rewarm
+    tick's base hot-swap."""
+
+    kind = "shared_hot_set"
+    schema_version = 1
+    required_keys = ("modules", "apps", "per_app_delta")
+    optional_keys = ("min_apps", "counts", "meta")
+
+    def __init__(self, shared: "SharedHotSet",
+                 meta: Optional[dict] = None) -> None:
+        self.shared = shared
+        self.meta = dict(meta or {})
+
+    def to_payload(self) -> dict:
+        return {**self.shared.to_payload(), "meta": self.meta}
+
+    @classmethod
+    def from_payload(cls, payload: dict) -> "SharedHotSetArtifact":
+        from repro.pool.sharing import SharedHotSet
+        return cls(SharedHotSet.from_payload(payload),
+                   meta=payload.get("meta") or {})
+
+
+def save_shared_hot_set(shared: "SharedHotSet", path: str,
+                        meta: Optional[dict] = None) -> str:
+    """Atomically save a :class:`repro.pool.sharing.SharedHotSet` as a
+    versioned ``shared_hot_set`` artifact."""
+    return SharedHotSetArtifact(shared, meta=meta).save(path)
+
+
+def load_shared_hot_set(path: str) -> "SharedHotSet":
+    """Load a ``shared_hot_set`` artifact; returns the
+    :class:`repro.pool.sharing.SharedHotSet`."""
+    return SharedHotSetArtifact.load(path).shared
+
+
 __all__ = [
     "Artifact",
     "ArtifactError",
@@ -345,17 +394,20 @@ __all__ = [
     "ColdStartStatsArtifact",
     "FleetSummaryArtifact",
     "ReportArtifact",
+    "SharedHotSetArtifact",
     "TraceArtifact",
     "as_report",
     "load_bench_result",
     "load_fleet_summary",
     "load_report",
     "load_report_meta",
+    "load_shared_hot_set",
     "load_stats",
     "load_trace",
     "save_bench_result",
     "save_fleet_summary",
     "save_report",
+    "save_shared_hot_set",
     "save_stats",
     "save_trace",
 ]

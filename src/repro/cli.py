@@ -133,7 +133,10 @@ def cmd_restore(args: argparse.Namespace) -> int:
 
 
 def cmd_pool_serve(args: argparse.Namespace) -> int:
-    from repro.pool.forkserver import ForkServer
+    import contextlib
+    import time as _time
+
+    from repro.pool.forkserver import BaseZygote, ForkServer
     from repro.pool.policies import hot_set_from_report
     if args.app_dir:
         app_dir = args.app_dir
@@ -144,7 +147,24 @@ def cmd_pool_serve(args: argparse.Namespace) -> int:
     if args.report:
         preload = hot_set_from_report(load_report(args.report))
     rows = []
-    with ForkServer(app_dir, preload=preload) as fs:
+    with contextlib.ExitStack() as stack:
+        base = None
+        if args.shared_base:
+            # two-tier demo for one app: the hot set lives in a base
+            # zygote and the app zygote is forked from it — its boot
+            # is fork + (empty) delta instead of interpreter + hot set
+            base = stack.enter_context(BaseZygote(
+                preload=preload,
+                search_paths=[os.path.join(app_dir, "libs")]))
+            t0 = _time.perf_counter()
+            fs = stack.enter_context(
+                ForkServer(app_dir, preload=[], base=base))
+            spawn_ms = (_time.perf_counter() - t0) * 1e3
+            print(f"base zygote pid {base.ready.get('pid')} preloaded "
+                  f"{base.ready.get('preloaded') or '(bare)'}; app "
+                  f"zygote forked from base in {spawn_ms:.1f} ms")
+        else:
+            fs = stack.enter_context(ForkServer(app_dir, preload=preload))
         print(f"zygote ready (pid {fs.ready.get('pid')}), preloaded: "
               f"{fs.ready.get('preloaded') or '(bare)'}")
         for i in range(args.requests):
@@ -206,8 +226,14 @@ def _fleet_profiles(args: argparse.Namespace, apps: Sequence[str]):
                             warm_init_ms=args.warm_init_ms,
                             invoke_ms=args.invoke_ms,
                             rss_mb=args.rss_mb,
-                            zygote_rss_mb=args.zygote_rss_mb)
+                            zygote_rss_mb=args.zygote_rss_mb,
+                            zygote_private_mb=args.zygote_private_mb)
             for app in apps}
+
+
+def _shared_base_mb(args: argparse.Namespace) -> float:
+    """The simulated base zygote's resident MB (0 = two-tier off)."""
+    return args.shared_base_mb if args.shared_base else 0.0
 
 
 def _queue_config(args: argparse.Namespace):
@@ -234,7 +260,9 @@ def _real_fleet(args: argparse.Namespace, apps: Sequence[str]):
         if args.reports_dir and os.path.exists(path):
             reports[app] = path  # as_report() resolves artifact paths
     budget = args.budget_mb if args.budget_mb > 0 else None
-    return ZygoteFleet(app_dirs, budget_mb=budget, reports=reports)
+    return ZygoteFleet(app_dirs, budget_mb=budget, reports=reports,
+                       shared_base=args.shared_base,
+                       base_min_apps=args.base_min_apps)
 
 
 def cmd_fleet_replay(args: argparse.Namespace) -> int:
@@ -256,7 +284,9 @@ def cmd_fleet_replay(args: argparse.Namespace) -> int:
         summary = FleetManager(_fleet_profiles(args, apps),
                                _fleet_policy(args, apps),
                                budget_mb=args.budget_mb,
-                               queue=queue).replay(trace)
+                               queue=queue,
+                               shared_base_mb=_shared_base_mb(args),
+                               ).replay(trace)
         payload = summary.artifact_payload(source="replay-sim")
         print(json.dumps(summary.summary(), indent=2))
         _print_rows(summary.app_rows(),
@@ -294,7 +324,8 @@ def cmd_fleet_serve(args: argparse.Namespace) -> int:
     if args.sim:
         manager = FleetManager(_fleet_profiles(args, apps),
                                _fleet_policy(args, apps),
-                               budget_mb=args.budget_mb, queue=queue)
+                               budget_mb=args.budget_mb, queue=queue,
+                               shared_base_mb=_shared_base_mb(args))
         backend = SimFleetBackend(manager, reports_dir=args.reports_dir)
     else:
         backend = RealFleetBackend(_real_fleet(args, apps), queue=queue,
@@ -481,6 +512,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--requests", type=int, default=5)
     p.add_argument("--invocations", type=int, default=1)
     p.add_argument("--seed", type=int, default=100)
+    p.add_argument("--shared-base", action="store_true",
+                   help="two-tier: put the hot set in a base zygote "
+                        "and fork the app zygote from it")
     p.set_defaults(func=cmd_pool_serve)
 
     def add_fleet_workload(p: argparse.ArgumentParser) -> None:
@@ -504,6 +538,15 @@ def build_parser() -> argparse.ArgumentParser:
                             "artifacts (<app>.json): hot sets for "
                             "zygotes / the profile-guided policy, and "
                             "what the rewarm tick re-loads")
+        p.add_argument("--shared-base", action="store_true",
+                       help="two-tier fleet: one shared base zygote "
+                            "pre-imports the cross-app hot set; "
+                            "per-app zygotes fork from it and the "
+                            "budget charges only their incremental "
+                            "memory")
+        p.add_argument("--base-min-apps", type=int, default=2,
+                       help="a module joins the shared base when hot "
+                            "for at least this many member apps")
 
     def add_fleet_sim_profile(p: argparse.ArgumentParser) -> None:
         p.add_argument("--policy", default="profile",
@@ -515,6 +558,13 @@ def build_parser() -> argparse.ArgumentParser:
         p.add_argument("--invoke-ms", type=float, default=30.0)
         p.add_argument("--rss-mb", type=float, default=128.0)
         p.add_argument("--zygote-rss-mb", type=float, default=96.0)
+        p.add_argument("--zygote-private-mb", type=float, default=0.0,
+                       help="measured per-app zygote pages above the "
+                            "shared base (0: derive from "
+                            "--shared-base-mb)")
+        p.add_argument("--shared-base-mb", type=float, default=64.0,
+                       help="simulated shared base zygote RSS "
+                            "(used with --shared-base)")
 
     def add_queue_knobs(p: argparse.ArgumentParser,
                         default_depth: int) -> None:

@@ -1,9 +1,14 @@
 """Warm-pool subsystem: amortizing initialization across instances.
 
-Five pieces (see each module's docstring and this package's README.md):
+Six pieces (see each module's docstring and this package's README.md):
 
 * :mod:`repro.pool.forkserver` — profile-guided zygote that pre-imports
-  the measured hot set and forks handler instances copy-on-write;
+  the measured hot set and forks handler instances copy-on-write; in
+  two-tier mode a single ``BaseZygote`` holds the cross-app shared hot
+  set and per-app zygotes are forked from it;
+* :mod:`repro.pool.sharing`    — computes that cross-app shared hot
+  set (and each app's private delta) by intersecting deployed
+  ``optimization_report`` artifacts;
 * :mod:`repro.pool.policies`   — keep-alive / pool-sizing policies,
   including the profile-guided one fed by ``OptimizationReport``;
 * :mod:`repro.pool.trace`      — synthetic invocation traces (poisson,
@@ -29,7 +34,7 @@ from repro.pool.fleet import (
     ZygoteFleet,
     fleet_sweep,
 )
-from repro.pool.forkserver import ForkServer, ForkServerError
+from repro.pool.forkserver import BaseZygote, ForkServer, ForkServerError
 from repro.pool.policies import (
     FixedSizePolicy,
     HistogramPolicy,
@@ -39,7 +44,19 @@ from repro.pool.policies import (
     default_policies,
     hot_set_from_report,
 )
-from repro.pool.simulator import AppProfile, FleetReport, FleetSimulator, sweep
+from repro.pool.sharing import (
+    SharedHotSet,
+    compute_shared_hot_set,
+    intersect_hot_sets,
+    shared_search_paths,
+)
+from repro.pool.simulator import (
+    AppProfile,
+    FleetReport,
+    FleetSimulator,
+    PercentilePool,
+    sweep,
+)
 from repro.pool.trace import (
     AzureRow,
     Request,
@@ -59,6 +76,7 @@ from repro.pool.trace import (
 __all__ = [
     "AppProfile",
     "AzureRow",
+    "BaseZygote",
     "FixedSizePolicy",
     "FleetDaemon",
     "FleetManager",
@@ -70,23 +88,28 @@ __all__ = [
     "HistogramPolicy",
     "IdleTimeoutPolicy",
     "KeepAlivePolicy",
+    "PercentilePool",
     "ProfileGuidedPolicy",
     "QueueConfig",
     "RealFleetBackend",
     "Request",
+    "SharedHotSet",
     "SimFleetBackend",
     "Trace",
     "ZygoteFleet",
     "azure_synthetic_rows",
     "azure_trace",
     "bursty_trace",
+    "compute_shared_hot_set",
     "default_policies",
     "diurnal_trace",
     "fleet_sweep",
     "handler_skewed_trace",
     "hot_set_from_report",
+    "intersect_hot_sets",
     "load_azure_csv",
     "poisson_trace",
+    "shared_search_paths",
     "standard_traces",
     "sweep",
     "trace_from_azure_rows",

@@ -14,7 +14,11 @@ resident and serves invocations for as long as the process lives:
   the deployed per-app report artifacts and re-preloads the matching
   zygotes (``ZygoteFleet.rewarm_from_dir``), so defer-set drift picked
   up by an external ``python -m repro profile`` / ``ci-check`` run
-  reaches the running fleet without a restart;
+  reaches the running fleet without a restart; with a two-tier fleet
+  (``--shared-base``) the same tick recomputes the cross-app shared
+  hot set and hot-swaps the base zygote when it changed — app zygotes
+  are re-forked onto the new base one at a time under their protocol
+  locks, so in-flight execs finish and nothing is shed;
 * **graceful drain** — on SIGTERM (or an explicit ``drain``), the
   daemon stops admitting, lets in-flight invocations finish, flushes
   still-queued requests into the summary, and emits a schema-versioned
@@ -368,17 +372,25 @@ class RealFleetBackend:
             zygotes=sorted(self.fleet.servers),
             skipped=list(self.fleet.skipped),
             used_mb=round(self.fleet.used_mb(), 1),
+            # two-tier fleet: shared base modules, RSS and hot-swap
+            # count ({} when the fleet runs one zygote per app)
+            **self.fleet._base_info(),
         )
 
     def snapshot(self) -> dict:
         with self._cond:
-            return {
+            snap = {
                 "requests": sum(s.arrivals for s in self._stats.values()),
                 "cold_starts": sum(s.cold for s in self._stats.values()),
                 "sheds": sum(s.sheds for s in self._stats.values()),
                 "queued": sum(len(q) for q in self._queues.values()),
                 "in_flight": sum(self._in_flight.values()),
             }
+        if self.fleet.shared_base:
+            snap["base_alive"] = (self.fleet.base is not None
+                                  and self.fleet.base.alive)
+            snap["base_swaps"] = self.fleet.base_swaps
+        return snap
 
     def rewarm(self) -> dict:
         if not self.reports_dir:

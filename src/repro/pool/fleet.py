@@ -60,9 +60,19 @@ from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
 from repro.core.profiler.report import OptimizationReport
-from repro.pool.forkserver import ForkServer, ForkServerError
+from repro.pool.forkserver import BaseZygote, ForkServer, ForkServerError
 from repro.pool.policies import KeepAlivePolicy, hot_set_from_report
-from repro.pool.simulator import AppProfile, FleetReport, percentile_ms
+from repro.pool.sharing import (
+    SharedHotSet,
+    compute_shared_hot_set,
+    shared_search_paths,
+)
+from repro.pool.simulator import (
+    AppProfile,
+    FleetReport,
+    PercentilePool,
+    percentile_ms,
+)
 from repro.pool.trace import Request, Trace
 
 
@@ -169,6 +179,18 @@ class _AppState:
     def zygote_rss_mb(self) -> float:
         return self.profile.zygote_rss_mb or self.profile.rss_mb
 
+    def zygote_charge_mb(self, shared_base_mb: float) -> float:
+        """What this app's resident zygote costs the budget.  With a
+        shared base (two-tier fleet) only the *incremental* pages above
+        the base are charged — the measured private delta when the
+        profile has one, else the RSS increment over the base."""
+        full = self.zygote_rss_mb()
+        if shared_base_mb <= 0:
+            return full
+        if self.profile.zygote_private_mb > 0:
+            return min(self.profile.zygote_private_mb, full)
+        return max(full - shared_base_mb, 0.0)
+
 
 @dataclass
 class FleetSummary:
@@ -189,6 +211,19 @@ class FleetSummary:
     zygote_apps: list[str] = field(default_factory=list)
     queue: Optional[QueueConfig] = None
     rewarm_ticks: int = 0
+    # two-tier fleet: the shared base zygote's resident MB (charged once
+    # fleet-wide) and the memory-seconds it accrued over the replay
+    shared_base_mb: float = 0.0
+    base_mb_s: float = 0.0
+
+    def __post_init__(self) -> None:
+        # percentile pools sort the merged latency lists once and are
+        # invalidated by growth, so summary()/app_rows() on a large
+        # replay stop re-sorting the full pool on every property access
+        self._lat_pool = PercentilePool(
+            lambda: (r.latencies_ms for r in self.per_app.values()))
+        self._wait_pool = PercentilePool(
+            lambda: (r.queue_waits_ms for r in self.per_app.values()))
 
     @property
     def n_requests(self) -> int:
@@ -212,13 +247,11 @@ class FleetSummary:
 
     @property
     def queue_wait_p50_ms(self) -> float:
-        return percentile_ms([w for r in self.per_app.values()
-                              for w in r.queue_waits_ms], 0.50)
+        return self._wait_pool.percentile(0.50)
 
     @property
     def queue_wait_p99_ms(self) -> float:
-        return percentile_ms([w for r in self.per_app.values()
-                              for w in r.queue_waits_ms], 0.99)
+        return self._wait_pool.percentile(0.99)
 
     @property
     def cold_start_ratio(self) -> float:
@@ -226,18 +259,15 @@ class FleetSummary:
 
     @property
     def p50_ms(self) -> float:
-        return percentile_ms([x for r in self.per_app.values()
-                              for x in r.latencies_ms], 0.50)
+        return self._lat_pool.percentile(0.50)
 
     @property
     def p99_ms(self) -> float:
-        return percentile_ms([x for r in self.per_app.values()
-                              for x in r.latencies_ms], 0.99)
+        return self._lat_pool.percentile(0.99)
 
     @property
     def mean_ms(self) -> float:
-        lats = [x for r in self.per_app.values() for x in r.latencies_ms]
-        return statistics.fmean(lats) if lats else math.nan
+        return self._lat_pool.mean
 
     @property
     def budget_utilization(self) -> float:
@@ -265,6 +295,8 @@ class FleetSummary:
             "sheds": self.sheds,
             "queue_wait_p99_ms": round(self.queue_wait_p99_ms, 2)
             if not math.isnan(self.queue_wait_p99_ms) else 0.0,
+            "memory_gb_s": round(self.memory_mb_s / 1024.0, 3),
+            "shared_base_mb": round(self.shared_base_mb, 1),
         }
 
     def app_rows(self) -> list[dict]:
@@ -320,6 +352,8 @@ class FleetSummary:
             rewarm_ticks=(self.rewarm_ticks if rewarm_ticks is None
                           else rewarm_ticks),
             queue=self.queue.to_dict() if self.queue else None,
+            shared_base_mb=round(self.shared_base_mb, 1),
+            base_gb_s=round(self.base_mb_s / 1024.0, 3),
         )
 
 
@@ -335,9 +369,12 @@ class FleetManager:
                  policy: KeepAlivePolicy, *, budget_mb: float,
                  rate_window_s: float = 120.0,
                  zygote_retry_s: float = 60.0,
-                 queue: Optional[QueueConfig] = None) -> None:
+                 queue: Optional[QueueConfig] = None,
+                 shared_base_mb: float = 0.0) -> None:
         if budget_mb <= 0:
             raise ValueError("budget_mb must be positive")
+        if shared_base_mb < 0:
+            raise ValueError("shared_base_mb must be >= 0")
         self.profiles = dict(profiles)
         self.policy = policy
         self.budget_mb = budget_mb
@@ -349,6 +386,13 @@ class FleetManager:
         # None = unbounded demand spawns (Lambda-style); a QueueConfig
         # bounds concurrency per app and sheds past the queue depth
         self.queue = queue
+        # two-tier fleet: one shared base zygote is resident for the
+        # whole run (charged once); per-app zygotes then cost only
+        # their incremental pages (AppProfile.zygote_private_mb, or
+        # zygote_rss_mb minus the base) — so eviction ranks on what
+        # evicting actually frees, and admission headroom on what
+        # admitting actually costs
+        self.shared_base_mb = shared_base_mb
         self._apps: dict[str, _AppState] = {}
         self._last_t = 0.0
 
@@ -395,12 +439,17 @@ class FleetManager:
 
     def zygote_evict_cost(self, app: str, now: float) -> float:
         """Marginal cost of evicting ``app``'s zygote: every future
-        start degrades from fork to full cold, per freed MB."""
+        start degrades from fork to full cold, per freed MB.  With a
+        shared base the denominator is the *incremental* charge — the
+        base's pages stay resident either way, so a big-RSS zygote
+        whose pages are mostly the shared set is cheap to keep and
+        expensive-per-freed-MB to evict."""
         st = self._apps[app]
         prof = st.profile
         saved = max(prof.cold_init_ms - prof.warm_init_ms, 0.0)
         rate = self.observed_rate_per_s(app, now)
-        return rate * saved / max(st.zygote_rss_mb(), 1e-9)
+        return rate * saved / max(st.zygote_charge_mb(self.shared_base_mb),
+                                  1e-9)
 
     # -------------------------------------------------------------- replay
     def replay(self, trace: Trace) -> FleetSummary:
@@ -465,7 +514,7 @@ class FleetManager:
             policy=self.policy.name, trace=trace_name,
             budget_mb=self.budget_mb, duration_s=0.0,
             per_app={app: st.report for app, st in self._apps.items()},
-            queue=self.queue)
+            queue=self.queue, shared_base_mb=self.shared_base_mb)
 
     def _record_arrival(self, app: str, t: float) -> None:
         self._apps[app].arrivals.append(t)
@@ -473,10 +522,12 @@ class FleetManager:
 
     def _used_mb(self, *, retained_only: bool = False,
                  now: Optional[float] = None) -> float:
-        total = 0.0
+        # the shared base zygote (two-tier mode) is resident for the
+        # whole run and charged exactly once, fleet-wide
+        total = self.shared_base_mb
         for st in self._apps.values():
             if st.zygote_up:
-                total += st.zygote_rss_mb()
+                total += st.zygote_charge_mb(self.shared_base_mb)
             insts = st.instances
             if retained_only and now is not None:
                 insts = [i for i in insts if i.busy_until <= now]
@@ -512,8 +563,11 @@ class FleetManager:
             if now - st.zygote_evicted_t < self.zygote_retry_s:
                 continue  # recently squeezed out: don't thrash
             # admit only with headroom for at least one forked instance
-            # — a zygote that starves serving of memory is pure overhead
-            need = st.zygote_rss_mb() + st.profile.rss_mb
+            # — a zygote that starves serving of memory is pure
+            # overhead.  Two-tier mode admits on the *delta*: the
+            # shared pages are already paid for
+            need = st.zygote_charge_mb(self.shared_base_mb) \
+                + st.profile.rss_mb
             if self._used_mb() + need <= self.budget_mb:
                 st.zygote_up = True
                 st.zygote_since = now
@@ -555,8 +609,8 @@ class FleetManager:
             else:
                 st.zygote_up = False
                 st.zygote_evicted_t = now
-                st.zygote_mb_s += st.zygote_rss_mb() * (now
-                                                        - st.zygote_since)
+                st.zygote_mb_s += st.zygote_charge_mb(
+                    self.shared_base_mb) * (now - st.zygote_since)
                 self._summary.zygote_evictions += 1
 
     def _eviction_victim(self, now: float) -> Optional[tuple[str, str]]:
@@ -674,30 +728,35 @@ class FleetManager:
                 st.report.memory_mb_s += st.profile.rss_mb * (
                     max(end, inst.busy_until) - inst.born_t)
             if st.zygote_up:
-                st.zygote_mb_s += st.zygote_rss_mb() * (end
-                                                        - st.zygote_since)
+                st.zygote_mb_s += st.zygote_charge_mb(
+                    self.shared_base_mb) * (end - st.zygote_since)
             if st.zygote_up or st.zygote_mb_s > 0:
                 zygote_apps.append(app)
             # zygote memory is fleet overhead attributed to the app
             st.report.memory_mb_s += st.zygote_mb_s
         self._summary.zygote_apps = sorted(zygote_apps)
-        self._summary.memory_mb_s = sum(
+        # the shared base's pages are fleet overhead attributed to no
+        # single app: account them once, against the whole run
+        self._summary.base_mb_s = self.shared_base_mb * end
+        self._summary.memory_mb_s = self._summary.base_mb_s + sum(
             st.report.memory_mb_s for st in self._apps.values())
 
 
 def fleet_sweep(profiles: dict[str, AppProfile],
                 policies: Sequence[KeepAlivePolicy], trace: Trace, *,
                 budget_mb: float, policy_factory=None,
-                ) -> list[FleetSummary]:
+                shared_base_mb: float = 0.0) -> list[FleetSummary]:
     """Replay one multi-app trace under every policy at the same budget.
     Stateful policies must not leak learned state across runs: pass
     ``policy_factory`` mapping a policy to a fresh clone (deepcopy is a
-    fine default for the standard panel)."""
+    fine default for the standard panel).  ``shared_base_mb`` turns on
+    two-tier accounting (see :class:`FleetManager`)."""
     out = []
     for pol in policies:
         p = policy_factory(pol) if policy_factory is not None else pol
-        out.append(FleetManager(profiles, p,
-                                budget_mb=budget_mb).replay(trace))
+        out.append(FleetManager(profiles, p, budget_mb=budget_mb,
+                                shared_base_mb=shared_base_mb,
+                                ).replay(trace))
     return out
 
 
@@ -715,12 +774,24 @@ class ZygoteFleet:
     bare zygotes.  ``start`` boots zygotes in the given priority order while
     *measured* zygote RSS fits ``budget_mb``; apps that don't fit are
     recorded in ``skipped`` and serve fresh-process cold starts.
+
+    ``shared_base=True`` turns on the **two-tier hierarchy** (PR 5):
+    one :class:`~repro.pool.forkserver.BaseZygote` pre-imports the
+    cross-app shared hot set (modules hot for >= ``base_min_apps``
+    member reports, :func:`repro.pool.sharing.compute_shared_hot_set`)
+    and every per-app zygote is *forked from it* — boot collapses to
+    ``fork + delta import``, the shared pages exist once fleet-wide
+    (CoW), and the budget charges each app only its **incremental**
+    memory over the base, so admission headroom and eviction rank on
+    what a zygote actually adds, not its full RSS.
     """
 
     def __init__(self, apps: dict[str, str], *,
                  budget_mb: Optional[float] = None,
                  reports: Optional[dict[str, OptimizationReport]] = None,
-                 timeout_s: float = 180.0) -> None:
+                 timeout_s: float = 180.0,
+                 shared_base: bool = False,
+                 base_min_apps: int = 2) -> None:
         from repro.api.artifacts import as_report
         self.app_dirs = dict(apps)
         self.budget_mb = budget_mb
@@ -728,6 +799,11 @@ class ZygoteFleet:
         self.reports = {app: as_report(rep)
                         for app, rep in (reports or {}).items()}
         self.timeout_s = timeout_s
+        self.shared_base = shared_base
+        self.base_min_apps = base_min_apps
+        self.base: Optional[BaseZygote] = None
+        self.shared: Optional[SharedHotSet] = None
+        self.base_swaps = 0
         self.servers: dict[str, ForkServer] = {}
         self.skipped: list[str] = []
         self.last_summary: Optional[dict] = None
@@ -736,17 +812,44 @@ class ZygoteFleet:
             for app in self.app_dirs}
 
     # ----------------------------------------------------------- lifecycle
+    def _compute_shared(self) -> SharedHotSet:
+        return compute_shared_hot_set(self.reports,
+                                      min_apps=self.base_min_apps)
+
+    def _app_preload(self, app: str) -> list[str]:
+        """The app zygote's pre-import set: its full hot set standalone,
+        only the private delta when forking from the shared base."""
+        rep = self.reports.get(app)
+        hot = hot_set_from_report(rep) if rep is not None else []
+        if self.shared is not None:
+            return self.shared.delta(app, hot)
+        return hot
+
+    def ensure_base(self) -> Optional[BaseZygote]:
+        """Boot (or re-boot after a crash) the shared base zygote."""
+        if not self.shared_base:
+            return None
+        if self.base is not None and self.base.alive:
+            return self.base
+        self.shared = self._compute_shared()
+        base = self.base or BaseZygote(
+            preload=self.shared.modules,
+            search_paths=shared_search_paths(self.app_dirs),
+            timeout_s=self.timeout_s)
+        base.restart(preload=self.shared.modules)
+        self.base = base
+        return base
+
     def start(self) -> dict:
+        self.ensure_base()
         budget_full = False
         for app, app_dir in self.app_dirs.items():
             if budget_full or (self.budget_mb is not None
                                and self.used_mb() >= self.budget_mb):
                 self.skipped.append(app)
                 continue
-            rep = self.reports.get(app)
-            preload = hot_set_from_report(rep) if rep is not None else []
-            fs = ForkServer(app_dir, preload=preload,
-                            timeout_s=self.timeout_s)
+            fs = ForkServer(app_dir, preload=self._app_preload(app),
+                            timeout_s=self.timeout_s, base=self.base)
             fs.start()
             self.servers[app] = fs
             if self.budget_mb is not None and self.used_mb() > \
@@ -761,11 +864,23 @@ class ZygoteFleet:
                 budget_full = True
         return {"zygotes": sorted(self.servers),
                 "skipped": list(self.skipped),
-                "used_mb": round(self.used_mb(), 1)}
+                "used_mb": round(self.used_mb(), 1),
+                **self._base_info()}
+
+    def _base_info(self) -> dict:
+        if not self.shared_base:
+            return {}
+        return {"shared_base": {
+            "modules": list(self.shared.modules) if self.shared else [],
+            "rss_mb": round(self.base_rss_mb(), 1),
+            "swaps": self.base_swaps,
+        }}
 
     def stop(self) -> None:
         for fs in self.servers.values():
             fs.stop()
+        if self.base is not None:
+            self.base.stop()
 
     def __enter__(self) -> "ZygoteFleet":
         self.start()
@@ -774,7 +889,33 @@ class ZygoteFleet:
     def __exit__(self, *exc) -> None:
         self.stop()
 
+    def base_rss_mb(self) -> float:
+        return (self.base.rss_kb() / 1024.0
+                if self.base is not None else 0.0)
+
+    def incremental_mb(self, app: str) -> float:
+        """What ``app``'s zygote adds to fleet memory.  Standalone
+        zygotes are charged full RSS.  Spawned-from-base zygotes are
+        charged their private pages when the kernel reports a real
+        shared/private split (``smaps_rollup``), else the RSS increment
+        over the base — the CoW-blind conservative estimate."""
+        fs = self.servers.get(app)
+        if fs is None or not fs.alive:
+            return 0.0
+        mem = fs.memory_kb()
+        if self.base is None:
+            return mem["rss_kb"] / 1024.0
+        if mem["pss_kb"] > 0:  # real smaps split available
+            return mem["private_kb"] / 1024.0
+        return max(mem["rss_kb"] / 1024.0 - self.base_rss_mb(), 0.0)
+
     def used_mb(self) -> float:
+        """Fleet-resident memory the budget charges: base (once) plus
+        each zygote's incremental cost in two-tier mode; plain RSS sums
+        otherwise."""
+        if self.base is not None:
+            return self.base_rss_mb() + sum(
+                self.incremental_mb(app) for app in self.servers)
         return sum(fs.rss_kb() for fs in self.servers.values()) / 1024.0
 
     # ------------------------------------------------------------ serving
@@ -882,6 +1023,7 @@ class ZygoteFleet:
             zygotes=sorted(self.servers),
             skipped=list(self.skipped),
             used_mb=round(self.used_mb(), 1),
+            **self._base_info(),
         )
 
     # ------------------------------------------------------ adaptive hook
@@ -904,6 +1046,12 @@ class ZygoteFleet:
         if fs is None:
             return {"ok": True, "app": app, "skipped": True,
                     "preloaded": [], "errors": []}
+        # two-tier crash recovery: a dead zygote re-forks from the
+        # base, and a dead *base* is rebooted first so the re-fork has
+        # a parent to come from
+        if self.shared_base and not fs.alive:
+            self.ensure_base()
+            fs.base = self.base
         out = fs.rewarm(report)
         return {"app": app, "skipped": False, **out}
 
@@ -913,7 +1061,15 @@ class ZygoteFleet:
         ``python -m repro profile`` / ``ci-check --out`` run) and
         re-preload the matching zygotes.  Apps without a saved report
         are untouched; per-app rewarm failures are reported, never
-        raised — a stale zygote beats a dead serve loop."""
+        raised — a stale zygote beats a dead serve loop.
+
+        In two-tier mode the tick then recomputes the cross-app shared
+        hot set from the refreshed reports and, when it changed (or the
+        base died), **hot-swaps the base**: a new base boots alongside
+        the old one and every app zygote is re-forked onto it one at a
+        time under its own protocol lock, so in-flight execs finish on
+        the old tier and queued dispatches land on the new — nothing is
+        shed."""
         out: dict[str, dict] = {}
         for app in sorted(self.app_dirs):
             path = os.path.join(reports_dir, f"{app}.json")
@@ -924,4 +1080,44 @@ class ZygoteFleet:
             except Exception as exc:
                 out[app] = {"ok": False, "app": app,
                             "error": repr(exc)}
+        if self.shared_base:
+            try:
+                out["_base"] = self.maybe_swap_base()
+            except Exception as exc:
+                out["_base"] = {"ok": False, "error": repr(exc)}
         return out
+
+    def maybe_swap_base(self) -> dict:
+        """Recompute the shared hot set; hot-swap the base if it grew,
+        shrank, or died.  Old app zygotes keep serving until their
+        replacement is spawned (per-app lock handoff), so the swap
+        drops no in-flight or queued work."""
+        if not self.shared_base:
+            return {"ok": True, "swapped": False}
+        fresh = self._compute_shared()
+        base_dead = self.base is None or not self.base.alive
+        unchanged = (self.shared is not None
+                     and fresh.modules == self.shared.modules)
+        if unchanged and not base_dead:
+            self.shared = fresh  # deltas may still have moved
+            return {"ok": True, "swapped": False,
+                    "modules": list(fresh.modules)}
+        old_base = self.base  # dead or alive: stop() also cleans rundir
+        new_base = BaseZygote(
+            preload=fresh.modules,
+            search_paths=shared_search_paths(self.app_dirs),
+            timeout_s=self.timeout_s)
+        new_base.start()
+        self.shared = fresh
+        errors: dict[str, str] = {}
+        for app, fs in self.servers.items():
+            try:
+                fs.rebase(new_base, preload=self._app_preload(app))
+            except ForkServerError as exc:
+                errors[app] = str(exc)
+        self.base = new_base
+        self.base_swaps += 1
+        if old_base is not None:
+            old_base.stop()
+        return {"ok": not errors, "swapped": True,
+                "modules": list(fresh.modules), "errors": errors}

@@ -19,7 +19,8 @@ Protocol: newline-delimited JSON on stdin/stdout.  The zygote announces
 ``{"ok": true, "event": "ready", ...}`` once the preload set is
 imported, then serves commands:
 
-    {"cmd": "exec", "invocations": N, "handler": H, "seed": S}
+    {"cmd": "exec", "invocations": N, "handler": H, "seed": S,
+     "preload": [...]}  # optional batched preload: fast path
         -> {"ok": true, "metrics": {... runner-format metrics ...}}
     {"cmd": "preload", "modules": [...]}     # adaptive re-warm
         -> {"ok": true, "preloaded": [...], "errors": [...]}
@@ -33,11 +34,36 @@ ships :func:`repro.benchsuite.runner.metrics_dict` JSON back over a
 dedicated pipe.  Fork-to-ready time is measured against the zygote's
 clock (``time.perf_counter`` is CLOCK_MONOTONIC — system-wide, valid
 across ``fork``), so reported ``init_ms`` includes the fork itself.
+The optional ``preload`` list on ``exec`` is the **protocol fast
+path**: a rewarm's new modules and the fork+exec land in one
+roundtrip instead of two.
 
-The in-process :class:`ForkServer` wraps the zygote for the harness:
-``start() -> exec()* -> stop()``, plus ``rewarm(report)`` which the
-adaptive :class:`~repro.core.adaptive.controller.SlimStartController`
-calls after a re-profile to preload the *new* workload's hot set.
+Two-tier mode (``--base``, PR 5): a single **base zygote** pre-imports
+the fleet's cross-app *shared* hot set
+(:mod:`repro.pool.sharing`) and serves one extra command::
+
+    {"cmd": "spawn_app", "app_dir": D, "preload": [delta...],
+     "socket": S, "accept_timeout_s": T}
+        -> {"ok": true, "pid": P}
+
+``spawn_app`` forks a **per-app zygote from the base** — the shared
+hot set's pages are inherited copy-on-write fleet-wide — which layers
+only its app-specific delta on top, then serves the classic zygote
+protocol over the unix socket ``S`` (the client connects directly, so
+per-request dispatch stays a single roundtrip that never routes
+through the base).  The batched delta in ``spawn_app`` makes app-zygote
+boot itself one roundtrip: no boot-then-N-preloads chatter.  App
+zygotes that crash are respawned from the still-warm base
+(:meth:`ForkServer.restart`) instead of paying a full interpreter +
+shared-set boot.
+
+The in-process :class:`ForkServer` wraps either kind of zygote for the
+harness: ``start() -> exec()* -> stop()``, plus ``rewarm(report)``
+which the adaptive
+:class:`~repro.core.adaptive.controller.SlimStartController` calls
+after a re-profile to preload the *new* workload's hot set.
+:class:`BaseZygote` manages the shared parent and hands
+:class:`ForkServer` instances their spawn channel.
 """
 
 from __future__ import annotations
@@ -47,6 +73,8 @@ import importlib
 import json
 import os
 import select
+import signal
+import socket
 import subprocess
 import sys
 import tempfile
@@ -120,28 +148,12 @@ def _fork_exec(cmd: dict) -> dict:
     return {"ok": True, "pid": pid, "metrics": json.loads(payload)}
 
 
-def zygote_main(argv: Optional[list[str]] = None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--app-dir", required=True)
-    ap.add_argument("--preload", default="",
-                    help="comma-separated modules imported at zygote boot")
-    args = ap.parse_args(argv)
-
-    if not hasattr(os, "fork"):
-        print(json.dumps({"ok": False, "error": "platform lacks fork()"}),
-              flush=True)
-        return 2
-
-    _runner.setup_app_path(os.path.abspath(args.app_dir))
-    preloaded, errors = _import_modules(args.preload.split(","))
-
-    def reply(obj: dict) -> None:
-        sys.stdout.write(json.dumps(obj) + "\n")
-        sys.stdout.flush()
-
-    reply({"ok": True, "event": "ready", "preloaded": preloaded,
-           "errors": errors, "pid": os.getpid()})
-    for line in sys.stdin:
+def _serve_commands(lines, reply, preloaded: list[str], *,
+                    spawn_fn=None) -> None:
+    """The zygote command loop, shared by the classic stdio zygote,
+    the base zygote (which adds ``spawn_app`` via ``spawn_fn``) and
+    app zygotes serving a unix socket.  Returns on EOF or shutdown."""
+    for line in lines:
         line = line.strip()
         if not line:
             continue
@@ -151,19 +163,170 @@ def zygote_main(argv: Optional[list[str]] = None) -> int:
             reply({"ok": False, "error": "bad json"})
             continue
         op = cmd.get("cmd")
-        if op == "exec":
-            reply(_fork_exec(cmd))
+        if op == "exec" and spawn_fn is None:
+            # fast path: an optional batched preload rides the same
+            # roundtrip as the fork+exec (rewarm + dispatch in one)
+            extra = {}
+            if cmd.get("preload"):
+                done, errs = _import_modules(cmd["preload"])
+                preloaded.extend(done)
+                extra = {"preloaded": done, "preload_errors": errs}
+            reply({**_fork_exec(cmd), **extra})
         elif op == "preload":
             done, errs = _import_modules(cmd.get("modules", []))
             preloaded.extend(done)
             reply({"ok": not errs, "preloaded": done, "errors": errs})
+        elif op == "spawn_app" and spawn_fn is not None:
+            reply(spawn_fn(cmd))
         elif op == "ping":
             reply({"ok": True, "preloaded": list(preloaded)})
         elif op == "shutdown":
             reply({"ok": True})
-            return 0
+            return
         else:
             reply({"ok": False, "error": f"unknown cmd {op!r}"})
+
+
+def _app_zygote_child(cmd: dict, preloaded: Sequence[str]) -> None:
+    """Runs in the child the base forked: become a per-app zygote.
+
+    The shared hot set is already in ``sys.modules`` (inherited CoW
+    from the base); layer the app's delta on top, then serve the
+    classic zygote protocol over the spawn's unix socket.  Never
+    returns — exits the process."""
+    code = 1
+    try:
+        # SIGCHLD was set to a reaper in the base; _fork_exec must be
+        # able to waitpid its own forks
+        signal.signal(signal.SIGCHLD, signal.SIG_DFL)
+        devnull = os.open(os.devnull, os.O_RDWR)
+        os.dup2(devnull, 0)  # must not steal the base's stdin commands
+        os.dup2(devnull, 1)  # must not corrupt the base's stdout channel
+        _runner.setup_app_path(os.path.abspath(cmd["app_dir"]))
+        done, errors = _import_modules(cmd.get("preload") or [])
+        preloaded = [*preloaded, *done]
+        path = cmd["socket"]
+        try:
+            os.unlink(path)
+        except OSError:
+            pass
+        srv = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        srv.bind(path)
+        srv.listen(1)
+        # bound + listening: tell the base it may ack the client
+        os.write(int(cmd["_ack_fd"]), b"ok\n")
+        os.close(int(cmd["_ack_fd"]))
+        srv.settimeout(float(cmd.get("accept_timeout_s", 120.0)))
+        conn, _ = srv.accept()
+        srv.close()
+        conn.settimeout(None)
+        rfile = conn.makefile("r")
+        wfile = conn.makefile("w")
+
+        def reply(obj: dict) -> None:
+            wfile.write(json.dumps(obj) + "\n")
+            wfile.flush()
+
+        reply({"ok": True, "event": "ready", "preloaded": list(preloaded),
+               "errors": errors, "pid": os.getpid(), "from_base": True})
+        _serve_commands(rfile, reply, list(preloaded))
+        code = 0
+    except BaseException:
+        traceback.print_exc(file=sys.stderr)
+    finally:
+        os._exit(code)
+
+
+def _make_spawn_fn(preloaded: list[str], children: set[int]):
+    """``spawn_app`` handler for the base zygote's command loop."""
+
+    def spawn(cmd: dict) -> dict:
+        if not cmd.get("app_dir") or not cmd.get("socket"):
+            return {"ok": False, "error": "spawn_app needs app_dir+socket"}
+        r, w = os.pipe()
+        pid = os.fork()
+        if pid == 0:
+            os.close(r)
+            _app_zygote_child({**cmd, "_ack_fd": w}, preloaded)
+        os.close(w)
+        # wait for the child to be bound+listening (or dead): the
+        # client connects the moment it sees this reply
+        ack = b""
+        try:
+            ack = os.read(r, 16)
+        finally:
+            os.close(r)
+        if not ack.startswith(b"ok"):
+            return {"ok": False, "pid": pid,
+                    "error": f"app zygote for {cmd['app_dir']} died "
+                             f"before listening (delta import crash?)"}
+        children.add(pid)
+        return {"ok": True, "pid": pid, "socket": cmd["socket"]}
+
+    return spawn
+
+
+def zygote_main(argv: Optional[list[str]] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--app-dir", default=None)
+    ap.add_argument("--preload", default="",
+                    help="comma-separated modules imported at zygote boot")
+    ap.add_argument("--base", action="store_true",
+                    help="run as the shared base zygote: no app, serves "
+                         "spawn_app forks of per-app zygotes")
+    ap.add_argument("--path", action="append", default=[],
+                    help="extra sys.path entry so the base can resolve "
+                         "the shared hot set (repeatable)")
+    args = ap.parse_args(argv)
+
+    if not hasattr(os, "fork"):
+        print(json.dumps({"ok": False, "error": "platform lacks fork()"}),
+              flush=True)
+        return 2
+    if not args.base and not args.app_dir:
+        print(json.dumps({"ok": False,
+                          "error": "need --app-dir (or --base)"}),
+              flush=True)
+        return 2
+
+    if args.app_dir:
+        _runner.setup_app_path(os.path.abspath(args.app_dir))
+    for p in reversed(args.path):
+        sys.path.insert(0, os.path.abspath(p))
+    preloaded, errors = _import_modules(args.preload.split(","))
+
+    def reply(obj: dict) -> None:
+        sys.stdout.write(json.dumps(obj) + "\n")
+        sys.stdout.flush()
+
+    spawn_fn = None
+    children: set[int] = set()
+    if args.base:
+        # reap spawned app zygotes as they exit (their ForkServer
+        # clients own their lifecycle; the base just must not leak
+        # zombies)
+        def _reap(*_sig) -> None:
+            while True:
+                try:
+                    pid, _ = os.waitpid(-1, os.WNOHANG)
+                except ChildProcessError:
+                    return
+                if pid == 0:
+                    return
+                children.discard(pid)
+
+        signal.signal(signal.SIGCHLD, _reap)
+        spawn_fn = _make_spawn_fn(preloaded, children)
+
+    reply({"ok": True, "event": "ready", "preloaded": preloaded,
+           "errors": errors, "pid": os.getpid(),
+           "mode": "base" if args.base else "app"})
+    _serve_commands(sys.stdin, reply, preloaded, spawn_fn=spawn_fn)
+    for pid in list(children):  # base down: take the tier down with it
+        try:
+            os.kill(pid, signal.SIGTERM)
+        except OSError:
+            pass
     return 0
 
 
@@ -175,18 +338,53 @@ class ForkServerError(RuntimeError):
     pass
 
 
+def _pid_alive(pid: Optional[int]) -> bool:
+    if not pid:
+        return False
+    try:
+        os.kill(pid, 0)
+        return True
+    except OSError:
+        return False
+
+
 class ForkServer:
-    """Client for one zygote serving one deployed app."""
+    """Client for one zygote serving one deployed app.
+
+    Two transports behind one protocol:
+
+    * **subprocess** (default) — the zygote is a fresh
+      ``python -m repro.pool.forkserver`` child speaking JSON lines on
+      its stdin/stdout (PR 1 behavior: the app zygote pays a full
+      interpreter + hot-set boot).
+    * **shared base** (``base=BaseZygote``) — the zygote is *forked
+      from the base* via ``spawn_app`` and speaks the same protocol
+      over a unix socket.  Boot cost collapses to ``fork() + delta
+      import`` and the shared hot set's pages are CoW-shared with
+      every sibling zygote; crash recovery re-forks from the still-warm
+      base instead of re-booting an interpreter.
+    """
 
     def __init__(self, app_dir: str, *, preload: Sequence[str] = (),
-                 timeout_s: float = 120.0) -> None:
+                 timeout_s: float = 120.0,
+                 base: Optional["BaseZygote"] = None) -> None:
         self.app_dir = os.path.abspath(app_dir)
         self.preload_modules = list(preload)
         self.timeout_s = timeout_s
+        self.base = base
         self.proc: Optional[subprocess.Popen] = None
         self._stderr_file = None
+        # shared-base transport state
+        self._sock: Optional[socket.socket] = None
+        self._rfile = None
+        self._wfile = None
+        self._spawn_pid: Optional[int] = None
         self.ready: dict = {}
         self.execs = 0
+        # modules whose fast-path preload failed in the zygote: kept so
+        # callers can see the failure and so exec() stops re-sending
+        # (and re-failing) them every dispatch
+        self.preload_errors: list[str] = []
         # the zygote protocol is strictly request/reply on one pipe
         # pair: concurrent callers (a serve worker + the daemon's
         # rewarm tick) must not interleave writes or steal replies
@@ -195,7 +393,23 @@ class ForkServer:
     # ------------------------------------------------------------ lifecycle
     @property
     def alive(self) -> bool:
+        if self.base is not None:
+            return self._sock is not None and _pid_alive(self._spawn_pid)
         return self.proc is not None and self.proc.poll() is None
+
+    @property
+    def pid(self) -> Optional[int]:
+        """The zygote's pid (spawned-from-base or subprocess)."""
+        if self.base is not None:
+            return self._spawn_pid
+        return self.proc.pid if self.proc is not None else None
+
+    def _argv(self) -> list[str]:
+        cmd = [sys.executable, "-m", "repro.pool.forkserver",
+               "--app-dir", self.app_dir]
+        if self.preload_modules:
+            cmd += ["--preload", ",".join(self.preload_modules)]
+        return cmd
 
     def start(self) -> dict:
         with self._lock:
@@ -204,12 +418,10 @@ class ForkServer:
     def _start_locked(self) -> dict:
         if self.alive:
             return self.ready
-        if self.proc is not None:  # zygote died behind our back: clean up
-            self.stop()
-        cmd = [sys.executable, "-m", "repro.pool.forkserver",
-               "--app-dir", self.app_dir]
-        if self.preload_modules:
-            cmd += ["--preload", ",".join(self.preload_modules)]
+        if self.proc is not None or self._sock is not None:
+            self._stop_locked()  # zygote died behind our back: clean up
+        if self.base is not None:
+            return self._start_from_base_locked()
         env = dict(os.environ)
         env["PYTHONPATH"] = (_REPRO_SRC + os.pathsep
                              + env.get("PYTHONPATH", ""))
@@ -218,22 +430,50 @@ class ForkServer:
         # deadlock the zygote mid-waitpid
         self._stderr_file = tempfile.TemporaryFile()
         self.proc = subprocess.Popen(
-            cmd, stdin=subprocess.PIPE, stdout=subprocess.PIPE,
+            self._argv(), stdin=subprocess.PIPE, stdout=subprocess.PIPE,
             stderr=self._stderr_file, text=True, env=env)
+        return self._check_ready_locked()
+
+    def _check_ready_locked(self) -> dict:
         self.ready = self._read_reply()
         if not self.ready.get("ok") or self.ready.get("errors"):
             # a zygote that failed to preload its hot set would silently
             # serve *bare* forks — fail loudly instead
             detail = self.ready
-            self.stop()
+            self._stop_locked()
             raise ForkServerError(f"zygote failed to boot: {detail}")
+        self.preload_errors = []  # fresh zygote, fresh slate
         return self.ready
+
+    def _start_from_base_locked(self) -> dict:
+        """Fork this app's zygote from the shared base: one
+        ``spawn_app`` roundtrip carries the app dir *and* the batched
+        delta preload, then we connect straight to the child."""
+        spawn = self.base.spawn_app(self.app_dir, self.preload_modules,
+                                    accept_timeout_s=self.timeout_s)
+        self._spawn_pid = spawn["pid"]
+        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        sock.settimeout(self.timeout_s)
+        try:
+            sock.connect(spawn["socket"])
+        except OSError as exc:
+            sock.close()
+            self._spawn_pid = None
+            raise ForkServerError(
+                f"cannot reach spawned app zygote: {exc}") from exc
+        sock.settimeout(None)  # _read_reply's select() bounds reads
+        self._sock = sock
+        self._rfile = sock.makefile("r")
+        self._wfile = sock.makefile("w")
+        self._socket_path = spawn["socket"]
+        return self._check_ready_locked()
 
     def stop(self) -> None:
         with self._lock:
             self._stop_locked()
 
     def _stop_locked(self) -> None:
+        self._stop_spawned_locked()
         if self.proc is None:
             return
         try:
@@ -254,11 +494,47 @@ class ForkServer:
                 self._stderr_file.close()
                 self._stderr_file = None
 
+    def _stop_spawned_locked(self) -> None:
+        if self._sock is not None:
+            try:
+                if _pid_alive(self._spawn_pid):
+                    self._request({"cmd": "shutdown"})
+            except (ForkServerError, OSError, ValueError):
+                pass
+            for fh in (self._rfile, self._wfile, self._sock):
+                try:
+                    fh.close()
+                except OSError:
+                    pass
+            self._rfile = self._wfile = self._sock = None
+        if _pid_alive(self._spawn_pid):
+            # unresponsive spawned zygote: kill it; the base reaps
+            try:
+                os.kill(self._spawn_pid, signal.SIGKILL)
+            except OSError:
+                pass
+        self._spawn_pid = None
+
     def restart(self, preload: Optional[Sequence[str]] = None) -> dict:
         """Tear down (whatever is left of) the zygote and boot a fresh
-        one; ``preload`` replaces the pre-import set if given."""
+        one; ``preload`` replaces the pre-import set if given.  With a
+        shared base this is the crash-recovery fast path: a re-fork
+        from the resident base, not an interpreter boot."""
         with self._lock:
             self._stop_locked()
+            if preload is not None:
+                self.preload_modules = list(dict.fromkeys(preload))
+            return self._start_locked()
+
+    def rebase(self, base: Optional["BaseZygote"],
+               preload: Optional[Sequence[str]] = None) -> dict:
+        """Swap this app's zygote onto a (new) base: used by the rewarm
+        tick's base hot-swap.  Holds the protocol lock, so in-flight
+        execs finish before the old zygote is torn down and callers
+        blocked on the lock land on the freshly spawned one."""
+        with self._lock:
+            self._stop_locked()
+            self.base = base
             if preload is not None:
                 self.preload_modules = list(dict.fromkeys(preload))
             return self._start_locked()
@@ -272,10 +548,28 @@ class ForkServer:
 
     # ------------------------------------------------------------- commands
     def exec(self, *, invocations: int = 1, handler: Optional[str] = None,
-             seed: int = 0) -> dict:
-        """One forked warm instance; returns runner-format metrics."""
-        rep = self._request({"cmd": "exec", "invocations": invocations,
-                             "handler": handler, "seed": seed})
+             seed: int = 0,
+             preload: Optional[Sequence[str]] = None) -> dict:
+        """One forked warm instance; returns runner-format metrics.
+
+        ``preload`` rides the fast path: the modules are imported in
+        the zygote *in the same roundtrip*, ahead of the fork — a
+        rewarm plus a dispatch for the price of one protocol exchange.
+        A module that fails to import does not fail the exec (serving
+        beats rewarming), but the failure is recorded in
+        ``preload_errors`` and the module is not re-sent on later
+        execs; use :meth:`preload` for the fail-loudly semantics.
+        """
+        msg = {"cmd": "exec", "invocations": invocations,
+               "handler": handler, "seed": seed}
+        if preload:
+            failed = {e.split(":", 1)[0] for e in self.preload_errors}
+            msg["preload"] = [m for m in preload
+                              if m not in self.preload_modules
+                              and m not in failed]
+        rep = self._request(msg)
+        self.preload_modules.extend(rep.get("preloaded", []))
+        self.preload_errors.extend(rep.get("preload_errors", []))
         self.execs += 1
         return rep["metrics"]
 
@@ -318,26 +612,65 @@ class ForkServer:
         return self._request({"cmd": "ping"})
 
     def rss_kb(self) -> int:
-        """The zygote's current VmRSS in kB (0 if not running) — what a
-        fleet budget arbiter charges for keeping this zygote resident."""
+        """The zygote's current resident set in kB (0 if not running) —
+        what a fleet budget arbiter charges for keeping this zygote
+        resident.  Reads ``/proc/<pid>/statm`` (one line) instead of
+        scanning ``status``; arbiters poll this per admission tick."""
         if not self.alive:
             return 0
-        try:
-            with open(f"/proc/{self.proc.pid}/status") as fh:
-                for line in fh:
-                    if line.startswith("VmRSS:"):
-                        return int(line.split()[1])
-        except (OSError, ValueError, IndexError):
-            pass
-        return 0
+        return _runner.proc_memory_kb(self.pid)["rss_kb"]
+
+    def memory_kb(self) -> dict:
+        """Shared/private-aware memory of the zygote:
+        ``{"rss_kb", "pss_kb", "shared_kb", "private_kb"}`` (all zero
+        when not running).  With a shared base, ``private_kb`` (or the
+        RSS increment over the base, whichever the kernel can report —
+        see :func:`repro.benchsuite.runner.proc_memory_kb`) is the
+        *incremental* cost of this zygote; the base's pages are charged
+        once fleet-wide."""
+        if not self.alive:
+            return {"rss_kb": 0, "pss_kb": 0, "shared_kb": 0,
+                    "private_kb": 0}
+        return _runner.proc_memory_kb(self.pid)
 
     # ------------------------------------------------------------- plumbing
+    def _reader(self):
+        return self._rfile if self._sock is not None else (
+            self.proc.stdout if self.proc is not None else None)
+
+    def _writer(self):
+        return self._wfile if self._sock is not None else (
+            self.proc.stdin if self.proc is not None else None)
+
+    def _kill_unresponsive(self) -> None:
+        if self._sock is not None:
+            if _pid_alive(self._spawn_pid):
+                try:
+                    os.kill(self._spawn_pid, signal.SIGKILL)
+                except OSError:
+                    pass
+        elif self.proc is not None:
+            self.proc.kill()
+
+    def _dead_detail(self) -> str:
+        if self._sock is not None or self.base is not None:
+            tail = self.base._stderr_tail() if self.base is not None \
+                else ""
+            return f"spawned zygote pid={self._spawn_pid} died: {tail}"
+        return f"zygote died (exit={self.proc.poll()}): " \
+               f"{self._stderr_tail()}"
+
     def _request(self, obj: dict) -> dict:
         with self._lock:
-            if self.proc is None or self.proc.poll() is not None:
+            if not self.alive:
                 raise ForkServerError("zygote is not running")
-            self.proc.stdin.write(json.dumps(obj) + "\n")
-            self.proc.stdin.flush()
+            w = self._writer()
+            try:
+                w.write(json.dumps(obj) + "\n")
+                w.flush()
+            except (OSError, ValueError, BrokenPipeError) as exc:
+                raise ForkServerError(
+                    f"zygote control channel broken: {exc}") from exc
             rep = self._read_reply()
         if not rep.get("ok"):
             raise ForkServerError(str(rep))
@@ -346,18 +679,16 @@ class ForkServer:
     def _read_reply(self) -> dict:
         # bound every protocol read by timeout_s: a wedged handler in a
         # forked child would otherwise hang the zygote (and us) forever
-        ready, _, _ = select.select([self.proc.stdout], [], [],
-                                    self.timeout_s)
+        reader = self._reader()
+        ready, _, _ = select.select([reader], [], [], self.timeout_s)
         if not ready:
-            self.proc.kill()
+            self._kill_unresponsive()
             raise ForkServerError(
                 f"zygote unresponsive after {self.timeout_s}s "
                 f"(hung forked instance?); killed")
-        line = self.proc.stdout.readline()
+        line = reader.readline()
         if not line:
-            raise ForkServerError(
-                f"zygote died (exit={self.proc.poll()}): "
-                f"{self._stderr_tail()}")
+            raise ForkServerError(self._dead_detail())
         return json.loads(line)
 
     def _stderr_tail(self, nbytes: int = 2000) -> str:
@@ -370,6 +701,78 @@ class ForkServer:
             return self._stderr_file.read().decode("utf-8", "replace")
         except (OSError, ValueError):
             return ""
+
+
+class BaseZygote(ForkServer):
+    """The shared parent of a two-tier zygote fleet.
+
+    Boots ``python -m repro.pool.forkserver --base`` pre-importing the
+    cross-app shared hot set (:mod:`repro.pool.sharing`), then serves
+    ``spawn_app``: per-app zygotes are forked *from this process*, so
+    the shared set's pages exist once fleet-wide (CoW) and an app
+    zygote's boot is ``fork() + its private delta import``.
+
+    ``search_paths`` are extra ``sys.path`` entries (typically every
+    member app's vendored ``libs/``, see
+    :func:`repro.pool.sharing.shared_search_paths`) letting the base
+    resolve modules that only exist inside app deployments.
+    """
+
+    def __init__(self, *, preload: Sequence[str] = (),
+                 search_paths: Sequence[str] = (),
+                 timeout_s: float = 120.0) -> None:
+        super().__init__(os.getcwd(), preload=preload,
+                         timeout_s=timeout_s)
+        self.app_dir = ""  # the base serves the fleet, not one app
+        self.search_paths = [os.path.abspath(p) for p in search_paths]
+        self._rundir: Optional[str] = None
+        self._spawn_seq = 0
+
+    def _argv(self) -> list[str]:
+        cmd = [sys.executable, "-m", "repro.pool.forkserver", "--base"]
+        for p in self.search_paths:
+            cmd += ["--path", p]
+        if self.preload_modules:
+            cmd += ["--preload", ",".join(self.preload_modules)]
+        return cmd
+
+    def _start_locked(self) -> dict:
+        if not self.alive and self._rundir is None:
+            self._rundir = tempfile.mkdtemp(prefix="zygote-base-")
+        return super()._start_locked()
+
+    def _stop_locked(self) -> None:
+        super()._stop_locked()
+        if self._rundir is not None:
+            import shutil
+            shutil.rmtree(self._rundir, ignore_errors=True)
+            self._rundir = None
+
+    def spawn_app(self, app_dir: str, preload: Sequence[str] = (), *,
+                  accept_timeout_s: float = 120.0) -> dict:
+        """Fork a per-app zygote from the base (single roundtrip,
+        batched delta preload); returns ``{"pid", "socket"}`` for the
+        caller to connect to.  Raises :class:`ForkServerError` when the
+        base is down or the delta import crashed the child."""
+        with self._lock:
+            if not self.alive:
+                raise ForkServerError("base zygote is not running")
+            self._spawn_seq += 1
+            path = os.path.join(self._rundir,
+                                f"app-{self._spawn_seq}.sock")
+            rep = self._request({
+                "cmd": "spawn_app",
+                "app_dir": os.path.abspath(app_dir),
+                "preload": list(preload),
+                "socket": path,
+                "accept_timeout_s": accept_timeout_s,
+            })
+            return {"pid": rep["pid"], "socket": rep["socket"]}
+
+    def exec(self, **_kw) -> dict:  # pragma: no cover - misuse guard
+        raise ForkServerError(
+            "the base zygote serves spawn_app, not exec; dispatch "
+            "through a per-app ForkServer spawned from it")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,190 @@
+"""Cross-app page sharing: the fleet-wide shared base hot set.
+
+PR 2's fleet boots one zygote *per app*, so every zygote re-imports the
+packages the whole deployment has in common (numpy-heavy fakelibs,
+stdlib-adjacent deps, the runner itself) and the memory budget pays for
+those pages once per app.  SLIMSTART's 1.51X memory-reduction axis says
+those pages should exist once: this module computes the **shared hot
+set** — the modules hot (per their ``optimization_report`` artifacts)
+for enough of the deployed apps to earn a slot in a single
+:class:`~repro.pool.forkserver.BaseZygote` that every per-app zygote is
+forked from.  Forked children then share the base's pages
+copy-on-write, and each app only layers its private *delta* (hot
+modules the base does not carry) on top.
+
+The result is itself a schema-versioned artifact (kind
+``shared_hot_set``, see :class:`repro.api.artifacts.SharedHotSetArtifact`)
+so the serve daemon's rewarm tick can recompute it from freshly
+deployed reports and hot-swap the base without a restart.
+"""
+
+from __future__ import annotations
+
+import math
+import os
+from dataclasses import dataclass, field
+from typing import Mapping, Optional, Sequence
+
+from repro.pool.policies import hot_set_from_report
+
+
+def _covers(module: str, hot_set: Sequence[str]) -> bool:
+    """True when importing ``hot_set`` already loads ``module`` (the
+    module itself or a package prefix of it is in the set)."""
+    parts = module.split(".")
+    prefixes = {".".join(parts[:i]) for i in range(1, len(parts) + 1)}
+    return any(m in prefixes for m in hot_set)
+
+
+def intersect_hot_sets(hot_sets: Mapping[str, Sequence[str]], *,
+                       min_members: int = 2,
+                       prefixes: bool = True) -> list[str]:
+    """Names hot for at least ``min_members`` of the given members.
+
+    With ``prefixes=True`` (module semantics): ``pkg`` in one app's set
+    covers ``pkg.sub`` in another's, and the *widest* common prefix
+    wins (pre-importing ``pkg`` gives both apps their pages).  Pass
+    ``prefixes=False`` for flat namespaces where a dot is not a
+    containment relation — e.g. the Level-B
+    :class:`~repro.serving.engine.EnginePool` component names, where
+    ``expert.1`` and ``expert.2`` share no loadable parent.
+    """
+    if not hot_sets:
+        return []
+    min_members = max(1, min_members)
+    counts: dict[str, int] = {}
+    exact: set[str] = set()
+    for hot in hot_sets.values():
+        seen = set()
+        for mod in hot:
+            mod = mod.strip()
+            if not mod:
+                continue
+            exact.add(mod)
+            if prefixes:
+                # credit the name and every package prefix, once per
+                # member
+                parts = mod.split(".")
+                for i in range(1, len(parts) + 1):
+                    seen.add(".".join(parts[:i]))
+            else:
+                seen.add(mod)
+        for name in seen:
+            counts[name] = counts.get(name, 0) + 1
+    if not prefixes:
+        return sorted(m for m, n in counts.items() if n >= min_members)
+
+    def qualifies(name: str) -> bool:
+        if counts[name] < min_members:
+            return False
+        if name in exact:
+            return True
+        # a synthetic prefix (no member names it as-is) earns a slot
+        # only when it *aggregates* demand — more members than any one
+        # of its submodules alone — otherwise pre-importing the whole
+        # package over-serves a single submodule's hot entry
+        best_child = max((counts[m] for m in exact
+                          if m != name and _covers(m, [name])),
+                         default=0)
+        return counts[name] > best_child
+
+    shared = [m for m in counts if qualifies(m)]
+    # keep maximal prefixes only (importing pkg imports pkg.sub)
+    shared.sort(key=lambda p: (p.count("."), p))
+    keep: list[str] = []
+    for mod in shared:
+        if not _covers(mod, keep):
+            keep.append(mod)
+    return keep
+
+
+@dataclass
+class SharedHotSet:
+    """One fleet's two-tier pre-import plan.
+
+    ``modules`` boot the shared :class:`BaseZygote`; each app's
+    ``per_app_delta`` is what its zygote layers on top after forking
+    from the base.  ``counts`` records how many member apps wanted each
+    shared module — provenance for the rewarm tick's swap decision.
+    """
+
+    modules: list[str]
+    apps: list[str]
+    per_app_delta: dict[str, list[str]]
+    min_apps: int = 2
+    counts: dict[str, int] = field(default_factory=dict)
+
+    def delta(self, app: str, hot: Optional[Sequence[str]] = None
+              ) -> list[str]:
+        """The app's private preload: its hot set minus what the base
+        already imports."""
+        if app in self.per_app_delta:
+            return list(self.per_app_delta[app])
+        return [m for m in (hot or []) if not _covers(m, self.modules)]
+
+    def to_payload(self) -> dict:
+        return {"modules": list(self.modules), "apps": list(self.apps),
+                "per_app_delta": {a: list(d)
+                                  for a, d in self.per_app_delta.items()},
+                "min_apps": self.min_apps, "counts": dict(self.counts)}
+
+    @classmethod
+    def from_payload(cls, payload: dict) -> "SharedHotSet":
+        return cls(modules=list(payload["modules"]),
+                   apps=list(payload["apps"]),
+                   per_app_delta={a: list(d) for a, d in
+                                  payload["per_app_delta"].items()},
+                   min_apps=int(payload.get("min_apps", 2)),
+                   counts=dict(payload.get("counts", {})))
+
+
+def compute_shared_hot_set(reports: Mapping[str, object], *,
+                           min_apps: int = 2,
+                           min_fraction: Optional[float] = None,
+                           ) -> SharedHotSet:
+    """Intersect deployed report artifacts into the two-tier plan.
+
+    ``reports`` maps app name -> anything :func:`repro.api.as_report`
+    accepts (the report object or a saved artifact path).  A module
+    joins the shared base when it is hot for at least ``min_apps`` apps
+    (or ``ceil(min_fraction * n_apps)`` when ``min_fraction`` is given
+    — the knob for large fleets where "2 of 400 apps" is not sharing).
+    Strict intersection across heterogeneous deployments is usually
+    empty; the threshold is what makes the base earn its pages.
+    """
+    from repro.api.artifacts import as_report
+    hot_sets = {app: hot_set_from_report(as_report(rep))
+                for app, rep in reports.items()}
+    n = len(hot_sets)
+    threshold = min_apps
+    if min_fraction is not None:
+        threshold = max(1, math.ceil(min_fraction * n))
+    shared = intersect_hot_sets(hot_sets, min_members=threshold)
+    def wants(hot: Sequence[str], mod: str) -> bool:
+        # the app's hot set names the shared module, something under
+        # it, or a package above it — any of which the base satisfies
+        return _covers(mod, hot) or any(_covers(m, [mod]) for m in hot)
+
+    counts: dict[str, int] = {}
+    for mod in shared:
+        counts[mod] = sum(1 for hot in hot_sets.values()
+                          if wants(hot, mod))
+    deltas = {app: [m for m in hot if not _covers(m, shared)]
+              for app, hot in hot_sets.items()}
+    return SharedHotSet(modules=shared, apps=sorted(hot_sets),
+                        per_app_delta=deltas, min_apps=threshold,
+                        counts=counts)
+
+
+def shared_search_paths(app_dirs: Mapping[str, str]) -> list[str]:
+    """``sys.path`` entries letting the base zygote resolve the shared
+    modules: every app's vendored ``libs/`` directory, deduplicated in
+    app order.  Apps vendor identical copies (generated from one
+    ``libs_src``), so first-on-path wins and forked children find the
+    already-imported module in ``sys.modules`` — the CoW share."""
+    out: list[str] = []
+    for app_dir in app_dirs.values():
+        libs = os.path.join(os.path.abspath(app_dir), "libs")
+        if os.path.isdir(libs) and libs not in out:
+            out.append(libs)
+    return out

@@ -45,6 +45,64 @@ def percentile_ms(latencies_ms: list[float], q: float) -> float:
     return ys[min(len(ys) - 1, max(0, round(q * (len(ys) - 1))))]
 
 
+class PercentilePool:
+    """A latency pool that sorts once and answers many quantiles.
+
+    :class:`~repro.pool.fleet.FleetSummary` merges every app's latency
+    list on *each* percentile-property access; on a large replay that
+    re-builds and re-sorts a 100k-element list four times per
+    ``summary()`` call.  This caches the merged sorted pool (invalidated
+    when the source lists grow) and serves percentiles from
+    :func:`statistics.quantiles` over it, so repeated
+    ``summary()``/``app_rows()`` calls are O(1) after the first sort.
+    """
+
+    def __init__(self, source) -> None:
+        # source: zero-arg callable yielding the (mutable) lists to merge
+        self._source = source
+        self._token = None
+        self._grid: list[float] = []
+        self._n = 0
+        self._mean = math.nan
+
+    def _refresh(self) -> None:
+        lists = list(self._source())
+        # invalidation token: total length plus each list's tail.  The
+        # fleet's sources are append-only (tail changes on growth), and
+        # the tail also catches a wholesale same-length replacement;
+        # in-place mutation of interior elements is the one edit this
+        # cannot see — don't do that to a pooled list
+        token = (sum(len(xs) for xs in lists),
+                 tuple(xs[-1] if xs else None for xs in lists))
+        if token == self._token:
+            return
+        merged = sorted(x for xs in lists for x in xs)
+        self._token = token
+        self._n = len(merged)
+        self._mean = statistics.fmean(merged) if merged else math.nan
+        if len(merged) >= 2:
+            # one 100-way cut answers every later percentile request
+            self._grid = statistics.quantiles(merged, n=100,
+                                              method="inclusive")
+        else:
+            self._grid = merged * 99  # 0 or 1 samples: flat grid
+
+    def percentile(self, q: float) -> float:
+        self._refresh()
+        if not self._grid:
+            return math.nan
+        return self._grid[min(98, max(0, round(q * 100) - 1))]
+
+    @property
+    def mean(self) -> float:
+        self._refresh()
+        return self._mean
+
+    def __len__(self) -> int:
+        self._refresh()
+        return self._n
+
+
 @dataclass(frozen=True)
 class AppProfile:
     """Measured single-instance numbers driving the simulation."""
@@ -57,6 +115,11 @@ class AppProfile:
     # resident cost of keeping a profile-guided zygote for this app (its
     # pre-imported hot set stays paged in); 0 = no zygote modeled
     zygote_rss_mb: float = 0.0
+    # with a shared base zygote (two-tier fleet): the app zygote's
+    # *private* pages above the base — its measured CoW delta.  0 =
+    # unknown; the fleet then derives max(zygote_rss_mb -
+    # shared_base_mb, 0)
+    zygote_private_mb: float = 0.0
 
     @classmethod
     def from_stats(cls, cold_stats, pool_stats=None,

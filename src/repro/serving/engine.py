@@ -471,10 +471,37 @@ class EnginePool:
         return cold_s * self._dispatches.get(model, 0)
 
     # ------------------------------------------------------ adaptive hook
+    def shared_hot_components(self, *, min_models: int = 2,
+                              util_threshold: float = 0.02) -> list[str]:
+        """The Level-B analogue of the fleet's cross-app shared hot set
+        (:mod:`repro.pool.sharing`): component names hot (utilization
+        >= threshold) for at least ``min_models`` of the warm engines.
+        A fresh cold start's policy prewarms these even when its own
+        model has no utilization history yet — the pool-wide base
+        layer every member keeps paying for anyway."""
+        from repro.pool.sharing import intersect_hot_sets
+        hot_sets = {}
+        for model, eng in self.warm.items():
+            report = getattr(eng, "report", None)
+            if report is None:  # duck-typed engine without utilization
+                continue
+            rep = report()
+            hot_sets[model] = [row["component"]
+                               for row in rep["components"]
+                               if row["utilization"] >= util_threshold]
+        # component names are a flat namespace ("expert.1"/"expert.2"
+        # share no loadable parent): exact-name intersection only
+        return sorted(intersect_hot_sets(hot_sets,
+                                         min_members=min_models,
+                                         prefixes=False))
+
     def rewarm(self, report=None) -> dict:
         """``SlimStartController.rewarm_fn`` hook: after a re-profile,
         re-derive every warm engine's :class:`LoadPolicy` from its own
-        live utilization report and materialize the new hot set.
+        live utilization report — *plus* the pool's shared hot
+        components (see :meth:`shared_hot_components`), so a component
+        the rest of the pool keeps hot is never deferred by one
+        engine's thin local history — and materialize the new set.
 
         ``report`` takes anything :func:`repro.api.as_report` accepts
         (an :class:`~repro.core.profiler.report.OptimizationReport` or
@@ -486,9 +513,15 @@ class EnginePool:
             from repro.api.artifacts import as_report
             as_report(report)  # validate/normalize; Level-B ignores it
         from repro.serving.components import LoadPolicy
+        shared = frozenset(self.shared_hot_components())
         out = {}
         for model, eng in self.warm.items():
             policy = LoadPolicy.from_report(eng.report())
+            policy = LoadPolicy(
+                lazy_groups=policy.lazy_groups,
+                lazy_names=policy.lazy_names - shared,
+                prewarm=policy.prewarm
+                | {c for c in shared if c in eng.registry})
             eng.policy = policy
             eng.registry.materialize_eager(policy)
             out[model] = sorted(policy.prewarm)
@@ -499,6 +532,7 @@ class EnginePool:
         waits = sorted(self.queue_waits_s)
         return {
             "warm_models": sorted(self.warm),
+            "shared_hot_components": self.shared_hot_components(),
             "hits": self.hits,
             "misses": self.misses,
             "hit_ratio": self.hits / max(total, 1),

@@ -169,3 +169,61 @@ def test_fleet_retention_respects_budget_for_any_arrivals(arrivals,
                for lat in rep.latencies_ms)
     assert s.memory_mb_s >= 0.0
     assert s.evictions >= 0 and s.prewarm_spawns >= 0
+
+
+# ---------------------------------------------------------------------------
+# Two-tier accounting: shared/private split invariants (PR 5)
+# ---------------------------------------------------------------------------
+
+@given(
+    zygote_rss=st.lists(st.floats(min_value=20.0, max_value=500.0,
+                                  allow_nan=False, allow_infinity=False),
+                        min_size=1, max_size=8),
+    base_frac=st.floats(min_value=0.0, max_value=1.0, allow_nan=False),
+    private_frac=st.floats(min_value=0.0, max_value=1.0,
+                           allow_nan=False),
+)
+@settings(max_examples=80, deadline=None)
+def test_shared_base_charges_never_exceed_one_per_app_total(
+        zygote_rss, base_frac, private_frac):
+    """The accounting identity behind the two-tier fleet: with the
+    shared base no larger than the smallest member zygote, charging
+    base-once + per-app increments can never exceed the one-zygote-
+    per-app total — sharing may only reduce the fleet's bill."""
+    base_mb = base_frac * min(zygote_rss)
+    profiles = {
+        f"app{i}": AppProfile(
+            app=f"app{i}", cold_init_ms=100.0, invoke_ms=10.0,
+            warm_init_ms=5.0, rss_mb=50.0, zygote_rss_mb=rss,
+            # a measured private delta, when present, is at most the
+            # pages above the base (CoW cannot create memory)
+            zygote_private_mb=private_frac * max(rss - base_mb, 0.0))
+        for i, rss in enumerate(zygote_rss)
+    }
+    policy = ProfileGuidedPolicy(rate_hint_per_s=0.5)
+    for app in profiles:
+        policy.add_report(_report(app, 0.2, 0.15))
+    one = FleetManager(profiles, policy, budget_mb=1e9)
+    two = FleetManager(profiles, policy, budget_mb=1e9,
+                       shared_base_mb=base_mb)
+    one.begin("prop")
+    two.begin("prop")
+    for mgr in (one, two):
+        for st_ in mgr._apps.values():
+            st_.zygote_up = True
+    one_total = one._used_mb()
+    two_total = two._used_mb()
+    # sum of private deltas + base <= sum of full per-app RSS
+    assert two_total <= one_total + 1e-6
+    # every per-app charge is within [0, full RSS]
+    for app, st_ in two._apps.items():
+        charge = st_.zygote_charge_mb(base_mb)
+        assert 0.0 <= charge <= st_.zygote_rss_mb() + 1e-9
+    # and with no base the two accountings agree exactly
+    assert two._apps.keys() == one._apps.keys()
+    plain = FleetManager(profiles, policy, budget_mb=1e9,
+                         shared_base_mb=0.0)
+    plain.begin("prop")
+    for st_ in plain._apps.values():
+        st_.zygote_up = True
+    assert plain._used_mb() == one_total

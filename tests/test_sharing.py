@@ -1,0 +1,469 @@
+"""Two-tier shared-base zygote tests: the cross-app shared hot set
+(repro.pool.sharing), its artifact kind, shared/private fleet
+accounting in FleetManager, the cached percentile pools, and (slow
+tier) real base-zygote spawn / crash recovery / rewarm hot-swap."""
+
+import json
+import math
+import os
+import signal
+import statistics
+import threading
+import time
+
+import pytest
+
+from repro.core.profiler.report import OptimizationReport
+from repro.core.profiler.utilization import LibraryStats
+from repro.pool import (
+    AppProfile,
+    FleetManager,
+    PercentilePool,
+    ProfileGuidedPolicy,
+    Request,
+    Trace,
+    ZygoteFleet,
+    compute_shared_hot_set,
+    intersect_hot_sets,
+)
+
+
+def _report(app: str, libs, *, e2e_s: float = 0.2,
+            init_s: float = 0.15) -> OptimizationReport:
+    stats = [LibraryStats(name=lib, utilization=0.9,
+                          init_s=init_s / max(len(libs), 1),
+                          init_share=init_s / e2e_s, runtime_samples=50,
+                          file="<x>") for lib in libs]
+    return OptimizationReport(application=app, e2e_s=e2e_s,
+                              total_init_s=init_s, qualifies=True,
+                              stats=stats, defer_targets=[])
+
+
+def _trace(reqs, duration):
+    return Trace("manual", [Request(t, app) for t, app in reqs], duration)
+
+
+# ---------------------------------------------------------------------------
+# intersect_hot_sets / compute_shared_hot_set
+# ---------------------------------------------------------------------------
+
+def test_intersect_threshold_and_prefix_widening():
+    hot = {"a": ["libx", "liby.core"],
+           "b": ["libx.sub", "libz"],
+           "c": ["libq"]}
+    # libx is hot for a (whole package) and b (a submodule): the widest
+    # common prefix joins the shared set; singletons do not
+    assert intersect_hot_sets(hot, min_members=2) == ["libx"]
+    assert intersect_hot_sets(hot, min_members=3) == []
+    assert sorted(intersect_hot_sets(hot, min_members=1)) == [
+        "libq", "libx", "liby.core", "libz"]
+    assert intersect_hot_sets({}, min_members=1) == []
+
+
+def test_intersect_flat_namespace_never_synthesizes_prefixes():
+    # component-style names: "expert.1"/"expert.2" share no loadable
+    # parent, so prefixes=False must not invent "expert"
+    hot = {"m1": ["expert.1", "weights.core"],
+           "m2": ["expert.2", "weights.core"]}
+    assert intersect_hot_sets(hot, min_members=2,
+                              prefixes=False) == ["weights.core"]
+    assert intersect_hot_sets(hot, min_members=2) == ["expert",
+                                                      "weights.core"]
+
+
+def test_compute_shared_hot_set_deltas_and_counts():
+    reports = {"a": _report("a", ["libx", "liby.core"]),
+               "b": _report("b", ["libx.sub", "libz"]),
+               "c": _report("c", ["libq"])}
+    sh = compute_shared_hot_set(reports, min_apps=2)
+    assert sh.modules == ["libx"]
+    assert sh.counts == {"libx": 2}
+    # each app's delta excludes anything the base already covers
+    assert sh.per_app_delta == {"a": ["liby.core"], "b": ["libz"],
+                                "c": ["libq"]}
+    # delta() for an unknown app filters the given hot set
+    assert sh.delta("zzz", ["libx.other", "libnew"]) == ["libnew"]
+    # min_fraction overrides min_apps: 100% of 3 apps = strict
+    assert compute_shared_hot_set(reports,
+                                  min_fraction=1.0).modules == []
+
+
+def test_shared_hot_set_artifact_round_trip(tmp_path):
+    from repro.api import load_shared_hot_set, save_shared_hot_set
+    from repro.api.artifact import load_any
+    reports = {"a": _report("a", ["libx"]),
+               "b": _report("b", ["libx", "libz"])}
+    sh = compute_shared_hot_set(reports, min_apps=2)
+    path = str(tmp_path / "shared.json")
+    save_shared_hot_set(sh, path, meta={"source": "test"})
+    back = load_shared_hot_set(path)
+    assert back.modules == sh.modules
+    assert back.per_app_delta == sh.per_app_delta
+    assert back.apps == sh.apps and back.counts == sh.counts
+    # the envelope dispatches through load_any too
+    art = load_any(path)
+    assert art.kind == "shared_hot_set" and art.meta == {"source": "test"}
+
+
+def test_shared_hot_set_artifact_corruption(tmp_path):
+    from repro.api import ArtifactError, load_shared_hot_set
+    from repro.api.artifacts import SharedHotSetArtifact
+    path = str(tmp_path / "bad.json")
+    with open(path, "w") as fh:
+        fh.write('{"kind": "shared_hot_set", "schema_version": 1, '
+                 '"modules": ["x"]')  # truncated JSON
+    with pytest.raises(ArtifactError, match="bad.json"):
+        load_shared_hot_set(path)
+    with open(path, "w") as fh:
+        json.dump({"kind": "shared_hot_set", "schema_version": 1,
+                   "modules": ["x"]}, fh)  # missing required keys
+    with pytest.raises(ArtifactError, match="missing keys"):
+        load_shared_hot_set(path)
+    with open(path, "w") as fh:
+        json.dump({"kind": "trace", "schema_version": 1}, fh)
+    with pytest.raises(ArtifactError, match="kind mismatch"):
+        SharedHotSetArtifact.load(path)
+
+
+# ---------------------------------------------------------------------------
+# FleetManager: shared vs private accounting
+# ---------------------------------------------------------------------------
+
+def _profiles(private_mb):
+    return {
+        app: AppProfile(app=app, cold_init_ms=200.0, invoke_ms=10.0,
+                        warm_init_ms=5.0, rss_mb=100.0,
+                        zygote_rss_mb=80.0, zygote_private_mb=priv)
+        for app, priv in private_mb.items()
+    }
+
+
+def _pg_policy(apps):
+    pol = ProfileGuidedPolicy(rate_hint_per_s=0.5)
+    for app in apps:
+        pol.add_report(_report(app, ["libhot"]))
+    return pol
+
+
+def test_shared_base_lowers_memory_at_equal_cold_ratio():
+    profiles = _profiles({"a": 10.0, "b": 10.0, "c": 10.0})
+    reqs = [(0.5 * i, "abc"[i % 3]) for i in range(120)]
+    trace = _trace(reqs, 80.0)
+    one = FleetManager(profiles, _pg_policy("abc"),
+                       budget_mb=600.0).replay(trace)
+    two = FleetManager(profiles, _pg_policy("abc"), budget_mb=600.0,
+                       shared_base_mb=60.0).replay(trace)
+    assert two.cold_start_ratio <= one.cold_start_ratio
+    assert two.memory_mb_s < one.memory_mb_s
+    assert two.shared_base_mb == 60.0 and two.base_mb_s > 0
+    assert one.shared_base_mb == 0.0 and one.base_mb_s == 0.0
+    # the base lands in the artifact payload
+    payload = two.artifact_payload()
+    assert payload["shared_base_mb"] == 60.0
+    assert payload["base_gb_s"] == pytest.approx(
+        two.base_mb_s / 1024.0, rel=1e-3)
+
+
+def test_zygote_eviction_ranks_on_incremental_memory():
+    """A big-RSS zygote that is mostly shared pages must survive budget
+    pressure that evicts a smaller-RSS but mostly-private zygote —
+    the inversion the two-tier accounting exists to produce."""
+    profiles = {
+        # x: 80 MB RSS but only 5 MB above the base (shared-heavy)
+        "x": AppProfile(app="x", cold_init_ms=200.0, invoke_ms=10.0,
+                        warm_init_ms=5.0, rss_mb=40.0,
+                        zygote_rss_mb=80.0, zygote_private_mb=5.0),
+        # y: 60 MB RSS, 55 MB private (private-heavy)
+        "y": AppProfile(app="y", cold_init_ms=200.0, invoke_ms=10.0,
+                        warm_init_ms=5.0, rss_mb=40.0,
+                        zygote_rss_mb=60.0, zygote_private_mb=55.0),
+    }
+    reqs = [(0.4 * i, "xy"[i % 2]) for i in range(40)]
+
+    def run(shared_base_mb, budget):
+        mgr = FleetManager(profiles, _pg_policy("xy"), budget_mb=budget,
+                           shared_base_mb=shared_base_mb)
+        mgr.replay(_trace(reqs, 20.0))
+        return mgr
+
+    # one-per-app accounting: x (80 MB) is the costlier zygote
+    mgr = run(0.0, 1000.0)
+    assert mgr.zygote_evict_cost("x", 16.0) \
+        < mgr.zygote_evict_cost("y", 16.0)
+    # two-tier accounting inverts the ranking: evicting x frees 5 MB,
+    # evicting y frees 55 MB
+    mgr = run(75.0, 1000.0)
+    assert mgr.zygote_evict_cost("y", 16.0) \
+        < mgr.zygote_evict_cost("x", 16.0)
+
+
+def test_shared_base_headroom_admits_more_zygotes():
+    """The budget that fits only one full-RSS zygote fits both apps'
+    incremental deltas once the base is shared."""
+    profiles = _profiles({"a": 8.0, "b": 8.0, "c": 8.0})
+    reqs = [(0.5 * i, "abc"[i % 3]) for i in range(60)]
+    trace = _trace(reqs, 40.0)
+    # 230 MB: zygote (80) + instance (100) fits once; three would
+    # need 3*80 + instances
+    one = FleetManager(profiles, _pg_policy("abc"),
+                       budget_mb=300.0).replay(trace)
+    two = FleetManager(profiles, _pg_policy("abc"), budget_mb=300.0,
+                       shared_base_mb=70.0).replay(trace)
+    assert len(two.zygote_apps) > len(one.zygote_apps)
+    assert set(two.zygote_apps) >= set(one.zygote_apps)
+    # zygote-less apps in the one-per-app fleet paid full cold starts
+    # that the two-tier fleet turns into forks or warm hits
+    assert two.cold_starts <= one.cold_starts
+
+
+# ---------------------------------------------------------------------------
+# PercentilePool: the cached fleet-level percentile fix
+# ---------------------------------------------------------------------------
+
+def test_percentile_pool_matches_quantiles_and_invalidates():
+    lists = [[5.0, 1.0], [9.0, 3.0, 7.0]]
+    pool = PercentilePool(lambda: lists)
+    merged = sorted(x for xs in lists for x in xs)
+    grid = statistics.quantiles(merged, n=100, method="inclusive")
+    assert pool.percentile(0.50) == grid[49]
+    assert pool.percentile(0.99) == grid[98]
+    assert pool.mean == pytest.approx(statistics.fmean(merged))
+    assert len(pool) == 5
+    # growth invalidates the cache
+    lists[0].append(100.0)
+    assert pool.percentile(0.99) == statistics.quantiles(
+        sorted(merged + [100.0]), n=100, method="inclusive")[98]
+    # so does a same-length replacement (the tail changes)
+    lists[1] = [1000.0, 1000.0, 1001.0]
+    assert pool.percentile(0.99) > 500.0
+    # empty and single-element pools stay NaN-safe / flat
+    empty = PercentilePool(lambda: [[]])
+    assert math.isnan(empty.percentile(0.5)) and math.isnan(empty.mean)
+    single = PercentilePool(lambda: [[42.0]])
+    assert single.percentile(0.5) == 42.0
+    assert single.percentile(0.99) == 42.0
+
+
+def test_fleet_summary_percentiles_use_cached_pools():
+    profiles = _profiles({"a": 0.0})
+    mgr = FleetManager(profiles, _pg_policy("a"), budget_mb=1000.0)
+    s = mgr.replay(_trace([(0.1 * i, "a") for i in range(50)], 10.0))
+    lats = sorted(x for r in s.per_app.values() for x in r.latencies_ms)
+    grid = statistics.quantiles(lats, n=100, method="inclusive")
+    assert s.p50_ms == grid[49] and s.p99_ms == grid[98]
+    assert s.mean_ms == pytest.approx(statistics.fmean(lats))
+    # repeated access is stable (served from the cache)
+    assert s.p99_ms == s.p99_ms and s.summary()["p99_ms"] is not None
+
+
+# ---------------------------------------------------------------------------
+# Real two-tier fork hierarchy (slow tier: subprocesses)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def suite_root_dir():
+    from repro.benchsuite.genlibs import build_suite
+    return build_suite()
+
+
+def _igraph_report(app: str) -> OptimizationReport:
+    return _report(app, ["fakelib_igraph"])
+
+
+@pytest.mark.slow
+def test_base_zygote_spawn_exec_and_fast_path(suite_root_dir):
+    from repro.pool.forkserver import BaseZygote, ForkServer
+    app_dir = os.path.join(suite_root_dir, "apps", "graph_bfs")
+    with BaseZygote(preload=["fakelib_igraph"],
+                    search_paths=[os.path.join(app_dir, "libs")]) as base:
+        assert base.ready["mode"] == "base"
+        assert "fakelib_igraph" in base.ready["preloaded"]
+        with ForkServer(app_dir, preload=[], base=base) as fs:
+            assert fs.ready.get("from_base") is True
+            assert "fakelib_igraph" in fs.ready["preloaded"]
+            m = fs.exec(invocations=1, seed=1)
+            assert m["init_ms"] > 0
+            # fast path: batched preload + exec in one roundtrip
+            m2 = fs.exec(invocations=1, seed=2,
+                         preload=["fakelib_igraph", "json"])
+            assert m2["init_ms"] > 0
+            assert "json" in fs.preload_modules
+            # a failing fast-path preload still serves the exec but is
+            # recorded and never re-sent
+            m3 = fs.exec(invocations=1, seed=3,
+                         preload=["definitely_missing_mod"])
+            assert m3["init_ms"] > 0
+            assert any(e.startswith("definitely_missing_mod")
+                       for e in fs.preload_errors)
+            fs.exec(invocations=1, seed=4,
+                    preload=["definitely_missing_mod"])
+            assert len(fs.preload_errors) == 1
+            # memory helpers see the spawned pid
+            mem = fs.memory_kb()
+            assert mem["rss_kb"] > 0
+    # base down: its spawn channel refuses
+    from repro.pool.forkserver import ForkServerError
+    with pytest.raises(ForkServerError):
+        base.spawn_app(app_dir)
+
+
+@pytest.mark.slow
+def test_zygote_fleet_shared_base_dispatch_and_accounting(
+        suite_root_dir):
+    apps = {name: os.path.join(suite_root_dir, "apps", name)
+            for name in ["graph_bfs", "graph_mst"]}
+    reports = {a: _igraph_report(a) for a in apps}
+    with ZygoteFleet(apps, reports=reports, shared_base=True) as fleet:
+        assert fleet.base is not None and fleet.base.alive
+        assert fleet.shared.modules == ["fakelib_igraph"]
+        boot = fleet._base_info()["shared_base"]
+        assert boot["rss_mb"] > 0 and boot["swaps"] == 0
+        # both zygotes came from the base with an empty delta
+        for fs in fleet.servers.values():
+            assert fs.base is fleet.base
+            assert fs.ready.get("from_base") is True
+        m = fleet.dispatch("graph_bfs", handler="bfs", seed=1)
+        assert m["path"] == "pool"
+        # incremental accounting: fleet-resident memory is base + deltas,
+        # strictly below the sum of full per-zygote RSS
+        full = sum(fs.rss_kb() for fs in fleet.servers.values()) / 1024.0
+        assert 0 < fleet.used_mb() < full + fleet.base_rss_mb()
+        for app in fleet.servers:
+            assert fleet.incremental_mb(app) <= \
+                fleet.servers[app].rss_kb() / 1024.0
+
+
+@pytest.mark.slow
+def test_base_zygote_crash_recovery_reforks_apps(suite_root_dir,
+                                                 tmp_path):
+    """Kill the base *and* an app zygote: the rewarm tick reboots the
+    base and re-forks the app from it, and queued dispatches issued
+    after the crash are served (pool path), not lost."""
+    from repro.api import save_report
+    apps = {name: os.path.join(suite_root_dir, "apps", name)
+            for name in ["graph_bfs", "graph_mst"]}
+    reports_dir = str(tmp_path / "reports")
+    os.makedirs(reports_dir)
+    for a in apps:
+        save_report(_igraph_report(a),
+                    os.path.join(reports_dir, f"{a}.json"))
+    with ZygoteFleet(apps, reports={a: _igraph_report(a) for a in apps},
+                     shared_base=True) as fleet:
+        base_pid = fleet.base.pid
+        bfs_pid = fleet.servers["graph_bfs"].pid
+        os.kill(base_pid, signal.SIGKILL)
+        os.kill(bfs_pid, signal.SIGKILL)
+        deadline = time.time() + 10
+        while (fleet.base.alive
+               or fleet.servers["graph_bfs"].alive) \
+                and time.time() < deadline:
+            time.sleep(0.05)
+        assert not fleet.base.alive
+        # rewarm tick: reboots base, re-forks the dead app zygote
+        out = fleet.rewarm_from_dir(reports_dir)
+        assert out["graph_bfs"].get("restarted") or \
+            out["graph_bfs"]["ok"]
+        assert fleet.base.alive and fleet.base.pid != base_pid
+        assert fleet.servers["graph_bfs"].alive
+        assert fleet.servers["graph_bfs"].pid != bfs_pid
+        # queued work after recovery lands on the pool path
+        m = fleet.dispatch("graph_bfs", handler="bfs", seed=9)
+        assert m["path"] == "pool" and not m["fallback"]
+
+
+@pytest.mark.slow
+def test_rewarm_hot_swap_mid_stream_drops_nothing(suite_root_dir,
+                                                  tmp_path):
+    """Grow the shared hot set while a dispatch thread hammers the
+    fleet: the base hot-swap must not shed or fail a single request."""
+    from repro.api import save_report
+    apps = {name: os.path.join(suite_root_dir, "apps", name)
+            for name in ["graph_bfs", "graph_mst"]}
+    reports_dir = str(tmp_path / "reports")
+    os.makedirs(reports_dir)
+    # boot with per-app reports whose intersection is empty...
+    first = {"graph_bfs": _report("graph_bfs", ["fakelib_igraph"]),
+             "graph_mst": _report("graph_mst", [])}
+    with ZygoteFleet(apps, reports=first, shared_base=True) as fleet:
+        assert fleet.shared.modules == []
+        results = []
+        stop = threading.Event()
+
+        def hammer():
+            i = 0
+            while not stop.is_set():
+                results.append(
+                    fleet.dispatch("graph_bfs", handler="bfs",
+                                   seed=100 + i))
+                i += 1
+
+        t = threading.Thread(target=hammer)
+        t.start()
+        try:
+            time.sleep(0.3)
+            # ...then deploy reports that put igraph in both hot sets
+            for a in apps:
+                save_report(_igraph_report(a),
+                            os.path.join(reports_dir, f"{a}.json"))
+            out = fleet.rewarm_from_dir(reports_dir)
+            time.sleep(0.3)
+        finally:
+            stop.set()
+            t.join(timeout=30)
+        assert out["_base"]["swapped"] is True
+        assert out["_base"]["errors"] == {}
+        assert fleet.shared.modules == ["fakelib_igraph"]
+        assert fleet.base_swaps == 1
+        # every dispatch during the swap succeeded on a zygote fork
+        assert results and all(r["path"] == "pool" for r in results)
+        assert all(not r["fallback"] for r in results)
+
+
+@pytest.mark.slow
+def test_daemon_rewarm_tick_hot_swaps_base_without_sheds(
+        suite_root_dir, tmp_path):
+    """The acceptance criterion end-to-end: the serve daemon's rewarm
+    tick swaps the base under live traffic and the summary shows every
+    request served — zero sheds, zero errors, zero flushes."""
+    from repro.api import save_report
+    from repro.pool import QueueConfig
+    from repro.pool.daemon import FleetDaemon, RealFleetBackend
+
+    apps = {name: os.path.join(suite_root_dir, "apps", name)
+            for name in ["graph_bfs", "graph_mst"]}
+    reports_dir = str(tmp_path / "reports")
+    os.makedirs(reports_dir)
+    first = {"graph_bfs": _report("graph_bfs", ["fakelib_igraph"]),
+             "graph_mst": _report("graph_mst", [])}
+    fleet = ZygoteFleet(apps, reports=first, shared_base=True)
+    backend = RealFleetBackend(
+        fleet, queue=QueueConfig(depth=64, max_concurrency=2),
+        reports_dir=reports_dir)
+    daemon = FleetDaemon(backend)
+    daemon.start("hot-swap")
+    try:
+        n = 0
+        for i in range(6):
+            for app in apps:
+                assert daemon.submit(Request(t=float(n), app=app,
+                                             handler=None)) == "queued"
+                n += 1
+            if i == 2:
+                # deploy reports that change the shared set mid-stream
+                for a in apps:
+                    save_report(_report(a, ["fakelib_igraph"]),
+                                os.path.join(reports_dir, f"{a}.json"))
+                tick = daemon.rewarm_now()
+                assert tick["_base"]["swapped"] is True
+            time.sleep(0.05)
+    finally:
+        payload = daemon.shutdown(flush=False)
+    assert payload["requests"] == n
+    assert payload["served"] == n
+    assert payload["sheds"] == 0 and payload["flushed"] == 0
+    assert payload.get("errors", 0) == 0
+    assert payload["shared_base"]["swaps"] == 1
+    assert payload["shared_base"]["modules"] == ["fakelib_igraph"]
+    assert payload["rewarm_ticks"] == 1
+    # everything that ran went down the fork path, before and after
+    assert payload["cold_starts"] == 0

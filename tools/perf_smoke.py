@@ -1,0 +1,144 @@
+#!/usr/bin/env python3
+"""CI perf smoke gate for the shared-base two-tier fleet.
+
+Replays one small deterministic Azure-style trace through the simulated
+fleet twice — one-zygote-per-app (PR 2 shape) and ``--shared-base``
+(PR 5 two-tier) — via the real ``python -m repro fleet replay`` CLI,
+then fails (exit 1) if shared-base *regresses* cold-start ratio or
+memory GB-s beyond the checked-in tolerances in
+``tools/perf_tolerance.json``.  The simulation is deterministic, so a
+failure is a code regression, not noise.
+
+Synthetic per-app report artifacts (one hot lib shared fleet-wide, one
+private) are generated into a temp reports-dir so the profile-guided
+policy actually admits zygotes — without reports the sweep would run
+zygote-less and the gate would compare nothing.
+
+Usage::
+
+    python tools/perf_smoke.py [--keep out-dir] [--tolerance FILE]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+APPS = ["alpha", "beta", "gamma"]
+# budget sized so BOTH fleets reach the same (zero) cold-start ratio:
+# the memory check then compares GB-s at equal service quality, the
+# tentpole's claim.  (Tighter budgets make shared-base trade memory for
+# a much lower cold ratio, which a scalar memory gate would misread as
+# a regression.)
+REPLAY_ARGS = ["--minutes", "8", "--peak-rpm", "40", "--seed", "7",
+               "--budget-mb", "420", "--policy", "profile",
+               "--zygote-rss-mb", "96", "--shared-base-mb", "64"]
+
+
+def _write_reports(reports_dir: str) -> None:
+    from repro.api import save_report
+    from repro.core.profiler.report import OptimizationReport
+    from repro.core.profiler.utilization import LibraryStats
+
+    def stat(name: str) -> LibraryStats:
+        return LibraryStats(name=name, utilization=0.9, init_s=0.12,
+                            init_share=0.5, runtime_samples=60,
+                            file="<perf-smoke>")
+
+    for app in APPS:
+        rep = OptimizationReport(
+            application=app, e2e_s=0.25, total_init_s=0.2,
+            qualifies=True,
+            stats=[stat("fakelib_shared"), stat(f"fakelib_{app}")],
+            defer_targets=[])
+        save_report(rep, os.path.join(reports_dir, f"{app}.json"))
+
+
+def _replay(out_path: str, reports_dir: str, *extra: str) -> None:
+    cmd = [sys.executable, "-m", "repro", "fleet", "replay",
+           "--apps", ",".join(APPS), "--reports-dir", reports_dir,
+           "--out", out_path, *REPLAY_ARGS, *extra]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    proc = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                          cwd=REPO, timeout=300)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"fleet replay failed ({proc.returncode}):\n"
+            f"{proc.stderr[-2000:]}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tolerance",
+                    default=os.path.join(REPO, "tools",
+                                         "perf_tolerance.json"))
+    ap.add_argument("--keep", default=None,
+                    help="directory to keep the two fleet_summary "
+                         "artifacts in (default: temp)")
+    args = ap.parse_args(argv)
+
+    with open(args.tolerance) as fh:
+        tol = json.load(fh)["shared_base"]
+
+    from repro.api import load_fleet_summary
+
+    out_dir = args.keep or tempfile.mkdtemp(prefix="perf-smoke-")
+    os.makedirs(out_dir, exist_ok=True)
+    reports_dir = os.path.join(out_dir, "reports")
+    os.makedirs(reports_dir, exist_ok=True)
+    _write_reports(reports_dir)
+
+    base_path = os.path.join(out_dir, "one-per-app.json")
+    shared_path = os.path.join(out_dir, "shared-base.json")
+    _replay(base_path, reports_dir)
+    _replay(shared_path, reports_dir, "--shared-base")
+
+    base = load_fleet_summary(base_path)
+    shared = load_fleet_summary(shared_path)
+
+    checks = []
+
+    def check(name: str, ok: bool, detail: str) -> None:
+        checks.append(ok)
+        print(f"  [{'ok' if ok else 'FAIL'}] {name}: {detail}")
+
+    print(f"perf smoke: {base['requests']} requests, "
+          f"budget {base.get('budget_mb')} MB")
+    dr = shared["cold_start_ratio"] - base["cold_start_ratio"]
+    check("cold-start ratio",
+          dr <= tol["max_cold_ratio_regression"],
+          f"one-per-app {base['cold_start_ratio']:.4f} vs shared-base "
+          f"{shared['cold_start_ratio']:.4f} (delta {dr:+.4f}, "
+          f"allowed +{tol['max_cold_ratio_regression']})")
+    mem_b, mem_s = base["memory_gb_s"], shared["memory_gb_s"]
+    limit = mem_b * (1.0 + tol["max_memory_regression_frac"])
+    check("memory GB-s", mem_s <= limit,
+          f"one-per-app {mem_b} vs shared-base {mem_s} "
+          f"(limit {limit:.3f})")
+    check("two-tier actually on",
+          shared.get("shared_base_mb", 0) > 0
+          and shared.get("pool_starts", 0) > 0,
+          f"shared_base_mb={shared.get('shared_base_mb')} "
+          f"pool_starts={shared.get('pool_starts')} (zygotes admitted "
+          f"and serving forks)")
+
+    if all(checks):
+        print("perf smoke: PASS — shared-base does not regress the "
+              "one-zygote-per-app fleet")
+        return 0
+    print("perf smoke: FAIL — shared-base regressed beyond "
+          f"{args.tolerance}", file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

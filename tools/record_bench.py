@@ -1,0 +1,156 @@
+#!/usr/bin/env python3
+"""Append a perf-trajectory row to BENCH_POOL.json.
+
+The fleet benchmarks (``benchmarks.bench_fleet``,
+``benchmarks.bench_pool_policies``) print rich tables per run but left
+no durable trend line: a regression in cold-start ratio or zygote boot
+latency only showed up if someone diffed nightly artifacts by hand.
+This tool snapshots the key metrics out of the latest ``bench_result``
+artifacts into ``BENCH_POOL.json`` — a checked-in, append-only list of
+schema-versioned rows — so the trajectory (PR 5 seeds it with the first
+shared-base point) is reviewable in-repo and the nightly job extends
+it as an uploaded artifact.
+
+Usage::
+
+    python tools/record_bench.py [--out BENCH_POOL.json] [--label L]
+
+Reads ``benchmarks/results/bench_fleet.json`` (required) and
+``bench_pool_policies.json`` (optional).  Exit 2 when no bench result
+exists yet.
+"""
+
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+sys.path.insert(0, REPO)
+
+SCHEMA_VERSION = 1
+
+
+def _git_commit() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=REPO,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def _fleet_metrics(data: dict) -> dict:
+    """The trend-worthy numbers out of one bench_fleet payload."""
+    sim = {r["policy"]: r for r in data.get("sim_rows", [])}
+    pg = sim.get("profile-guided", {})
+    queue = {r["policy"]: r for r in data.get("queue_rows", [])}
+    qpg = queue.get("profile-guided", {})
+    out = {
+        "budget_mb": data.get("budget_mb"),
+        "requests": data.get("trace", {}).get("requests"),
+        "profile_guided": {
+            "cold_ratio": pg.get("cold_ratio"),
+            "p99_ms": pg.get("p99_ms"),
+            "mean_ms": pg.get("mean_ms"),
+            "memory_gb_s": pg.get("memory_gb_s"),
+        },
+        "bounded_queue": {
+            "cold_ratio": qpg.get("cold_ratio"),
+            "shed_rate": qpg.get("shed_rate"),
+            "queue_wait_p99_ms": qpg.get("queue_wait_p99_ms"),
+        },
+        "beats_fixed": data.get("profile_guided_beats_fixed"),
+        "beats_idle_timeout": data.get(
+            "profile_guided_beats_idle_timeout"),
+    }
+    two_tier = data.get("two_tier_boot")
+    if two_tier:
+        rows = data.get("shared_base_rows", [])
+
+        def row(prefix: str) -> dict:
+            return next((r for r in rows
+                         if r["fleet"].startswith(prefix)), {})
+
+        one = row("one-zygote-per-app (PR 2)")
+        # the budget-grown PR 2 run matching the two-tier cold ratio
+        # (absent when both already serve equally at the same budget)
+        eq = row("one-zygote-per-app @ equal service") or one
+        two = row("shared-base two-tier")
+        out["shared_base"] = {
+            "min_boot_speedup": two_tier.get("min_boot_speedup"),
+            "base_boot_ms": two_tier.get("base_boot_ms"),
+            "base_rss_mb": two_tier.get("base_rss_mb"),
+            "shared_modules": two_tier.get("shared_modules"),
+            "one_per_app_memory_gb_s": one.get("memory_gb_s"),
+            "one_per_app_equal_service_memory_gb_s":
+                eq.get("memory_gb_s"),
+            "two_tier_memory_gb_s": two.get("memory_gb_s"),
+            "one_per_app_cold_ratio": one.get("cold_ratio"),
+            "two_tier_cold_ratio": two.get("cold_ratio"),
+            "wins": data.get("shared_base_wins"),
+        }
+    return out
+
+
+def _pool_metrics(data: dict) -> dict:
+    return {
+        "min_speedup_hot": data.get("min_speedup_hot"),
+        "min_boot_speedup": data.get("min_boot_speedup"),
+        "shared_modules": data.get("shared_modules"),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="snapshot bench_fleet/bench_pool_policies metrics "
+                    "into the BENCH_POOL.json trajectory")
+    ap.add_argument("--out", default=os.path.join(REPO, "BENCH_POOL.json"))
+    ap.add_argument("--label", default="",
+                    help="free-form row label (e.g. 'nightly', 'pr5')")
+    args = ap.parse_args(argv)
+
+    from benchmarks.common import load_result
+
+    fleet = load_result("bench_fleet")
+    if fleet is None:
+        print("record_bench: no benchmarks/results/bench_fleet.json — "
+              "run `python -m benchmarks.bench_fleet --smoke` first",
+              file=sys.stderr)
+        return 2
+    row = {
+        "schema_version": SCHEMA_VERSION,
+        "recorded_at": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "commit": _git_commit(),
+        "label": args.label,
+        "bench_fleet": _fleet_metrics(fleet),
+    }
+    pool = load_result("bench_pool_policies")
+    if pool is not None:
+        row["bench_pool_policies"] = _pool_metrics(pool)
+
+    rows = []
+    if os.path.exists(args.out):
+        with open(args.out) as fh:
+            rows = json.load(fh)
+        if not isinstance(rows, list):
+            print(f"record_bench: {args.out} is not a JSON list",
+                  file=sys.stderr)
+            return 2
+    rows.append(row)
+    from repro.api import atomic_write_json
+    atomic_write_json(args.out, rows)
+    print(f"recorded trajectory point #{len(rows)} "
+          f"({row['commit']}) -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
