@@ -2,11 +2,17 @@
 
 Warm per-invocation time with vs without the sampling profiler attached;
 the paper reports <=10% for most apps at the default sampling rate.
+
+Also benchmarks the span tracer (``repro.obs.tracing``) in its default
+*disabled* state: instrumentation stays inline on the serving hot path,
+so a disabled ``tracer.span(...)`` must cost roughly nothing compared
+to the work it wraps.
 """
 
 from __future__ import annotations
 
 import os
+import time
 
 from repro.benchsuite.genlibs import build_suite
 from repro.benchsuite.harness import measure_warm_overhead
@@ -14,6 +20,45 @@ from repro.benchsuite.harness import measure_warm_overhead
 from benchmarks.common import (
     ALL_OPT_APPS, APP_SHORT, N_INVOKE, QUICK, bench, save_result, table,
 )
+
+
+def measure_tracer_overhead(iterations: int = 50_000) -> dict:
+    """Per-operation cost (ns) of the tracer, disabled vs enabled.
+
+    The "work" inside each span is a single perf_counter() call so the
+    numbers reflect tracer overhead, not the payload.
+    """
+    from repro.obs.tracing import configure_tracing, get_tracer
+
+    def loop(tracer) -> float:
+        t0 = time.perf_counter()
+        for _ in range(iterations):
+            with tracer.span("bench"):
+                time.perf_counter()
+        return (time.perf_counter() - t0) / iterations * 1e9
+
+    def baseline() -> float:
+        t0 = time.perf_counter()
+        for _ in range(iterations):
+            time.perf_counter()
+        return (time.perf_counter() - t0) / iterations * 1e9
+
+    configure_tracing(enabled=False)
+    tracer = get_tracer()
+    # min-of-3 to shave scheduler noise
+    base_ns = min(baseline() for _ in range(3))
+    disabled_ns = min(loop(tracer) for _ in range(3))
+    configure_tracing(enabled=True)
+    tracer = get_tracer()
+    enabled_ns = min(loop(tracer) for _ in range(3))
+    tracer.clear()
+    configure_tracing(enabled=False)
+    return {
+        "iterations": iterations,
+        "baseline_ns": round(base_ns, 1),
+        "disabled_span_ns": round(disabled_ns - base_ns, 1),
+        "enabled_span_ns": round(enabled_ns - base_ns, 1),
+    }
 
 
 @bench("profiler_overhead", ref="Fig. 9", order=80)
@@ -31,6 +76,7 @@ def run() -> dict:
             "overhead_pct": round(100 * (prof_ms / base_ms - 1), 1),
         })
     under10 = sum(r["overhead_pct"] <= 10 for r in rows)
+    tracer = measure_tracer_overhead(iterations=5_000 if QUICK else 50_000)
     payload = {
         "figure": "Fig. 9",
         "claims": {
@@ -41,10 +87,14 @@ def run() -> dict:
                 sum(r["overhead_pct"] for r in rows) / len(rows), 2),
         },
         "rows": rows,
+        "tracer": tracer,
     }
     save_result("bench_profiler_overhead", payload)
     print(table(rows, ["app", "base_ms", "profiled_ms", "overhead_pct"],
                 "Fig. 9 profiler overhead"))
+    print(f"span tracer: disabled {tracer['disabled_span_ns']:.0f} ns/span, "
+          f"enabled {tracer['enabled_span_ns']:.0f} ns/span "
+          f"(baseline {tracer['baseline_ns']:.0f} ns)")
     return payload
 
 

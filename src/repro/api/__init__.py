@@ -34,6 +34,7 @@ from repro.api.artifacts import (
     ReportArtifact,
     SharedHotSetArtifact,
     TraceArtifact,
+    TraceEventsArtifact,
     as_report,
     load_bench_result,
     load_fleet_summary,
@@ -42,12 +43,14 @@ from repro.api.artifacts import (
     load_shared_hot_set,
     load_stats,
     load_trace,
+    load_trace_events,
     save_bench_result,
     save_fleet_summary,
     save_report,
     save_shared_hot_set,
     save_stats,
     save_trace,
+    save_trace_events,
 )
 from repro.api.facade import SlimStart
 from repro.api.stages import (
@@ -84,6 +87,7 @@ __all__ = [
     "SlimStart",
     "Stage",
     "TraceArtifact",
+    "TraceEventsArtifact",
     "WarmStage",
     "analyze_sink",
     "apply_defer_targets",
@@ -98,6 +102,7 @@ __all__ = [
     "load_shared_hot_set",
     "load_stats",
     "load_trace",
+    "load_trace_events",
     "peek",
     "profile_app",
     "registered_kinds",
@@ -108,5 +113,6 @@ __all__ = [
     "save_shared_hot_set",
     "save_stats",
     "save_trace",
+    "save_trace_events",
     "static_defer_targets",
 ]

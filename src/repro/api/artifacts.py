@@ -11,6 +11,7 @@ cold_start_stats      ColdStartStats (harness)      1
 bench_result          benchmark payload dicts       2
 fleet_summary         fleet serve/replay rollups    1
 shared_hot_set        repro.pool.sharing plan       1
+trace_events          repro.obs spans + metrics     1
 ====================  ===========================  =======
 
 ``optimization_report`` v1 is the seed repo's unversioned
@@ -287,7 +288,9 @@ class FleetSummaryArtifact(Artifact):
     percentiles, the ``queue`` config that produced them), the
     rewarm-tick count, and ``per_app`` breakdown rows.  Conservation:
     ``requests == served + sheds + flushed + errors`` (``errors``
-    defaults to 0 when absent).  ``source`` names the producer
+    defaults to 0 when absent).  ``shed_reasons`` (optional) breaks
+    ``sheds`` out by cause — ``queue-full`` (reject-new),
+    ``drop-oldest``, ``pool-saturated`` — and must sum to ``sheds``.  ``source`` names the producer
     (``serve-sim`` / ``serve-real`` / ``replay-sim`` / ``replay-real``
     / ``bench``).
     """
@@ -302,7 +305,7 @@ class FleetSummaryArtifact(Artifact):
                      "pool_starts", "errors", "memory_gb_s",
                      "rewarm_ticks", "queue", "zygotes", "skipped",
                      "used_mb", "shared_base_mb", "base_gb_s",
-                     "shared_base", "meta")
+                     "shared_base", "shed_reasons", "meta")
 
     def __init__(self, payload: dict, meta: Optional[dict] = None) -> None:
         self.data = dict(payload)
@@ -387,6 +390,60 @@ def load_shared_hot_set(path: str) -> "SharedHotSet":
     return SharedHotSetArtifact.load(path).shared
 
 
+# ---------------------------------------------------------------------------
+# trace_events (v1)
+# ---------------------------------------------------------------------------
+
+class TraceEventsArtifact(Artifact):
+    """One observability capture: the spans recorded by
+    :class:`repro.obs.tracing.Tracer` over a run plus a
+    :meth:`repro.obs.metrics.MetricsRegistry.snapshot` taken at the
+    same moment.  Produced by ``fleet replay --trace-out`` /
+    ``fleet serve --trace-out``; consumed by ``python -m repro obs
+    report`` (anatomy breakdown, flamegraph folding).
+
+    ``spans`` is a list of span dicts (see
+    :meth:`repro.obs.tracing.Span.to_dict`); ``metrics`` is the
+    plain-JSON registry snapshot (``repro.metrics/1``); ``meta``
+    carries provenance (source command, app set, dropped-span count).
+    """
+
+    kind = "trace_events"
+    schema_version = 1
+    required_keys = ("spans", "metrics")
+    optional_keys = ("meta",)
+
+    def __init__(self, spans: list, metrics: Optional[dict] = None,
+                 meta: Optional[dict] = None) -> None:
+        self.spans = [s.to_dict() if hasattr(s, "to_dict") else dict(s)
+                      for s in spans]
+        self.metrics = dict(metrics or {})
+        self.meta = dict(meta or {})
+
+    def to_payload(self) -> dict:
+        return {"spans": self.spans, "metrics": self.metrics,
+                "meta": self.meta}
+
+    @classmethod
+    def from_payload(cls, payload: dict) -> "TraceEventsArtifact":
+        return cls(list(payload["spans"]),
+                   metrics=payload.get("metrics") or {},
+                   meta=payload.get("meta") or {})
+
+
+def save_trace_events(spans: list, path: str,
+                      metrics: Optional[dict] = None,
+                      meta: Optional[dict] = None) -> str:
+    """Atomically save spans (+ optional metrics snapshot) as a
+    versioned ``trace_events`` artifact."""
+    return TraceEventsArtifact(spans, metrics=metrics, meta=meta).save(path)
+
+
+def load_trace_events(path: str) -> TraceEventsArtifact:
+    """Load a ``trace_events`` artifact (spans stay plain dicts)."""
+    return TraceEventsArtifact.load(path)
+
+
 __all__ = [
     "Artifact",
     "ArtifactError",
@@ -396,6 +453,7 @@ __all__ = [
     "ReportArtifact",
     "SharedHotSetArtifact",
     "TraceArtifact",
+    "TraceEventsArtifact",
     "as_report",
     "load_bench_result",
     "load_fleet_summary",
@@ -404,10 +462,12 @@ __all__ = [
     "load_shared_hot_set",
     "load_stats",
     "load_trace",
+    "load_trace_events",
     "save_bench_result",
     "save_fleet_summary",
     "save_report",
     "save_shared_hot_set",
     "save_stats",
     "save_trace",
+    "save_trace_events",
 ]

@@ -15,10 +15,21 @@ benchmarks and library callers share exactly one implementation:
     fleet serve        long-running daemon: bounded queues with
                        backpressure, rewarm timer, SIGTERM drain,
                        fleet_summary artifact on shutdown
+    obs report PATH    cold-start anatomy from a trace_events artifact
+                       (per-phase p50/p99, top imports, --flame folded
+                       stacks for flamegraph.pl)
+    obs top            live per-app console from a daemon's /metrics
+                       endpoint (or a metrics textfile)
     ci-check APP       re-profile; exit 1 if the defer set diverged
                        from the deployed report (the paper's CI gate)
     docs               (re)generate docs/cli.md from this parser;
                        --check exits 1 on drift (the CI docs gate)
+
+``fleet serve``/``fleet replay`` grow the observability surface:
+``--trace-out`` records spans and saves a ``trace_events`` artifact on
+exit, ``--metrics-port`` (serve) exposes Prometheus text on a stdlib
+HTTP endpoint, ``--log-level``/``--log-json`` shape the structured
+stderr log (see docs/observability.md).
 
 Exit codes: 0 ok / check passed, 1 ci-check divergence, 2 usage or
 artifact errors (bad/missing files, schema violations).
@@ -269,6 +280,7 @@ def cmd_fleet_replay(args: argparse.Namespace) -> int:
     from repro.api.artifacts import save_fleet_summary
     from repro.pool.fleet import FleetManager
 
+    _obs_setup(args)
     trace, apps = _fleet_trace(args)
     if args.real:
         with _real_fleet(args, apps) as fleet:
@@ -296,6 +308,9 @@ def cmd_fleet_replay(args: argparse.Namespace) -> int:
     if args.out:
         save_fleet_summary(payload, os.path.abspath(args.out))
         print(f"fleet_summary artifact: {os.path.abspath(args.out)}")
+    _obs_save_capture(args, "fleet-replay",
+                      meta={"trace": trace.name, "apps": apps,
+                            "real": bool(args.real)})
     return 0
 
 
@@ -311,6 +326,7 @@ def cmd_fleet_serve(args: argparse.Namespace) -> int:
     )
     from repro.pool.fleet import FleetManager
 
+    _obs_setup(args)
     queue = _queue_config(args)
     trace = None
     if not args.stdin:
@@ -339,22 +355,105 @@ def cmd_fleet_serve(args: argparse.Namespace) -> int:
     signal.signal(signal.SIGTERM, daemon.request_shutdown)
     signal.signal(signal.SIGINT, daemon.request_shutdown)
 
-    boot = daemon.start(trace.name if trace is not None else "live")
-    print(json.dumps({"ok": True, "event": "ready", **boot}),
-          file=sys.stderr, flush=True)
-    if args.stdin:
-        payload = daemon.run_stdin()
-    else:
-        payload = daemon.run_trace(trace, pace=args.pace)
-        print(json.dumps({k: v for k, v in payload.items()
-                          if k != "per_app"}, indent=2))
-        _print_rows(payload["per_app"],
-                    ["app", "requests", "cold_starts", "sheds",
-                     "flushed", "p99_ms", "queue_wait_p99_ms"])
+    metrics_server = None
+    if args.metrics_port is not None:
+        from repro.obs.exposition import MetricsServer
+        metrics_server = MetricsServer(port=args.metrics_port)
+        metrics_server.start()
+
+    try:
+        boot = daemon.start(trace.name if trace is not None else "live")
+        ready = {"ok": True, "event": "ready", **boot}
+        if metrics_server is not None:
+            ready["metrics_url"] = metrics_server.url
+        print(json.dumps(ready), file=sys.stderr, flush=True)
+        if args.stdin:
+            payload = daemon.run_stdin()
+        else:
+            payload = daemon.run_trace(trace, pace=args.pace)
+            print(json.dumps({k: v for k, v in payload.items()
+                              if k != "per_app"}, indent=2))
+            _print_rows(payload["per_app"],
+                        ["app", "requests", "cold_starts", "sheds",
+                         "flushed", "p99_ms", "queue_wait_p99_ms"])
+    finally:
+        if metrics_server is not None:
+            metrics_server.stop()
     if args.summary_out:
         print(f"fleet_summary artifact: "
               f"{os.path.abspath(args.summary_out)}", file=sys.stderr)
+    _obs_save_capture(args, "fleet-serve",
+                      meta={"apps": apps, "sim": bool(args.sim)})
     return 0
+
+
+def _obs_setup(args: argparse.Namespace) -> None:
+    """Apply the shared observability knobs (logging + tracing)."""
+    from repro.obs.log import configure as configure_log
+    configure_log(level=args.log_level, json_mode=args.log_json)
+    if getattr(args, "trace_out", None):
+        from repro.obs.tracing import configure_tracing
+        configure_tracing(enabled=True)
+
+
+def _obs_save_capture(args: argparse.Namespace, source: str,
+                      meta: Optional[dict] = None) -> None:
+    """Save the tracer's spans + a metrics snapshot as a versioned
+    ``trace_events`` artifact (the ``--trace-out`` contract)."""
+    if not getattr(args, "trace_out", None):
+        return
+    from repro.api.artifacts import save_trace_events
+    from repro.obs.metrics import default_registry
+    from repro.obs.tracing import get_tracer
+    tracer = get_tracer()
+    spans = tracer.snapshot()
+    path = os.path.abspath(args.trace_out)
+    save_trace_events(spans, path,
+                      metrics=default_registry().snapshot(),
+                      meta={"source": source, "spans": len(spans),
+                            "dropped": tracer.dropped, **(meta or {})})
+    print(f"trace_events artifact: {path} ({len(spans)} spans)",
+          file=sys.stderr)
+
+
+def cmd_obs_report(args: argparse.Namespace) -> int:
+    from repro.api.artifacts import load_trace_events
+    from repro.obs.anatomy import (
+        folded_stacks, phase_breakdown, top_imports,
+    )
+    from repro.obs.anatomy import render_report as render_anatomy
+    art = load_trace_events(args.path)
+    if args.flame:
+        lines = folded_stacks(art.spans)
+        flame = os.path.abspath(args.flame)
+        with open(flame, "w") as fh:
+            fh.write("\n".join(lines) + ("\n" if lines else ""))
+        print(f"folded stacks: {flame} ({len(lines)} frames) — "
+              f"render with flamegraph.pl", file=sys.stderr)
+    if args.json:
+        print(json.dumps({
+            "meta": art.meta,
+            "phases": phase_breakdown(art.spans),
+            "top_imports": top_imports(art.spans, n=args.top),
+        }, indent=2))
+    else:
+        print(render_anatomy(art.spans, top_n=args.top, meta=art.meta))
+    return 0
+
+
+def cmd_obs_top(args: argparse.Namespace) -> int:
+    from repro.obs.console import run_top
+    if args.url:
+        url = args.url
+    elif args.port is not None:
+        url = f"http://127.0.0.1:{args.port}/metrics"
+    elif args.file:
+        url = args.file
+    else:
+        print("obs top: need --url, --port or --file", file=sys.stderr)
+        return 2
+    return run_top(url, interval_s=args.interval,
+                   iterations=args.iterations, clear=not args.no_clear)
 
 
 def cmd_docs(args: argparse.Namespace) -> int:
@@ -566,6 +665,17 @@ def build_parser() -> argparse.ArgumentParser:
                        help="simulated shared base zygote RSS "
                             "(used with --shared-base)")
 
+    def add_obs_knobs(p: argparse.ArgumentParser) -> None:
+        p.add_argument("--log-level", default="info",
+                       choices=["debug", "info", "warning", "error"],
+                       help="structured-log threshold (stderr)")
+        p.add_argument("--log-json", action="store_true",
+                       help="JSONL structured logs instead of text")
+        p.add_argument("--trace-out", default=None,
+                       help="enable span tracing; save the "
+                            "trace_events artifact here on exit "
+                            "(analyze with `repro obs report`)")
+
     def add_queue_knobs(p: argparse.ArgumentParser,
                         default_depth: int) -> None:
         p.add_argument("--queue-depth", type=int, default=default_depth,
@@ -587,6 +697,7 @@ def build_parser() -> argparse.ArgumentParser:
     add_fleet_workload(p)
     add_fleet_sim_profile(p)
     add_queue_knobs(p, default_depth=-1)
+    add_obs_knobs(p)
     p.add_argument("--real", action="store_true",
                    help="replay through a live ZygoteFleet over the "
                         "deployed benchsuite apps (one zygote per app "
@@ -613,7 +724,11 @@ def build_parser() -> argparse.ArgumentParser:
     add_fleet_workload(p)
     add_fleet_sim_profile(p)
     add_queue_knobs(p, default_depth=16)
+    add_obs_knobs(p)
     add_root(p)
+    p.add_argument("--metrics-port", type=int, default=None,
+                   help="expose Prometheus metrics on this port "
+                        "(0 = ephemeral; URL lands in the ready line)")
     p.add_argument("--sim", action="store_true",
                    help="simulated fleet (FleetManager) instead of "
                         "real zygotes")
@@ -631,6 +746,49 @@ def build_parser() -> argparse.ArgumentParser:
                    help="write the fleet_summary artifact here on "
                         "drain/shutdown")
     p.set_defaults(func=cmd_fleet_serve)
+
+    obs = sub.add_parser("obs", help="observability: trace analysis "
+                                     "and the live fleet console")
+    obs_sub = obs.add_subparsers(dest="obs_command", required=True)
+    p = obs_sub.add_parser(
+        "report",
+        help="cold-start anatomy from a trace_events artifact",
+        description="Break a trace_events capture (fleet replay/serve "
+                    "--trace-out) into per-phase p50/p99/self-time "
+                    "shares, list the slowest imports, and optionally "
+                    "emit folded stacks for flamegraph.pl.")
+    p.add_argument("path", help="trace_events artifact JSON")
+    p.add_argument("--top", type=int, default=10,
+                   help="slowest-import rows to show (default 10)")
+    p.add_argument("--flame", default=None,
+                   help="write folded stacks here (one "
+                        "'root;child;leaf value' line per frame)")
+    p.add_argument("--json", action="store_true",
+                   help="machine-readable breakdown instead of tables")
+    p.set_defaults(func=cmd_obs_report)
+
+    p = obs_sub.add_parser(
+        "top",
+        help="live per-app fleet table from a /metrics endpoint",
+        description="Scrape a serving daemon's Prometheus endpoint "
+                    "(fleet serve --metrics-port) or a metrics "
+                    "textfile and render a refreshing per-app table: "
+                    "requests, cold ratio, shed rate, queue depth, "
+                    "queue-wait p99, base swaps, rewarm ticks.")
+    p.add_argument("--url", default=None,
+                   help="full metrics URL (e.g. "
+                        "http://127.0.0.1:9464/metrics)")
+    p.add_argument("--port", type=int, default=None,
+                   help="shorthand for http://127.0.0.1:PORT/metrics")
+    p.add_argument("--file", default=None,
+                   help="metrics textfile path instead of a URL")
+    p.add_argument("--interval", type=float, default=2.0,
+                   help="seconds between scrapes (default 2)")
+    p.add_argument("--iterations", type=int, default=0,
+                   help="stop after N renders (0 = until ^C)")
+    p.add_argument("--no-clear", action="store_true",
+                   help="append renders instead of clearing the screen")
+    p.set_defaults(func=cmd_obs_top)
 
     p = sub.add_parser("ci-check",
                        help="re-profile and compare against the deployed "

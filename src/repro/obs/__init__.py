@@ -1,0 +1,37 @@
+"""Observability: span tracing, metrics, exposition, structured logs.
+
+Stdlib-only.  The subsystem is **off by default** — the tracer is a
+no-op until :func:`configure_tracing` (or ``--trace-out`` on the CLI)
+enables it, and metrics counters are cheap enough to stay always-on.
+
+Layout::
+
+    tracing.py     Span / Tracer (trace_id/span_id, monotonic clock,
+                   thread-safe ring buffer) + protocol serialization
+    metrics.py     Counter/Gauge/Histogram registry, Prometheus text
+                   exposition, parser + format validator
+    exposition.py  stdlib HTTP /metrics endpoint + textfile writer
+    log.py         structured (JSONL or text) leveled logging
+    anatomy.py     cold-start anatomy analysis over trace_events
+    console.py     ``repro obs top`` live per-app fleet table
+"""
+
+from repro.obs.tracing import (  # noqa: F401
+    Span,
+    Tracer,
+    configure_tracing,
+    get_tracer,
+)
+from repro.obs.metrics import (  # noqa: F401
+    MetricsRegistry,
+    default_registry,
+)
+
+__all__ = [
+    "Span",
+    "Tracer",
+    "configure_tracing",
+    "get_tracer",
+    "MetricsRegistry",
+    "default_registry",
+]

@@ -1,0 +1,145 @@
+"""``repro obs top`` — live per-app fleet table from a /metrics scrape.
+
+Scrapes a daemon's Prometheus endpoint (or a textfile written by
+:func:`repro.obs.exposition.write_metrics_textfile`), folds the samples
+into per-app rows and renders a refreshing table: requests, cold
+ratio, shed rate, queue depth / in-flight gauges, queue-wait p99
+(estimated from histogram buckets) — with fleet-wide footer lines for
+base swaps and rewarm ticks.
+
+Pure functions (:func:`rows_from_exposition`, :func:`render_table`)
+carry all the logic so tests never need a live daemon; the scrape loop
+is a thin shell with ``--iterations`` for bounded runs.
+"""
+
+from __future__ import annotations
+
+import time
+import urllib.request
+from collections import defaultdict
+from typing import Callable, Dict, List, Optional
+
+from repro.obs.metrics import histogram_quantile, parse_exposition
+
+__all__ = ["scrape", "rows_from_exposition", "render_table", "run_top"]
+
+CLEAR = "\x1b[2J\x1b[H"
+
+
+def scrape(url: str, timeout_s: float = 5.0) -> str:
+    if url.startswith("file://") or "://" not in url:
+        path = url[len("file://"):] if url.startswith("file://") else url
+        with open(path, encoding="utf-8") as fh:
+            return fh.read()
+    if not url.startswith(("http://", "https://")):
+        raise ValueError(f"unsupported metrics url: {url!r}")
+    with urllib.request.urlopen(url, timeout=timeout_s) as resp:
+        return resp.read().decode("utf-8", "replace")
+
+
+def rows_from_exposition(text: str) -> dict:
+    """Fold exposition text into ``{"apps": [row...], "fleet": {...}}``."""
+    parsed = parse_exposition(text)
+    apps: Dict[str, dict] = defaultdict(lambda: {
+        "requests": 0.0, "served": 0.0, "sheds": 0.0, "errors": 0.0,
+        "cold": 0.0, "pool": 0.0, "queued": 0.0, "in_flight": 0.0,
+        "wait_buckets": []})
+    fleet = {"base_swaps": 0.0, "rewarm_ticks": 0.0, "flushed": 0.0}
+    for name, labels, value in parsed["samples"]:
+        app = labels.get("app")
+        if name == "repro_requests_total" and app:
+            apps[app]["requests"] += value
+        elif name == "repro_sheds_total" and app:
+            apps[app]["sheds"] += value
+        elif name == "repro_served_total" and app:
+            apps[app]["served"] += value
+        elif name == "repro_errors_total" and app:
+            apps[app]["errors"] += value
+        elif name == "repro_dispatch_total" and app:
+            path = labels.get("path", "")
+            if path in ("cold", "fallback"):
+                apps[app]["cold"] += value
+            elif path:
+                apps[app]["pool"] += value
+        elif name == "repro_queue_depth" and app:
+            apps[app]["queued"] = value
+        elif name == "repro_in_flight" and app:
+            apps[app]["in_flight"] = value
+        elif name == "repro_queue_wait_ms_bucket" and app:
+            try:
+                le = labels.get("le", "")
+                bound = float("inf") if le == "+Inf" else float(le)
+            except ValueError:
+                continue
+            apps[app]["wait_buckets"].append((bound, value))
+        elif name == "repro_base_swaps_total":
+            fleet["base_swaps"] += value
+        elif name == "repro_rewarm_ticks_total":
+            fleet["rewarm_ticks"] += value
+        elif name == "repro_flushed_total":
+            fleet["flushed"] += value
+    rows: List[dict] = []
+    for app in sorted(apps):
+        a = apps[app]
+        starts = a["cold"] + a["pool"]
+        p99 = histogram_quantile(0.99, a["wait_buckets"])
+        rows.append({
+            "app": app,
+            "requests": int(a["requests"]),
+            "served": int(a["served"]),
+            "cold%": f"{(a['cold'] / starts * 100):.1f}"
+            if starts else "-",
+            "shed%": f"{(a['sheds'] / a['requests'] * 100):.1f}"
+            if a["requests"] else "-",
+            "errors": int(a["errors"]),
+            "queued": int(a["queued"]),
+            "in_flight": int(a["in_flight"]),
+            "wait_p99_ms": f"{p99:.1f}" if p99 is not None else "-",
+        })
+    return {"apps": rows, "fleet": fleet}
+
+
+def render_table(folded: dict, *, clock: str = "") -> str:
+    from repro.api.render import table
+
+    cols = ["app", "requests", "served", "cold%", "shed%", "errors",
+            "queued", "in_flight", "wait_p99_ms"]
+    lines = []
+    header = "repro fleet — live metrics"
+    if clock:
+        header += f"  ({clock})"
+    lines.append(header)
+    if folded["apps"]:
+        lines.append(table(folded["apps"], cols))
+    else:
+        lines.append("  (no per-app series yet)")
+    fl = folded["fleet"]
+    lines.append(
+        f"fleet: base_swaps={int(fl['base_swaps'])} "
+        f"rewarm_ticks={int(fl['rewarm_ticks'])} "
+        f"flushed={int(fl['flushed'])}")
+    return "\n".join(lines)
+
+
+def run_top(url: str, *, interval_s: float = 2.0, iterations: int = 0,
+            clear: bool = True,
+            write: Optional[Callable[[str], None]] = None) -> int:
+    """Scrape/render loop.  ``iterations=0`` means run until ^C."""
+    out = write or (lambda s: print(s, flush=True))
+    count = 0
+    while True:
+        try:
+            text = scrape(url)
+        except (OSError, ValueError) as exc:
+            out(f"obs top: scrape failed: {exc}")
+            return 1
+        clock = time.strftime("%H:%M:%S")
+        body = render_table(rows_from_exposition(text), clock=clock)
+        out((CLEAR if clear else "") + body)
+        count += 1
+        if iterations and count >= iterations:
+            return 0
+        try:
+            time.sleep(interval_s)
+        except KeyboardInterrupt:
+            return 0

@@ -1,0 +1,110 @@
+"""Prometheus exposition over HTTP (stdlib) or to a textfile.
+
+:class:`MetricsServer` is a tiny ``http.server`` endpoint meant to sit
+next to ``fleet serve``: daemon threads only, bind-to-port-0 supported
+(the bound port is reported back so tests and the CI smoke can scrape
+an ephemeral port), and the handler just renders the registry on each
+GET — no caching, no state.
+
+Routes::
+
+    GET /metrics   text/plain; version=0.0.4 exposition
+    GET /healthz   "ok"
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
+
+from repro.obs.metrics import MetricsRegistry, default_registry
+
+__all__ = ["MetricsServer", "write_metrics_textfile"]
+
+CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+
+def write_metrics_textfile(path: str,
+                           registry: Optional[MetricsRegistry] = None
+                           ) -> str:
+    """Atomically write the exposition to ``path`` (textfile-collector
+    style); returns the rendered text."""
+    reg = registry or default_registry()
+    text = reg.render()
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w", encoding="utf-8") as fh:
+        fh.write(text)
+    os.replace(tmp, path)
+    return text
+
+
+class _Handler(BaseHTTPRequestHandler):
+    server_version = "repro-obs/1"
+
+    def do_GET(self) -> None:  # noqa: N802 - http.server API
+        path = self.path.split("?", 1)[0]
+        if path in ("/metrics", "/"):
+            body = self.server.registry.render().encode("utf-8")  # type: ignore[attr-defined]
+            ctype = CONTENT_TYPE
+        elif path == "/healthz":
+            body, ctype = b"ok\n", "text/plain; charset=utf-8"
+        else:
+            self.send_error(404)
+            return
+        self.send_response(200)
+        self.send_header("Content-Type", ctype)
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def log_message(self, fmt, *args):  # quiet: scrapes are periodic
+        return
+
+
+class MetricsServer:
+    """Background /metrics endpoint for a registry."""
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None,
+                 host: str = "127.0.0.1", port: int = 0):
+        self.registry = registry or default_registry()
+        self.host = host
+        self.port = port
+        self._httpd: Optional[ThreadingHTTPServer] = None
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self) -> int:
+        """Bind and serve in a daemon thread; returns the bound port."""
+        if self._httpd is not None:
+            return self.port
+        httpd = ThreadingHTTPServer((self.host, self.port), _Handler)
+        httpd.daemon_threads = True
+        httpd.registry = self.registry  # type: ignore[attr-defined]
+        self._httpd = httpd
+        self.port = httpd.server_address[1]
+        self._thread = threading.Thread(
+            target=httpd.serve_forever, kwargs={"poll_interval": 0.2},
+            name="repro-metrics", daemon=True)
+        self._thread.start()
+        return self.port
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}/metrics"
+
+    def stop(self) -> None:
+        httpd, self._httpd = self._httpd, None
+        if httpd is not None:
+            httpd.shutdown()
+            httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)
+            self._thread = None
+
+    def __enter__(self) -> "MetricsServer":
+        self.start()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.stop()

@@ -1,0 +1,107 @@
+"""Structured, leveled logging for the daemon and CLI.
+
+One process-wide configuration (:func:`configure`) and per-component
+:class:`Logger` handles.  Two output modes:
+
+* text (default): ``2026-08-08T12:00:00Z INFO  fleet.daemon started apps=3``
+* JSONL (``--log-json``): one object per line with ``ts``, ``level``,
+  ``component``, ``event`` and the structured fields.
+
+Both modes write whole lines under a lock so concurrent worker threads
+never interleave.  Events below the configured level are dropped before
+any formatting happens.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import threading
+import time
+from typing import IO, Optional
+
+__all__ = ["configure", "get_logger", "Logger", "LEVELS"]
+
+LEVELS = {"debug": 10, "info": 20, "warning": 30, "error": 40}
+
+
+class _Config:
+    def __init__(self) -> None:
+        self.threshold = LEVELS["info"]
+        self.json_mode = False
+        self.stream: Optional[IO[str]] = None  # None -> sys.stderr
+        self.lock = threading.Lock()
+
+
+_CONFIG = _Config()
+
+
+def configure(*, level: str = "info", json_mode: bool = False,
+              stream: Optional[IO[str]] = None) -> None:
+    """Set process-wide log level / format / destination."""
+    if level not in LEVELS:
+        raise ValueError(
+            f"unknown log level {level!r} (choose from "
+            f"{sorted(LEVELS)})")
+    _CONFIG.threshold = LEVELS[level]
+    _CONFIG.json_mode = bool(json_mode)
+    _CONFIG.stream = stream
+
+
+def _emit(component: str, level: str, event: str, fields: dict) -> None:
+    cfg = _CONFIG
+    if LEVELS[level] < cfg.threshold:
+        return
+    ts = time.strftime("%Y-%m-%dT%H:%M:%S", time.gmtime()) \
+        + f".{int((time.time() % 1) * 1000):03d}Z"
+    if cfg.json_mode:
+        rec = {"ts": ts, "level": level, "component": component,
+               "event": event}
+        rec.update(fields)
+        line = json.dumps(rec, default=str, sort_keys=False)
+    else:
+        kv = " ".join(f"{k}={_short(v)}" for k, v in fields.items())
+        line = f"{ts} {level.upper():<7} {component} {event}" \
+            + (f" {kv}" if kv else "")
+    stream = cfg.stream or sys.stderr
+    with cfg.lock:
+        try:
+            stream.write(line + "\n")
+            stream.flush()
+        except (ValueError, OSError):
+            pass  # stream closed during shutdown
+
+
+def _short(value: object) -> str:
+    if isinstance(value, float):
+        return f"{value:.3f}"
+    if isinstance(value, str) and (" " in value or not value):
+        return json.dumps(value)
+    if isinstance(value, (dict, list)):
+        return json.dumps(value, default=str)
+    return str(value)
+
+
+class Logger:
+    """Cheap per-component handle; all state lives in the config."""
+
+    __slots__ = ("component",)
+
+    def __init__(self, component: str):
+        self.component = component
+
+    def debug(self, event: str, **fields: object) -> None:
+        _emit(self.component, "debug", event, fields)
+
+    def info(self, event: str, **fields: object) -> None:
+        _emit(self.component, "info", event, fields)
+
+    def warning(self, event: str, **fields: object) -> None:
+        _emit(self.component, "warning", event, fields)
+
+    def error(self, event: str, **fields: object) -> None:
+        _emit(self.component, "error", event, fields)
+
+
+def get_logger(component: str) -> Logger:
+    return Logger(component)

@@ -1,0 +1,512 @@
+"""Counters, gauges and histograms with Prometheus text exposition.
+
+Design points:
+
+* **Idempotent registration** — ``registry.counter(name, ...)`` returns
+  the existing family when called again with a matching type and label
+  set, so instrumented modules can look families up at call sites and
+  survive a test-time :meth:`MetricsRegistry.reset`.
+* **Mergeable histograms** — every histogram uses the same fixed
+  log-scale (doubling) millisecond bucket bounds, so two snapshots
+  merge by adding bucket counts; ``merge_snapshot`` is what lets a
+  daemon fold worker-process snapshots into one exposition.
+* **Plain-JSON snapshots** — :meth:`MetricsRegistry.snapshot` emits a
+  dict safe for the daemon's JSONL ``stats`` reply and for the
+  ``trace_events`` artifact.
+* **Exposition both ways** — :meth:`MetricsRegistry.render` produces
+  Prometheus text format 0.0.4; :func:`parse_exposition` /
+  :func:`validate_exposition` read it back (used by ``repro obs top``
+  and the CI scrape smoke).
+
+Everything is guarded by per-family locks; a counter ``inc`` is a dict
+lookup plus a locked float add (~1µs), cheap enough to leave always-on
+in the serving path.
+"""
+
+from __future__ import annotations
+
+import bisect
+import math
+import re
+import threading
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "DEFAULT_BUCKETS_MS",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "default_registry",
+    "parse_exposition",
+    "validate_exposition",
+    "histogram_quantile",
+]
+
+# Log-scale (doubling) millisecond bounds: 0.25ms .. ~32s, +Inf implied.
+DEFAULT_BUCKETS_MS: Tuple[float, ...] = tuple(
+    0.25 * (2 ** i) for i in range(18))
+
+_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_LABEL_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+
+
+def _escape(value: str) -> str:
+    return (str(value).replace("\\", "\\\\").replace("\n", "\\n")
+            .replace('"', '\\"'))
+
+
+def _fmt_labels(labels: Sequence[Tuple[str, str]],
+                extra: Sequence[Tuple[str, str]] = ()) -> str:
+    pairs = list(labels) + list(extra)
+    if not pairs:
+        return ""
+    body = ",".join(f'{k}="{_escape(v)}"' for k, v in pairs)
+    return "{" + body + "}"
+
+
+def _fmt_value(v: float) -> str:
+    if v == math.inf:
+        return "+Inf"
+    if float(v).is_integer() and abs(v) < 1e15:
+        return str(int(v))
+    return repr(float(v))
+
+
+class _Child:
+    __slots__ = ("_lock",)
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+
+
+class _CounterChild(_Child):
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        super().__init__()
+        self.value = 0.0
+
+    def inc(self, amount: float = 1.0) -> None:
+        if amount < 0:
+            raise ValueError("counters only go up")
+        with self._lock:
+            self.value += amount
+
+
+class _GaugeChild(_Child):
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        super().__init__()
+        self.value = 0.0
+
+    def set(self, value: float) -> None:
+        with self._lock:
+            self.value = float(value)
+
+    def inc(self, amount: float = 1.0) -> None:
+        with self._lock:
+            self.value += amount
+
+    def dec(self, amount: float = 1.0) -> None:
+        self.inc(-amount)
+
+
+class _HistogramChild(_Child):
+    __slots__ = ("bounds", "counts", "sum", "count")
+
+    def __init__(self, bounds: Sequence[float]) -> None:
+        super().__init__()
+        self.bounds = tuple(bounds)
+        self.counts = [0] * (len(self.bounds) + 1)  # last = +Inf
+        self.sum = 0.0
+        self.count = 0
+
+    def observe(self, value: float) -> None:
+        idx = bisect.bisect_left(self.bounds, value)
+        with self._lock:
+            self.counts[idx] += 1
+            self.sum += value
+            self.count += 1
+
+
+class _Family:
+    kind = "untyped"
+    _child_cls = _Child
+
+    def __init__(self, name: str, help: str,
+                 label_names: Sequence[str]) -> None:
+        if not _NAME_RE.match(name):
+            raise ValueError(f"bad metric name: {name!r}")
+        for ln in label_names:
+            if not _LABEL_RE.match(ln):
+                raise ValueError(f"bad label name: {ln!r}")
+        self.name = name
+        self.help = help
+        self.label_names = tuple(label_names)
+        self._lock = threading.Lock()
+        self._children: Dict[Tuple[str, ...], _Child] = {}
+
+    def _make_child(self) -> _Child:
+        return self._child_cls()
+
+    def labels(self, **labels: str):
+        if set(labels) != set(self.label_names):
+            raise ValueError(
+                f"{self.name}: expected labels {self.label_names}, "
+                f"got {tuple(sorted(labels))}")
+        key = tuple(str(labels[ln]) for ln in self.label_names)
+        child = self._children.get(key)
+        if child is None:
+            with self._lock:
+                child = self._children.setdefault(key, self._make_child())
+        return child
+
+    def _default(self):
+        if self.label_names:
+            raise ValueError(
+                f"{self.name} has labels {self.label_names}; "
+                "use .labels(...)")
+        return self.labels()
+
+    def series(self) -> List[Tuple[Tuple[str, ...], _Child]]:
+        with self._lock:
+            return sorted(self._children.items())
+
+
+class Counter(_Family):
+    kind = "counter"
+    _child_cls = _CounterChild
+
+    def inc(self, amount: float = 1.0) -> None:
+        self._default().inc(amount)
+
+
+class Gauge(_Family):
+    kind = "gauge"
+    _child_cls = _GaugeChild
+
+    def set(self, value: float) -> None:
+        self._default().set(value)
+
+    def inc(self, amount: float = 1.0) -> None:
+        self._default().inc(amount)
+
+    def dec(self, amount: float = 1.0) -> None:
+        self._default().dec(amount)
+
+
+class Histogram(_Family):
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str,
+                 label_names: Sequence[str],
+                 buckets: Sequence[float] = DEFAULT_BUCKETS_MS) -> None:
+        self.buckets = tuple(sorted(float(b) for b in buckets))
+        if not self.buckets:
+            raise ValueError("histogram needs at least one bucket bound")
+        super().__init__(name, help, label_names)
+
+    def _make_child(self) -> _HistogramChild:
+        return _HistogramChild(self.buckets)
+
+    def observe(self, value: float) -> None:
+        self._default().observe(value)
+
+
+class MetricsRegistry:
+    """A named collection of metric families."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._families: Dict[str, _Family] = {}
+
+    def _get_or_create(self, cls, name: str, help: str,
+                       labels: Sequence[str], **kw):
+        fam = self._families.get(name)
+        if fam is not None:
+            if not isinstance(fam, cls) or \
+                    fam.label_names != tuple(labels):
+                raise ValueError(
+                    f"metric {name!r} re-registered as {cls.kind} "
+                    f"with labels {tuple(labels)} (was {fam.kind} "
+                    f"{fam.label_names})")
+            return fam
+        with self._lock:
+            fam = self._families.get(name)
+            if fam is None:
+                fam = cls(name, help, labels, **kw)
+                self._families[name] = fam
+            elif not isinstance(fam, cls) or \
+                    fam.label_names != tuple(labels):
+                raise ValueError(f"metric {name!r} type/label clash")
+            return fam
+
+    def counter(self, name: str, help: str = "",
+                labels: Sequence[str] = ()) -> Counter:
+        return self._get_or_create(Counter, name, help, labels)
+
+    def gauge(self, name: str, help: str = "",
+              labels: Sequence[str] = ()) -> Gauge:
+        return self._get_or_create(Gauge, name, help, labels)
+
+    def histogram(self, name: str, help: str = "",
+                  labels: Sequence[str] = (),
+                  buckets: Sequence[float] = DEFAULT_BUCKETS_MS
+                  ) -> Histogram:
+        return self._get_or_create(Histogram, name, help, labels,
+                                   buckets=buckets)
+
+    def families(self) -> List[_Family]:
+        with self._lock:
+            return [self._families[k] for k in sorted(self._families)]
+
+    def reset(self) -> None:
+        with self._lock:
+            self._families.clear()
+
+    # -- snapshots -------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Plain-JSON dump of every series (mergeable, artifact-safe)."""
+        out: dict = {"schema": "repro.metrics/1", "families": []}
+        for fam in self.families():
+            entry: dict = {"name": fam.name, "kind": fam.kind,
+                           "help": fam.help,
+                           "labels": list(fam.label_names),
+                           "series": []}
+            if isinstance(fam, Histogram):
+                entry["buckets"] = list(fam.buckets)
+            for key, child in fam.series():
+                row: dict = {"labels": list(key)}
+                if isinstance(child, _HistogramChild):
+                    row["counts"] = list(child.counts)
+                    row["sum"] = child.sum
+                    row["count"] = child.count
+                else:
+                    row["value"] = child.value  # type: ignore[attr-defined]
+                entry["series"].append(row)
+            out["families"].append(entry)
+        return out
+
+    def merge_snapshot(self, snap: dict) -> None:
+        """Fold a :meth:`snapshot` into this registry.
+
+        Counters and histogram buckets add; gauges take the incoming
+        value (last writer wins).  Same-bounds histograms are required —
+        the fixed log-scale default makes that the common case.
+        """
+        for entry in snap.get("families", []):
+            kind = entry.get("kind")
+            name = entry["name"]
+            labels = tuple(entry.get("labels", ()))
+            if kind == "counter":
+                fam: _Family = self.counter(name, entry.get("help", ""),
+                                            labels)
+            elif kind == "gauge":
+                fam = self.gauge(name, entry.get("help", ""), labels)
+            elif kind == "histogram":
+                fam = self.histogram(name, entry.get("help", ""), labels,
+                                     buckets=entry.get(
+                                         "buckets", DEFAULT_BUCKETS_MS))
+            else:
+                continue
+            for row in entry.get("series", []):
+                child = fam.labels(**dict(zip(labels, row["labels"])))
+                if kind == "counter":
+                    child.inc(float(row.get("value", 0.0)))
+                elif kind == "gauge":
+                    child.set(float(row.get("value", 0.0)))
+                else:
+                    counts = row.get("counts", [])
+                    if len(counts) != len(child.counts):
+                        raise ValueError(
+                            f"histogram {name!r}: bucket count mismatch")
+                    with child._lock:
+                        for i, c in enumerate(counts):
+                            child.counts[i] += int(c)
+                        child.sum += float(row.get("sum", 0.0))
+                        child.count += int(row.get("count", 0))
+
+    # -- exposition ------------------------------------------------------
+    def render(self) -> str:
+        """Prometheus text exposition format 0.0.4."""
+        lines: List[str] = []
+        for fam in self.families():
+            if fam.help:
+                lines.append(f"# HELP {fam.name} {_escape(fam.help)}")
+            lines.append(f"# TYPE {fam.name} {fam.kind}")
+            for key, child in fam.series():
+                labels = list(zip(fam.label_names, key))
+                if isinstance(child, _HistogramChild):
+                    cum = 0
+                    for bound, n in zip(
+                            list(child.bounds) + [math.inf],
+                            child.counts):
+                        cum += n
+                        lines.append(
+                            f"{fam.name}_bucket"
+                            f"{_fmt_labels(labels, [('le', _fmt_value(bound))])}"
+                            f" {cum}")
+                    lines.append(
+                        f"{fam.name}_sum{_fmt_labels(labels)} "
+                        f"{_fmt_value(child.sum)}")
+                    lines.append(
+                        f"{fam.name}_count{_fmt_labels(labels)} "
+                        f"{child.count}")
+                else:
+                    lines.append(
+                        f"{fam.name}{_fmt_labels(labels)} "
+                        f"{_fmt_value(child.value)}")  # type: ignore
+        return "\n".join(lines) + "\n"
+
+
+_DEFAULT = MetricsRegistry()
+
+
+def default_registry() -> MetricsRegistry:
+    """The process-wide registry used by built-in instrumentation."""
+    return _DEFAULT
+
+
+# ---------------------------------------------------------------------------
+# Exposition parsing / validation (obs top + CI scrape smoke)
+# ---------------------------------------------------------------------------
+
+_SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?"
+    r"\s+(?P<value>[^\s]+)(?:\s+\d+)?$")
+_LABEL_PAIR_RE = re.compile(
+    r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+
+def _unescape(value: str) -> str:
+    return (value.replace('\\"', '"').replace("\\n", "\n")
+            .replace("\\\\", "\\"))
+
+
+def _parse_value(raw: str) -> float:
+    if raw == "+Inf":
+        return math.inf
+    if raw == "-Inf":
+        return -math.inf
+    return float(raw)
+
+
+def parse_exposition(text: str) -> dict:
+    """Parse Prometheus text format into
+    ``{"types": {name: kind}, "samples": [(name, labels, value)]}``.
+
+    ``labels`` is a plain dict.  Raises ``ValueError`` on malformed
+    lines so the CI smoke can fail loudly.
+    """
+    types: Dict[str, str] = {}
+    samples: List[Tuple[str, Dict[str, str], float]] = []
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) != 4 or parts[3] not in (
+                    "counter", "gauge", "histogram", "summary",
+                    "untyped"):
+                raise ValueError(f"line {lineno}: bad TYPE line: {line!r}")
+            types[parts[2]] = parts[3]
+            continue
+        if line.startswith("#"):
+            continue
+        m = _SAMPLE_RE.match(line)
+        if not m:
+            raise ValueError(f"line {lineno}: bad sample line: {line!r}")
+        labels: Dict[str, str] = {}
+        raw = m.group("labels")
+        if raw:
+            consumed = 0
+            for pm in _LABEL_PAIR_RE.finditer(raw):
+                labels[pm.group(1)] = _unescape(pm.group(2))
+                consumed += 1
+            if consumed != len([c for c in raw.split(",") if c.strip()]):
+                raise ValueError(
+                    f"line {lineno}: bad label set: {raw!r}")
+        samples.append((m.group("name"), labels,
+                        _parse_value(m.group("value"))))
+    return {"types": types, "samples": samples}
+
+
+def validate_exposition(text: str) -> List[str]:
+    """Structural checks beyond parsing; returns a list of problems
+    (empty == valid).  Checks: every sample's base name has a TYPE,
+    histogram series have ``+Inf`` buckets, bucket counts are
+    monotonically non-decreasing, and ``_count`` matches the ``+Inf``
+    bucket.
+    """
+    problems: List[str] = []
+    try:
+        parsed = parse_exposition(text)
+    except ValueError as exc:
+        return [str(exc)]
+    types = parsed["types"]
+
+    def base_name(name: str) -> str:
+        for suffix in ("_bucket", "_sum", "_count"):
+            base = name[:-len(suffix)] if name.endswith(suffix) else None
+            if base and types.get(base) == "histogram":
+                return base
+        return name
+
+    hist: Dict[Tuple[str, Tuple[Tuple[str, str], ...]],
+               Dict[str, object]] = {}
+    for name, labels, value in parsed["samples"]:
+        base = base_name(name)
+        if base not in types:
+            problems.append(f"sample {name!r} has no TYPE line")
+            continue
+        if types[base] == "histogram" and name == base + "_bucket":
+            key = (base, tuple(sorted(
+                (k, v) for k, v in labels.items() if k != "le")))
+            entry = hist.setdefault(key, {"buckets": []})
+            entry["buckets"].append(  # type: ignore[union-attr]
+                (_parse_value(labels.get("le", "nan")), value))
+        elif types[base] == "histogram" and name == base + "_count":
+            key = (base, tuple(sorted(labels.items())))
+            hist.setdefault(key, {"buckets": []})["count"] = value
+    for (base, labels), entry in hist.items():
+        buckets = sorted(entry["buckets"])  # type: ignore[arg-type]
+        if not buckets or buckets[-1][0] != math.inf:
+            problems.append(f"{base}{dict(labels)}: missing +Inf bucket")
+            continue
+        counts = [c for _, c in buckets]
+        if any(b > a for a, b in zip(counts[1:], counts[:-1])):
+            problems.append(
+                f"{base}{dict(labels)}: bucket counts not monotonic")
+        if "count" in entry and entry["count"] != counts[-1]:
+            problems.append(
+                f"{base}{dict(labels)}: _count != +Inf bucket")
+    return problems
+
+
+def histogram_quantile(q: float,
+                       buckets: Iterable[Tuple[float, float]]
+                       ) -> Optional[float]:
+    """Estimate a quantile from cumulative ``(le, count)`` pairs.
+
+    Returns the upper bound of the first bucket whose cumulative count
+    reaches ``q * total`` (the classic conservative estimate); ``None``
+    when the histogram is empty.
+    """
+    pairs = sorted(buckets)
+    if not pairs:
+        return None
+    total = pairs[-1][1]
+    if total <= 0:
+        return None
+    target = q * total
+    prev_bound = 0.0
+    for bound, cum in pairs:
+        if cum >= target:
+            if bound == math.inf:
+                return prev_bound
+            return bound
+        prev_bound = bound
+    return pairs[-1][0]

@@ -1,0 +1,302 @@
+"""Lightweight span tracing for the serving path.
+
+A :class:`Span` is one timed region of one request: a name, a
+``trace_id`` shared by every span of the request, its own ``span_id``,
+an optional ``parent_id``, a start timestamp and a duration.  All
+timestamps come from ``time.perf_counter()`` (CLOCK_MONOTONIC on
+Linux), which is system-wide — spans recorded in a forked zygote child
+land on the same clock as the daemon's, so a child's ``fork``/``import``
+spans nest correctly inside the parent's ``dispatch`` span after the
+round-trip over the exec protocol.
+
+The :class:`Tracer` keeps finished spans in a bounded, thread-safe
+ring buffer (oldest spans drop first; ``dropped`` counts them).  It is
+**disabled by default**: ``tracer.span(...)`` returns a shared no-op
+handle without allocating, so instrumentation left in hot paths costs
+one attribute load and one branch (benchmarked in
+``benchmarks/bench_profiler_overhead.py``).
+
+Spans serialize to plain dicts (:meth:`Span.to_dict`) so they can ride
+the zygote stdio/socket protocol as a ``spans`` field on exec replies
+and round-trip through the ``trace_events`` artifact.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional
+
+__all__ = [
+    "Span",
+    "Tracer",
+    "get_tracer",
+    "configure_tracing",
+    "new_id",
+    "now_ms",
+    "span_dict",
+    "spans_from_import_timer",
+]
+
+
+def now_ms() -> float:
+    """Current monotonic time in milliseconds (system-wide clock)."""
+    return time.perf_counter() * 1e3
+
+
+def new_id() -> str:
+    """8-byte random hex id (used for both trace and span ids)."""
+    return os.urandom(8).hex()
+
+
+@dataclass
+class Span:
+    """One finished timed region of one request."""
+
+    name: str
+    trace_id: str
+    span_id: str
+    parent_id: Optional[str] = None
+    t_start_ms: float = 0.0
+    duration_ms: float = 0.0
+    attrs: Dict[str, object] = field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        d = {
+            "name": self.name,
+            "trace_id": self.trace_id,
+            "span_id": self.span_id,
+            "t_start_ms": round(self.t_start_ms, 3),
+            "duration_ms": round(self.duration_ms, 3),
+        }
+        if self.parent_id:
+            d["parent_id"] = self.parent_id
+        if self.attrs:
+            d["attrs"] = self.attrs
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Span":
+        return cls(
+            name=str(d["name"]),
+            trace_id=str(d["trace_id"]),
+            span_id=str(d["span_id"]),
+            parent_id=d.get("parent_id"),
+            t_start_ms=float(d.get("t_start_ms", 0.0)),
+            duration_ms=float(d.get("duration_ms", 0.0)),
+            attrs=dict(d.get("attrs", {})),
+        )
+
+
+def span_dict(name: str, *, trace_id: str, parent_id: Optional[str],
+              t_start_ms: float, duration_ms: float,
+              span_id: Optional[str] = None, **attrs: object) -> dict:
+    """Build a protocol-ready span dict without touching any tracer.
+
+    Used inside zygote children, which record spans for the *parent's*
+    tracer and ship them back on the exec reply.
+    """
+    return Span(name=name, trace_id=trace_id,
+                span_id=span_id or new_id(), parent_id=parent_id,
+                t_start_ms=t_start_ms, duration_ms=duration_ms,
+                attrs=dict(attrs)).to_dict()
+
+
+class _SpanHandle:
+    """Context manager that records a span on exit.
+
+    ``handle.ctx()`` gives the ``{"trace_id", "parent_id"}`` dict to
+    hand to children (including across the zygote protocol).
+    """
+
+    __slots__ = ("_tracer", "span")
+
+    def __init__(self, tracer: "Tracer", span: Span):
+        self._tracer = tracer
+        self.span = span
+
+    @property
+    def span_id(self) -> str:
+        return self.span.span_id
+
+    @property
+    def trace_id(self) -> str:
+        return self.span.trace_id
+
+    def ctx(self) -> dict:
+        return {"trace_id": self.span.trace_id,
+                "parent_id": self.span.span_id}
+
+    def set(self, key: str, value: object) -> "_SpanHandle":
+        self.span.attrs[key] = value
+        return self
+
+    def __enter__(self) -> "_SpanHandle":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.end()
+
+    def end(self) -> None:
+        if self.span.duration_ms == 0.0:
+            self.span.duration_ms = now_ms() - self.span.t_start_ms
+        self._tracer.record(self.span)
+
+
+class _NoopHandle:
+    """Shared do-nothing handle returned when tracing is disabled."""
+
+    __slots__ = ()
+    span_id = ""
+    trace_id = ""
+
+    def ctx(self):  # noqa: D102 - mirrors _SpanHandle
+        return None
+
+    def set(self, key, value):
+        return self
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        return None
+
+    def end(self):
+        return None
+
+    def __bool__(self):
+        return False
+
+
+_NOOP = _NoopHandle()
+
+
+class Tracer:
+    """Thread-safe bounded collector of finished spans."""
+
+    def __init__(self, capacity: int = 65536, enabled: bool = False):
+        self._buf: deque = deque(maxlen=max(1, int(capacity)))
+        self._lock = threading.Lock()
+        self.enabled = bool(enabled)
+        self.dropped = 0
+
+    @property
+    def capacity(self) -> int:
+        return self._buf.maxlen or 0
+
+    def configure(self, *, enabled: Optional[bool] = None,
+                  capacity: Optional[int] = None) -> "Tracer":
+        with self._lock:
+            if capacity is not None and capacity != self._buf.maxlen:
+                self._buf = deque(self._buf, maxlen=max(1, int(capacity)))
+            if enabled is not None:
+                self.enabled = bool(enabled)
+        return self
+
+    # -- producing spans -------------------------------------------------
+    def span(self, name: str, *, ctx: Optional[dict] = None,
+             **attrs: object):
+        """Open a span; returns a no-op handle when disabled.
+
+        ``ctx`` is a ``{"trace_id", "parent_id"}`` dict from a parent
+        handle's :meth:`_SpanHandle.ctx` (or off the wire).  Without
+        one, the span starts a fresh trace as its root.
+        """
+        if not self.enabled:
+            return _NOOP
+        trace_id = parent_id = None
+        if ctx:
+            trace_id = ctx.get("trace_id")
+            parent_id = ctx.get("parent_id")
+        return _SpanHandle(self, Span(
+            name=name, trace_id=trace_id or new_id(), span_id=new_id(),
+            parent_id=parent_id, t_start_ms=now_ms(), attrs=dict(attrs)))
+
+    def add(self, name: str, *, trace_id: str,
+            parent_id: Optional[str] = None,
+            span_id: Optional[str] = None, t_start_ms: float,
+            duration_ms: float, attrs: Optional[dict] = None) -> str:
+        """Record a span whose start/duration were measured elsewhere
+        (e.g. queue wait derived from the enqueue timestamp)."""
+        sid = span_id or new_id()
+        if self.enabled:
+            self.record(Span(name=name, trace_id=trace_id, span_id=sid,
+                             parent_id=parent_id, t_start_ms=t_start_ms,
+                             duration_ms=duration_ms,
+                             attrs=dict(attrs or {})))
+        return sid
+
+    def record(self, span: Span) -> None:
+        with self._lock:
+            if len(self._buf) == self._buf.maxlen:
+                self.dropped += 1
+            self._buf.append(span)
+
+    def record_dicts(self, dicts: Optional[Iterable[dict]]) -> None:
+        """Record protocol span dicts (e.g. the ``spans`` reply field)."""
+        if not dicts or not self.enabled:
+            return
+        for d in dicts:
+            try:
+                self.record(Span.from_dict(d))
+            except (KeyError, TypeError, ValueError):
+                continue
+
+    # -- consuming spans -------------------------------------------------
+    def snapshot(self) -> List[Span]:
+        with self._lock:
+            return list(self._buf)
+
+    def drain(self) -> List[Span]:
+        with self._lock:
+            out = list(self._buf)
+            self._buf.clear()
+            return out
+
+    def clear(self) -> None:
+        with self._lock:
+            self._buf.clear()
+            self.dropped = 0
+
+
+_GLOBAL = Tracer()
+
+
+def get_tracer() -> Tracer:
+    """The process-wide tracer used by all built-in instrumentation."""
+    return _GLOBAL
+
+
+def configure_tracing(*, enabled: Optional[bool] = None,
+                      capacity: Optional[int] = None) -> Tracer:
+    return _GLOBAL.configure(enabled=enabled, capacity=capacity)
+
+
+def spans_from_import_timer(records, *, trace_id: str,
+                            parent_id: Optional[str],
+                            t_start_ms: float) -> List[dict]:
+    """Convert :class:`~repro.core.profiler.import_timer.ImportTimer`
+    records into per-module ``import:<mod>`` span dicts.
+
+    The timer measures self/cumulative seconds and parent chains but not
+    absolute timestamps, so every span inherits the import phase's start
+    time; duration is the module's *cumulative* init and ``self_ms``
+    rides along in attrs for flamegraph self-time attribution.  Module
+    parent chains become span parent chains, so nested imports nest.
+    """
+    by_mod: Dict[str, str] = {}
+    out: List[dict] = []
+    for mod in records:
+        by_mod[mod] = new_id()
+    for mod, rec in records.items():
+        parent = by_mod.get(getattr(rec, "parent", None) or "", parent_id)
+        out.append(span_dict(
+            f"import:{mod}", trace_id=trace_id, parent_id=parent,
+            span_id=by_mod[mod], t_start_ms=t_start_ms,
+            duration_ms=rec.cumulative_s * 1e3,
+            module=mod, self_ms=round(rec.self_s * 1e3, 3)))
+    return out

@@ -43,6 +43,7 @@ Two backends share the daemon shell:
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import queue
 import sys
@@ -52,9 +53,69 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Optional, TextIO
 
+from repro.obs.log import get_logger
+from repro.obs.tracing import get_tracer, new_id, now_ms
 from repro.pool.fleet import FleetManager, QueueConfig, ZygoteFleet
 from repro.pool.simulator import percentile_ms
 from repro.pool.trace import Request, Trace
+
+_LOG = get_logger("fleet.daemon")
+
+
+# -- metric shorthands.  Families are looked up per call (cheap dict
+# hit in the default registry) instead of cached at import, so a
+# test-time registry reset cannot strand stale handles.
+
+def _reg():
+    from repro.obs.metrics import default_registry
+    return default_registry()
+
+
+def _m_requests(app: str, outcome: str) -> None:
+    _reg().counter("repro_requests_total",
+                   "admissions by outcome (served/queued/shed)",
+                   labels=("app", "outcome")).labels(
+        app=app, outcome=outcome).inc()
+
+
+def _m_served(app: str) -> None:
+    _reg().counter("repro_served_total", "requests fully served",
+                   labels=("app",)).labels(app=app).inc()
+
+
+def _m_errors(app: str) -> None:
+    _reg().counter("repro_errors_total", "dispatch failures",
+                   labels=("app",)).labels(app=app).inc()
+
+
+def _m_sheds(app: str, reason: str) -> None:
+    _reg().counter("repro_sheds_total",
+                   "requests shed by the bounded queue, by reason",
+                   labels=("app", "reason")).labels(
+        app=app, reason=reason).inc()
+
+
+def _m_flushed(n: int) -> None:
+    if n:
+        _reg().counter("repro_flushed_total",
+                       "queued requests flushed unserved at drain"
+                       ).inc(n)
+
+
+def _m_hist(name: str, help: str, app: str, value_ms: float) -> None:
+    _reg().histogram(name, help, labels=("app",)).labels(
+        app=app).observe(value_ms)
+
+
+def _m_gauge(name: str, help: str, app: str, value: float) -> None:
+    _reg().gauge(name, help, labels=("app",)).labels(
+        app=app).set(value)
+
+
+def _merge_reasons(into: dict, more: dict) -> dict:
+    for reason, n in (more or {}).items():
+        into[reason] = into.get(reason, 0) + n
+    return into
 
 
 # ---------------------------------------------------------------------------
@@ -89,8 +150,20 @@ class SimFleetBackend:
         return {"mode": "sim", "apps": self.apps}
 
     def submit(self, req: Request) -> str:
+        tracer = get_tracer()
+        t0 = now_ms() if tracer.enabled else 0.0
         with self._lock:
-            return self.manager.offer(req)
+            outcome = self.manager.offer(req)
+        _m_requests(req.app, outcome)
+        if tracer.enabled:
+            # sim time compresses inside offer(); the span records the
+            # *wall* cost of admitting one request, which is what the
+            # tracer-overhead perf gate compares against
+            tracer.add("request", trace_id=new_id(),
+                       t_start_ms=t0, duration_ms=now_ms() - t0,
+                       attrs={"app": req.app, "outcome": outcome,
+                              "sim": True})
+        return outcome
 
     def drain(self, timeout_s: Optional[float] = None, *,
               flush: bool = True) -> None:
@@ -105,11 +178,15 @@ class SimFleetBackend:
     def snapshot(self) -> dict:
         with self._lock:
             reps = self.manager._apps
+            reasons: dict = {}
+            for s in reps.values():
+                _merge_reasons(reasons, s.report.shed_reasons)
             return {
                 "requests": sum(s.report.n_requests for s in reps.values()),
                 "cold_starts": sum(s.report.cold_starts
                                    for s in reps.values()),
                 "sheds": sum(s.report.sheds for s in reps.values()),
+                "shed_reasons": reasons,
                 "queued": sum(len(s.queue) for s in reps.values()),
             }
 
@@ -155,6 +232,22 @@ class _AppServeStats:
     init_ms: list = field(default_factory=list)
     e2e_ms: list = field(default_factory=list)
     queue_waits_ms: list = field(default_factory=list)
+    # sheds by cause ("queue-full" | "drop-oldest"); sums to ``sheds``
+    shed_reasons: dict = field(default_factory=dict)
+
+    def count_shed(self, reason: str) -> None:
+        self.sheds += 1
+        self.shed_reasons[reason] = self.shed_reasons.get(reason, 0) + 1
+
+    def copy(self) -> "_AppServeStats":
+        """Deep-enough copy for reading outside the queue lock: the
+        worker threads append to the latency lists and bump counters
+        concurrently, so readers must snapshot under ``_cond`` and
+        aggregate from the copy."""
+        return dataclasses.replace(
+            self, init_ms=list(self.init_ms), e2e_ms=list(self.e2e_ms),
+            queue_waits_ms=list(self.queue_waits_ms),
+            shed_reasons=dict(self.shed_reasons))
 
 
 class RealFleetBackend:
@@ -197,6 +290,11 @@ class RealFleetBackend:
 
     def submit(self, req: Request) -> str:
         qc = self.queue_cfg
+        tracer = get_tracer()
+        # (trace_id, root span_id) minted at admission so the queue_wait
+        # span can hang off the request root the worker records later
+        ids = (new_id(), new_id()) if tracer.enabled else None
+        shed_reason = None
         with self._cond:
             if self._draining:
                 return "shed"
@@ -209,17 +307,30 @@ class RealFleetBackend:
             if len(q) >= qc.depth:
                 if qc.shed_policy == "drop-oldest" and q:
                     q.popleft()
-                    st.sheds += 1
-                    q.append((time.monotonic(), req))
+                    st.count_shed("drop-oldest")
+                    shed_reason = "drop-oldest"
+                    q.append((time.monotonic(), req, ids))
                     self._cond.notify_all()
-                    return "queued"
-                st.sheds += 1
-                return "shed"
-            q.append((time.monotonic(), req))
-            self._cond.notify_all()
-            return "queued"
+                    outcome = "queued"
+                else:
+                    st.count_shed("queue-full")
+                    shed_reason = "queue-full"
+                    outcome = "shed"
+            else:
+                q.append((time.monotonic(), req, ids))
+                self._cond.notify_all()
+                outcome = "queued"
+            depth = len(q)
+        # counters keep their own locks; update them outside _cond
+        _m_requests(req.app, outcome)
+        if shed_reason is not None:
+            _m_sheds(req.app, shed_reason)
+        _m_gauge("repro_queue_depth", "queued requests per app",
+                 req.app, depth)
+        return outcome
 
     def _worker(self, app: str) -> None:
+        tracer = get_tracer()
         while True:
             with self._cond:
                 while not self._queues[app] and not self._draining:
@@ -228,21 +339,44 @@ class RealFleetBackend:
                     if self._draining:
                         return
                     continue
-                enq_t, req = self._queues[app].popleft()
+                enq_t, req, ids = self._queues[app].popleft()
                 self._in_flight[app] += 1
                 seed = self._seed
                 self._seed += 1
             wait_ms = (time.monotonic() - enq_t) * 1e3
+            # root span start = dequeue instant minus the measured wait,
+            # so queue_wait and the dispatch subtree share one clock
+            # even where monotonic() and perf_counter() differ
+            t_deq_ms = now_ms()
+            trace = None
+            if ids is not None and tracer.enabled:
+                tid, rid = ids
+                tracer.add("queue_wait", trace_id=tid, parent_id=rid,
+                           t_start_ms=t_deq_ms - wait_ms,
+                           duration_ms=wait_ms, attrs={"app": app})
+                trace = {"trace_id": tid, "parent_id": rid}
             st = self._stats[app]
             try:
                 m = self.fleet.dispatch(app, handler=req.handler,
-                                        seed=seed)
-            except Exception:
+                                        seed=seed, trace=trace)
+            except Exception as exc:
                 with self._cond:
                     st.errors += 1
                     self._in_flight[app] -= 1
                     self._cond.notify_all()
+                _m_errors(app)
+                _LOG.warning("dispatch-failed", app=app, error=repr(exc))
+                if trace is not None:
+                    tracer.add("request", trace_id=tid, span_id=rid,
+                               t_start_ms=t_deq_ms - wait_ms,
+                               duration_ms=now_ms() - t_deq_ms + wait_ms,
+                               attrs={"app": app, "error": repr(exc)})
                 continue
+            if trace is not None:
+                tracer.add("request", trace_id=tid, span_id=rid,
+                           t_start_ms=t_deq_ms - wait_ms,
+                           duration_ms=now_ms() - t_deq_ms + wait_ms,
+                           attrs={"app": app, "path": m["path"]})
             with self._cond:
                 st.served += 1
                 st.queue_waits_ms.append(wait_ms)
@@ -254,6 +388,13 @@ class RealFleetBackend:
                     st.cold += 1
                 self._in_flight[app] -= 1
                 self._cond.notify_all()
+            _m_served(app)
+            _m_hist("repro_queue_wait_ms",
+                    "wall time from enqueue to dispatch", app, wait_ms)
+            _m_hist("repro_init_ms", "handler init latency",
+                    app, m["init_ms"])
+            _m_hist("repro_e2e_ms", "queue wait + end-to-end latency",
+                    app, wait_ms + m["e2e_cold_ms"])
 
     def drain(self, timeout_s: Optional[float] = 30.0, *,
               flush: bool = True) -> None:
@@ -281,10 +422,12 @@ class RealFleetBackend:
                     if rem == 0.0:
                         break
                     self._cond.wait(timeout=min(rem or 0.2, 0.2))
+        flushed = 0
         with self._cond:
             self._draining = True
             for app, q in self._queues.items():
                 self._stats[app].flushed += len(q)
+                flushed += len(q)
                 q.clear()
             self._cond.notify_all()
             while any(self._in_flight.values()):
@@ -294,6 +437,9 @@ class RealFleetBackend:
                 self._cond.wait(timeout=min(rem or 0.2, 0.2))
         for w in self._workers:
             w.join(timeout=5.0)
+        _m_flushed(flushed)
+        if flushed:
+            _LOG.info("drain-flushed", flushed=flushed)
 
     def finish(self, end_t: Optional[float] = None) -> dict:
         per_app = []
@@ -308,8 +454,11 @@ class RealFleetBackend:
                 if n > 0:
                     self._stats[app].errors += n
                     self._in_flight[app] = 0
+            # snapshot everything under the lock: an abandoned drain
+            # leaves workers alive, still appending to these lists
+            stats = {app: st.copy() for app, st in self._stats.items()}
         for app in self.apps:
-            st = self._stats.get(app) or _AppServeStats()
+            st = stats.get(app) or _AppServeStats()
             e2e_all.extend(st.e2e_ms)
             waits_all.extend(st.queue_waits_ms)
             tot.arrivals += st.arrivals
@@ -319,6 +468,7 @@ class RealFleetBackend:
             tot.pool += st.pool
             tot.cold += st.cold
             tot.errors += st.errors
+            _merge_reasons(tot.shed_reasons, st.shed_reasons)
             per_app.append({
                 "app": app,
                 "requests": st.arrivals,
@@ -332,6 +482,7 @@ class RealFleetBackend:
                 "p99_ms": round(percentile_ms(st.e2e_ms, 0.99), 2)
                 if st.e2e_ms else 0.0,
                 "sheds": st.sheds,
+                "shed_reasons": dict(st.shed_reasons),
                 "flushed": st.flushed,
                 "queue_wait_p99_ms":
                     round(percentile_ms(st.queue_waits_ms, 0.99), 2)
@@ -348,6 +499,7 @@ class RealFleetBackend:
             p99_ms=round(percentile_ms(e2e_all, 0.99), 2)
             if e2e_all else 0.0,
             sheds=tot.sheds,
+            shed_reasons=dict(tot.shed_reasons),
             flushed=tot.flushed,
             queue_wait_p50_ms=round(percentile_ms(waits_all, 0.50), 2)
             if waits_all else 0.0,
@@ -378,14 +530,33 @@ class RealFleetBackend:
         )
 
     def snapshot(self) -> dict:
+        # copy every mutable read under the queue lock — the worker
+        # threads mutate _stats/_queues/_in_flight concurrently
         with self._cond:
-            snap = {
-                "requests": sum(s.arrivals for s in self._stats.values()),
-                "cold_starts": sum(s.cold for s in self._stats.values()),
-                "sheds": sum(s.sheds for s in self._stats.values()),
-                "queued": sum(len(q) for q in self._queues.values()),
-                "in_flight": sum(self._in_flight.values()),
-            }
+            stats = {app: st.copy() for app, st in self._stats.items()}
+            queued = {app: len(q) for app, q in self._queues.items()}
+            in_flight = dict(self._in_flight)
+        reasons: dict = {}
+        for st in stats.values():
+            _merge_reasons(reasons, st.shed_reasons)
+        snap = {
+            "requests": sum(s.arrivals for s in stats.values()),
+            "served": sum(s.served for s in stats.values()),
+            "cold_starts": sum(s.cold for s in stats.values()),
+            "sheds": sum(s.sheds for s in stats.values()),
+            "shed_reasons": reasons,
+            "errors": sum(s.errors for s in stats.values()),
+            "queued": sum(queued.values()),
+            "in_flight": sum(in_flight.values()),
+            "per_app": {
+                app: {"arrivals": st.arrivals, "served": st.served,
+                      "sheds": st.sheds, "errors": st.errors,
+                      "pool": st.pool, "cold": st.cold,
+                      "queued": queued.get(app, 0),
+                      "in_flight": in_flight.get(app, 0)}
+                for app, st in sorted(stats.items())
+            },
+        }
         if self.fleet.shared_base:
             snap["base_alive"] = (self.fleet.base is not None
                                   and self.fleet.base.alive)
@@ -437,6 +608,9 @@ class FleetDaemon:
     # ----------------------------------------------------------- lifecycle
     def start(self, trace_name: str = "live") -> dict:
         boot = self.backend.start(trace_name)
+        _LOG.info("started", mode=boot.get("mode", "?"),
+                  apps=",".join(boot.get("apps", [])),
+                  rewarm_interval_s=self.rewarm_interval_s)
         if self.rewarm_interval_s > 0:
             self._rewarm_thread = threading.Thread(
                 target=self._rewarm_loop, name="fleet-rewarm",
@@ -489,6 +663,10 @@ class FleetDaemon:
                 from repro.api.artifacts import save_fleet_summary
                 save_fleet_summary(payload, self.summary_path)
             self._finished = payload
+            _LOG.info("drained", requests=payload.get("requests", 0),
+                      served=payload.get("served", 0),
+                      sheds=payload.get("sheds", 0),
+                      flushed=payload.get("flushed", 0))
         return payload
 
     # ------------------------------------------------------------- serving
@@ -573,7 +751,8 @@ class FleetDaemon:
             cmd = evt.get("cmd")
             if cmd == "stats":
                 reply({"ok": True, "stats": self.backend.snapshot(),
-                       "rewarm_ticks": self.rewarm_ticks})
+                       "rewarm_ticks": self.rewarm_ticks,
+                       "metrics": _reg().snapshot()})
             elif cmd == "rewarm":
                 reply({"ok": True, "rewarm": self.rewarm_now()})
             elif cmd in ("drain", "shutdown"):
@@ -607,9 +786,13 @@ class FleetDaemon:
         try:
             out = self.rewarm_fn()
             self.rewarm_ticks += 1
+            _reg().counter("repro_rewarm_ticks_total",
+                           "successful rewarm timer ticks").inc()
+            _LOG.debug("rewarm-tick", ticks=self.rewarm_ticks)
             return out if isinstance(out, dict) else {"ok": True}
         except Exception as exc:
             self.rewarm_errors.append(repr(exc))
+            _LOG.warning("rewarm-failed", error=repr(exc))
             return {"ok": False, "error": repr(exc)}
 
     def _rewarm_loop(self) -> None:

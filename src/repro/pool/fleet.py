@@ -83,6 +83,17 @@ from repro.pool.trace import Request, Trace
 SHED_POLICIES = ("reject-new", "drop-oldest")
 
 
+def _m_dispatches(app: str, path: str) -> None:
+    # looked up per call (not cached at import) so a test-time registry
+    # reset cannot strand a stale family handle
+    from repro.obs.metrics import default_registry
+    default_registry().counter(
+        "repro_dispatch_total",
+        "real dispatches by path (pool fork / cold subprocess / "
+        "fallback after a zygote died mid-exec)",
+        labels=("app", "path")).labels(app=app, path=path).inc()
+
+
 def make_fleet_summary_payload(*, source: str, requests: int,
                                served: int, cold_starts: int,
                                p50_ms: float, p99_ms: float, sheds: int,
@@ -242,6 +253,14 @@ class FleetSummary:
         return sum(r.flushed for r in self.per_app.values())
 
     @property
+    def shed_reasons(self) -> dict[str, int]:
+        merged: dict[str, int] = {}
+        for r in self.per_app.values():
+            for reason, n in r.shed_reasons.items():
+                merged[reason] = merged.get(reason, 0) + n
+        return merged
+
+    @property
     def served(self) -> int:
         return sum(r.served for r in self.per_app.values())
 
@@ -316,6 +335,7 @@ class FleetSummary:
                 "memory_gb_s": round(rep.memory_gb_s, 3),
                 "max_instances": rep.max_instances,
                 "sheds": rep.sheds,
+                "shed_reasons": dict(rep.shed_reasons),
                 "flushed": rep.flushed,
                 "queue_wait_p99_ms": round(rep.queue_wait_p99_ms, 2)
                 if rep.queue_waits_ms else 0.0,
@@ -339,6 +359,7 @@ class FleetSummary:
             p50_ms=_num(self.p50_ms),
             p99_ms=_num(self.p99_ms),
             sheds=self.sheds,
+            shed_reasons=self.shed_reasons,
             flushed=self.flushed,
             queue_wait_p50_ms=_num(self.queue_wait_p50_ms),
             queue_wait_p99_ms=_num(self.queue_wait_p99_ms),
@@ -715,10 +736,10 @@ class FleetManager:
             return "queued"
         if qc.shed_policy == "drop-oldest" and st.queue:
             st.queue.popleft()
-            st.report.sheds += 1
+            st.report.count_shed("drop-oldest")
             st.queue.append((req.t, req))
             return "queued"
-        st.report.sheds += 1  # reject-new
+        st.report.count_shed("queue-full")  # reject-new
         return "shed"
 
     def _finalize(self, end: float) -> None:
@@ -920,30 +941,49 @@ class ZygoteFleet:
 
     # ------------------------------------------------------------ serving
     def dispatch(self, app: str, *, handler: Optional[str] = None,
-                 invocations: int = 1, seed: int = 0) -> dict:
+                 invocations: int = 1, seed: int = 0,
+                 trace: Optional[dict] = None) -> dict:
         """Serve one request: fork from the app's zygote if it is
         resident and alive, else a fresh-process cold start.  Returns
         runner-format metrics plus ``path`` ("pool" | "cold") and
-        ``fallback`` (True when a live zygote failed mid-exec)."""
+        ``fallback`` (True when a live zygote failed mid-exec).
+
+        With tracing enabled this wraps the whole call in a
+        ``dispatch`` span (child of the ``trace`` context, or a fresh
+        trace root for standalone dispatches) and folds the zygote
+        child's fork/import/invoke spans — shipped back on the exec
+        reply — into the process tracer."""
         if app not in self.app_dirs:
             raise KeyError(f"unknown app {app!r}")
-        fs = self.servers.get(app)
-        fallback = False
-        if fs is not None and fs.alive:
-            try:
-                m = fs.exec(invocations=invocations, handler=handler,
-                            seed=seed)
-                self.dispatches[app]["pool"] += 1
-                return {**m, "path": "pool", "fallback": False}
-            except ForkServerError:
-                fallback = True
-                self.dispatches[app]["fallback"] += 1
-        from repro.benchsuite.harness import run_instance
-        m = run_instance(self.app_dirs[app], invocations=invocations,
-                         handler=handler, seed=seed,
-                         timeout_s=self.timeout_s)
-        self.dispatches[app]["cold"] += 1
-        return {**m, "path": "cold", "fallback": fallback}
+        from repro.obs.tracing import get_tracer
+        tracer = get_tracer()
+        with tracer.span("dispatch", ctx=trace, app=app) as sp:
+            fs = self.servers.get(app)
+            fallback = False
+            if fs is not None and fs.alive:
+                try:
+                    m = fs.exec(invocations=invocations, handler=handler,
+                                seed=seed, trace=sp.ctx())
+                    tracer.record_dicts(m.pop("spans", None))
+                    self.dispatches[app]["pool"] += 1
+                    sp.set("path", "pool")
+                    _m_dispatches(app, "pool")
+                    return {**m, "path": "pool", "fallback": False}
+                except ForkServerError:
+                    fallback = True
+                    self.dispatches[app]["fallback"] += 1
+                    _m_dispatches(app, "fallback")
+            from repro.benchsuite.harness import run_instance
+            with tracer.span("cold_start", ctx=sp.ctx(), app=app,
+                             subprocess=True):
+                m = run_instance(self.app_dirs[app],
+                                 invocations=invocations,
+                                 handler=handler, seed=seed,
+                                 timeout_s=self.timeout_s)
+            self.dispatches[app]["cold"] += 1
+            sp.set("path", "cold")
+            _m_dispatches(app, "cold")
+            return {**m, "path": "cold", "fallback": fallback}
 
     def replay(self, trace: Trace, *, limit: Optional[int] = None,
                seed0: int = 500) -> list[dict]:
@@ -952,13 +992,18 @@ class ZygoteFleet:
         down the pool vs cold paths).  Returns per-app rows; the full
         schema-versioned ``fleet_summary`` payload of the run lands in
         ``self.last_summary``."""
+        from repro.obs.tracing import get_tracer
+        tracer = get_tracer()
         per_app: dict[str, dict[str, list[float]]] = {}
         n = 0
         for i, req in enumerate(trace):
             if limit is not None and i >= limit:
                 break
-            m = self.dispatch(req.app, handler=req.handler,
-                              seed=seed0 + i)
+            with tracer.span("request", app=req.app,
+                             handler=req.handler or "") as root:
+                m = self.dispatch(req.app, handler=req.handler,
+                                  seed=seed0 + i, trace=root.ctx())
+                root.set("path", m["path"])
             st = per_app.setdefault(
                 req.app, {"pool": [], "cold": [], "e2e": []})
             st[m["path"]].append(m["init_ms"])
@@ -983,6 +1028,7 @@ class ZygoteFleet:
                 "p50_ms": round(percentile_ms(paths["e2e"], 0.50), 2),
                 "p99_ms": round(percentile_ms(paths["e2e"], 0.99), 2),
                 "sheds": 0,
+                "shed_reasons": {},
                 "flushed": 0,
                 "queue_wait_p99_ms": 0.0,
             })
@@ -1007,6 +1053,7 @@ class ZygoteFleet:
             p50_ms=round(percentile_ms(e2e, 0.50), 2) if e2e else 0.0,
             p99_ms=round(percentile_ms(e2e, 0.99), 2) if e2e else 0.0,
             sheds=0,
+            shed_reasons={},
             flushed=0,
             queue_wait_p50_ms=0.0,
             queue_wait_p99_ms=0.0,
@@ -1117,6 +1164,10 @@ class ZygoteFleet:
                 errors[app] = str(exc)
         self.base = new_base
         self.base_swaps += 1
+        from repro.obs.metrics import default_registry
+        default_registry().counter(
+            "repro_base_swaps_total",
+            "shared-base zygote hot-swaps (rewarm tick)").inc()
         if old_base is not None:
             old_base.stop()
         return {"ok": not errors, "swapped": True,

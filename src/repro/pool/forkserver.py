@@ -20,8 +20,13 @@ Protocol: newline-delimited JSON on stdin/stdout.  The zygote announces
 imported, then serves commands:
 
     {"cmd": "exec", "invocations": N, "handler": H, "seed": S,
-     "preload": [...]}  # optional batched preload: fast path
+     "preload": [...],   # optional batched preload: fast path
+     "trace": {"trace_id": T, "parent_id": P}}  # optional span context
         -> {"ok": true, "metrics": {... runner-format metrics ...}}
+           # with "trace": metrics carries a "spans" list (fork /
+           # per-module import / invoke) measured on the shared
+           # monotonic clock, and batched preloads add their own
+           # preload:<mod> spans to the reply
     {"cmd": "preload", "modules": [...]}     # adaptive re-warm
         -> {"ok": true, "preloaded": [...], "errors": [...]}
     {"cmd": "ping"}      -> {"ok": true, "preloaded": [...]}
@@ -93,23 +98,60 @@ _REPRO_SRC = os.path.dirname(os.path.dirname(os.path.dirname(
 # Zygote side
 # ---------------------------------------------------------------------------
 
-def _import_modules(modules: Sequence[str]) -> tuple[list[str], list[str]]:
+def _import_modules(modules: Sequence[str]
+                    ) -> tuple[list[str], list[str], dict]:
     done: list[str] = []
     errors: list[str] = []
+    timings: dict[str, float] = {}  # module -> wall ms (import order)
     for mod in modules:
         mod = mod.strip()
         if not mod:
             continue
+        t0 = time.perf_counter()
         try:
             importlib.import_module(mod)
             done.append(mod)
+            timings[mod] = round((time.perf_counter() - t0) * 1e3, 3)
         except Exception as exc:  # zygote must survive bad preloads
             errors.append(f"{mod}: {exc!r}")
-    return done, errors
+    return done, errors, timings
+
+
+def _preload_span_dicts(trace: dict, t_start_s: float,
+                        timings: dict) -> list[dict]:
+    """Span dicts for a batched preload: one ``preload`` wrapper with a
+    ``preload:<mod>`` child per module, laid out sequentially from the
+    measured per-module wall times (imports run in order)."""
+    from repro.obs.tracing import new_id, span_dict
+
+    wrapper_id = new_id()
+    t_ms = t_start_s * 1e3
+    out = [span_dict("preload", trace_id=trace["trace_id"],
+                     parent_id=trace.get("parent_id"), span_id=wrapper_id,
+                     t_start_ms=t_ms,
+                     duration_ms=sum(timings.values()),
+                     modules=len(timings))]
+    for mod, ms in timings.items():
+        out.append(span_dict(f"preload:{mod}",
+                             trace_id=trace["trace_id"],
+                             parent_id=wrapper_id, t_start_ms=t_ms,
+                             duration_ms=ms, module=mod))
+        t_ms += ms
+    return out
 
 
 def _fork_exec(cmd: dict) -> dict:
-    """Fork one instance; relay its metrics.  Runs inside the zygote."""
+    """Fork one instance; relay its metrics.  Runs inside the zygote.
+
+    When the command carries a ``trace`` context
+    (``{"trace_id", "parent_id"}``), the child also records
+    ``fork`` / ``import`` (with per-module ``import:<mod>`` children
+    via :class:`~repro.core.profiler.import_timer.ImportTimer`) /
+    ``invoke`` spans against the system-wide monotonic clock and ships
+    them back inside ``metrics["spans"]`` — the parent's tracer merges
+    them under its own ``dispatch`` span.  Without a trace context the
+    fork path is byte-for-byte the untraced one.
+    """
     r, w = os.pipe()
     t0 = time.perf_counter()
     pid = os.fork()
@@ -120,16 +162,56 @@ def _fork_exec(cmd: dict) -> dict:
             devnull = os.open(os.devnull, os.O_WRONLY)
             os.dup2(devnull, 1)
             rss_sampler = _runner.PeakRssSampler().start()
-            handler_mod = importlib.import_module("handler")
+            trace = cmd.get("trace") or None
+            spans: list[dict] = []
+            if trace:
+                from repro.core.profiler.import_timer import ImportTimer
+                from repro.obs.tracing import (
+                    new_id,
+                    span_dict,
+                    spans_from_import_timer,
+                )
+                t_child = time.perf_counter()
+                spans.append(span_dict(
+                    "fork", trace_id=trace["trace_id"],
+                    parent_id=trace.get("parent_id"),
+                    t_start_ms=t0 * 1e3,
+                    duration_ms=(t_child - t0) * 1e3, pid=os.getpid()))
+                timer = ImportTimer()
+                with timer:
+                    handler_mod = importlib.import_module("handler")
+                t_imp = time.perf_counter()
+                import_id = new_id()
+                spans.append(span_dict(
+                    "import", trace_id=trace["trace_id"],
+                    parent_id=trace.get("parent_id"), span_id=import_id,
+                    t_start_ms=t_child * 1e3,
+                    duration_ms=(t_imp - t_child) * 1e3,
+                    module="handler"))
+                spans.extend(spans_from_import_timer(
+                    timer.records, trace_id=trace["trace_id"],
+                    parent_id=import_id, t_start_ms=t_child * 1e3))
+            else:
+                handler_mod = importlib.import_module("handler")
             init_s = time.perf_counter() - t0
+            t_inv = time.perf_counter()
             invocation_s, counts = _runner.run_invocations(
                 handler_mod,
                 invocations=int(cmd.get("invocations", 1)),
                 handler=cmd.get("handler"),
                 seed=int(cmd.get("seed", 0)))
+            if trace:
+                spans.append(span_dict(
+                    "invoke", trace_id=trace["trace_id"],
+                    parent_id=trace.get("parent_id"),
+                    t_start_ms=t_inv * 1e3,
+                    duration_ms=(time.perf_counter() - t_inv) * 1e3,
+                    invocations=int(cmd.get("invocations", 1))))
             peak_kb = max(_runner.instance_rss_kb(), rss_sampler.stop())
             metrics = _runner.metrics_dict(init_s, invocation_s, counts,
                                            peak_kb)
+            if spans:
+                metrics["spans"] = spans
             with os.fdopen(w, "w") as fh:
                 fh.write(json.dumps(metrics))
             code = 0
@@ -168,14 +250,19 @@ def _serve_commands(lines, reply, preloaded: list[str], *,
             # roundtrip as the fork+exec (rewarm + dispatch in one)
             extra = {}
             if cmd.get("preload"):
-                done, errs = _import_modules(cmd["preload"])
+                t0 = time.perf_counter()
+                done, errs, timings = _import_modules(cmd["preload"])
                 preloaded.extend(done)
                 extra = {"preloaded": done, "preload_errors": errs}
+                if cmd.get("trace") and timings:
+                    extra["spans"] = _preload_span_dicts(
+                        cmd["trace"], t0, timings)
             reply({**_fork_exec(cmd), **extra})
         elif op == "preload":
-            done, errs = _import_modules(cmd.get("modules", []))
+            done, errs, timings = _import_modules(cmd.get("modules", []))
             preloaded.extend(done)
-            reply({"ok": not errs, "preloaded": done, "errors": errs})
+            reply({"ok": not errs, "preloaded": done, "errors": errs,
+                   "preload_ms": timings})
         elif op == "spawn_app" and spawn_fn is not None:
             reply(spawn_fn(cmd))
         elif op == "ping":
@@ -203,7 +290,7 @@ def _app_zygote_child(cmd: dict, preloaded: Sequence[str]) -> None:
         os.dup2(devnull, 0)  # must not steal the base's stdin commands
         os.dup2(devnull, 1)  # must not corrupt the base's stdout channel
         _runner.setup_app_path(os.path.abspath(cmd["app_dir"]))
-        done, errors = _import_modules(cmd.get("preload") or [])
+        done, errors, timings = _import_modules(cmd.get("preload") or [])
         preloaded = [*preloaded, *done]
         path = cmd["socket"]
         try:
@@ -228,7 +315,8 @@ def _app_zygote_child(cmd: dict, preloaded: Sequence[str]) -> None:
             wfile.flush()
 
         reply({"ok": True, "event": "ready", "preloaded": list(preloaded),
-               "errors": errors, "pid": os.getpid(), "from_base": True})
+               "errors": errors, "pid": os.getpid(), "from_base": True,
+               "preload_ms": timings})
         _serve_commands(rfile, reply, list(preloaded))
         code = 0
     except BaseException:
@@ -293,7 +381,7 @@ def zygote_main(argv: Optional[list[str]] = None) -> int:
         _runner.setup_app_path(os.path.abspath(args.app_dir))
     for p in reversed(args.path):
         sys.path.insert(0, os.path.abspath(p))
-    preloaded, errors = _import_modules(args.preload.split(","))
+    preloaded, errors, preload_ms = _import_modules(args.preload.split(","))
 
     def reply(obj: dict) -> None:
         sys.stdout.write(json.dumps(obj) + "\n")
@@ -320,7 +408,8 @@ def zygote_main(argv: Optional[list[str]] = None) -> int:
 
     reply({"ok": True, "event": "ready", "preloaded": preloaded,
            "errors": errors, "pid": os.getpid(),
-           "mode": "base" if args.base else "app"})
+           "mode": "base" if args.base else "app",
+           "preload_ms": preload_ms})
     _serve_commands(sys.stdin, reply, preloaded, spawn_fn=spawn_fn)
     for pid in list(children):  # base down: take the tier down with it
         try:
@@ -420,19 +509,48 @@ class ForkServer:
             return self.ready
         if self.proc is not None or self._sock is not None:
             self._stop_locked()  # zygote died behind our back: clean up
+        t0 = time.perf_counter()
         if self.base is not None:
-            return self._start_from_base_locked()
-        env = dict(os.environ)
-        env["PYTHONPATH"] = (_REPRO_SRC + os.pathsep
-                             + env.get("PYTHONPATH", ""))
-        # stderr goes to an unbuffered temp file, NOT a pipe: children
-        # print tracebacks there, and an undrained pipe would fill and
-        # deadlock the zygote mid-waitpid
-        self._stderr_file = tempfile.TemporaryFile()
-        self.proc = subprocess.Popen(
-            self._argv(), stdin=subprocess.PIPE, stdout=subprocess.PIPE,
-            stderr=self._stderr_file, text=True, env=env)
-        return self._check_ready_locked()
+            ready = self._start_from_base_locked()
+        else:
+            env = dict(os.environ)
+            env["PYTHONPATH"] = (_REPRO_SRC + os.pathsep
+                                 + env.get("PYTHONPATH", ""))
+            # stderr goes to an unbuffered temp file, NOT a pipe:
+            # children print tracebacks there, and an undrained pipe
+            # would fill and deadlock the zygote mid-waitpid
+            self._stderr_file = tempfile.TemporaryFile()
+            self.proc = subprocess.Popen(
+                self._argv(), stdin=subprocess.PIPE,
+                stdout=subprocess.PIPE, stderr=self._stderr_file,
+                text=True, env=env)
+            ready = self._check_ready_locked()
+        self._record_boot_span(t0, ready)
+        return ready
+
+    def _record_boot_span(self, t0: float, ready: dict) -> None:
+        """When tracing is on, boot becomes its own trace: a
+        ``spawn_app`` (forked from the base) or ``zygote_boot``
+        (subprocess) root with a ``preload:<mod>`` child per module
+        the zygote reported importing at boot."""
+        from repro.obs.tracing import get_tracer, new_id
+
+        tracer = get_tracer()
+        if not tracer.enabled:
+            return
+        name = "spawn_app" if self.base is not None else "zygote_boot"
+        trace_id = new_id()
+        root_id = tracer.add(
+            name, trace_id=trace_id, t_start_ms=t0 * 1e3,
+            duration_ms=(time.perf_counter() - t0) * 1e3,
+            attrs={"app": os.path.basename(self.app_dir) or "base",
+                   "pid": ready.get("pid")})
+        t_ms = t0 * 1e3
+        for mod, ms in (ready.get("preload_ms") or {}).items():
+            tracer.add(f"preload:{mod}", trace_id=trace_id,
+                       parent_id=root_id, t_start_ms=t_ms,
+                       duration_ms=float(ms), attrs={"module": mod})
+            t_ms += float(ms)
 
     def _check_ready_locked(self) -> dict:
         self.ready = self._read_reply()
@@ -548,8 +666,8 @@ class ForkServer:
 
     # ------------------------------------------------------------- commands
     def exec(self, *, invocations: int = 1, handler: Optional[str] = None,
-             seed: int = 0,
-             preload: Optional[Sequence[str]] = None) -> dict:
+             seed: int = 0, preload: Optional[Sequence[str]] = None,
+             trace: Optional[dict] = None) -> dict:
         """One forked warm instance; returns runner-format metrics.
 
         ``preload`` rides the fast path: the modules are imported in
@@ -559,9 +677,19 @@ class ForkServer:
         beats rewarming), but the failure is recorded in
         ``preload_errors`` and the module is not re-sent on later
         execs; use :meth:`preload` for the fail-loudly semantics.
+
+        ``trace`` is an optional ``{"trace_id", "parent_id"}`` span
+        context: the zygote child then records fork / per-module import
+        / invoke spans and ships them back; they land (merged with any
+        fast-path preload spans, protocol order preserved) under
+        ``"spans"`` in the returned metrics dict for the caller's
+        tracer.
         """
         msg = {"cmd": "exec", "invocations": invocations,
                "handler": handler, "seed": seed}
+        if trace:
+            msg["trace"] = {"trace_id": trace["trace_id"],
+                            "parent_id": trace.get("parent_id")}
         if preload:
             failed = {e.split(":", 1)[0] for e in self.preload_errors}
             msg["preload"] = [m for m in preload
@@ -571,7 +699,10 @@ class ForkServer:
         self.preload_modules.extend(rep.get("preloaded", []))
         self.preload_errors.extend(rep.get("preload_errors", []))
         self.execs += 1
-        return rep["metrics"]
+        metrics = rep["metrics"]
+        if rep.get("spans"):  # batched-preload spans precede the fork's
+            metrics["spans"] = [*rep["spans"], *metrics.get("spans", [])]
+        return metrics
 
     def preload(self, modules: Sequence[str]) -> dict:
         rep = self._request({"cmd": "preload", "modules": list(modules)})

@@ -163,6 +163,13 @@ class FleetReport:
     sheds: int = 0
     flushed: int = 0
     queue_waits_ms: list[float] = field(default_factory=list, repr=False)
+    # sheds broken out by cause ("queue-full" reject-new vs
+    # "drop-oldest"); values sum to ``sheds``
+    shed_reasons: dict = field(default_factory=dict, repr=False)
+
+    def count_shed(self, reason: str) -> None:
+        self.sheds += 1
+        self.shed_reasons[reason] = self.shed_reasons.get(reason, 0) + 1
 
     @property
     def cold_start_ratio(self) -> float:

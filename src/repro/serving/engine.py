@@ -32,7 +32,16 @@ from repro.models.config import ArchConfig
 from repro.models.model import (
     decode_step, init_cache, init_params, model_template, prefill,
 )
+from repro.obs.tracing import get_tracer
 from repro.serving.components import Component, ComponentRegistry, LoadPolicy
+
+
+def _m_engine_dispatch(model: str, path: str) -> None:
+    from repro.obs.metrics import default_registry
+    default_registry().counter(
+        "repro_engine_dispatch_total",
+        "EnginePool dispatches by path (warm/cold/queued/shed)",
+        labels=("model", "path")).labels(model=model, path=path).inc()
 
 
 class ServingEngine:
@@ -343,11 +352,26 @@ class EnginePool:
         queued latency includes the wait for the in-flight one."""
         if model not in self.builders:
             raise KeyError(f"unknown model {model!r}")
-        if self.queue_depth is None:
-            return self._dispatch_unlocked(model, entry, tokens, **kw)
-        return self._dispatch_queued(model, entry, tokens, **kw)
+        tracer = get_tracer()
+        with tracer.span("engine_dispatch", model=model,
+                         entry=entry) as sp:
+            try:
+                if self.queue_depth is None:
+                    out, lat, path = self._dispatch_unlocked(
+                        model, entry, tokens, _ctx=sp.ctx(), **kw)
+                else:
+                    out, lat, path = self._dispatch_queued(
+                        model, entry, tokens, _ctx=sp.ctx(), **kw)
+            except PoolSaturated:
+                sp.set("path", "shed")
+                _m_engine_dispatch(model, "shed")
+                raise
+            sp.set("path", path)
+            _m_engine_dispatch(model, path)
+            return out, lat, path
 
-    def _dispatch_unlocked(self, model: str, entry: str, tokens, **kw):
+    def _dispatch_unlocked(self, model: str, entry: str, tokens,
+                           _ctx: Optional[dict] = None, **kw):
         eng = self.warm.get(model)
         if eng is not None:
             self.hits += 1
@@ -355,14 +379,16 @@ class EnginePool:
             out, lat = eng.serve(entry, tokens, **kw)
             return out, lat, "warm"
         self.misses += 1
-        eng = self.builders[model]()
-        cold_s = eng.cold_start()
+        with get_tracer().span("cold_start", ctx=_ctx, model=model):
+            eng = self.builders[model]()
+            cold_s = eng.cold_start()
         self._admit(model, eng)
         self._dispatches[model] = self._dispatches.get(model, 0) + 1
         out, lat = eng.serve(entry, tokens, **kw)
         return out, lat + cold_s, "cold"
 
-    def _dispatch_queued(self, model: str, entry: str, tokens, **kw):
+    def _dispatch_queued(self, model: str, entry: str, tokens,
+                         _ctx: Optional[dict] = None, **kw):
         t0 = time.perf_counter()
         waited = False
         wait_s = 0.0
@@ -398,8 +424,10 @@ class EnginePool:
                 return out, lat + wait_s, path
             if path == "build":
                 try:
-                    eng = self.builders[model]()
-                    cold_s = eng.cold_start()
+                    with get_tracer().span("cold_start", ctx=_ctx,
+                                           model=model):
+                        eng = self.builders[model]()
+                        cold_s = eng.cold_start()
                     with self._lock:
                         self.misses += 1
                         self._admit(model, eng)
@@ -538,6 +566,10 @@ class EnginePool:
             "hit_ratio": self.hits / max(total, 1),
             "evictions": list(self.evictions),
             "sheds": self.sheds,
+            # every EnginePool shed has one cause; keyed like the fleet
+            # summary's breakdown so dashboards can merge the two
+            "shed_reasons": ({"pool-saturated": self.sheds}
+                             if self.sheds else {}),
             "coalesced": len(self.queue_waits_s),
             "queue_wait_p99_s": (
                 waits[min(len(waits) - 1,

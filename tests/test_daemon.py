@@ -100,6 +100,70 @@ def test_sim_daemon_drop_oldest_sheds_waiting_not_arriving():
     assert payload["sheds"] > 0
     assert payload["requests"] == (payload["served"] + payload["sheds"]
                                    + payload["flushed"])
+    # drop-oldest sheds the *waiting* request — the breakdown names it
+    assert payload["shed_reasons"] == {"drop-oldest": payload["sheds"]}
+
+
+def test_sim_daemon_shed_reason_breakdown_sums_to_sheds(tmp_path):
+    out = str(tmp_path / "summary.json")
+    d = _sim_daemon(QueueConfig(depth=3, max_concurrency=1),
+                    summary_path=out)
+    d.start("burst")
+    payload = d.run_trace(_burst(20))
+    assert payload["sheds"] > 0
+    assert sum(payload["shed_reasons"].values()) == payload["sheds"]
+    # reject-new policy: every shed is a queue-full rejection
+    assert set(payload["shed_reasons"]) == {"queue-full"}
+    # per-app rows carry the same breakdown, and it also sums
+    per_app = {row["app"]: row for row in payload["per_app"]}
+    assert sum(sum(r.get("shed_reasons", {}).values())
+               for r in per_app.values()) == payload["sheds"]
+    # the breakdown survives the artifact round-trip (optional key)
+    loaded = load_fleet_summary(out)
+    assert loaded["shed_reasons"] == payload["shed_reasons"]
+
+
+def test_real_backend_shed_reasons_and_locked_snapshot():
+    """Admission bookkeeping of the real backend without booting
+    zygotes: shed causes are named, and snapshot() aggregates from a
+    copy taken under the queue lock."""
+    from collections import deque
+
+    from repro.pool.daemon import RealFleetBackend, _AppServeStats
+
+    class _StubFleet:
+        app_dirs = {"a": "."}
+        shared_base = False
+
+    def _backend(policy):
+        be = RealFleetBackend(
+            _StubFleet(),
+            queue=QueueConfig(depth=1, max_concurrency=1,
+                              shed_policy=policy))
+        # start() would boot zygotes; wire the admission state directly
+        be._queues["a"] = deque()
+        be._stats["a"] = _AppServeStats()
+        be._in_flight["a"] = 0
+        return be
+
+    be = _backend("reject-new")
+    assert be.submit(Request(0.0, "a")) == "queued"
+    assert be.submit(Request(0.1, "a")) == "shed"
+    snap = be.snapshot()
+    assert snap["requests"] == 2 and snap["sheds"] == 1
+    assert snap["shed_reasons"] == {"queue-full": 1}
+    assert snap["per_app"]["a"]["queued"] == 1
+    # the snapshot is a copy: mutating it must not corrupt live stats
+    snap["shed_reasons"]["queue-full"] = 99
+    assert be._stats["a"].shed_reasons == {"queue-full": 1}
+
+    be = _backend("drop-oldest")
+    assert be.submit(Request(0.0, "a")) == "queued"
+    assert be.submit(Request(0.1, "a")) == "queued"  # displaces oldest
+    st = be._stats["a"]
+    assert st.arrivals == 2 and st.sheds == 1
+    assert st.shed_reasons == {"drop-oldest": 1}
+    assert len(be._queues["a"]) == 1
 
 
 def test_sim_daemon_unbounded_without_queue_config():

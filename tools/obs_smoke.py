@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""CI smoke for the observability surface (fast tier).
+
+Boots ``python -m repro fleet serve --sim --stdin --metrics-port 0``,
+feeds it a handful of invocations over the JSONL control channel, then
+checks the whole exported surface end to end:
+
+* the ready line carries a ``metrics_url``;
+* ``GET /metrics`` parses as Prometheus text format 0.0.4 and passes
+  :func:`repro.obs.metrics.validate_exposition` (TYPE lines, +Inf
+  buckets, monotone cumulative histogram counts);
+* the scraped ``repro_requests_total`` total matches the requests the
+  daemon's own ``stats`` reply reports;
+* the ``stats`` reply carries a ``repro.metrics/1`` registry snapshot;
+* the drain summary keeps the conservation invariant
+  (``requests == served + sheds + flushed + errors``) and its
+  ``shed_reasons`` breakdown sums to ``sheds``.
+
+Exit 0 on success, 1 on any failure (with a named check per line).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import urllib.request
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+FAILURES: list[str] = []
+
+
+def check(name: str, ok: bool, detail: str = "") -> None:
+    status = "ok" if ok else "FAIL"
+    print(f"[{status}] {name}" + (f": {detail}" if detail else ""))
+    if not ok:
+        FAILURES.append(name)
+
+
+def main() -> int:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro", "fleet", "serve", "--sim",
+         "--stdin", "--apps", "alpha,beta", "--metrics-port", "0",
+         "--log-json"],
+        stdin=subprocess.PIPE, stdout=subprocess.PIPE,
+        stderr=subprocess.PIPE, text=True, env=env, cwd=REPO)
+    try:
+        # stderr carries structured log lines too — scan for the ready
+        # event rather than assuming it comes first
+        ready = {}
+        for _ in range(20):
+            line = proc.stderr.readline()
+            if not line:
+                break
+            try:
+                evt = json.loads(line)
+            except ValueError:
+                continue
+            if evt.get("event") == "ready":
+                ready = evt
+                break
+        check("ready-event", ready.get("event") == "ready",
+              json.dumps(ready))
+        url = ready.get("metrics_url", "")
+        check("metrics-url", url.startswith("http://"), url)
+
+        for i in range(10):
+            proc.stdin.write(json.dumps(
+                {"app": "alpha" if i % 2 else "beta"}) + "\n")
+        proc.stdin.write(json.dumps({"cmd": "stats"}) + "\n")
+        proc.stdin.flush()
+        replies = [json.loads(proc.stdout.readline())
+                   for _ in range(11)]
+        stats_reply = replies[-1]
+        check("submits-acked",
+              all(r.get("ok") for r in replies[:-1]),
+              f"{sum(bool(r.get('ok')) for r in replies[:-1])}/10")
+        snap = stats_reply.get("metrics", {})
+        check("stats-carries-metrics",
+              snap.get("schema") == "repro.metrics/1",
+              f"schema={snap.get('schema')!r}")
+
+        with urllib.request.urlopen(url, timeout=5) as resp:
+            ctype = resp.headers.get("Content-Type", "")
+            text = resp.read().decode()
+        check("content-type", "version=0.0.4" in ctype, ctype)
+
+        from repro.obs.metrics import parse_exposition, validate_exposition
+        problems = validate_exposition(text)
+        check("exposition-valid", not problems, "; ".join(problems[:3]))
+        parsed = parse_exposition(text)
+        total = sum(v for n, labels, v in parsed["samples"]
+                    if n == "repro_requests_total")
+        daemon_requests = stats_reply["stats"]["requests"]
+        check("requests-counter", total == daemon_requests == 10,
+              f"scraped={total} daemon={daemon_requests}")
+
+        proc.stdin.write(json.dumps({"cmd": "shutdown"}) + "\n")
+        proc.stdin.flush()
+        proc.stdin.close()
+        summary = None
+        for line in proc.stdout:
+            evt = json.loads(line)
+            if evt.get("event") == "summary":
+                summary = evt["summary"]
+        check("summary-emitted", summary is not None)
+        if summary is not None:
+            lhs = summary["requests"]
+            rhs = (summary["served"] + summary["sheds"]
+                   + summary["flushed"] + summary.get("errors", 0))
+            check("conservation", lhs == rhs, f"{lhs} == {rhs}")
+            reasons = summary.get("shed_reasons", {})
+            check("shed-breakdown",
+                  sum(reasons.values()) == summary["sheds"],
+                  f"{reasons} vs sheds={summary['sheds']}")
+        proc.wait(timeout=20)
+        check("clean-exit", proc.returncode == 0,
+              f"rc={proc.returncode}")
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait()
+    if FAILURES:
+        print(f"obs smoke: FAIL ({', '.join(FAILURES)})")
+        return 1
+    print("obs smoke: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -76,6 +76,47 @@ def _replay(out_path: str, reports_dir: str, *extra: str) -> None:
             f"{proc.stderr[-2000:]}")
 
 
+def _tracer_overhead(n: int = 2000, runs: int = 3):
+    """Wall time of an in-process sim replay, tracing off vs on.
+
+    min-of-N runs each way so scheduler noise doesn't trip the gate;
+    the simulation itself is deterministic.
+    """
+    import time
+
+    from repro.obs.tracing import configure_tracing, get_tracer
+    from repro.pool import (
+        AppProfile, FleetDaemon, FleetManager, IdleTimeoutPolicy,
+        QueueConfig, SimFleetBackend,
+    )
+    from repro.pool.trace import Request
+
+    def one() -> float:
+        profiles = {a: AppProfile(app=a, cold_init_ms=400.0,
+                                  warm_init_ms=20.0, invoke_ms=30.0,
+                                  rss_mb=100.0) for a in APPS}
+        manager = FleetManager(
+            profiles, IdleTimeoutPolicy(timeout_s=60.0),
+            budget_mb=2048.0,
+            queue=QueueConfig(depth=64, max_concurrency=4))
+        daemon = FleetDaemon(SimFleetBackend(manager))
+        daemon.start("perf-smoke")
+        t0 = time.perf_counter()
+        for i in range(n):
+            daemon.submit(Request(t=i * 0.01, app=APPS[i % len(APPS)]))
+        dt = time.perf_counter() - t0
+        daemon.shutdown(end_t=n * 0.01 + 120.0)
+        get_tracer().clear()
+        return dt
+
+    configure_tracing(enabled=False)
+    off_s = min(one() for _ in range(runs))
+    configure_tracing(enabled=True)
+    on_s = min(one() for _ in range(runs))
+    configure_tracing(enabled=False)
+    return off_s, on_s
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tolerance",
@@ -87,7 +128,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     with open(args.tolerance) as fh:
-        tol = json.load(fh)["shared_base"]
+        all_tol = json.load(fh)
+    tol = all_tol["shared_base"]
 
     from repro.api import load_fleet_summary
 
@@ -130,6 +172,20 @@ def main(argv=None) -> int:
           f"shared_base_mb={shared.get('shared_base_mb')} "
           f"pool_starts={shared.get('pool_starts')} (zygotes admitted "
           f"and serving forks)")
+
+    ttol = all_tol["tracer"]
+    n_req = 2000
+    off_s, on_s = _tracer_overhead(n=n_req)
+    frac = (on_s - off_s) / off_s if off_s else 0.0
+    per_req_us = (on_s - off_s) / n_req * 1e6
+    check("tracer overhead",
+          frac <= ttol["max_overhead_frac"]
+          or per_req_us <= ttol["max_per_request_us"],
+          f"sim replay off {off_s * 1e3:.1f} ms vs on "
+          f"{on_s * 1e3:.1f} ms ({frac * 100:+.1f}%, "
+          f"{per_req_us:+.1f} us/req; allowed "
+          f"{ttol['max_overhead_frac'] * 100:.0f}% or "
+          f"{ttol['max_per_request_us']} us/req)")
 
     if all(checks):
         print("perf smoke: PASS — shared-base does not regress the "
