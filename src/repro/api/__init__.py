@@ -29,6 +29,7 @@ from repro.api.artifact import (
 )
 from repro.api.artifacts import (
     BenchResultArtifact,
+    ChaosReportArtifact,
     ColdStartStatsArtifact,
     FleetSummaryArtifact,
     ReportArtifact,
@@ -37,6 +38,7 @@ from repro.api.artifacts import (
     TraceEventsArtifact,
     as_report,
     load_bench_result,
+    load_chaos_report,
     load_fleet_summary,
     load_report,
     load_report_meta,
@@ -45,6 +47,7 @@ from repro.api.artifacts import (
     load_trace,
     load_trace_events,
     save_bench_result,
+    save_chaos_report,
     save_fleet_summary,
     save_report,
     save_shared_hot_set,
@@ -75,6 +78,7 @@ __all__ = [
     "Artifact",
     "ArtifactError",
     "BenchResultArtifact",
+    "ChaosReportArtifact",
     "ColdStartStatsArtifact",
     "FleetSummaryArtifact",
     "OptimizeStage",
@@ -96,6 +100,7 @@ __all__ = [
     "fresh_variant",
     "load_any",
     "load_bench_result",
+    "load_chaos_report",
     "load_fleet_summary",
     "load_report",
     "load_report_meta",
@@ -108,6 +113,7 @@ __all__ = [
     "registered_kinds",
     "restore_deployment",
     "save_bench_result",
+    "save_chaos_report",
     "save_fleet_summary",
     "save_report",
     "save_shared_hot_set",

@@ -287,12 +287,18 @@ class FleetSummaryArtifact(Artifact):
     at drain, ``errors`` — real-mode dispatch failures, queue-wait
     percentiles, the ``queue`` config that produced them), the
     rewarm-tick count, and ``per_app`` breakdown rows.  Conservation:
-    ``requests == served + sheds + flushed + errors`` (``errors``
-    defaults to 0 when absent).  ``shed_reasons`` (optional) breaks
-    ``sheds`` out by cause — ``queue-full`` (reject-new),
-    ``drop-oldest``, ``pool-saturated`` — and must sum to ``sheds``.  ``source`` names the producer
-    (``serve-sim`` / ``serve-real`` / ``replay-sim`` / ``replay-real``
-    / ``bench``).
+    ``requests == served + sheds + flushed + errors + abandoned``
+    (``errors`` and ``abandoned`` default to 0 when absent;
+    ``abandoned`` counts in-flight dispatches whose worker never
+    returned by the drain deadline).  ``shed_reasons`` (optional)
+    breaks ``sheds`` out by cause — ``queue-full`` (reject-new),
+    ``drop-oldest``, ``pool-saturated``, ``timeout`` (wedged handler),
+    ``crash_loop`` (circuit-broken app whose cold fallback failed) —
+    and must sum to ``sheds``.  ``degraded`` / ``degrade_reasons``
+    count requests that WERE served but in a degraded mode (e.g.
+    cold-only under an open circuit breaker).  ``source`` names the
+    producer (``serve-sim`` / ``serve-real`` / ``replay-sim`` /
+    ``replay-real`` / ``bench``).
     """
 
     kind = "fleet_summary"
@@ -302,7 +308,8 @@ class FleetSummaryArtifact(Artifact):
                      "flushed", "queue_wait_p50_ms", "queue_wait_p99_ms",
                      "per_app")
     optional_keys = ("policy", "trace", "budget_mb", "duration_s",
-                     "pool_starts", "errors", "memory_gb_s",
+                     "pool_starts", "errors", "abandoned", "degraded",
+                     "degrade_reasons", "memory_gb_s",
                      "rewarm_ticks", "queue", "zygotes", "skipped",
                      "used_mb", "shared_base_mb", "base_gb_s",
                      "shared_base", "shed_reasons", "meta")
@@ -444,10 +451,69 @@ def load_trace_events(path: str) -> TraceEventsArtifact:
     return TraceEventsArtifact.load(path)
 
 
+# ---------------------------------------------------------------------------
+# chaos_report (v1)
+# ---------------------------------------------------------------------------
+
+class ChaosReportArtifact(Artifact):
+    """One chaos run (see :mod:`repro.pool.chaos`): the fault plan and
+    seed, every event actually injected (kind / site / app / matched
+    occurrence), events that never fired (``pending``), the fleet's
+    recovery counters (zygote restarts, base reboots, circuit-breaker
+    trips), the conservation-invariant verdict (``requests == served +
+    sheds + flushed + errors + abandoned``), and the run's full
+    ``fleet_summary`` payload.  Produced by
+    ``fleet replay --real --chaos <plan.json> [--chaos-report PATH]``;
+    the nightly chaos job gates on ``invariant.holds``."""
+
+    kind = "chaos_report"
+    schema_version = 1
+    required_keys = ("seed", "plan", "injected", "recoveries",
+                     "invariant")
+    optional_keys = ("injected_by_kind", "pending", "hook_calls",
+                     "summary", "meta")
+
+    def __init__(self, payload: dict,
+                 meta: Optional[dict] = None) -> None:
+        self.data = dict(payload)
+        if meta is not None:
+            self.data["meta"] = {**self.data.get("meta", {}), **meta}
+
+    def to_payload(self) -> dict:
+        return dict(self.data)
+
+    def save(self, path: str) -> str:
+        # raw-payload artifact (like fleet_summary): validate at write
+        # time so a producer bug fails the chaos run, not a later load
+        self._validate_keys(path, self.to_payload())
+        return super().save(path)
+
+    @classmethod
+    def from_payload(cls, payload: dict) -> "ChaosReportArtifact":
+        return cls(payload)
+
+    @property
+    def meta(self) -> dict:
+        return self.data.get("meta") or {}
+
+
+def save_chaos_report(payload: dict, path: str,
+                      meta: Optional[dict] = None) -> str:
+    """Atomically save a ``chaos_report`` payload (see
+    :func:`repro.pool.chaos.chaos_report_payload` for the producer)."""
+    return ChaosReportArtifact(payload, meta=meta).save(path)
+
+
+def load_chaos_report(path: str) -> dict:
+    """Load a ``chaos_report`` artifact; returns the payload dict."""
+    return ChaosReportArtifact.load(path).data
+
+
 __all__ = [
     "Artifact",
     "ArtifactError",
     "BenchResultArtifact",
+    "ChaosReportArtifact",
     "ColdStartStatsArtifact",
     "FleetSummaryArtifact",
     "ReportArtifact",
@@ -456,6 +522,7 @@ __all__ = [
     "TraceEventsArtifact",
     "as_report",
     "load_bench_result",
+    "load_chaos_report",
     "load_fleet_summary",
     "load_report",
     "load_report_meta",
@@ -464,6 +531,7 @@ __all__ = [
     "load_trace",
     "load_trace_events",
     "save_bench_result",
+    "save_chaos_report",
     "save_fleet_summary",
     "save_report",
     "save_shared_hot_set",

@@ -254,9 +254,11 @@ def _queue_config(args: argparse.Namespace):
                        shed_policy=args.shed_policy)
 
 
-def _real_fleet(args: argparse.Namespace, apps: Sequence[str]):
+def _real_fleet(args: argparse.Namespace, apps: Sequence[str], **extra):
     """A (not yet started) ZygoteFleet over deployed benchsuite apps,
-    with per-app report artifacts from --reports-dir as preload sets."""
+    with per-app report artifacts from --reports-dir as preload sets.
+    ``extra`` passes chaos/hardening knobs (fault_hook, breaker, ...)
+    straight through to the ZygoteFleet constructor."""
     from repro.pool.fleet import ZygoteFleet
     root = _resolve_root(args)
     app_dirs = {}
@@ -273,7 +275,79 @@ def _real_fleet(args: argparse.Namespace, apps: Sequence[str]):
     budget = args.budget_mb if args.budget_mb > 0 else None
     return ZygoteFleet(app_dirs, budget_mb=budget, reports=reports,
                        shared_base=args.shared_base,
-                       base_min_apps=args.base_min_apps)
+                       base_min_apps=args.base_min_apps, **extra)
+
+
+def _chaos_plan(args: argparse.Namespace, apps: Sequence[str]):
+    """Resolve --chaos into a FaultPlan: the literal ``storm`` builds
+    the canonical crash-storm plan over the replayed apps, anything
+    else is a path to a saved ``chaos_plan`` JSON file."""
+    from repro.pool.chaos import FaultPlan
+    if args.chaos == "storm":
+        return FaultPlan.storm(list(apps), seed=args.chaos_seed)
+    return FaultPlan.load(args.chaos)
+
+
+def _chaos_replay(args: argparse.Namespace, trace, apps) -> int:
+    """``fleet replay --real --chaos``: the seeded fault-injection
+    path.  Routes the trace through the daemon (bounded queues, drain
+    accounting) over a hardened ZygoteFleet with the injector as its
+    fault_hook; emits fleet_summary + chaos_report artifacts and exits
+    non-zero when the request-conservation invariant breaks."""
+    import signal
+
+    from repro.api.artifacts import save_chaos_report, save_fleet_summary
+    from repro.pool.chaos import FaultInjector, chaos_report_payload
+    from repro.pool.daemon import FleetDaemon, RealFleetBackend
+    from repro.pool.fleet import BreakerConfig
+
+    plan = _chaos_plan(args, apps)
+    injector = FaultInjector(plan)
+    breaker = BreakerConfig(max_failures=args.breaker_max_failures,
+                            cooldown_s=args.breaker_cooldown_s)
+    fleet = _real_fleet(args, apps,
+                        fault_hook=injector,
+                        breaker=breaker,
+                        boot_backoff_s=args.boot_backoff_s,
+                        revive_on_dispatch=True,
+                        timeout_s=args.dispatch_timeout_s)
+    queue = (_queue_config(args) if args.queue_depth >= 0
+             else _queue_config(argparse.Namespace(
+                 queue_depth=16, max_concurrency=args.max_concurrency,
+                 shed_policy=args.shed_policy)))
+    backend = RealFleetBackend(fleet, queue=queue,
+                               reports_dir=args.reports_dir)
+    daemon = FleetDaemon(backend, fault_hook=injector)
+    signal.signal(signal.SIGTERM, daemon.request_shutdown)
+    signal.signal(signal.SIGINT, daemon.request_shutdown)
+
+    daemon.start(trace.name)
+    payload = daemon.run_trace(trace, pace=args.chaos_pace)
+    report = chaos_report_payload(injector, summary=payload,
+                                  recoveries=fleet.recoveries)
+    print(json.dumps({k: v for k, v in payload.items()
+                      if k != "per_app"}, indent=2))
+    _print_rows(payload["per_app"],
+                ["app", "requests", "cold_starts", "sheds", "flushed",
+                 "abandoned", "degraded", "p99_ms"])
+    inv = report["invariant"]
+    print(f"chaos: injected={len(injector.injected)} "
+          f"pending={len(injector.pending())} "
+          f"recoveries={fleet.recoveries} "
+          f"invariant={'holds' if inv['holds'] else 'BROKEN'}",
+          file=sys.stderr)
+    if args.out:
+        save_fleet_summary(payload, os.path.abspath(args.out))
+        print(f"fleet_summary artifact: {os.path.abspath(args.out)}")
+    if args.chaos_report:
+        save_chaos_report(report, os.path.abspath(args.chaos_report))
+        print(f"chaos_report artifact: "
+              f"{os.path.abspath(args.chaos_report)}")
+    _obs_save_capture(args, "fleet-replay",
+                      meta={"trace": trace.name, "apps": list(apps),
+                            "real": True, "chaos": args.chaos,
+                            "chaos_seed": args.chaos_seed})
+    return 0 if inv["holds"] else 1
 
 
 def cmd_fleet_replay(args: argparse.Namespace) -> int:
@@ -282,6 +356,13 @@ def cmd_fleet_replay(args: argparse.Namespace) -> int:
 
     _obs_setup(args)
     trace, apps = _fleet_trace(args)
+    if args.chaos:
+        if not args.real:
+            print("fleet replay --chaos requires --real (faults are "
+                  "injected into live zygote processes)",
+                  file=sys.stderr)
+            return 2
+        return _chaos_replay(args, trace, apps)
     if args.real:
         with _real_fleet(args, apps) as fleet:
             rows = fleet.replay(trace, limit=args.limit)
@@ -707,6 +788,35 @@ def build_parser() -> argparse.ArgumentParser:
                    help="with --real: replay only the first N requests")
     p.add_argument("--out", default=None,
                    help="save the fleet_summary artifact here")
+    p.add_argument("--chaos", default=None, metavar="PLAN",
+                   help="with --real: inject faults while replaying — "
+                        "a saved chaos_plan JSON path, or the literal "
+                        "'storm' for the canonical seeded crash storm "
+                        "(see docs/chaos.md)")
+    p.add_argument("--chaos-seed", type=int, default=0,
+                   help="seed for --chaos storm event timing")
+    p.add_argument("--chaos-report", default=None,
+                   help="save the chaos_report artifact here "
+                        "(injections, recoveries, conservation check)")
+    p.add_argument("--boot-backoff-s", type=float, default=0.5,
+                   help="base delay of the zygote reboot exponential "
+                        "backoff (chaos replay)")
+    p.add_argument("--breaker-max-failures", type=int, default=3,
+                   help="consecutive zygote boot failures before the "
+                        "per-app circuit breaker demotes the app to "
+                        "cold-path-only")
+    p.add_argument("--breaker-cooldown-s", type=float, default=30.0,
+                   help="seconds an open breaker waits before the "
+                        "half-open reboot probe")
+    p.add_argument("--chaos-pace", type=float, default=0.1,
+                   help="scale trace arrival gaps into real time for "
+                        "the chaos replay (0 = flood; leave headroom "
+                        "above --boot-backoff-s so gated reboots get "
+                        "retried)")
+    p.add_argument("--dispatch-timeout-s", type=float, default=15.0,
+                   help="per-dispatch zygote protocol timeout for the "
+                        "chaos replay: a wedged handler sheds with "
+                        "reason 'timeout' after this long")
     p.set_defaults(func=cmd_fleet_replay)
 
     p = fleet_sub.add_parser(

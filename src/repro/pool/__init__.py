@@ -19,22 +19,41 @@ Six pieces (see each module's docstring and this package's README.md):
   reporting cold-start ratio, p50/p99 latency and memory GB-seconds;
 * :mod:`repro.pool.fleet`      — multi-app fleet manager: one zygote
   per app under a shared memory budget, prewarm/evict arbitration
-  (simulated ``FleetManager`` and real-process ``ZygoteFleet``).
+  (simulated ``FleetManager`` and real-process ``ZygoteFleet``);
+* :mod:`repro.pool.chaos`      — seeded fault injection across the
+  serving path (``FaultPlan`` / ``FaultInjector``), paired with the
+  crash-recovery hardening in the fleet: boot backoff, per-app
+  circuit breakers, drain accounting.
 """
 
+from repro.pool.chaos import (
+    FaultEvent,
+    FaultInjector,
+    FaultPlan,
+    chaos_report_payload,
+)
 from repro.pool.daemon import (
     FleetDaemon,
     RealFleetBackend,
     SimFleetBackend,
 )
 from repro.pool.fleet import (
+    BreakerConfig,
+    CircuitBreaker,
+    CrashLoopShed,
     FleetManager,
     FleetSummary,
     QueueConfig,
     ZygoteFleet,
     fleet_sweep,
 )
-from repro.pool.forkserver import BaseZygote, ForkServer, ForkServerError
+from repro.pool.forkserver import (
+    BaseZygote,
+    ForkServer,
+    ForkServerBackoff,
+    ForkServerError,
+    ForkServerTimeout,
+)
 from repro.pool.policies import (
     FixedSizePolicy,
     HistogramPolicy,
@@ -77,6 +96,12 @@ __all__ = [
     "AppProfile",
     "AzureRow",
     "BaseZygote",
+    "BreakerConfig",
+    "CircuitBreaker",
+    "CrashLoopShed",
+    "FaultEvent",
+    "FaultInjector",
+    "FaultPlan",
     "FixedSizePolicy",
     "FleetDaemon",
     "FleetManager",
@@ -84,7 +109,9 @@ __all__ = [
     "FleetSimulator",
     "FleetSummary",
     "ForkServer",
+    "ForkServerBackoff",
     "ForkServerError",
+    "ForkServerTimeout",
     "HistogramPolicy",
     "IdleTimeoutPolicy",
     "KeepAlivePolicy",
@@ -100,6 +127,7 @@ __all__ = [
     "azure_synthetic_rows",
     "azure_trace",
     "bursty_trace",
+    "chaos_report_payload",
     "compute_shared_hot_set",
     "default_policies",
     "diurnal_trace",

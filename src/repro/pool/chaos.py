@@ -1,0 +1,414 @@
+"""Seeded fault injection for the zygote serving path (chaos tier).
+
+The warm-pool stack — :class:`~repro.pool.forkserver.ForkServer`,
+:class:`~repro.pool.forkserver.BaseZygote`,
+:class:`~repro.pool.fleet.ZygoteFleet`,
+:class:`~repro.serving.engine.EnginePool` and the
+:class:`~repro.pool.daemon.FleetDaemon` — each accept an optional
+``fault_hook`` callable.  When unset (the default) the hook is a single
+``is not None`` check and the serving path is unchanged.  When set, the
+components call it at well-known **sites** with keyword context::
+
+    fault_hook("protocol",   app=..., op=..., pid=..., server=...)
+    fault_hook("spawn_app",  app=..., base=...)
+    fault_hook("dispatch",   app=..., base=...)
+    fault_hook("cold_start", app=...)
+    fault_hook("rewarm",     app=...)
+
+:class:`FaultInjector` is the hook implementation this module ships: it
+consumes a :class:`FaultPlan` — a deterministic, seed-generatable list
+of :class:`FaultEvent` — and *applies* each event when its (site, app,
+op) filter has matched ``at`` times:
+
+==================  ==========  =========================================
+kind                site        effect
+==================  ==========  =========================================
+kill_app_zygote     protocol    SIGKILL the app zygote before the write
+kill_base_zygote    dispatch    SIGKILL the shared base zygote
+wedge_handler       protocol    SIGSTOP the zygote: the reply never
+                                arrives, the client times out after
+                                ``timeout_s`` and kills it
+fail_spawn          spawn_app   raise ForkServerError (boot failure)
+fail_preload        protocol    raise ForkServerError on a preload
+socket_eof          protocol    raise ForkServerError (injected EOF)
+socket_oserror      protocol    raise ForkServerError from an OSError
+delay_import        protocol    sleep ``delay_s`` before the command
+fail_cold           cold_start  raise (fresh-process cold start fails)
+fail_rewarm         rewarm      raise inside the daemon rewarm tick
+==================  ==========  =========================================
+
+Everything is deterministic given the plan: matching is by per-event
+occurrence counters, never wall-clock.  ``simulate=True`` swaps the
+process signals for equivalent exceptions so pure in-process tests
+(and the hypothesis conservation property) can run a plan without
+booting zygotes.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import random
+import signal
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.pool.forkserver import ForkServerError, ForkServerTimeout
+
+__all__ = [
+    "FAULT_KINDS",
+    "FaultEvent",
+    "FaultInjector",
+    "FaultPlan",
+    "chaos_report_payload",
+]
+
+# kind -> (site, default op filter); op None matches any command
+_KIND_SPEC: dict[str, tuple[str, Optional[str]]] = {
+    "kill_app_zygote": ("protocol", "exec"),
+    "kill_base_zygote": ("dispatch", None),
+    "wedge_handler": ("protocol", "exec"),
+    "fail_spawn": ("spawn_app", None),
+    "fail_preload": ("protocol", "preload"),
+    "socket_eof": ("protocol", "exec"),
+    "socket_oserror": ("protocol", "exec"),
+    "delay_import": ("protocol", "preload"),
+    "fail_cold": ("cold_start", None),
+    "fail_rewarm": ("rewarm", None),
+}
+
+FAULT_KINDS = tuple(sorted(_KIND_SPEC))
+
+SITES = ("protocol", "spawn_app", "dispatch", "cold_start", "rewarm")
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault.
+
+    Fires on the ``at``-th call (0-based) of the event's site that
+    matches the ``app``/``op`` filters, and keeps firing for ``count``
+    consecutive matches (``count=-1``: every match from ``at`` on).
+    ``app="*"`` matches any app; ``op=None`` takes the kind's default
+    filter (see module table).
+    """
+
+    kind: str
+    at: int = 0
+    app: str = "*"
+    op: Optional[str] = None
+    delay_s: float = 0.0
+    count: int = 1
+
+    def __post_init__(self) -> None:
+        if self.kind not in _KIND_SPEC:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(one of {FAULT_KINDS})")
+        if self.at < 0:
+            raise ValueError(f"at must be >= 0, got {self.at}")
+        if self.count == 0 or self.count < -1:
+            raise ValueError(f"count must be positive or -1 (unlimited),"
+                             f" got {self.count}")
+        if self.delay_s < 0:
+            raise ValueError(f"delay_s must be >= 0, got {self.delay_s}")
+
+    @property
+    def site(self) -> str:
+        return _KIND_SPEC[self.kind][0]
+
+    @property
+    def op_filter(self) -> Optional[str]:
+        return self.op if self.op is not None else _KIND_SPEC[self.kind][1]
+
+    def to_dict(self) -> dict:
+        out: dict = {"kind": self.kind, "at": self.at}
+        if self.app != "*":
+            out["app"] = self.app
+        if self.op is not None:
+            out["op"] = self.op
+        if self.delay_s:
+            out["delay_s"] = self.delay_s
+        if self.count != 1:
+            out["count"] = self.count
+        return out
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FaultEvent":
+        return cls(kind=d["kind"], at=int(d.get("at", 0)),
+                   app=d.get("app", "*"), op=d.get("op"),
+                   delay_s=float(d.get("delay_s", 0.0)),
+                   count=int(d.get("count", 1)))
+
+
+@dataclass
+class FaultPlan:
+    """An ordered set of :class:`FaultEvent` plus the seed that (may
+    have) generated it.  JSON round-trips via ``save``/``load`` so
+    plans are reviewable, diffable CI inputs."""
+
+    events: list[FaultEvent] = field(default_factory=list)
+    seed: int = 0
+    name: str = "chaos"
+
+    def to_payload(self) -> dict:
+        return {"kind": "chaos_plan", "schema_version": 1,
+                "name": self.name, "seed": self.seed,
+                "events": [ev.to_dict() for ev in self.events]}
+
+    @classmethod
+    def from_payload(cls, payload: dict) -> "FaultPlan":
+        k = payload.get("kind", "chaos_plan")
+        if k != "chaos_plan":
+            raise ValueError(f"not a chaos_plan payload (kind={k!r})")
+        return cls(events=[FaultEvent.from_dict(d)
+                           for d in payload.get("events", [])],
+                   seed=int(payload.get("seed", 0)),
+                   name=str(payload.get("name", "chaos")))
+
+    def save(self, path: str) -> str:
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as fh:
+            json.dump(self.to_payload(), fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        os.replace(tmp, path)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "FaultPlan":
+        with open(path) as fh:
+            payload = json.load(fh)
+        if isinstance(payload, list):  # bare event list is accepted
+            payload = {"kind": "chaos_plan", "events": payload}
+        return cls.from_payload(payload)
+
+    @classmethod
+    def generate(cls, seed: int, apps: list[str],
+                 n_events: int = 6) -> "FaultPlan":
+        """Random-but-reproducible plan: same seed + apps, same plan.
+
+        Leans toward recoverable faults (kills, EOFs, delays) so a
+        generated plan exercises recovery paths rather than just
+        drowning every request; wedges are rare because each one costs
+        ``timeout_s`` wall-clock."""
+        rng = random.Random(seed)
+        weighted = (["kill_app_zygote"] * 4 + ["socket_eof"] * 3
+                    + ["socket_oserror"] * 2 + ["delay_import"] * 2
+                    + ["fail_spawn"] * 2 + ["fail_preload"]
+                    + ["fail_cold"] + ["kill_base_zygote"]
+                    + ["wedge_handler"])
+        events = []
+        for _ in range(n_events):
+            kind = rng.choice(weighted)
+            app = rng.choice(list(apps) + ["*"])
+            ev = FaultEvent(
+                kind=kind, at=rng.randint(0, 4), app=app,
+                delay_s=(round(rng.uniform(0.01, 0.1), 3)
+                         if kind == "delay_import" else 0.0))
+            events.append(ev)
+        return cls(events=events, seed=seed, name=f"generated-{seed}")
+
+    @classmethod
+    def storm(cls, apps: list[str], seed: int = 0) -> "FaultPlan":
+        """The canonical crash storm (the acceptance scenario): kill
+        the first app's zygote and make every respawn and cold start
+        for it fail (driving the circuit breaker open and then
+        ``crash_loop`` sheds), wedge one handler on the last app
+        (a ``timeout`` shed), and kill the shared base mid-burst.
+        ``seed`` shifts *when* the kills land, not what happens."""
+        rng = random.Random(seed)
+        victim, wedged = apps[0], apps[-1]
+        return cls(events=[
+            FaultEvent("kill_app_zygote", at=rng.randint(0, 1),
+                       app=victim),
+            FaultEvent("fail_spawn", at=0, app=victim, count=-1),
+            FaultEvent("fail_cold", at=0, app=victim, count=-1),
+            FaultEvent("wedge_handler", at=rng.randint(0, 1),
+                       app=wedged),
+            FaultEvent("kill_base_zygote", at=rng.randint(2, 4)),
+        ], seed=seed, name=f"storm-{seed}")
+
+
+class _EventState:
+    __slots__ = ("event", "seen", "fired")
+
+    def __init__(self, event: FaultEvent) -> None:
+        self.event = event
+        self.seen = 0      # filter matches observed
+        self.fired = 0     # times applied
+
+
+class FaultInjector:
+    """The ``fault_hook`` callable: matches plan events against hook
+    calls and applies them.  Thread-safe; every injection is recorded
+    in ``injected`` (kind/site/app/op/sequence) for the
+    ``chaos_report`` artifact.
+
+    ``simulate=True`` replaces process signals with the exception the
+    real fault would ultimately surface (kill -> ForkServerError,
+    wedge -> ForkServerTimeout, base kill -> no-op) so in-process
+    tests can run plans without zygotes.
+    """
+
+    def __init__(self, plan: FaultPlan, *,
+                 simulate: bool = False) -> None:
+        self.plan = plan
+        self.simulate = simulate
+        self._states = [_EventState(ev) for ev in plan.events]
+        self._lock = threading.Lock()
+        self.calls = 0
+        self.injected: list[dict] = []
+
+    # ------------------------------------------------------------ matching
+    def __call__(self, site: str, **ctx) -> None:
+        app = ctx.get("app", "*")
+        op = ctx.get("op")
+        due: list[FaultEvent] = []
+        with self._lock:
+            self.calls += 1
+            for st in self._states:
+                ev = st.event
+                if ev.site != site:
+                    continue
+                if ev.app != "*" and ev.app != app:
+                    continue
+                if (site == "protocol" and ev.op_filter is not None
+                        and ev.op_filter != op):
+                    continue
+                st.seen += 1
+                n = st.seen - 1  # 0-based occurrence index
+                if n < ev.at:
+                    continue
+                if ev.count != -1 and n >= ev.at + ev.count:
+                    continue
+                st.fired += 1
+                due.append(ev)
+                self.injected.append({
+                    "seq": len(self.injected), "kind": ev.kind,
+                    "site": site, "app": app, "op": op,
+                    "occurrence": n,
+                })
+        # apply outside the lock: actions sleep, signal, raise
+        raiser: Optional[FaultEvent] = None
+        for ev in due:
+            if ev.kind == "delay_import":
+                time.sleep(ev.delay_s)
+            elif ev.kind in ("kill_app_zygote", "wedge_handler"):
+                if self.simulate:
+                    raiser = raiser or ev
+                else:
+                    pid = ctx.get("pid")
+                    if pid:
+                        sig = (signal.SIGKILL
+                               if ev.kind == "kill_app_zygote"
+                               else signal.SIGSTOP)
+                        try:
+                            os.kill(pid, sig)
+                        except ProcessLookupError:
+                            pass
+            elif ev.kind == "kill_base_zygote":
+                base = ctx.get("base")
+                if not self.simulate and base is not None \
+                        and getattr(base, "pid", None):
+                    try:
+                        os.kill(base.pid, signal.SIGKILL)
+                    except ProcessLookupError:
+                        pass
+            else:  # pure-exception kinds
+                raiser = raiser or ev
+        if raiser is not None:
+            self._raise(raiser, app)
+
+    @staticmethod
+    def _raise(ev: FaultEvent, app: str) -> None:
+        tag = f"chaos[{ev.kind}]"
+        if ev.kind == "wedge_handler":
+            # simulate-only: the real wedge surfaces as a client-side
+            # read timeout, so mirror that exception type exactly
+            raise ForkServerTimeout(
+                f"{tag} injected handler wedge for {app!r}")
+        if ev.kind == "socket_oserror":
+            try:
+                raise OSError(107, "injected: transport endpoint is "
+                                   "not connected")
+            except OSError as exc:
+                raise ForkServerError(
+                    f"{tag} injected OSError on protocol socket "
+                    f"for {app!r}: {exc}") from exc
+        if ev.kind == "fail_rewarm":
+            raise RuntimeError(f"{tag} injected rewarm-tick failure "
+                               f"for {app!r}")
+        if ev.kind == "fail_cold":
+            raise RuntimeError(f"{tag} injected cold-start failure "
+                               f"for {app!r}")
+        # socket_eof / fail_spawn / fail_preload / simulated kill
+        raise ForkServerError(f"{tag} injected protocol failure "
+                              f"for {app!r}")
+
+    # ----------------------------------------------------------- reporting
+    def counts(self) -> dict[str, int]:
+        with self._lock:
+            out: dict[str, int] = {}
+            for rec in self.injected:
+                out[rec["kind"]] = out.get(rec["kind"], 0) + 1
+            return out
+
+    def pending(self) -> list[dict]:
+        """Events that never (fully) fired — a plan-vs-run mismatch
+        worth surfacing in the report."""
+        with self._lock:
+            out = []
+            for st in self._states:
+                want = st.event.count
+                if want == -1:
+                    if st.fired == 0:
+                        out.append(st.event.to_dict())
+                elif st.fired < want:
+                    out.append({**st.event.to_dict(),
+                                "fired": st.fired})
+            return out
+
+    def report(self) -> dict:
+        with self._lock:
+            injected = [dict(r) for r in self.injected]
+            calls = self.calls
+        return {"plan": self.plan.to_payload(),
+                "seed": self.plan.seed,
+                "hook_calls": calls,
+                "injected": injected,
+                "injected_by_kind": self.counts(),
+                "pending": self.pending()}
+
+
+def chaos_report_payload(injector: FaultInjector,
+                         summary: Optional[dict] = None,
+                         recoveries: Optional[dict] = None) -> dict:
+    """Payload for the versioned ``chaos_report`` artifact: what was
+    injected, what recovered, and whether the conservation invariant
+    (``requests == served + sheds + flushed + errors + abandoned``)
+    survived the run."""
+    rep = injector.report()
+    invariant: dict = {"checked": summary is not None, "holds": None}
+    if summary is not None:
+        lhs = summary.get("requests", 0)
+        rhs = (summary.get("served", 0) + summary.get("sheds", 0)
+               + summary.get("flushed", 0) + summary.get("errors", 0)
+               + summary.get("abandoned", 0))
+        invariant = {
+            "checked": True, "holds": lhs == rhs,
+            "requests": lhs, "accounted": rhs,
+            "expression": "requests == served + sheds + flushed "
+                          "+ errors + abandoned",
+        }
+    return {
+        "seed": rep["seed"],
+        "plan": rep["plan"],
+        "injected": rep["injected"],
+        "injected_by_kind": rep["injected_by_kind"],
+        "pending": rep["pending"],
+        "hook_calls": rep["hook_calls"],
+        "recoveries": dict(recoveries or {}),
+        "invariant": invariant,
+        "summary": summary,
+    }

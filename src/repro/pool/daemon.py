@@ -102,6 +102,21 @@ def _m_flushed(n: int) -> None:
                        ).inc(n)
 
 
+def _m_abandoned(app: str, n: int) -> None:
+    if n:
+        _reg().counter("repro_abandoned_total",
+                       "in-flight dispatches abandoned at drain (the "
+                       "worker never returned by the deadline)",
+                       labels=("app",)).labels(app=app).inc(n)
+
+
+def _m_rewarm_failure(app: str) -> None:
+    _reg().counter("repro_rewarm_failures_total",
+                   "rewarm-tick failures by app (app=\"_tick\" when "
+                   "the whole tick raised)",
+                   labels=("app",)).labels(app=app).inc()
+
+
 def _m_hist(name: str, help: str, app: str, value_ms: float) -> None:
     _reg().histogram(name, help, labels=("app",)).labels(
         app=app).observe(value_ms)
@@ -229,15 +244,30 @@ class _AppServeStats:
     pool: int = 0
     cold: int = 0
     errors: int = 0
+    # in-flight dispatches whose worker never came back by the drain
+    # deadline: not served, not shed, not flushed — accounted here so
+    # conservation never loses a request
+    abandoned: int = 0
+    # requests served in a degraded mode (e.g. cold-only because the
+    # app's zygote is circuit-broken); these ARE counted in ``served``
+    degraded: int = 0
     init_ms: list = field(default_factory=list)
     e2e_ms: list = field(default_factory=list)
     queue_waits_ms: list = field(default_factory=list)
-    # sheds by cause ("queue-full" | "drop-oldest"); sums to ``sheds``
+    # sheds by cause ("queue-full" | "drop-oldest" | "timeout" |
+    # "crash_loop"); sums to ``sheds``
     shed_reasons: dict = field(default_factory=dict)
+    # degrades by cause ("crash_loop"); sums to ``degraded``
+    degrade_reasons: dict = field(default_factory=dict)
 
     def count_shed(self, reason: str) -> None:
         self.sheds += 1
         self.shed_reasons[reason] = self.shed_reasons.get(reason, 0) + 1
+
+    def count_degrade(self, reason: str) -> None:
+        self.degraded += 1
+        self.degrade_reasons[reason] = \
+            self.degrade_reasons.get(reason, 0) + 1
 
     def copy(self) -> "_AppServeStats":
         """Deep-enough copy for reading outside the queue lock: the
@@ -247,7 +277,8 @@ class _AppServeStats:
         return dataclasses.replace(
             self, init_ms=list(self.init_ms), e2e_ms=list(self.e2e_ms),
             queue_waits_ms=list(self.queue_waits_ms),
-            shed_reasons=dict(self.shed_reasons))
+            shed_reasons=dict(self.shed_reasons),
+            degrade_reasons=dict(self.degrade_reasons))
 
 
 class RealFleetBackend:
@@ -267,6 +298,10 @@ class RealFleetBackend:
         self._workers: list[threading.Thread] = []
         self._draining = False
         self._seed = seed0
+        # bumped when drain() abandons still-running workers: a worker
+        # that dequeued under an older generation must not count its
+        # (already-abandoned) request when it finally returns
+        self._gen = 0
         self.boot: dict = {}
 
     @property
@@ -341,6 +376,7 @@ class RealFleetBackend:
                     continue
                 enq_t, req, ids = self._queues[app].popleft()
                 self._in_flight[app] += 1
+                gen = self._gen
                 seed = self._seed
                 self._seed += 1
             wait_ms = (time.monotonic() - enq_t) * 1e3
@@ -360,12 +396,33 @@ class RealFleetBackend:
                 m = self.fleet.dispatch(app, handler=req.handler,
                                         seed=seed, trace=trace)
             except Exception as exc:
+                # classify the failure: a wedged handler or a
+                # circuit-broken crash loop is *shed* (with a named
+                # reason), anything else is a dispatch error
+                from repro.pool.fleet import CrashLoopShed
+                from repro.pool.forkserver import ForkServerTimeout
+                shed_reason = None
+                if isinstance(exc, ForkServerTimeout):
+                    shed_reason = "timeout"
+                elif isinstance(exc, CrashLoopShed):
+                    shed_reason = "crash_loop"
                 with self._cond:
-                    st.errors += 1
+                    if gen != self._gen:
+                        continue  # drain already accounted this one
+                    if shed_reason is not None:
+                        st.count_shed(shed_reason)
+                    else:
+                        st.errors += 1
                     self._in_flight[app] -= 1
                     self._cond.notify_all()
-                _m_errors(app)
-                _LOG.warning("dispatch-failed", app=app, error=repr(exc))
+                if shed_reason is not None:
+                    _m_sheds(app, shed_reason)
+                    _LOG.warning("dispatch-shed", app=app,
+                                 reason=shed_reason, error=repr(exc))
+                else:
+                    _m_errors(app)
+                    _LOG.warning("dispatch-failed", app=app,
+                                 error=repr(exc))
                 if trace is not None:
                     tracer.add("request", trace_id=tid, span_id=rid,
                                t_start_ms=t_deq_ms - wait_ms,
@@ -378,6 +435,8 @@ class RealFleetBackend:
                            duration_ms=now_ms() - t_deq_ms + wait_ms,
                            attrs={"app": app, "path": m["path"]})
             with self._cond:
+                if gen != self._gen:
+                    continue  # drain already accounted this one
                 st.served += 1
                 st.queue_waits_ms.append(wait_ms)
                 st.init_ms.append(m["init_ms"])
@@ -386,6 +445,8 @@ class RealFleetBackend:
                     st.pool += 1
                 else:
                     st.cold += 1
+                if m.get("degraded"):
+                    st.count_degrade(m["degraded"])
                 self._in_flight[app] -= 1
                 self._cond.notify_all()
             _m_served(app)
@@ -437,7 +498,24 @@ class RealFleetBackend:
                 self._cond.wait(timeout=min(rem or 0.2, 0.2))
         for w in self._workers:
             w.join(timeout=5.0)
+        # join(timeout) can return with the worker still alive (a hung
+        # dispatch): its in-flight request would be counted neither as
+        # served nor flushed.  Account it as abandoned NOW, and bump
+        # the generation so the worker — if it ever returns — skips its
+        # own counting instead of double-accounting the same request.
+        abandoned: dict[str, int] = {}
+        if any(w.is_alive() for w in self._workers):
+            with self._cond:
+                self._gen += 1
+                for app, n in self._in_flight.items():
+                    if n > 0:
+                        self._stats[app].abandoned += n
+                        abandoned[app] = n
+                        self._in_flight[app] = 0
         _m_flushed(flushed)
+        for app, n in abandoned.items():
+            _m_abandoned(app, n)
+            _LOG.warning("drain-abandoned", app=app, abandoned=n)
         if flushed:
             _LOG.info("drain-flushed", flushed=flushed)
 
@@ -447,13 +525,17 @@ class RealFleetBackend:
         waits_all: list[float] = []
         tot = _AppServeStats()
         with self._cond:
-            # a dispatch still blocked past the drain timeout (hung
-            # handler) is lost traffic: charge it to errors so the
-            # conservation invariant survives an abandoned drain
-            for app, n in self._in_flight.items():
-                if n > 0:
-                    self._stats[app].errors += n
-                    self._in_flight[app] = 0
+            # a dispatch still blocked at finish() time (finish without
+            # drain, or one that slipped in since) is lost traffic:
+            # account it as abandoned — and advance the generation so
+            # the late worker cannot also count it as served/errored,
+            # which would break conservation by double-counting
+            if any(n > 0 for n in self._in_flight.values()):
+                self._gen += 1
+                for app, n in self._in_flight.items():
+                    if n > 0:
+                        self._stats[app].abandoned += n
+                        self._in_flight[app] = 0
             # snapshot everything under the lock: an abandoned drain
             # leaves workers alive, still appending to these lists
             stats = {app: st.copy() for app, st in self._stats.items()}
@@ -468,13 +550,19 @@ class RealFleetBackend:
             tot.pool += st.pool
             tot.cold += st.cold
             tot.errors += st.errors
+            tot.abandoned += st.abandoned
+            tot.degraded += st.degraded
             _merge_reasons(tot.shed_reasons, st.shed_reasons)
+            _merge_reasons(tot.degrade_reasons, st.degrade_reasons)
             per_app.append({
                 "app": app,
                 "requests": st.arrivals,
                 "pool_starts": st.pool,
                 "cold_starts": st.cold,
                 "errors": st.errors,
+                "abandoned": st.abandoned,
+                "degraded": st.degraded,
+                "degrade_reasons": dict(st.degrade_reasons),
                 # arrivals denominator, like every other producer
                 "cold_ratio": round(st.cold / max(st.arrivals, 1), 4),
                 "p50_ms": round(percentile_ms(st.e2e_ms, 0.50), 2)
@@ -516,8 +604,12 @@ class RealFleetBackend:
             # dispatch failures (crashed handler, dead zygote + failed
             # cold fallback): neither served nor shed — without this
             # field the conservation invariant would silently miscount
-            # lost traffic (requests == served + sheds + flushed + errors)
+            # lost traffic (requests == served + sheds + flushed
+            # + errors + abandoned)
             errors=tot.errors,
+            abandoned=tot.abandoned,
+            degraded=tot.degraded,
+            degrade_reasons=dict(tot.degrade_reasons),
             memory_gb_s=None,
             rewarm_ticks=0,
             queue=self.queue_cfg.to_dict(),
@@ -546,17 +638,27 @@ class RealFleetBackend:
             "sheds": sum(s.sheds for s in stats.values()),
             "shed_reasons": reasons,
             "errors": sum(s.errors for s in stats.values()),
+            "abandoned": sum(s.abandoned for s in stats.values()),
+            "degraded": sum(s.degraded for s in stats.values()),
             "queued": sum(queued.values()),
             "in_flight": sum(in_flight.values()),
             "per_app": {
                 app: {"arrivals": st.arrivals, "served": st.served,
                       "sheds": st.sheds, "errors": st.errors,
+                      "abandoned": st.abandoned,
+                      "degraded": st.degraded,
                       "pool": st.pool, "cold": st.cold,
                       "queued": queued.get(app, 0),
                       "in_flight": in_flight.get(app, 0)}
                 for app, st in sorted(stats.items())
             },
         }
+        breakers = getattr(self.fleet, "breakers", None)
+        if breakers:
+            open_apps = sorted(a for a, br in breakers.items()
+                               if br.open)
+            if open_apps:
+                snap["breakers_open"] = open_apps
         if self.fleet.shared_base:
             snap["base_alive"] = (self.fleet.base is not None
                                   and self.fleet.base.alive)
@@ -586,16 +688,22 @@ class FleetDaemon:
     into the emitted ``fleet_summary`` artifact.
     """
 
+    MAX_REWARM_ERRORS = 100  # rewarm_errors ring size
+
     def __init__(self, backend, *, rewarm_interval_s: float = 0.0,
                  rewarm_fn: Optional[Callable[[], dict]] = None,
                  summary_path: Optional[str] = None,
-                 drain_timeout_s: Optional[float] = 30.0) -> None:
+                 drain_timeout_s: Optional[float] = 30.0,
+                 fault_hook=None) -> None:
         self.backend = backend
         self.rewarm_interval_s = rewarm_interval_s
         # default rewarm action: whatever the backend's tick does
         self.rewarm_fn = rewarm_fn or backend.rewarm
         self.summary_path = summary_path
         self.drain_timeout_s = drain_timeout_s
+        # chaos hook (repro.pool.chaos): exercises the rewarm-tick
+        # failure path; None leaves the daemon untouched
+        self.fault_hook = fault_hook
         self.rewarm_ticks = 0
         self.rewarm_errors: list[str] = []
         self._stop_evt = threading.Event()
@@ -782,19 +890,46 @@ class FleetDaemon:
     def rewarm_now(self) -> dict:
         """One rewarm tick (also what the timer thread calls): re-load
         deployed report artifacts and re-preload warm state.  Failures
-        are recorded, never raised — in-flight work is untouched."""
+        — a whole-tick exception (e.g. a corrupt/partially-written
+        report artifact) or a per-app ``{"ok": False}`` result — are
+        counted in ``repro_rewarm_failures_total{app}`` and logged
+        structured, never raised: in-flight work is untouched and the
+        timer keeps ticking."""
         try:
+            if self.fault_hook is not None:
+                # chaos site "rewarm": injected tick failures land
+                # inside the try, exercising exactly this recovery path
+                self.fault_hook("rewarm", app="_tick")
             out = self.rewarm_fn()
             self.rewarm_ticks += 1
             _reg().counter("repro_rewarm_ticks_total",
                            "successful rewarm timer ticks").inc()
             _LOG.debug("rewarm-tick", ticks=self.rewarm_ticks)
-            return out if isinstance(out, dict) else {"ok": True}
+            out = out if isinstance(out, dict) else {"ok": True}
         except Exception as exc:
-            self.rewarm_errors.append(repr(exc))
-            _LOG.warning("rewarm-failed", error=repr(exc))
+            self._record_rewarm_error("_tick", repr(exc))
             return {"ok": False, "error": repr(exc)}
+        # per-app failures ride inside a successful tick's result
+        # (rewarm_from_dir never raises); surface them the same way
+        for app, res in out.items():
+            if isinstance(res, dict) and res.get("ok") is False:
+                self._record_rewarm_error(
+                    app, str(res.get("error", "rewarm failed")))
+        return out
+
+    def _record_rewarm_error(self, app: str, error: str) -> None:
+        # bounded: a flapping app on a fast timer must not grow this
+        # list (and the daemon's memory) without limit
+        if len(self.rewarm_errors) >= self.MAX_REWARM_ERRORS:
+            del self.rewarm_errors[
+                :len(self.rewarm_errors) - self.MAX_REWARM_ERRORS + 1]
+        self.rewarm_errors.append(f"{app}: {error}")
+        _m_rewarm_failure(app)
+        _LOG.warning("rewarm-failed", app=app, error=error[:500])
 
     def _rewarm_loop(self) -> None:
+        # rewarm_now never raises, so one bad tick (corrupt artifact,
+        # crashed zygote, chaos injection) cannot kill the timer
+        # thread and silently stop all future rewarms
         while not self._stop_evt.wait(self.rewarm_interval_s):
             self.rewarm_now()

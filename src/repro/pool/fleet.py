@@ -55,12 +55,19 @@ from __future__ import annotations
 import math
 import os
 import statistics
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
 from repro.core.profiler.report import OptimizationReport
-from repro.pool.forkserver import BaseZygote, ForkServer, ForkServerError
+from repro.pool.forkserver import (
+    BaseZygote,
+    ForkServer,
+    ForkServerBackoff,
+    ForkServerError,
+    ForkServerTimeout,
+)
 from repro.pool.policies import KeepAlivePolicy, hot_set_from_report
 from repro.pool.sharing import (
     SharedHotSet,
@@ -92,6 +99,84 @@ def _m_dispatches(app: str, path: str) -> None:
         "real dispatches by path (pool fork / cold subprocess / "
         "fallback after a zygote died mid-exec)",
         labels=("app", "path")).labels(app=app, path=path).inc()
+
+
+def _m_degraded(app: str, reason: str) -> None:
+    from repro.obs.metrics import default_registry
+    default_registry().counter(
+        "repro_degraded_total",
+        "requests served degraded (e.g. cold-only because the app's "
+        "zygote is circuit-broken after a crash loop)",
+        labels=("app", "reason")).labels(app=app, reason=reason).inc()
+
+
+class CrashLoopShed(RuntimeError):
+    """Raised by :meth:`ZygoteFleet.dispatch` when an app is
+    circuit-broken (its zygote keeps failing to boot) *and* the
+    fresh-process cold fallback failed too — the request has nowhere
+    left to go.  The daemon counts it as a ``crash_loop`` shed."""
+
+
+@dataclass(frozen=True)
+class BreakerConfig:
+    """Per-app circuit breaker for zygote crash loops: after
+    ``max_failures`` consecutive zygote *boot* failures the app is
+    demoted to cold-path-only for ``cooldown_s``; the first attempt
+    after the cooldown is the half-open probe — success closes the
+    breaker, failure re-opens it for another cooldown."""
+
+    max_failures: int = 3
+    cooldown_s: float = 30.0
+
+    def __post_init__(self) -> None:
+        if self.max_failures < 1:
+            raise ValueError(
+                f"max_failures must be >= 1, got {self.max_failures}")
+        if self.cooldown_s < 0:
+            raise ValueError(
+                f"cooldown_s must be >= 0, got {self.cooldown_s}")
+
+
+class CircuitBreaker:
+    """State machine for one app (see :class:`BreakerConfig`).  The
+    clock is injectable so tests can step through cooldowns without
+    sleeping.  Not thread-safe on its own: callers hold the fleet's
+    dispatch context (the daemon serializes per-app work)."""
+
+    def __init__(self, cfg: BreakerConfig,
+                 clock=time.monotonic) -> None:
+        self.cfg = cfg
+        self._clock = clock
+        self.failures = 0      # consecutive boot failures
+        self.trips = 0         # closed->open transitions
+        self._opened_t: Optional[float] = None
+
+    @property
+    def open(self) -> bool:
+        """True while demoted to cold-only.  After ``cooldown_s`` this
+        turns False again (half-open): one probe boot is allowed."""
+        return (self._opened_t is not None
+                and self._clock() - self._opened_t < self.cfg.cooldown_s)
+
+    def record_failure(self) -> bool:
+        """Count one boot failure; returns True when this transition
+        (re)opened the breaker."""
+        was_open = self.open
+        self.failures += 1
+        if self.failures >= self.cfg.max_failures:
+            self._opened_t = self._clock()
+        newly_open = self.open and not was_open
+        if newly_open:
+            self.trips += 1
+        return newly_open
+
+    def record_success(self) -> None:
+        self.failures = 0
+        self._opened_t = None
+
+    def state(self) -> dict:
+        return {"open": self.open, "failures": self.failures,
+                "trips": self.trips}
 
 
 def make_fleet_summary_payload(*, source: str, requests: int,
@@ -812,7 +897,12 @@ class ZygoteFleet:
                  reports: Optional[dict[str, OptimizationReport]] = None,
                  timeout_s: float = 180.0,
                  shared_base: bool = False,
-                 base_min_apps: int = 2) -> None:
+                 base_min_apps: int = 2,
+                 fault_hook=None,
+                 breaker: Optional[BreakerConfig] = None,
+                 boot_backoff_s: float = 0.5,
+                 revive_on_dispatch: bool = False,
+                 clock=time.monotonic) -> None:
         from repro.api.artifacts import as_report
         self.app_dirs = dict(apps)
         self.budget_mb = budget_mb
@@ -822,11 +912,34 @@ class ZygoteFleet:
         self.timeout_s = timeout_s
         self.shared_base = shared_base
         self.base_min_apps = base_min_apps
+        # chaos hook (repro.pool.chaos), forwarded to every zygote;
+        # None keeps every path exactly as before
+        self.fault_hook = fault_hook
+        # crash-recovery hardening: zygote boots back off exponentially
+        # in the ForkServer; the per-app breaker demotes a flapping app
+        # to cold-path-only after breaker.max_failures boot failures
+        self.breaker_cfg = breaker or BreakerConfig()
+        self.boot_backoff_s = boot_backoff_s
+        # opt-in: let dispatch() attempt one (backoff-gated) zygote
+        # restart when it finds the zygote dead, instead of waiting for
+        # the next rewarm tick.  Off by default: the historical
+        # contract is dead zygote -> cold start, rewarm revives.
+        self.revive_on_dispatch = revive_on_dispatch
+        self._clock = clock
+        self.breakers: dict[str, CircuitBreaker] = {
+            app: CircuitBreaker(self.breaker_cfg, clock=clock)
+            for app in self.app_dirs}
+        self.recoveries: dict[str, int] = {
+            "zygote_restarts": 0, "base_reboots": 0,
+            "breaker_trips": 0}
         self.base: Optional[BaseZygote] = None
         self.shared: Optional[SharedHotSet] = None
         self.base_swaps = 0
         self.servers: dict[str, ForkServer] = {}
         self.skipped: list[str] = []
+        # apps whose zygote failed to boot in start(); they serve cold
+        # until a rewarm/dispatch revive gets them a warm zygote
+        self.boot_failed: list[str] = []
         self.last_summary: Optional[dict] = None
         self.dispatches: dict[str, dict[str, int]] = {
             app: {"pool": 0, "cold": 0, "fallback": 0}
@@ -852,17 +965,29 @@ class ZygoteFleet:
             return None
         if self.base is not None and self.base.alive:
             return self.base
+        reboot = self.base is not None  # crashed, not first boot
         self.shared = self._compute_shared()
         base = self.base or BaseZygote(
             preload=self.shared.modules,
             search_paths=shared_search_paths(self.app_dirs),
-            timeout_s=self.timeout_s)
+            timeout_s=self.timeout_s, fault_hook=self.fault_hook,
+            boot_backoff_s=self.boot_backoff_s, clock=self._clock)
+        # restart goes through the ForkServer boot-backoff gate, so a
+        # base that keeps dying cannot hot-loop interpreter boots —
+        # ForkServerBackoff propagates and the caller serves cold
         base.restart(preload=self.shared.modules)
         self.base = base
+        if reboot:
+            self.recoveries["base_reboots"] += 1
         return base
 
     def start(self) -> dict:
-        self.ensure_base()
+        try:
+            self.ensure_base()
+        except ForkServerError:
+            # no base: per-app zygotes boot standalone (base=None) and
+            # ensure_base() retries on the next dispatch/rewarm
+            pass
         budget_full = False
         for app, app_dir in self.app_dirs.items():
             if budget_full or (self.budget_mb is not None
@@ -870,8 +995,20 @@ class ZygoteFleet:
                 self.skipped.append(app)
                 continue
             fs = ForkServer(app_dir, preload=self._app_preload(app),
-                            timeout_s=self.timeout_s, base=self.base)
-            fs.start()
+                            timeout_s=self.timeout_s, base=self.base,
+                            fault_hook=self.fault_hook,
+                            boot_backoff_s=self.boot_backoff_s,
+                            clock=self._clock)
+            try:
+                fs.start()
+            except ForkServerError as exc:
+                # a zygote that cannot boot must not take the whole
+                # fleet down: record breaker evidence, register the
+                # (dead) server so dispatch()/rewarm() retry it
+                # through the backoff gate, and serve the app cold
+                # meanwhile.  Dead zygotes charge no budget memory.
+                self._record_boot_failure(app, exc)
+                self.boot_failed.append(app)
             self.servers[app] = fs
             if self.budget_mb is not None and self.used_mb() > \
                     self.budget_mb:
@@ -883,10 +1020,14 @@ class ZygoteFleet:
                 del self.servers[app]
                 self.skipped.append(app)
                 budget_full = True
-        return {"zygotes": sorted(self.servers),
+        boot = {"zygotes": sorted(a for a, fs in self.servers.items()
+                                  if fs.alive),
                 "skipped": list(self.skipped),
                 "used_mb": round(self.used_mb(), 1),
                 **self._base_info()}
+        if self.boot_failed:
+            boot["boot_failed"] = list(self.boot_failed)
+        return boot
 
     def _base_info(self) -> dict:
         if not self.shared_base:
@@ -958,9 +1099,30 @@ class ZygoteFleet:
         from repro.obs.tracing import get_tracer
         tracer = get_tracer()
         with tracer.span("dispatch", ctx=trace, app=app) as sp:
+            if self.fault_hook is not None:
+                # chaos site "dispatch": base-zygote kills land here,
+                # mid-burst, independent of any one app's protocol
+                self.fault_hook("dispatch", app=app, base=self.base)
+            if self.revive_on_dispatch and self.shared_base \
+                    and self.base is not None and not self.base.alive:
+                # the shared base died (chaos kill, OOM): app zygotes
+                # survive their parent, but respawns need a live base —
+                # reboot it now rather than on the next zygote crash
+                try:
+                    self.ensure_base()
+                except ForkServerError:
+                    pass  # gated/failed: retried on a later dispatch
             fs = self.servers.get(app)
+            br = self.breakers.get(app)
+            degraded = br is not None and br.open
             fallback = False
-            if fs is not None and fs.alive:
+            if degraded:
+                sp.set("degraded", "crash_loop")
+            elif fs is not None and not fs.alive \
+                    and self.revive_on_dispatch:
+                self._try_revive(app, fs)
+                degraded = br is not None and br.open
+            if not degraded and fs is not None and fs.alive:
                 try:
                     m = fs.exec(invocations=invocations, handler=handler,
                                 seed=seed, trace=sp.ctx())
@@ -968,22 +1130,84 @@ class ZygoteFleet:
                     self.dispatches[app]["pool"] += 1
                     sp.set("path", "pool")
                     _m_dispatches(app, "pool")
+                    if br is not None:
+                        br.record_success()
                     return {**m, "path": "pool", "fallback": False}
+                except ForkServerTimeout:
+                    # wedged handler: the zygote was already killed;
+                    # retrying the same request cold would likely wedge
+                    # again, so it sheds upward ("timeout" reason)
+                    sp.set("path", "timeout")
+                    _m_dispatches(app, "timeout")
+                    raise
                 except ForkServerError:
                     fallback = True
                     self.dispatches[app]["fallback"] += 1
                     _m_dispatches(app, "fallback")
             from repro.benchsuite.harness import run_instance
-            with tracer.span("cold_start", ctx=sp.ctx(), app=app,
-                             subprocess=True):
-                m = run_instance(self.app_dirs[app],
-                                 invocations=invocations,
-                                 handler=handler, seed=seed,
-                                 timeout_s=self.timeout_s)
+            try:
+                with tracer.span("cold_start", ctx=sp.ctx(), app=app,
+                                 subprocess=True):
+                    if self.fault_hook is not None:
+                        self.fault_hook("cold_start", app=app)
+                    m = run_instance(self.app_dirs[app],
+                                     invocations=invocations,
+                                     handler=handler, seed=seed,
+                                     timeout_s=self.timeout_s)
+            except Exception as exc:
+                if degraded:
+                    # circuit-broken AND the cold fallback failed:
+                    # nowhere left to serve this request from
+                    sp.set("path", "crash_loop")
+                    _m_dispatches(app, "crash_loop")
+                    raise CrashLoopShed(
+                        f"app {app!r} is circuit-broken after "
+                        f"{br.failures} zygote boot failures and its "
+                        f"cold start failed: {exc}") from exc
+                raise
             self.dispatches[app]["cold"] += 1
             sp.set("path", "cold")
             _m_dispatches(app, "cold")
-            return {**m, "path": "cold", "fallback": fallback}
+            out = {**m, "path": "cold", "fallback": fallback}
+            if degraded:
+                out["degraded"] = "crash_loop"
+                _m_degraded(app, "crash_loop")
+            return out
+
+    def _try_revive(self, app: str, fs: ForkServer) -> bool:
+        """One bounded crash-recovery attempt on the dispatch path
+        (``revive_on_dispatch=True`` only).  Never raises: a gated or
+        failed boot just means this request serves cold.  Genuine boot
+        failures feed the app's circuit breaker; ``ForkServerBackoff``
+        does not (it is the gate working, not new evidence)."""
+        br = self.breakers.get(app)
+        try:
+            if self.shared_base:
+                self.ensure_base()  # re-fork needs a live parent
+                fs.base = self.base
+            fs.restart(preload=self._app_preload(app))
+        except ForkServerBackoff:
+            return False
+        except ForkServerError as exc:
+            self._record_boot_failure(app, exc)
+            return False
+        self.recoveries["zygote_restarts"] += 1
+        if br is not None:
+            br.record_success()
+        return True
+
+    def _record_boot_failure(self, app: str, exc: Exception) -> None:
+        br = self.breakers.get(app)
+        if br is None:
+            return
+        if br.record_failure():
+            self.recoveries["breaker_trips"] += 1
+            from repro.obs.metrics import default_registry
+            default_registry().counter(
+                "repro_breaker_trips_total",
+                "per-app circuit-breaker trips (app demoted to "
+                "cold-path-only after consecutive zygote boot "
+                "failures)", labels=("app",)).labels(app=app).inc()
 
     def replay(self, trace: Trace, *, limit: Optional[int] = None,
                seed0: int = 500) -> list[dict]:
@@ -1093,13 +1317,33 @@ class ZygoteFleet:
         if fs is None:
             return {"ok": True, "app": app, "skipped": True,
                     "preloaded": [], "errors": []}
+        br = self.breakers.get(app)
+        if br is not None and br.open:
+            # circuit-broken: don't burn a boot attempt every tick —
+            # the half-open probe after cooldown_s retries for us
+            return {"ok": False, "app": app, "skipped": True,
+                    "degraded": "crash_loop",
+                    "error": f"breaker open after {br.failures} "
+                             f"consecutive boot failures"}
         # two-tier crash recovery: a dead zygote re-forks from the
         # base, and a dead *base* is rebooted first so the re-fork has
         # a parent to come from
-        if self.shared_base and not fs.alive:
-            self.ensure_base()
-            fs.base = self.base
-        out = fs.rewarm(report)
+        was_dead = not fs.alive
+        try:
+            if self.shared_base and was_dead:
+                self.ensure_base()
+                fs.base = self.base
+            out = fs.rewarm(report)
+        except ForkServerBackoff:
+            raise  # gated, not a fresh failure: no breaker evidence
+        except ForkServerError as exc:
+            if was_dead:  # a boot failure, not a preload failure
+                self._record_boot_failure(app, exc)
+            raise
+        if was_dead and out.get("restarted"):
+            self.recoveries["zygote_restarts"] += 1
+            if br is not None:
+                br.record_success()
         return {"app": app, "skipped": False, **out}
 
     def rewarm_from_dir(self, reports_dir: str) -> dict:
@@ -1153,15 +1397,21 @@ class ZygoteFleet:
         new_base = BaseZygote(
             preload=fresh.modules,
             search_paths=shared_search_paths(self.app_dirs),
-            timeout_s=self.timeout_s)
+            timeout_s=self.timeout_s, fault_hook=self.fault_hook,
+            boot_backoff_s=self.boot_backoff_s, clock=self._clock)
         new_base.start()
+        if base_dead:
+            self.recoveries["base_reboots"] += 1
         self.shared = fresh
         errors: dict[str, str] = {}
         for app, fs in self.servers.items():
             try:
                 fs.rebase(new_base, preload=self._app_preload(app))
+            except ForkServerBackoff as exc:
+                errors[app] = str(exc)  # gated: retry next tick
             except ForkServerError as exc:
                 errors[app] = str(exc)
+                self._record_boot_failure(app, exc)
         self.base = new_base
         self.base_swaps += 1
         from repro.obs.metrics import default_registry

@@ -427,6 +427,20 @@ class ForkServerError(RuntimeError):
     pass
 
 
+class ForkServerTimeout(ForkServerError):
+    """The zygote did not reply within ``timeout_s`` (a wedged handler
+    fork); the client killed it.  Distinct from a plain
+    :class:`ForkServerError` because retrying the same request cold
+    would likely wedge again — callers shed it instead (the daemon's
+    ``timeout`` shed reason)."""
+
+
+class ForkServerBackoff(ForkServerError):
+    """A zygote boot was suppressed by the exponential-backoff gate
+    after consecutive boot failures.  Not evidence of a new failure —
+    callers should serve the request cold and retry the boot later."""
+
+
 def _pid_alive(pid: Optional[int]) -> bool:
     if not pid:
         return False
@@ -456,11 +470,27 @@ class ForkServer:
 
     def __init__(self, app_dir: str, *, preload: Sequence[str] = (),
                  timeout_s: float = 120.0,
-                 base: Optional["BaseZygote"] = None) -> None:
+                 base: Optional["BaseZygote"] = None,
+                 fault_hook=None,
+                 boot_backoff_s: float = 0.5,
+                 boot_backoff_max_s: float = 30.0,
+                 clock=time.monotonic) -> None:
         self.app_dir = os.path.abspath(app_dir)
         self.preload_modules = list(preload)
         self.timeout_s = timeout_s
         self.base = base
+        # chaos hook (repro.pool.chaos): called before every protocol
+        # write; None (the default) keeps the serving path unchanged
+        self.fault_hook = fault_hook
+        # boot backoff gate: consecutive boot failures push the next
+        # allowed attempt out exponentially, so a persistently-crashing
+        # zygote cannot hot-loop interpreter boots.  clock is injectable
+        # so tests can drive the gate without sleeping.
+        self.boot_backoff_s = boot_backoff_s
+        self.boot_backoff_max_s = boot_backoff_max_s
+        self.boot_failures = 0
+        self._next_boot_t = 0.0
+        self._clock = clock
         self.proc: Optional[subprocess.Popen] = None
         self._stderr_file = None
         # shared-base transport state
@@ -507,6 +537,27 @@ class ForkServer:
     def _start_locked(self) -> dict:
         if self.alive:
             return self.ready
+        now = self._clock()
+        if now < self._next_boot_t:
+            raise ForkServerBackoff(
+                f"zygote boot for "
+                f"{os.path.basename(self.app_dir) or 'base'!r} gated "
+                f"for {self._next_boot_t - now:.2f}s more after "
+                f"{self.boot_failures} consecutive boot failures")
+        try:
+            ready = self._boot_locked()
+        except Exception:
+            self.boot_failures += 1
+            delay = min(
+                self.boot_backoff_s * (2 ** (self.boot_failures - 1)),
+                self.boot_backoff_max_s)
+            self._next_boot_t = self._clock() + delay
+            raise
+        self.boot_failures = 0
+        self._next_boot_t = 0.0
+        return ready
+
+    def _boot_locked(self) -> dict:
         if self.proc is not None or self._sock is not None:
             self._stop_locked()  # zygote died behind our back: clean up
         t0 = time.perf_counter()
@@ -793,6 +844,14 @@ class ForkServer:
 
     def _request(self, obj: dict) -> dict:
         with self._lock:
+            if self.fault_hook is not None:
+                # chaos site "protocol": may kill/stop the zygote pid
+                # or raise before the write, so the request/reply
+                # stream itself is never left half-written
+                self.fault_hook(
+                    "protocol",
+                    app=os.path.basename(self.app_dir) or "_base",
+                    op=obj.get("cmd"), pid=self.pid, server=self)
             if not self.alive:
                 raise ForkServerError("zygote is not running")
             w = self._writer()
@@ -814,7 +873,7 @@ class ForkServer:
         ready, _, _ = select.select([reader], [], [], self.timeout_s)
         if not ready:
             self._kill_unresponsive()
-            raise ForkServerError(
+            raise ForkServerTimeout(
                 f"zygote unresponsive after {self.timeout_s}s "
                 f"(hung forked instance?); killed")
         line = reader.readline()
@@ -851,9 +910,16 @@ class BaseZygote(ForkServer):
 
     def __init__(self, *, preload: Sequence[str] = (),
                  search_paths: Sequence[str] = (),
-                 timeout_s: float = 120.0) -> None:
+                 timeout_s: float = 120.0,
+                 fault_hook=None,
+                 boot_backoff_s: float = 0.5,
+                 boot_backoff_max_s: float = 30.0,
+                 clock=time.monotonic) -> None:
         super().__init__(os.getcwd(), preload=preload,
-                         timeout_s=timeout_s)
+                         timeout_s=timeout_s, fault_hook=fault_hook,
+                         boot_backoff_s=boot_backoff_s,
+                         boot_backoff_max_s=boot_backoff_max_s,
+                         clock=clock)
         self.app_dir = ""  # the base serves the fleet, not one app
         self.search_paths = [os.path.abspath(p) for p in search_paths]
         self._rundir: Optional[str] = None
@@ -886,6 +952,14 @@ class BaseZygote(ForkServer):
         caller to connect to.  Raises :class:`ForkServerError` when the
         base is down or the delta import crashed the child."""
         with self._lock:
+            if self.fault_hook is not None:
+                # chaos site "spawn_app": injected boot failures land
+                # here, *named for the app being spawned* (the
+                # protocol-site hook below sees the base)
+                self.fault_hook(
+                    "spawn_app",
+                    app=os.path.basename(app_dir.rstrip(os.sep)),
+                    base=self)
             if not self.alive:
                 raise ForkServerError("base zygote is not running")
             self._spawn_seq += 1

@@ -319,11 +319,15 @@ class EnginePool:
 
     def __init__(self, builders: dict[str, Callable[[], "ServingEngine"]],
                  *, max_warm: int = 2,
-                 queue_depth: Optional[int] = None) -> None:
+                 queue_depth: Optional[int] = None,
+                 fault_hook=None) -> None:
         if max_warm < 1:
             raise ValueError("max_warm must be >= 1")
         if queue_depth is not None and queue_depth < 0:
             raise ValueError("queue_depth must be >= 0")
+        # chaos hook (repro.pool.chaos), called at the engine cold-start
+        # site; None (default) leaves dispatch untouched
+        self.fault_hook = fault_hook
         self.builders = dict(builders)
         self.max_warm = max_warm
         self.queue_depth = queue_depth
@@ -380,6 +384,8 @@ class EnginePool:
             return out, lat, "warm"
         self.misses += 1
         with get_tracer().span("cold_start", ctx=_ctx, model=model):
+            if self.fault_hook is not None:
+                self.fault_hook("cold_start", app=model)
             eng = self.builders[model]()
             cold_s = eng.cold_start()
         self._admit(model, eng)
@@ -426,6 +432,8 @@ class EnginePool:
                 try:
                     with get_tracer().span("cold_start", ctx=_ctx,
                                            model=model):
+                        if self.fault_hook is not None:
+                            self.fault_hook("cold_start", app=model)
                         eng = self.builders[model]()
                         cold_s = eng.cold_start()
                     with self._lock:

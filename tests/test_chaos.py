@@ -1,0 +1,631 @@
+"""Chaos tier: seeded fault injection across the zygote serving path.
+
+Fast tier: FaultEvent/FaultPlan semantics, injector matching, the
+boot-backoff gate, the per-app circuit breaker, worker shed
+classification, drain/finish abandonment accounting, and the bounded
+rewarm-failure ring — all in-process (``simulate=True`` swaps signals
+for exceptions, so no zygote boots).  A hypothesis property drives
+arbitrary plans through a stub fleet and asserts the conservation
+invariant ``requests == served + sheds + flushed + errors + abandoned``
+always holds.
+
+Slow tier: the canonical crash storm over a real ZygoteFleet (app +
+base zygote kills, a wedged handler, circuit-breaker demotion), a base
+hot-swap under dispatch burst, and ``repro fleet replay --real
+--chaos`` killed with SIGTERM mid-storm.
+"""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # CI image without hypothesis: skip sweeps only
+    st = None
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            def skipper():
+                pytest.skip("hypothesis not installed")
+            skipper.__name__ = fn.__name__
+            return skipper
+        return deco
+
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+from repro.api import load_chaos_report, save_chaos_report
+from repro.pool import (
+    BreakerConfig,
+    CircuitBreaker,
+    CrashLoopShed,
+    FaultEvent,
+    FaultInjector,
+    FaultPlan,
+    FleetDaemon,
+    ForkServerBackoff,
+    ForkServerError,
+    ForkServerTimeout,
+    QueueConfig,
+    RealFleetBackend,
+    Request,
+    Trace,
+    chaos_report_payload,
+)
+from repro.pool.chaos import FAULT_KINDS
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+
+# ---------------------------------------------------------------------------
+# FaultEvent / FaultPlan
+# ---------------------------------------------------------------------------
+
+def test_fault_event_validation_and_defaults():
+    ev = FaultEvent("kill_app_zygote", at=2, app="a")
+    assert ev.site == "protocol" and ev.op_filter == "exec"
+    assert FaultEvent("fail_spawn").op_filter is None
+    # explicit op overrides the kind default
+    assert FaultEvent("socket_eof", op="preload").op_filter == "preload"
+    with pytest.raises(ValueError):
+        FaultEvent("no_such_kind")
+    with pytest.raises(ValueError):
+        FaultEvent("socket_eof", at=-1)
+    with pytest.raises(ValueError):
+        FaultEvent("socket_eof", count=0)
+    with pytest.raises(ValueError):
+        FaultEvent("socket_eof", count=-2)
+    with pytest.raises(ValueError):
+        FaultEvent("delay_import", delay_s=-0.1)
+
+
+def test_fault_plan_round_trip_and_determinism(tmp_path):
+    plan = FaultPlan.generate(42, ["a", "b"])
+    again = FaultPlan.generate(42, ["a", "b"])
+    assert plan.events == again.events  # same seed, same plan
+    assert plan.events != FaultPlan.generate(43, ["a", "b"]).events
+
+    path = str(tmp_path / "plan.json")
+    plan.save(path)
+    loaded = FaultPlan.load(path)
+    assert loaded.events == plan.events and loaded.seed == 42
+
+    # a bare JSON list of events is accepted (hand-written plans)
+    bare = str(tmp_path / "bare.json")
+    with open(bare, "w") as fh:
+        json.dump([{"kind": "socket_eof", "at": 1}], fh)
+    assert FaultPlan.load(bare).events == [FaultEvent("socket_eof", at=1)]
+
+    storm = FaultPlan.storm(["a", "b"], seed=5)
+    assert storm.events == FaultPlan.storm(["a", "b"], seed=5).events
+    kinds = [ev.kind for ev in storm.events]
+    assert "kill_app_zygote" in kinds and "kill_base_zygote" in kinds
+    assert "wedge_handler" in kinds and "fail_spawn" in kinds
+
+
+def test_injector_matching_at_count_app_op():
+    plan = FaultPlan(events=[
+        FaultEvent("socket_eof", at=1, app="a", count=2),
+        FaultEvent("fail_preload", at=0, app="b"),
+    ])
+    inj = FaultInjector(plan, simulate=True)
+    # occurrence 0 for app a: before `at`, no fire
+    inj("protocol", app="a", op="exec")
+    # app filter: b's exec traffic never matches a's event
+    inj("protocol", app="b", op="exec")
+    # op filter: a preload on app a is not an exec occurrence
+    inj("protocol", app="a", op="preload")
+    # occurrences 1 and 2: fire twice (count=2) ...
+    for _ in range(2):
+        with pytest.raises(ForkServerError):
+            inj("protocol", app="a", op="exec")
+    # ... then the event is exhausted
+    inj("protocol", app="a", op="exec")
+    with pytest.raises(ForkServerError):
+        inj("protocol", app="b", op="preload")
+    assert inj.counts() == {"socket_eof": 2, "fail_preload": 1}
+    assert inj.pending() == []
+    occ = [r["occurrence"] for r in inj.injected
+           if r["kind"] == "socket_eof"]
+    assert occ == [1, 2]
+
+
+def test_injector_simulated_exception_taxonomy():
+    def fire(kind, site, **ctx):
+        inj = FaultInjector(FaultPlan(events=[FaultEvent(kind)]),
+                            simulate=True)
+        inj(site, **ctx)
+
+    with pytest.raises(ForkServerTimeout):
+        fire("wedge_handler", "protocol", app="a", op="exec")
+    with pytest.raises(ForkServerError) as ei:
+        fire("socket_oserror", "protocol", app="a", op="exec")
+    assert isinstance(ei.value.__cause__, OSError)
+    with pytest.raises(ForkServerError):
+        fire("kill_app_zygote", "protocol", app="a", op="exec")
+    with pytest.raises(ForkServerError):
+        fire("fail_spawn", "spawn_app", app="a")
+    with pytest.raises(RuntimeError):
+        fire("fail_cold", "cold_start", app="a")
+    with pytest.raises(RuntimeError):
+        fire("fail_rewarm", "rewarm", app="_tick")
+    # kill_base in simulate mode is a no-op (nothing to kill)
+    fire("kill_base_zygote", "dispatch", app="a", base=None)
+    # delay_import sleeps, never raises
+    t0 = time.monotonic()
+    inj = FaultInjector(FaultPlan(events=[
+        FaultEvent("delay_import", delay_s=0.05)]), simulate=True)
+    inj("protocol", app="a", op="preload")
+    assert time.monotonic() - t0 >= 0.05
+
+
+def test_injector_pending_reports_unfired_events():
+    plan = FaultPlan(events=[
+        FaultEvent("socket_eof", at=9, app="a"),
+        FaultEvent("fail_cold", at=0, app="b", count=-1),
+    ])
+    inj = FaultInjector(plan, simulate=True)
+    pend = inj.pending()
+    assert {p["kind"] for p in pend} == {"socket_eof", "fail_cold"}
+    with pytest.raises(RuntimeError):
+        inj("cold_start", app="b")
+    # the unlimited event fired once: no longer pending
+    assert [p["kind"] for p in inj.pending()] == ["socket_eof"]
+
+
+# ---------------------------------------------------------------------------
+# boot-backoff gate + circuit breaker (fake clocks, no processes)
+# ---------------------------------------------------------------------------
+
+def test_forkserver_boot_backoff_gate(tmp_path):
+    from repro.pool.forkserver import ForkServer
+    now = [0.0]
+    fs = ForkServer(str(tmp_path), boot_backoff_s=1.0,
+                    boot_backoff_max_s=4.0, clock=lambda: now[0])
+    boom = {"n": 0}
+
+    def bad_boot():
+        boom["n"] += 1
+        raise ForkServerError("no boot for you")
+
+    fs._boot_locked = bad_boot
+    with pytest.raises(ForkServerError):
+        fs.start()
+    assert fs.boot_failures == 1
+    # inside the window: gated, no boot attempt burned
+    with pytest.raises(ForkServerBackoff):
+        fs.start()
+    assert boom["n"] == 1
+    # past the window: a real attempt, which doubles the backoff
+    now[0] = 1.1
+    with pytest.raises(ForkServerError):
+        fs.start()
+    assert fs.boot_failures == 2 and boom["n"] == 2
+    now[0] = 2.0  # 1.1 + 2.0 > 2.0: still gated
+    with pytest.raises(ForkServerBackoff):
+        fs.start()
+    # the exponential backoff is capped at boot_backoff_max_s
+    now[0] = 100.0
+    with pytest.raises(ForkServerError):
+        fs.start()
+    assert fs.boot_failures == 3
+    assert fs._next_boot_t <= 100.0 + 4.0
+    # a successful boot resets the gate
+    fs._boot_locked = lambda: {"ok": True}
+    now[0] = 200.0
+    fs.start()
+    assert fs.boot_failures == 0 and fs._next_boot_t == 0.0
+
+
+def test_circuit_breaker_opens_cools_down_and_resets():
+    now = [0.0]
+    br = CircuitBreaker(BreakerConfig(max_failures=2, cooldown_s=10.0),
+                        clock=lambda: now[0])
+    assert not br.open
+    assert br.record_failure() is False  # 1/2: not yet
+    assert br.record_failure() is True   # newly open
+    assert br.open and br.trips == 1
+    assert br.record_failure() is False  # already open: not "newly"
+    # cooldown elapses: half-open (closed for one probe attempt)
+    now[0] = 11.0
+    assert not br.open
+    # the probe fails: re-opens without double-counting the trip
+    assert br.record_failure() is True
+    assert br.trips == 2
+    now[0] = 22.0
+    br.record_success()
+    assert not br.open and br.failures == 0
+    state = br.state()
+    assert state["open"] is False and state["trips"] == 2
+
+    with pytest.raises(ValueError):
+        BreakerConfig(max_failures=0)
+    with pytest.raises(ValueError):
+        BreakerConfig(cooldown_s=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# daemon integration over a stub fleet (no subprocesses)
+# ---------------------------------------------------------------------------
+
+class _StubFleet:
+    """Duck-typed ZygoteFleet: enough surface for RealFleetBackend.
+    ``dispatch`` delegates to a per-test callable."""
+
+    def __init__(self, apps, dispatch):
+        self.app_dirs = {a: "." for a in apps}
+        self._dispatch = dispatch
+        self.shared_base = False
+        self.budget_mb = None
+        self.servers = {}
+        self.skipped = []
+
+    def start(self):
+        return {"zygotes": [], "skipped": []}
+
+    def stop(self):
+        pass
+
+    def used_mb(self):
+        return 0.0
+
+    def _base_info(self):
+        return {}
+
+    def rewarm_from_dir(self, d):
+        return {}
+
+    def dispatch(self, app, **kw):
+        return self._dispatch(app, **kw)
+
+
+def _drain_conservation(payload):
+    return payload["requests"] == (
+        payload["served"] + payload["sheds"] + payload["flushed"]
+        + payload["errors"] + payload["abandoned"])
+
+
+def test_worker_classifies_timeout_and_crash_loop_as_sheds():
+    def dispatch(app, **kw):
+        if app == "t":
+            raise ForkServerTimeout("wedged")
+        if app == "c":
+            raise CrashLoopShed("circuit-broken and cold failed")
+        if app == "e":
+            raise RuntimeError("plain dispatch failure")
+        return {"path": "pool", "init_ms": 1.0, "e2e_cold_ms": 2.0}
+
+    be = RealFleetBackend(_StubFleet(["t", "c", "e", "ok"], dispatch),
+                          queue=QueueConfig(depth=8))
+    d = FleetDaemon(be)
+    d.start("classify")
+    for app in ("t", "c", "e", "ok"):
+        assert d.submit(Request(0.0, app)) == "queued"
+    payload = d.shutdown(flush=False)
+    per = {r["app"]: r for r in payload["per_app"]}
+    assert per["t"]["shed_reasons"] == {"timeout": 1}
+    assert per["c"]["shed_reasons"] == {"crash_loop": 1}
+    assert per["e"]["errors"] == 1 and per["e"]["sheds"] == 0
+    assert per["ok"]["pool_starts"] == 1
+    assert payload["shed_reasons"] == {"timeout": 1, "crash_loop": 1}
+    assert payload["errors"] == 1 and payload["served"] == 1
+    assert _drain_conservation(payload)
+
+
+def test_worker_counts_degraded_cold_serves():
+    def dispatch(app, **kw):
+        return {"path": "cold", "init_ms": 1.0, "e2e_cold_ms": 2.0,
+                "degraded": "crash_loop"}
+
+    be = RealFleetBackend(_StubFleet(["a"], dispatch),
+                          queue=QueueConfig(depth=8))
+    d = FleetDaemon(be)
+    d.start("degraded")
+    assert d.submit(Request(0.0, "a")) == "queued"
+    payload = d.shutdown(flush=False)
+    assert payload["degraded"] == 1
+    assert payload["degrade_reasons"] == {"crash_loop": 1}
+    row = payload["per_app"][0]
+    assert row["degraded"] == 1 and row["served" if "served" in row
+                                        else "requests"] >= 1
+    snap_ok = payload["served"] == 1  # degraded serves still count
+    assert snap_ok and _drain_conservation(payload)
+
+
+def test_drain_abandons_stuck_worker_and_blocks_double_count():
+    """The satellite bug: join(timeout) returning with the worker alive
+    used to lose its in-flight request.  It must be counted as
+    abandoned, and the late worker must not also count it."""
+    release = threading.Event()
+
+    def dispatch(app, **kw):
+        release.wait(timeout=30.0)
+        return {"path": "pool", "init_ms": 1.0, "e2e_cold_ms": 2.0}
+
+    be = RealFleetBackend(_StubFleet(["a"], dispatch),
+                          queue=QueueConfig(depth=8))
+    be.start("stuck")
+    assert be.submit(Request(0.0, "a")) == "queued"
+    deadline = time.monotonic() + 5.0
+    with be._cond:
+        while be._in_flight["a"] == 0:
+            assert time.monotonic() < deadline, "worker never dequeued"
+            be._cond.wait(timeout=0.1)
+    gen0 = be._gen
+    # the worker is blocked inside dispatch: drain cannot join it.
+    # Patch the join grace down so the test doesn't wait 5s.
+    orig_join = threading.Thread.join
+    try:
+        threading.Thread.join = lambda self, timeout=None: \
+            orig_join(self, timeout=0.1)
+        be.drain(timeout_s=0.3, flush=False)
+    finally:
+        threading.Thread.join = orig_join
+    assert be._gen == gen0 + 1
+    payload = be.finish()
+    assert payload["abandoned"] == 1
+    assert _drain_conservation(payload)
+    served_before = payload["served"]
+    # let the stuck worker return: its stale-generation request must
+    # not be double-counted as served
+    release.set()
+    time.sleep(0.3)
+    payload2 = be.finish()
+    assert payload2["served"] == served_before
+    assert payload2["abandoned"] == 1
+
+
+def test_finish_without_drain_accounts_in_flight_as_abandoned():
+    started = threading.Event()
+    release = threading.Event()
+
+    def dispatch(app, **kw):
+        started.set()
+        release.wait(timeout=30.0)
+        return {"path": "pool", "init_ms": 1.0, "e2e_cold_ms": 2.0}
+
+    be = RealFleetBackend(_StubFleet(["a"], dispatch),
+                          queue=QueueConfig(depth=8))
+    be.start("inflight")
+    be.submit(Request(0.0, "a"))
+    assert started.wait(timeout=5.0)
+    payload = be.finish()  # no drain: the dispatch is still running
+    assert payload["abandoned"] == 1 and _drain_conservation(payload)
+    release.set()
+
+
+def test_rewarm_tick_failures_are_bounded_and_counted():
+    be = RealFleetBackend(_StubFleet(["a"], lambda app, **kw: {}),
+                          queue=QueueConfig(depth=4))
+
+    def bad_rewarm():
+        raise RuntimeError("rewarm exploded")
+
+    d = FleetDaemon(be, rewarm_fn=bad_rewarm)
+    for _ in range(FleetDaemon.MAX_REWARM_ERRORS + 25):
+        out = d.rewarm_now()
+        assert out["ok"] is False
+    assert len(d.rewarm_errors) == FleetDaemon.MAX_REWARM_ERRORS
+    assert d.rewarm_ticks == 0
+    assert d.rewarm_errors[-1].startswith("_tick: ")
+
+    # per-app {"ok": False} results inside a successful tick count too
+    d2 = FleetDaemon(be, rewarm_fn=lambda: {
+        "a": {"ok": False, "error": "preload failed"},
+        "b": {"ok": True}})
+    out = d2.rewarm_now()
+    assert d2.rewarm_ticks == 1
+    assert d2.rewarm_errors == ["a: preload failed"]
+
+
+def test_fault_hook_injects_rewarm_tick_failure():
+    be = RealFleetBackend(_StubFleet(["a"], lambda app, **kw: {}),
+                          queue=QueueConfig(depth=4))
+    inj = FaultInjector(FaultPlan(events=[
+        FaultEvent("fail_rewarm", at=1)]), simulate=True)
+    d = FleetDaemon(be, rewarm_fn=lambda: {"ok": True}, fault_hook=inj)
+    assert d.rewarm_now().get("ok") is True     # tick 0: clean
+    assert d.rewarm_now()["ok"] is False        # tick 1: injected
+    assert d.rewarm_now().get("ok") is True     # timer keeps ticking
+    assert d.rewarm_ticks == 2
+    assert len(d.rewarm_errors) == 1
+
+
+def test_chaos_report_artifact_round_trip(tmp_path):
+    plan = FaultPlan(events=[FaultEvent("socket_eof", app="a")], seed=9)
+    inj = FaultInjector(plan, simulate=True)
+    with pytest.raises(ForkServerError):
+        inj("protocol", app="a", op="exec")
+    summary = {"requests": 3, "served": 1, "sheds": 1, "flushed": 1,
+               "errors": 0, "abandoned": 0}
+    payload = chaos_report_payload(inj, summary=summary,
+                                   recoveries={"zygote_restarts": 2})
+    assert payload["invariant"]["holds"] is True
+    path = str(tmp_path / "chaos.json")
+    save_chaos_report(payload, path)
+    loaded = load_chaos_report(path)
+    assert loaded["seed"] == 9
+    assert loaded["recoveries"] == {"zygote_restarts": 2}
+    assert loaded["injected_by_kind"] == {"socket_eof": 1}
+
+    # a lossy summary is caught, not papered over
+    bad = chaos_report_payload(inj, summary={**summary, "served": 0})
+    assert bad["invariant"]["holds"] is False
+
+
+# ---------------------------------------------------------------------------
+# property: any plan preserves request conservation
+# ---------------------------------------------------------------------------
+
+_EVENTS = st.builds(
+    FaultEvent,
+    kind=st.sampled_from(FAULT_KINDS),
+    at=st.integers(min_value=0, max_value=3),
+    app=st.sampled_from(["a", "b", "*"]),
+    count=st.sampled_from([1, 2, -1]),
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(events=st.lists(_EVENTS, min_size=0, max_size=6),
+       n_requests=st.integers(min_value=1, max_value=12))
+def test_any_fault_plan_preserves_request_conservation(events,
+                                                       n_requests):
+    inj = FaultInjector(FaultPlan(events=list(events)), simulate=True)
+
+    def dispatch(app, **kw):
+        # mirror the real fleet's hook traversal: dispatch site, then
+        # the zygote protocol, falling back to a cold start on zygote
+        # failure — exactly the surfaces the injector targets
+        inj("dispatch", app=app, base=None)
+        try:
+            inj("protocol", app=app, op="exec", pid=None)
+            return {"path": "pool", "init_ms": 1.0, "e2e_cold_ms": 2.0}
+        except ForkServerTimeout:
+            raise
+        except ForkServerError:
+            inj("cold_start", app=app)
+            return {"path": "cold", "init_ms": 5.0, "e2e_cold_ms": 9.0}
+
+    be = RealFleetBackend(_StubFleet(["a", "b"], dispatch),
+                          queue=QueueConfig(depth=3))
+    d = FleetDaemon(be)
+    d.start("property")
+    reqs = [Request(t=i * 0.01, app=("a" if i % 2 else "b"))
+            for i in range(n_requests)]
+    payload = d.run_trace(Trace("prop", reqs, duration_s=1.0))
+    assert payload["requests"] == n_requests
+    assert _drain_conservation(payload)
+    report = chaos_report_payload(inj, summary=payload)
+    assert report["invariant"]["holds"] is True
+
+
+# ---------------------------------------------------------------------------
+# slow tier: real zygotes under the storm
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def suite_root():
+    from repro.benchsuite.genlibs import build_suite
+    return build_suite()
+
+
+@pytest.mark.slow
+def test_crash_storm_replay_conserves_and_recovers(suite_root,
+                                                   tmp_path):
+    """The acceptance scenario: a seeded storm (app zygote kill with
+    every respawn/cold start failing, a wedged handler, a base kill
+    mid-burst) must finish with conservation intact, ``crash_loop``
+    and ``timeout`` shed reasons recorded, the breaker tripped, and
+    the base rebooted."""
+    from repro.pool import ZygoteFleet
+    apps = {name: os.path.join(suite_root, "apps", name)
+            for name in ["echo", "json_transform"]}
+    plan = FaultPlan.storm(["echo", "json_transform"], seed=7)
+    inj = FaultInjector(plan)
+    fleet = ZygoteFleet(
+        apps, shared_base=True, fault_hook=inj,
+        breaker=BreakerConfig(max_failures=2, cooldown_s=60.0),
+        boot_backoff_s=0.05, revive_on_dispatch=True, timeout_s=5.0)
+    be = RealFleetBackend(fleet, queue=QueueConfig(depth=16))
+    d = FleetDaemon(be, fault_hook=inj, drain_timeout_s=30.0)
+    reqs = [Request(t=i * 0.05,
+                    app=("echo" if i % 2 else "json_transform"))
+            for i in range(30)]
+    d.start("storm")
+    payload = d.run_trace(Trace("storm", reqs, duration_s=1.5),
+                          pace=1.0)
+    assert _drain_conservation(payload)
+    per = {r["app"]: r for r in payload["per_app"]}
+    assert per["echo"]["shed_reasons"].get("crash_loop", 0) >= 1
+    assert per["json_transform"]["shed_reasons"].get("timeout", 0) >= 1
+    assert "crash_loop" in payload["shed_reasons"]
+    assert "timeout" in payload["shed_reasons"]
+    assert fleet.recoveries["breaker_trips"] >= 1
+    assert fleet.recoveries["base_reboots"] >= 1
+    assert fleet.breakers["echo"].open
+
+    report = chaos_report_payload(inj, summary=payload,
+                                  recoveries=fleet.recoveries)
+    assert report["invariant"]["holds"] is True
+    path = str(tmp_path / "report.json")
+    save_chaos_report(report, path)
+    assert load_chaos_report(path)["recoveries"]["breaker_trips"] >= 1
+
+
+@pytest.mark.slow
+def test_base_kill_under_burst_reboots_and_keeps_serving(suite_root):
+    """Two-tier fleet: SIGKILLing the shared base mid-burst must not
+    strand dispatches — ensure_base() reboots it and warm serving
+    resumes for freshly revived zygotes."""
+    from repro.pool import ZygoteFleet
+    apps = {name: os.path.join(suite_root, "apps", name)
+            for name in ["echo", "json_transform"]}
+    plan = FaultPlan(events=[FaultEvent("kill_base_zygote", at=2)])
+    inj = FaultInjector(plan)
+    with ZygoteFleet(apps, shared_base=True, fault_hook=inj,
+                     boot_backoff_s=0.05, revive_on_dispatch=True,
+                     timeout_s=30.0) as fleet:
+        served = 0
+        for i in range(8):
+            m = fleet.dispatch("echo" if i % 2 else "json_transform")
+            served += 1
+            assert m["path"] in ("pool", "cold")
+        assert served == 8
+        assert inj.counts().get("kill_base_zygote") == 1
+        # the kill landed, the fleet noticed and rebooted the base
+        assert fleet.recoveries["base_reboots"] >= 1
+        assert fleet.base is not None and fleet.base.alive
+        # warm serving still works post-swap
+        assert fleet.dispatch("echo")["path"] == "pool"
+
+
+@pytest.mark.slow
+def test_chaos_cli_sigterm_mid_storm(suite_root, tmp_path):
+    """SIGTERM during `fleet replay --real --chaos storm` drains
+    gracefully: exit 0, both artifacts written, conservation holds."""
+    out = str(tmp_path / "summary.json")
+    report = str(tmp_path / "chaos.json")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro", "fleet", "replay", "--real",
+         "--root", suite_root, "--shared-base",
+         "--apps", "echo,json_transform", "--minutes", "2",
+         "--peak-rpm", "30", "--chaos", "storm", "--chaos-seed", "7",
+         "--chaos-pace", "1.0", "--boot-backoff-s", "0.05",
+         "--breaker-max-failures", "2", "--dispatch-timeout-s", "5",
+         "--out", out, "--chaos-report", report],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+        env=env)
+    try:
+        time.sleep(12.0)  # let zygotes boot and the storm land
+        proc.send_signal(signal.SIGTERM)
+        stdout, stderr = proc.communicate(timeout=120)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.communicate()
+    assert proc.returncode == 0, (stdout, stderr)
+    loaded = load_chaos_report(report)
+    assert loaded["invariant"]["holds"] is True
+    assert loaded["injected_by_kind"]  # the storm actually landed
+    from repro.api import load_fleet_summary
+    summary = load_fleet_summary(out)
+    assert summary["requests"] == (
+        summary["served"] + summary["sheds"] + summary["flushed"]
+        + summary["errors"] + summary["abandoned"])

@@ -117,6 +117,47 @@ def _tracer_overhead(n: int = 2000, runs: int = 3):
     return off_s, on_s
 
 
+def _fault_hook_overhead(n: int = 4000, runs: int = 3):
+    """Dispatch wall time with the chaos ``fault_hook`` unset vs a
+    no-op hook installed.
+
+    The serving path promises that a disabled hook costs one
+    ``is not None`` check; this measures an EnginePool dispatch loop
+    (every request a cold start, the hook's hottest placement) both
+    ways, min-of-N runs.  Fake duck-typed engines keep the loop pure
+    dispatch machinery — no real model builds.
+    """
+    import time
+
+    from repro.serving.engine import EnginePool
+
+    class _FakeEngine:
+        cold_start_s = 0.0   # read by the eviction amortizer
+        registry = {}        # no components to drop on eviction
+
+        def cold_start(self):
+            return 0.0
+
+        def serve(self, entry, tokens, **kw):
+            return None, 0.0
+
+    models = ["m0", "m1"]
+
+    def one(hook) -> float:
+        # max_warm=1 with two alternating models: every dispatch
+        # evicts + cold-starts, so the hook site runs per request
+        pool = EnginePool({m: _FakeEngine for m in models},
+                          max_warm=1, fault_hook=hook)
+        t0 = time.perf_counter()
+        for i in range(n):
+            pool.dispatch(models[i % 2], "generate", None)
+        return time.perf_counter() - t0
+
+    off_s = min(one(None) for _ in range(runs))
+    on_s = min(one(lambda site, **ctx: None) for _ in range(runs))
+    return off_s, on_s
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tolerance",
@@ -186,6 +227,20 @@ def main(argv=None) -> int:
           f"{per_req_us:+.1f} us/req; allowed "
           f"{ttol['max_overhead_frac'] * 100:.0f}% or "
           f"{ttol['max_per_request_us']} us/req)")
+
+    ftol = all_tol["fault_hook"]
+    n_disp = 4000
+    off_s, on_s = _fault_hook_overhead(n=n_disp)
+    frac = (on_s - off_s) / off_s if off_s else 0.0
+    per_req_us = (on_s - off_s) / n_disp * 1e6
+    check("fault_hook overhead",
+          frac <= ftol["max_overhead_frac"]
+          or per_req_us <= ftol["max_per_request_us"],
+          f"hook unset {off_s * 1e3:.1f} ms vs no-op hook "
+          f"{on_s * 1e3:.1f} ms over {n_disp} dispatches "
+          f"({frac * 100:+.1f}%, {per_req_us:+.2f} us/req; allowed "
+          f"{ftol['max_overhead_frac'] * 100:.0f}% or "
+          f"{ftol['max_per_request_us']} us/req)")
 
     if all(checks):
         print("perf smoke: PASS — shared-base does not regress the "
