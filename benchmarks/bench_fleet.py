@@ -39,8 +39,9 @@ import math
 import os
 import time
 
-from repro.api import SlimStart, save_fleet_summary
+from repro.api import SlimStart, save_cluster_summary, save_fleet_summary
 from repro.benchsuite.genlibs import build_suite
+from repro.cluster import compare_strategies, synthetic_cluster_workload
 from repro.benchsuite.harness import measure_cold_starts, measure_pool_starts
 from repro.pool.fleet import (
     FleetManager, QueueConfig, ZygoteFleet, fleet_sweep,
@@ -315,6 +316,50 @@ def run(smoke: bool = False) -> dict:
         meta={"bench": "bench_fleet", "smoke": bool(smoke)})
     print(f"fleet_summary artifact: {fleet_summary_path}")
 
+    # --------------------------- part 2c: cluster placement comparison
+    # scale out: the same trace shape sharded over N simulated nodes
+    # (per-node budgets, per-node shared bases), replayed once per
+    # placement strategy at equal total memory.  The ISSUE-8 claim:
+    # sharing-aware placement packs library families onto the same
+    # node, so each node's base zygote covers more pages, more zygotes
+    # fit, and the cluster-wide cold-start ratio drops vs plain
+    # consistent hashing
+    cluster_nodes = 4
+    cluster_wl = synthetic_cluster_workload(
+        8 if smoke else 16, n_families=cluster_nodes,
+        seed=7, minutes=5 if smoke else 20,
+        peak_rpm=40.0 if smoke else 80.0)
+    cluster_results = compare_strategies(
+        cluster_wl, n_nodes=cluster_nodes, node_budget_mb=512.0,
+        seed=7, limit=400 if smoke else None)
+    cluster_rows = [{
+        "placement": strat,
+        "requests": p["requests"],
+        "cold_starts": p["cold_starts"],
+        "cold_ratio": p["cold_start_ratio"],
+        "p99_ms": p["p99_ms"],
+        "memory_gb_s": p.get("memory_gb_s", 0.0),
+        "conserves": p["conservation"]["holds"],
+    } for strat, p in cluster_results.items()]
+    print()
+    print(table(cluster_rows, ["placement", "requests", "cold_starts",
+                               "cold_ratio", "p99_ms", "memory_gb_s",
+                               "conserves"],
+                f"Cluster placement comparison ({cluster_nodes} nodes "
+                f"x 512 MB, {len(cluster_wl.apps)} apps in "
+                f"{cluster_nodes} library families, Zipf trace)"))
+    cluster_sharing_beats_hash = (
+        cluster_results["sharing"]["cold_start_ratio"]
+        < cluster_results["hash"]["cold_start_ratio"]
+        and all(p["conservation"]["holds"]
+                for p in cluster_results.values()))
+    save_cluster_summary(
+        cluster_results["sharing"],
+        str(RESULTS / "cluster_summary.json"),
+        meta={"bench": "bench_fleet", "smoke": bool(smoke)})
+    print(f"cluster_summary artifact: "
+          f"{RESULTS / 'cluster_summary.json'}")
+
     # ------------------------------------------------ part 3: real replay
     # two-tier for real: the fleet boots its shared base, forks per-app
     # zygotes from it, and the replay dispatches through them
@@ -344,7 +389,16 @@ def run(smoke: bool = False) -> dict:
                 if shared_base_wins else
                 "WARNING: shared-base two-tier did NOT meet the "
                 ">=1.3X boot / lower-memory target")
-    print(f"\n{verdict}\n{verdict2}")
+    verdict3 = (f"cluster: sharing-aware placement beats plain "
+                f"consistent hashing on cold-start ratio "
+                f"({cluster_results['sharing']['cold_start_ratio']} vs "
+                f"{cluster_results['hash']['cold_start_ratio']}) at "
+                f"equal total memory, with request conservation on "
+                f"every node"
+                if cluster_sharing_beats_hash else
+                "WARNING: sharing-aware placement did NOT beat plain "
+                "hashing (or conservation broke)")
+    print(f"\n{verdict}\n{verdict2}\n{verdict3}")
 
     payload = {
         "claim": "at equal memory budget the profile-guided fleet "
@@ -369,6 +423,9 @@ def run(smoke: bool = False) -> dict:
         "two_tier_boot": two_tier,
         "shared_base_rows": shared_rows,
         "shared_base_wins": shared_base_wins,
+        "cluster_rows": cluster_rows,
+        "cluster_nodes": cluster_nodes,
+        "cluster_sharing_beats_hash": cluster_sharing_beats_hash,
     }
     save_result("bench_fleet", payload)
     return payload

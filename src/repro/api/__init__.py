@@ -30,6 +30,7 @@ from repro.api.artifact import (
 from repro.api.artifacts import (
     BenchResultArtifact,
     ChaosReportArtifact,
+    ClusterSummaryArtifact,
     ColdStartStatsArtifact,
     FleetSummaryArtifact,
     ReportArtifact,
@@ -39,6 +40,7 @@ from repro.api.artifacts import (
     as_report,
     load_bench_result,
     load_chaos_report,
+    load_cluster_summary,
     load_fleet_summary,
     load_report,
     load_report_meta,
@@ -48,6 +50,7 @@ from repro.api.artifacts import (
     load_trace_events,
     save_bench_result,
     save_chaos_report,
+    save_cluster_summary,
     save_fleet_summary,
     save_report,
     save_shared_hot_set,
@@ -79,6 +82,7 @@ __all__ = [
     "ArtifactError",
     "BenchResultArtifact",
     "ChaosReportArtifact",
+    "ClusterSummaryArtifact",
     "ColdStartStatsArtifact",
     "FleetSummaryArtifact",
     "OptimizeStage",
@@ -101,6 +105,7 @@ __all__ = [
     "load_any",
     "load_bench_result",
     "load_chaos_report",
+    "load_cluster_summary",
     "load_fleet_summary",
     "load_report",
     "load_report_meta",
@@ -114,6 +119,7 @@ __all__ = [
     "restore_deployment",
     "save_bench_result",
     "save_chaos_report",
+    "save_cluster_summary",
     "save_fleet_summary",
     "save_report",
     "save_shared_hot_set",

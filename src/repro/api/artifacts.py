@@ -509,11 +509,81 @@ def load_chaos_report(path: str) -> dict:
     return ChaosReportArtifact.load(path).data
 
 
+# ---------------------------------------------------------------------------
+# cluster_summary (v1)
+# ---------------------------------------------------------------------------
+
+class ClusterSummaryArtifact(Artifact):
+    """Cluster-level rollup of one multi-node run (see
+    :mod:`repro.cluster`): global counts summed over nodes, *merged*
+    latency percentiles (pooled raw samples, never averaged per-node
+    percentiles — ``percentiles_merged`` says whether pools were
+    available), the placement ``strategy`` and resulting app → node
+    map, migrations and lost nodes from rebalances, and the
+    ``conservation`` verdict — ``requests == served + sheds + flushed
+    + errors + abandoned`` must hold per node, globally, and (when the
+    router kept its own ledger) between the router's per-node routed
+    counts and each node's reported ``requests``.  ``per_node`` keeps
+    every node's counters for drill-down.  Produced by ``python -m
+    repro cluster replay`` (simulator) and ``cluster route`` (real
+    socket-fed nodes); the nightly cluster job gates on
+    ``conservation.holds``."""
+
+    kind = "cluster_summary"
+    schema_version = 1
+    required_keys = ("source", "strategy", "nodes", "requests",
+                     "served", "cold_starts", "cold_start_ratio",
+                     "p50_ms", "p99_ms", "sheds", "flushed", "errors",
+                     "abandoned", "conservation", "per_node")
+    optional_keys = ("percentiles_merged", "queue_wait_p50_ms",
+                     "queue_wait_p99_ms", "placement", "migrations",
+                     "lost_nodes", "memory_gb_s", "trace", "seed",
+                     "node_budget_mb", "total_budget_mb", "duration_s",
+                     "queue", "router", "meta")
+
+    def __init__(self, payload: dict,
+                 meta: Optional[dict] = None) -> None:
+        self.data = dict(payload)
+        if meta is not None:
+            self.data["meta"] = {**self.data.get("meta", {}), **meta}
+
+    def to_payload(self) -> dict:
+        return dict(self.data)
+
+    def save(self, path: str) -> str:
+        # raw-payload artifact (like fleet_summary): validate at write
+        # time so a producer bug fails the run that made it
+        self._validate_keys(path, self.to_payload())
+        return super().save(path)
+
+    @classmethod
+    def from_payload(cls, payload: dict) -> "ClusterSummaryArtifact":
+        return cls(payload)
+
+    @property
+    def meta(self) -> dict:
+        return self.data.get("meta") or {}
+
+
+def save_cluster_summary(payload: dict, path: str,
+                         meta: Optional[dict] = None) -> str:
+    """Atomically save a ``cluster_summary`` payload (see
+    :func:`repro.cluster.summary.make_cluster_summary_payload` for the
+    one constructor)."""
+    return ClusterSummaryArtifact(payload, meta=meta).save(path)
+
+
+def load_cluster_summary(path: str) -> dict:
+    """Load a ``cluster_summary`` artifact; returns the payload dict."""
+    return ClusterSummaryArtifact.load(path).data
+
+
 __all__ = [
     "Artifact",
     "ArtifactError",
     "BenchResultArtifact",
     "ChaosReportArtifact",
+    "ClusterSummaryArtifact",
     "ColdStartStatsArtifact",
     "FleetSummaryArtifact",
     "ReportArtifact",
@@ -523,6 +593,7 @@ __all__ = [
     "as_report",
     "load_bench_result",
     "load_chaos_report",
+    "load_cluster_summary",
     "load_fleet_summary",
     "load_report",
     "load_report_meta",
@@ -532,6 +603,7 @@ __all__ = [
     "load_trace_events",
     "save_bench_result",
     "save_chaos_report",
+    "save_cluster_summary",
     "save_fleet_summary",
     "save_report",
     "save_shared_hot_set",

@@ -15,6 +15,12 @@ benchmarks and library callers share exactly one implementation:
     fleet serve        long-running daemon: bounded queues with
                        backpressure, rewarm timer, SIGTERM drain,
                        fleet_summary artifact on shutdown
+    cluster replay     cluster-scale simulation: N nodes, one router,
+                       placement-strategy comparison (--compare)
+    cluster serve      one node agent: the fleet daemon behind a
+                       length-prefixed-frame TCP socket
+    cluster route      the global router: place apps on live node
+                       agents, stream a trace, merge the ledgers
     obs report PATH    cold-start anatomy from a trace_events artifact
                        (per-phase p50/p99, top imports, --flame folded
                        stacks for flamegraph.pl)
@@ -468,6 +474,243 @@ def cmd_fleet_serve(args: argparse.Namespace) -> int:
     return 0
 
 
+def _cluster_workload(args: argparse.Namespace):
+    """The synthetic cluster workload shared by ``cluster replay``,
+    ``cluster serve --sim`` and ``cluster route`` — same knobs, same
+    seed, same workload on every side of a socket."""
+    from repro.cluster import synthetic_cluster_workload
+    return synthetic_cluster_workload(
+        args.n_apps, n_families=args.families, seed=args.seed,
+        minutes=args.minutes, peak_rpm=args.peak_rpm)
+
+
+def _cluster_node_loss_hook(args: argparse.Namespace):
+    """--node-loss-at N [N ...] -> a FaultInjector firing chaos
+    ``node_loss`` at those 0-based route calls (None when unused)."""
+    if not getattr(args, "node_loss_at", None):
+        return None
+    from repro.pool.chaos import FaultEvent, FaultInjector, FaultPlan
+    plan = FaultPlan(events=[FaultEvent("node_loss", at=at)
+                             for at in args.node_loss_at],
+                     seed=args.seed, name="cli-node-loss")
+    return FaultInjector(plan, simulate=True)
+
+
+def _print_cluster_summary(payload: dict) -> None:
+    print(json.dumps({k: v for k, v in payload.items()
+                      if k not in ("per_node", "placement",
+                                   "migrations")}, indent=2))
+    _print_rows(payload.get("per_node", []),
+                ["node", "requests", "served", "cold_starts", "sheds",
+                 "flushed", "p99_ms", "conservation_holds", "lost"])
+
+
+def cmd_cluster_replay(args: argparse.Namespace) -> int:
+    """Cluster-scale simulation: N nodes, one router, millions of
+    synthetic invocations; ``--compare`` replays the same trace under
+    every placement strategy at equal budgets."""
+    from repro.api.artifacts import save_cluster_summary
+    from repro.cluster import STRATEGIES, ClusterSimulator
+
+    _obs_setup(args)
+    wl = _cluster_workload(args)
+    strategies = list(STRATEGIES) if args.compare else [args.strategy]
+    results: dict[str, dict] = {}
+    for strategy in strategies:
+        sim = ClusterSimulator(
+            wl, n_nodes=args.nodes, node_budget_mb=args.node_budget_mb,
+            strategy=strategy, seed=args.seed,
+            fault_hook=_cluster_node_loss_hook(args))
+        results[strategy] = sim.replay(limit=args.limit)
+
+    rows = [{"strategy": s,
+             "requests": p["requests"],
+             "cold_starts": p["cold_starts"],
+             "cold_ratio": p["cold_start_ratio"],
+             "p99_ms": p["p99_ms"],
+             "sheds": p["sheds"],
+             "memory_gb_s": p.get("memory_gb_s", 0.0),
+             "conserves": p["conservation"]["holds"]}
+            for s, p in results.items()]
+    _print_rows(rows, ["strategy", "requests", "cold_starts",
+                       "cold_ratio", "p99_ms", "sheds", "memory_gb_s",
+                       "conserves"])
+    payload = results[args.strategy]
+    if not args.compare:
+        _print_cluster_summary(payload)
+    elif "hash" in results:
+        beats = (results["sharing"]["cold_start_ratio"]
+                 <= results["hash"]["cold_start_ratio"])
+        print(f"sharing vs hash cold-start ratio: "
+              f"{results['sharing']['cold_start_ratio']} vs "
+              f"{results['hash']['cold_start_ratio']} -> "
+              f"{'sharing wins' if beats else 'HASH WINS'}")
+    if args.out:
+        save_cluster_summary(payload, os.path.abspath(args.out))
+        print(f"cluster_summary artifact: {os.path.abspath(args.out)}")
+    _obs_save_capture(args, "cluster-replay",
+                      meta={"nodes": args.nodes,
+                            "strategies": strategies})
+    if args.check and not all(p["conservation"]["holds"]
+                              for p in results.values()):
+        broken = [s for s, p in results.items()
+                  if not p["conservation"]["holds"]]
+        print(f"cluster replay --check: conservation BROKEN under "
+              f"{broken}", file=sys.stderr)
+        return 1
+    return 0
+
+
+def cmd_cluster_serve(args: argparse.Namespace) -> int:
+    """One node agent: a fleet daemon behind a frame-protocol socket
+    (see docs/cluster.md).  Prints a ready line with the bound port,
+    serves until a shutdown frame / signal, then prints the node's
+    fleet_summary payload."""
+    import signal
+
+    from repro.cluster import NodeAgent
+    from repro.pool.daemon import RealFleetBackend, SimFleetBackend
+    from repro.pool.fleet import FleetManager
+    from repro.pool.policies import ProfileGuidedPolicy
+
+    _obs_setup(args)
+    queue = _queue_config(args)
+    if args.sim:
+        wl = _cluster_workload(args)
+        apps = ([a for a in args.apps.split(",") if a]
+                if args.apps else list(wl.apps))
+        unknown = sorted(set(apps) - set(wl.apps))
+        if unknown:
+            print(f"cluster serve --sim: apps not in the synthetic "
+                  f"workload: {unknown} (have app00..app"
+                  f"{args.n_apps - 1:02d})", file=sys.stderr)
+            return 2
+        policy = ProfileGuidedPolicy()
+        for app in apps:
+            policy.add_report(wl.reports[app])
+        manager = FleetManager(
+            {a: wl.profiles[a] for a in apps}, policy,
+            budget_mb=args.budget_mb, queue=queue)
+        backend = SimFleetBackend(manager,
+                                  reports_dir=args.reports_dir)
+    else:
+        apps = [a for a in args.apps.split(",") if a]
+        if not apps:
+            print("cluster serve: need --apps", file=sys.stderr)
+            return 2
+        backend = RealFleetBackend(_real_fleet(args, apps),
+                                   queue=queue,
+                                   reports_dir=args.reports_dir)
+
+    agent = NodeAgent(
+        backend, node_id=args.node_id, host=args.host, port=args.port,
+        rewarm_interval_s=args.rewarm_interval_s,
+        summary_path=(os.path.abspath(args.summary_out)
+                      if args.summary_out else None),
+        drain_timeout_s=args.drain_timeout_s,
+        drain_on_disconnect=args.drain_on_disconnect)
+    signal.signal(signal.SIGTERM,
+                  lambda *_: agent.request_shutdown())
+    signal.signal(signal.SIGINT,
+                  lambda *_: agent.request_shutdown())
+    boot = agent.start()
+    # the ready line is the contract with launchers (tools/
+    # cluster_smoke.py): one JSON object on stdout carrying the bound
+    # port
+    print(json.dumps({"ok": True, "event": "ready", **boot}),
+          flush=True)
+    payload = agent.serve_forever()
+    print(json.dumps({k: v for k, v in payload.items()
+                      if k != "per_app"}, indent=2))
+    if args.summary_out:
+        print(f"fleet_summary artifact: "
+              f"{os.path.abspath(args.summary_out)}", file=sys.stderr)
+    return 0
+
+
+def cmd_cluster_route(args: argparse.Namespace) -> int:
+    """The global router over live node agents: hello every node,
+    place apps (sharing-aware by default), feed the trace over the
+    sockets, then drain the nodes and merge their ledgers into one
+    cluster_summary."""
+    import time as _time
+
+    from repro.api.artifacts import save_cluster_summary
+    from repro.cluster import ClusterRouter, NodeClient
+
+    _obs_setup(args)
+    clients: dict[str, NodeClient] = {}
+    for spec in args.nodes.split(","):
+        spec = spec.strip()
+        if not spec:
+            continue
+        try:
+            node_id, addr = spec.split("=", 1)
+            host, port = addr.rsplit(":", 1)
+            clients[node_id] = NodeClient(node_id, host, int(port))
+        except ValueError:
+            print(f"cluster route: bad --nodes entry {spec!r} "
+                  f"(want id=host:port)", file=sys.stderr)
+            return 2
+    if not clients:
+        print("cluster route: need --nodes id=host:port[,...]",
+              file=sys.stderr)
+        return 2
+
+    if args.trace:
+        trace = load_trace(args.trace)
+        hot_sets: dict = {}
+        if args.reports_dir:
+            from repro.pool.policies import hot_set_from_report
+            for app in sorted({r.app for r in trace}):
+                path = os.path.join(args.reports_dir, f"{app}.json")
+                if os.path.exists(path):
+                    hot_sets[app] = hot_set_from_report(
+                        load_report(path))
+    else:
+        wl = _cluster_workload(args)
+        trace, hot_sets = wl.trace, wl.hot_sets
+
+    router = ClusterRouter(clients, strategy=args.strategy,
+                           hot_sets=hot_sets, seed=args.seed,
+                           fault_hook=_cluster_node_loss_hook(args))
+    placement = router.connect()
+    print(f"placement over {len(clients)} nodes: "
+          f"{json.dumps(placement)}", file=sys.stderr)
+
+    routed = unplaced = 0
+    prev_t: Optional[float] = None
+    for i, req in enumerate(trace):
+        if args.limit is not None and i >= args.limit:
+            break
+        if req.app not in router.placement:
+            unplaced += 1  # no node deploys it: not admitted anywhere
+            continue
+        if args.pace > 0 and prev_t is not None:
+            _time.sleep(max(0.0, (req.t - prev_t) * args.pace))
+        prev_t = req.t
+        router.route(req.app, req.handler)
+        routed += 1
+    payload = router.shutdown()
+    payload["router"]["unplaced"] = unplaced
+    _print_cluster_summary(payload)
+    if unplaced:
+        print(f"cluster route: {unplaced} arrivals had no deploying "
+              f"node and were never admitted", file=sys.stderr)
+    if args.out:
+        save_cluster_summary(payload, os.path.abspath(args.out))
+        print(f"cluster_summary artifact: {os.path.abspath(args.out)}")
+    _obs_save_capture(args, "cluster-route",
+                      meta={"nodes": sorted(clients),
+                            "strategy": args.strategy,
+                            "routed": routed})
+    if args.check and not payload["conservation"]["holds"]:
+        print("cluster route --check: conservation BROKEN",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
 def _obs_setup(args: argparse.Namespace) -> None:
     """Apply the shared observability knobs (logging + tracing)."""
     from repro.obs.log import configure as configure_log
@@ -856,6 +1099,154 @@ def build_parser() -> argparse.ArgumentParser:
                    help="write the fleet_summary artifact here on "
                         "drain/shutdown")
     p.set_defaults(func=cmd_fleet_serve)
+
+    def add_cluster_workload(p: argparse.ArgumentParser) -> None:
+        p.add_argument("--n-apps", type=int, default=16,
+                       help="synthetic workload size (apps app00..)")
+        p.add_argument("--families", type=int, default=4,
+                       help="library families the apps split into "
+                            "(siblings share a fat family module)")
+        p.add_argument("--seed", type=int, default=0,
+                       help="workload + placement seed")
+        p.add_argument("--minutes", type=int, default=20,
+                       help="synthetic trace length")
+        p.add_argument("--peak-rpm", type=float, default=60.0,
+                       help="synthetic trace peak invocations/minute")
+        p.add_argument("--limit", type=int, default=None,
+                       help="replay only the first N arrivals")
+        p.add_argument("--node-loss-at", type=int, nargs="*",
+                       default=None, metavar="N",
+                       help="inject a chaos node_loss fault at these "
+                            "0-based route calls (the routed node is "
+                            "lost, its apps re-place, the request "
+                            "survives)")
+
+    cluster = sub.add_parser(
+        "cluster", help="multi-node cluster: sharing-aware placement, "
+                        "socket-fed node agents, a global router")
+    cluster_sub = cluster.add_subparsers(dest="cluster_command",
+                                         required=True)
+
+    p = cluster_sub.add_parser(
+        "replay",
+        help="cluster-scale simulation: N nodes, one router "
+             "(--compare: all placement strategies)",
+        description="Drive the synthetic cluster workload through N "
+                    "simulated nodes under per-node memory budgets. "
+                    "--compare replays the same trace under every "
+                    "placement strategy (sharing / hash / random) at "
+                    "equal budgets — the sharing-aware placement must "
+                    "beat plain hashing on cold-start ratio.  --check "
+                    "exits 1 if the request-conservation invariant "
+                    "breaks on any node or globally "
+                    "(see docs/cluster.md).")
+    add_cluster_workload(p)
+    add_obs_knobs(p)
+    p.add_argument("--nodes", type=int, default=4,
+                   help="simulated node count (default 4)")
+    p.add_argument("--node-budget-mb", type=float, default=512.0,
+                   help="per-node memory budget")
+    p.add_argument("--strategy", default="sharing",
+                   choices=["sharing", "hash", "random"],
+                   help="placement strategy (ignored by --compare, "
+                        "which runs all; still picks the --out payload)")
+    p.add_argument("--compare", action="store_true",
+                   help="replay under every strategy and print the "
+                        "comparison table")
+    p.add_argument("--out", default=None,
+                   help="save the cluster_summary artifact here "
+                        "(the --strategy run)")
+    p.add_argument("--check", action="store_true",
+                   help="exit 1 if conservation breaks")
+    p.set_defaults(func=cmd_cluster_replay)
+
+    p = cluster_sub.add_parser(
+        "serve",
+        help="one node agent: a fleet daemon behind a frame-protocol "
+             "socket",
+        description="Serve one cluster node: the fleet daemon's full "
+                    "surface (bounded queues, rewarm timer, graceful "
+                    "drain) behind a length-prefixed-frame TCP socket "
+                    "accepting many concurrent feeders.  Prints a "
+                    "ready line with the bound port on stdout; a "
+                    "shutdown frame or SIGTERM drains and prints the "
+                    "node's fleet_summary (see docs/cluster.md).")
+    add_cluster_workload(p)
+    add_queue_knobs(p, default_depth=16)
+    add_obs_knobs(p)
+    add_root(p)
+    p.add_argument("--node-id", default="node0",
+                   help="this node's name in the cluster")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=0,
+                   help="listen port (0 = ephemeral; the ready line "
+                        "carries the bound port)")
+    p.add_argument("--sim", action="store_true",
+                   help="simulated fleet over the synthetic cluster "
+                        "workload instead of real zygotes")
+    p.add_argument("--apps", default=None,
+                   help="comma-separated apps this node deploys "
+                        "(--sim default: every workload app; real "
+                        "mode: required benchsuite app names)")
+    p.add_argument("--budget-mb", type=float, default=512.0,
+                   help="node memory budget (<= 0 with real zygotes: "
+                        "unbounded)")
+    p.add_argument("--reports-dir", default=None,
+                   help="deployed per-app report artifacts "
+                        "(<app>.json) for zygote hot sets / rewarm")
+    p.add_argument("--shared-base", action="store_true",
+                   help="real mode: two-tier fleet with a shared base "
+                        "zygote")
+    p.add_argument("--base-min-apps", type=int, default=2,
+                   help="real mode: modules hot for at least this "
+                        "many apps join the shared base")
+    p.add_argument("--rewarm-interval-s", type=float, default=0.0,
+                   help="rewarm-tick period (0 disables the timer)")
+    p.add_argument("--drain-timeout-s", type=float, default=30.0,
+                   help="max seconds to wind queues down at shutdown")
+    p.add_argument("--drain-on-disconnect", action="store_true",
+                   help="treat 'last feeder disconnected' as the "
+                        "drain signal (stdin-EOF semantics over "
+                        "sockets)")
+    p.add_argument("--summary-out", default=None,
+                   help="write the node's fleet_summary artifact here "
+                        "on drain/shutdown")
+    p.set_defaults(func=cmd_cluster_serve)
+
+    p = cluster_sub.add_parser(
+        "route",
+        help="the global router: place apps on live node agents and "
+             "feed them a trace",
+        description="Connect to running node agents (cluster serve), "
+                    "learn who deploys what, place every app "
+                    "(sharing-aware by default), stream the trace "
+                    "over the sockets, then drain the nodes and merge "
+                    "their ledgers + latency sample pools into one "
+                    "cluster_summary artifact.  --check exits 1 if "
+                    "request conservation breaks anywhere "
+                    "(see docs/cluster.md).")
+    add_cluster_workload(p)
+    add_obs_knobs(p)
+    p.add_argument("--nodes", required=True,
+                   help="comma-separated node agents: "
+                        "id=host:port[,id=host:port...]")
+    p.add_argument("--strategy", default="sharing",
+                   choices=["sharing", "hash", "random"],
+                   help="placement strategy")
+    p.add_argument("--trace", default=None,
+                   help="trace artifact to replay (default: the "
+                        "synthetic cluster workload's trace)")
+    p.add_argument("--reports-dir", default=None,
+                   help="with --trace: per-app report artifacts for "
+                        "sharing-aware hot sets")
+    p.add_argument("--pace", type=float, default=0.0,
+                   help="scale trace arrival gaps into real time "
+                        "(0 = as fast as possible)")
+    p.add_argument("--out", default=None,
+                   help="save the cluster_summary artifact here")
+    p.add_argument("--check", action="store_true",
+                   help="exit 1 if conservation breaks")
+    p.set_defaults(func=cmd_cluster_route)
 
     obs = sub.add_parser("obs", help="observability: trace analysis "
                                      "and the live fleet console")

@@ -1,0 +1,48 @@
+"""Sharded cluster controller: multi-node fleets, sharing-aware
+placement, and a socket-fed router (ISSUE 8).
+
+Layers, bottom up:
+
+* :mod:`repro.cluster.protocol` — length-prefixed JSON frames (sync
+  and asyncio codecs) replacing the daemon's stdin JSONL feed;
+* :mod:`repro.cluster.ring` — weighted rendezvous hashing plus the
+  sharing-aware placement planner built on ``repro.pool.sharing``;
+* :mod:`repro.cluster.workload` — deterministic synthetic multi-app
+  workloads with known library-sharing structure;
+* :mod:`repro.cluster.sim` — the cluster-scale simulator (millions of
+  synthetic invocations, strategy comparison);
+* :mod:`repro.cluster.node` — the node agent: a ``FleetDaemon`` served
+  over an asyncio socket to many concurrent feeders;
+* :mod:`repro.cluster.router` — the global router driving real node
+  agents over sockets;
+* :mod:`repro.cluster.summary` — the ``cluster_summary`` payload
+  constructor and the per-node/global conservation check.
+"""
+
+from repro.cluster.protocol import (MAX_FRAME, FrameClosed, FrameError,
+                                    encode_frame, read_frame,
+                                    recv_frame, send_frame,
+                                    write_frame)
+from repro.cluster.ring import (STRATEGIES, ConsistentHashRing,
+                                hot_set_affinity, plan_placement)
+from repro.cluster.workload import (ClusterWorkload,
+                                    synthetic_cluster_workload)
+from repro.cluster.summary import (CONSERVATION_EXPR, node_conserves,
+                                   make_cluster_summary_payload)
+from repro.cluster.sim import (ClusterSimulator, SimNode,
+                               compare_strategies)
+from repro.cluster.node import PROTOCOL_VERSION, NodeAgent
+from repro.cluster.router import ClusterRouter, NodeClient
+
+__all__ = [
+    "MAX_FRAME", "FrameClosed", "FrameError", "encode_frame",
+    "read_frame", "recv_frame", "send_frame", "write_frame",
+    "STRATEGIES", "ConsistentHashRing", "hot_set_affinity",
+    "plan_placement",
+    "ClusterWorkload", "synthetic_cluster_workload",
+    "CONSERVATION_EXPR", "node_conserves",
+    "make_cluster_summary_payload",
+    "ClusterSimulator", "SimNode", "compare_strategies",
+    "PROTOCOL_VERSION", "NodeAgent",
+    "ClusterRouter", "NodeClient",
+]

@@ -1,0 +1,290 @@
+"""The cluster node agent: a socket-served fleet daemon.
+
+Promotes the single-host :class:`~repro.pool.daemon.FleetDaemon` from
+its stdin JSONL feed (one feeder, process lifetime = feed lifetime) to
+a TCP server speaking the length-prefixed frame protocol
+(:mod:`repro.cluster.protocol`):
+
+* **many concurrent feeders** — each connection is an independent
+  request/reply stream served by its own asyncio task; a router, a
+  load generator and an operator polling ``stats`` can all talk to the
+  node at once.  Admission itself stays thread-safe in the backend
+  (the same bounded queues as the daemon), the event loop only does
+  framing;
+* **graceful drain on disconnect** — a feeder vanishing mid-stream
+  never strands requests: everything it admitted is already in the
+  bounded queues and drains normally.  With ``drain_on_disconnect``
+  (the CLI smoke's mode) the agent additionally treats "last feeder
+  gone" as the drain signal, mirroring the stdin daemon's EOF
+  semantics;
+* the full daemon surface rides over the wire: ``hello`` (node
+  identity + apps), per-invocation frames, ``stats``, ``rewarm``,
+  ``drain``/``shutdown`` (replies with the final ``fleet_summary``
+  payload plus capped raw latency samples so the router can merge
+  *true* global percentiles instead of averaging per-node ones).
+
+The agent runs its asyncio loop on a dedicated thread so synchronous
+callers (tests, the CLI) drive it like any other component:
+``start() -> ... -> result()``.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import threading
+import time
+from typing import Optional
+
+from repro.obs.log import get_logger
+from repro.pool.daemon import FleetDaemon
+from repro.pool.trace import Request
+from repro.cluster.protocol import (FrameClosed, FrameError,
+                                    read_frame, write_frame)
+
+_LOG = get_logger("cluster.node")
+
+PROTOCOL_VERSION = 1
+
+
+def _reg():
+    from repro.obs.metrics import default_registry
+    return default_registry()
+
+
+class NodeAgent:
+    """One node: a :class:`FleetDaemon` behind a frame-protocol socket.
+
+    ``backend`` is any daemon backend (sim or real zygote fleet); the
+    agent owns the daemon shell around it (rewarm timer, drain
+    semantics, summary artifact).
+    """
+
+    def __init__(self, backend, *, node_id: str,
+                 host: str = "127.0.0.1", port: int = 0,
+                 rewarm_interval_s: float = 0.0,
+                 summary_path: Optional[str] = None,
+                 drain_timeout_s: Optional[float] = 30.0,
+                 drain_on_disconnect: bool = False,
+                 latency_sample_cap: int = 50_000,
+                 fault_hook=None) -> None:
+        self.node_id = node_id
+        self.host = host
+        self.port = port  # 0 = ephemeral; real port known after start()
+        self.drain_on_disconnect = drain_on_disconnect
+        self.latency_sample_cap = latency_sample_cap
+        self.daemon = FleetDaemon(
+            backend, rewarm_interval_s=rewarm_interval_s,
+            summary_path=summary_path,
+            drain_timeout_s=drain_timeout_s, fault_hook=fault_hook)
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._server: Optional[asyncio.base_events.Server] = None
+        self._thread: Optional[threading.Thread] = None
+        self._ready = threading.Event()
+        self._done = threading.Event()
+        self._boot: dict = {}
+        self._result: Optional[dict] = None
+        self._start_exc: Optional[BaseException] = None
+        self._t0 = 0.0
+        self._conns = 0
+        self._ever_connected = False
+        self._conn_lock = threading.Lock()
+
+    # ----------------------------------------------------------- lifecycle
+    def start(self) -> dict:
+        """Boot the backend, bind the socket, start serving.  Returns
+        ``{"node": ..., "host": ..., "port": ..., "apps": [...]}``."""
+        self._boot = self.daemon.start(f"node-{self.node_id}")
+        self._t0 = time.monotonic()
+        self._thread = threading.Thread(
+            target=self._run_loop, name=f"node-agent-{self.node_id}",
+            daemon=True)
+        self._thread.start()
+        self._ready.wait(timeout=10.0)
+        if self._start_exc is not None:
+            raise RuntimeError(
+                f"node agent {self.node_id} failed to bind "
+                f"{self.host}:{self.port}") from self._start_exc
+        if not self._ready.is_set():
+            raise RuntimeError(
+                f"node agent {self.node_id} did not come up")
+        return {"node": self.node_id, "host": self.host,
+                "port": self.port, "protocol": PROTOCOL_VERSION,
+                **self._boot}
+
+    def _run_loop(self) -> None:
+        asyncio.run(self._serve())
+
+    async def _serve(self) -> None:
+        self._loop = asyncio.get_running_loop()
+        self._stop_evt = asyncio.Event()
+        if self.daemon.draining:  # shutdown won the race with startup
+            self._stop_evt.set()
+        try:
+            self._server = await asyncio.start_server(
+                self._handle_conn, self.host, self.port)
+        except OSError as exc:
+            self._start_exc = exc
+            self._ready.set()
+            return
+        self.port = self._server.sockets[0].getsockname()[1]
+        self._ready.set()
+        _LOG.info("listening", node=self.node_id, host=self.host,
+                  port=self.port)
+        async with self._server:
+            await self._stop_evt.wait()
+        # out of the loop thread: sockets are closed, drain the fleet
+        # synchronously from stop()/result() callers
+
+    def request_shutdown(self) -> None:
+        """Idempotent, callable from any thread (signal handlers too):
+        stop accepting, end the serve loop; drain happens in
+        :meth:`result`."""
+        self.daemon.request_shutdown()
+        loop = self._loop
+        stop_evt = getattr(self, "_stop_evt", None)
+        if loop is not None and stop_evt is not None:
+            try:
+                loop.call_soon_threadsafe(stop_evt.set)
+            except RuntimeError:
+                pass  # loop already closed
+
+    def _final_payload(self, *, end_t: Optional[float] = None,
+                       flush: Optional[bool] = None) -> dict:
+        """Drain the daemon (idempotent) and cache the final
+        ``fleet_summary`` payload.  Does NOT stop the serve loop —
+        callers decide when the socket goes away, so the summary reply
+        always reaches the feeder that asked for it."""
+        payload = self.daemon.shutdown(
+            end_t=(time.monotonic() - self._t0
+                   if end_t is None else end_t),
+            flush=flush)
+        self._result = payload
+        self._done.set()
+        return payload
+
+    def result(self, *, end_t: Optional[float] = None,
+               flush: Optional[bool] = None) -> dict:
+        """Drain and return the node's final ``fleet_summary`` payload
+        (the daemon's graceful-drain semantics: in-flight work
+        finishes, queued work flushes)."""
+        if self._result is None:
+            self.request_shutdown()
+            if (self._thread is not None
+                    and self._thread is not threading.current_thread()):
+                self._thread.join(timeout=30.0)
+            self._final_payload(end_t=end_t, flush=flush)
+        return self._result
+
+    def serve_forever(self) -> dict:
+        """Block until a shutdown frame / signal ends the agent, then
+        drain (the ``repro cluster serve`` foreground path)."""
+        if self._thread is not None:
+            while self._thread.is_alive():
+                self._thread.join(timeout=0.2)
+        return self.result()
+
+    # ------------------------------------------------------------ protocol
+    async def _handle_conn(self, reader: asyncio.StreamReader,
+                           writer: asyncio.StreamWriter) -> None:
+        peer = writer.get_extra_info("peername")
+        with self._conn_lock:
+            self._conns += 1
+            self._ever_connected = True
+        _reg().gauge("repro_cluster_node_feeders",
+                     "open feeder connections per node",
+                     labels=("node",)).labels(
+            node=self.node_id).set(self._conns)
+        try:
+            while not self.daemon.draining:
+                try:
+                    frame = await read_frame(reader)
+                except FrameClosed:
+                    break
+                except FrameError as exc:
+                    # a desynced peer cannot be resynchronized: answer
+                    # once, then drop the connection
+                    await self._safe_reply(writer, {
+                        "ok": False, "node": self.node_id,
+                        "error": f"protocol: {exc}"})
+                    break
+                reply = self._dispatch(frame)
+                await self._safe_reply(writer, reply)
+                if reply.get("event") == "summary":
+                    # the summary is on the wire; now the loop may end
+                    self.request_shutdown()
+                    break
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+            last = False
+            with self._conn_lock:
+                self._conns -= 1
+                last = self._conns == 0 and self._ever_connected
+            _reg().gauge("repro_cluster_node_feeders",
+                         "open feeder connections per node",
+                         labels=("node",)).labels(
+                node=self.node_id).set(self._conns)
+            _LOG.debug("feeder-closed", node=self.node_id,
+                       peer=str(peer))
+            if last and self.drain_on_disconnect:
+                # stdin-EOF semantics over sockets: last feeder gone =
+                # end of feed -> graceful drain
+                self.request_shutdown()
+
+    async def _safe_reply(self, writer: asyncio.StreamWriter,
+                          obj: dict) -> None:
+        try:
+            await write_frame(writer, obj)
+        except (ConnectionError, OSError):
+            pass  # feeder vanished mid-reply; its work still drains
+
+    def _dispatch(self, evt: dict) -> dict:
+        """One frame in, one reply out — the stdin JSONL command
+        surface, framed."""
+        cmd = evt.get("cmd")
+        if cmd == "hello":
+            return {"ok": True, "node": self.node_id,
+                    "protocol": PROTOCOL_VERSION,
+                    "mode": self._boot.get("mode"),
+                    "apps": self._boot.get("apps", [])}
+        if cmd == "stats":
+            return {"ok": True, "node": self.node_id,
+                    "stats": self.daemon.backend.snapshot(),
+                    "rewarm_ticks": self.daemon.rewarm_ticks,
+                    "metrics": _reg().snapshot()}
+        if cmd == "rewarm":
+            return {"ok": True, "node": self.node_id,
+                    "rewarm": self.daemon.rewarm_now()}
+        if cmd in ("drain", "shutdown"):
+            # flush=False: end-of-feed semantics — queued work is
+            # served before the summary is cut (the router asked us to
+            # finish, not to abandon)
+            payload = self._final_payload(
+                flush=bool(evt.get("flush", False)))
+            samples = []
+            try:
+                samples = self.daemon.backend.latency_samples(
+                    self.latency_sample_cap)
+            except Exception:  # samples are best-effort extras
+                samples = []
+            return {"ok": True, "node": self.node_id,
+                    "event": "summary", "summary": payload,
+                    "latency_samples": samples}
+        if cmd is not None:
+            return {"ok": False, "node": self.node_id,
+                    "error": f"unknown cmd {cmd!r}"}
+        if "app" not in evt:
+            return {"ok": False, "node": self.node_id,
+                    "error": "need 'app' or 'cmd'"}
+        req = Request(t=time.monotonic() - self._t0, app=evt["app"],
+                      handler=evt.get("handler"))
+        try:
+            outcome = self.daemon.submit(req)
+        except KeyError as exc:
+            return {"ok": False, "node": self.node_id,
+                    "error": str(exc)}
+        return {"ok": outcome not in ("shed", "draining"),
+                "node": self.node_id, "outcome": outcome}

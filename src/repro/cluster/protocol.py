@@ -1,0 +1,131 @@
+"""Length-prefixed JSON frames: the cluster's wire protocol.
+
+The single-host daemon reads newline-delimited JSON from *stdin* —
+exactly one feeder, no framing, no concurrency.  The cluster node
+agent (:mod:`repro.cluster.node`) instead listens on a TCP socket that
+many feeders (routers, load generators, operators running ``stats``)
+share concurrently, so the protocol needs real framing:
+
+* every message is ``[4-byte big-endian unsigned length][UTF-8 JSON]``;
+* length counts the JSON bytes only (the prefix excluded) and must be
+  ``0 < length <= MAX_FRAME`` — a peer announcing more is protocol
+  abuse (or desync) and the connection is dropped rather than letting
+  one feeder balloon the agent's memory;
+* requests and replies alternate per connection (simple RPC); separate
+  connections are fully independent, which is how concurrent feeders
+  multiplex — per-connection ordering, no cross-connection ordering.
+
+Why not keep JSONL over the socket?  Newline framing breaks the moment
+a payload embeds a newline (pretty-printed summaries, tracebacks) and
+gives a desynced reader no way to resynchronize; a length prefix makes
+message boundaries explicit and cheap to validate.
+
+Both a blocking codec (for :class:`NodeClient`-style callers and
+tests) and asyncio stream helpers (for the agent's server loop) are
+provided so the two sides cannot drift.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import json
+import socket
+import struct
+
+MAX_FRAME = 16 * 1024 * 1024  # 16 MiB: a full fleet summary is ~KBs
+
+_LEN = struct.Struct(">I")
+
+
+class FrameError(RuntimeError):
+    """Protocol violation: bad length prefix, oversized frame, or a
+    frame whose body is not valid JSON."""
+
+
+class FrameClosed(EOFError):
+    """The peer closed the connection cleanly between frames."""
+
+
+def encode_frame(obj: dict) -> bytes:
+    """Serialize one message to its on-wire bytes."""
+    body = json.dumps(obj, separators=(",", ":")).encode("utf-8")
+    if len(body) > MAX_FRAME:
+        raise FrameError(f"frame of {len(body)} bytes exceeds "
+                         f"MAX_FRAME={MAX_FRAME}")
+    return _LEN.pack(len(body)) + body
+
+
+def _check_length(n: int) -> None:
+    if n == 0 or n > MAX_FRAME:
+        raise FrameError(f"invalid frame length {n} "
+                         f"(must be 1..{MAX_FRAME})")
+
+
+def _decode_body(body: bytes) -> dict:
+    try:
+        obj = json.loads(body.decode("utf-8"))
+    except (UnicodeDecodeError, ValueError) as exc:
+        raise FrameError(f"undecodable frame body: {exc}") from exc
+    if not isinstance(obj, dict):
+        raise FrameError(f"frame body must be a JSON object, "
+                         f"got {type(obj).__name__}")
+    return obj
+
+
+# ---------------------------------------------------------------------------
+# blocking side (clients, tests)
+# ---------------------------------------------------------------------------
+
+def _recv_exact(sock: socket.socket, n: int, *,
+                header: bool) -> bytes:
+    chunks = []
+    remaining = n
+    while remaining:
+        chunk = sock.recv(remaining)
+        if not chunk:
+            if header and remaining == n:
+                raise FrameClosed("peer closed between frames")
+            raise FrameError(
+                f"peer closed mid-frame ({n - remaining}/{n} bytes)")
+        chunks.append(chunk)
+        remaining -= len(chunk)
+    return b"".join(chunks)
+
+
+def send_frame(sock: socket.socket, obj: dict) -> None:
+    sock.sendall(encode_frame(obj))
+
+
+def recv_frame(sock: socket.socket) -> dict:
+    """Read one frame; raises :class:`FrameClosed` on clean EOF at a
+    frame boundary, :class:`FrameError` on truncation or garbage."""
+    (n,) = _LEN.unpack(_recv_exact(sock, _LEN.size, header=True))
+    _check_length(n)
+    return _decode_body(_recv_exact(sock, n, header=False))
+
+
+# ---------------------------------------------------------------------------
+# asyncio side (the node agent's server loop)
+# ---------------------------------------------------------------------------
+
+async def read_frame(reader: asyncio.StreamReader) -> dict:
+    try:
+        head = await reader.readexactly(_LEN.size)
+    except asyncio.IncompleteReadError as exc:
+        if not exc.partial:
+            raise FrameClosed("peer closed between frames") from exc
+        raise FrameError("peer closed mid-length-prefix") from exc
+    (n,) = _LEN.unpack(head)
+    _check_length(n)
+    try:
+        body = await reader.readexactly(n)
+    except asyncio.IncompleteReadError as exc:
+        raise FrameError(
+            f"peer closed mid-frame ({len(exc.partial)}/{n} bytes)"
+        ) from exc
+    return _decode_body(body)
+
+
+async def write_frame(writer: asyncio.StreamWriter, obj: dict) -> None:
+    writer.write(encode_frame(obj))
+    await writer.drain()

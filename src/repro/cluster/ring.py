@@ -1,0 +1,190 @@
+"""Consistent hashing and sharing-aware app placement.
+
+The router must answer one question deterministically on every node:
+*which node owns app X right now?* — and keep the answer as stable as
+possible when the node set changes.  We use **rendezvous (highest-
+random-weight) hashing**, the consistent-hashing variant with provably
+minimal churn: every ``(app, node)`` pair gets a pseudo-random score
+``h = sha256(seed, node, app)`` mapped to ``(0, 1]``, and the app lives
+on the node maximizing ``-weight / ln(h)`` (the standard weighted-HRW
+transform, so a node's capacity weight scales its expected share
+linearly).  Consequences the property tests pin down:
+
+* **leave**: exactly the departed node's apps move (everyone else's
+  argmax is unchanged);
+* **join**: the only possible move is *onto* the new node, and each app
+  moves independently with probability ``w_new / w_total`` — expected
+  churn ~K/N of K apps on N equal nodes;
+* **determinism**: placement is a pure function of (seed, node set,
+  weights, app) — every router replica computes the same map with no
+  coordination.
+
+Sharing-aware placement (:func:`plan_placement` with
+``strategy="sharing"``) layers the SLIMSTART affinity signal on top:
+apps whose measured hot sets overlap (scored with
+:mod:`repro.pool.sharing`) are pulled onto the same node so the PR 5
+base zygote actually shares their library pages, with the ring score as
+tiebreak and a load cap so affinity cannot pile every app onto one
+node.  It trades a little of plain hashing's churn optimality for
+memory locality; the router's rebalance keeps its moves bounded by
+re-placing only affected apps (sticky placement).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import math
+import random
+from typing import Iterable, Optional
+
+from repro.pool.sharing import intersect_hot_sets
+
+STRATEGIES = ("sharing", "hash", "random")
+
+
+def _hash01(seed: int, node: str, key: str) -> float:
+    """Pseudo-random in (0, 1], deterministic across processes (never
+    Python's salted ``hash``)."""
+    digest = hashlib.sha256(
+        f"{seed}\x00{node}\x00{key}".encode()).digest()
+    # 53 bits -> exact float; +1 keeps it off 0 so ln() is finite
+    n = int.from_bytes(digest[:8], "big") >> 11
+    return (n + 1) / float(1 << 53)
+
+
+class ConsistentHashRing:
+    """Weighted rendezvous-hashing ring over named nodes."""
+
+    def __init__(self, nodes: Iterable[str] = (), *, seed: int = 0,
+                 weights: Optional[dict[str, float]] = None) -> None:
+        self.seed = seed
+        self._weights: dict[str, float] = {}
+        for node in nodes:
+            self.add(node, (weights or {}).get(node, 1.0))
+
+    # ------------------------------------------------------------ topology
+    @property
+    def nodes(self) -> tuple[str, ...]:
+        return tuple(sorted(self._weights))
+
+    def __len__(self) -> int:
+        return len(self._weights)
+
+    def __contains__(self, node: str) -> bool:
+        return node in self._weights
+
+    def add(self, node: str, weight: float = 1.0) -> None:
+        if weight <= 0:
+            raise ValueError(f"node weight must be > 0, got {weight}")
+        self._weights[node] = float(weight)
+
+    def remove(self, node: str) -> None:
+        self._weights.pop(node, None)
+
+    # ----------------------------------------------------------- placement
+    def score(self, node: str, key: str) -> float:
+        """Weighted-HRW score; the owning node maximizes it."""
+        w = self._weights[node]
+        return -w / math.log(_hash01(self.seed, node, key))
+
+    def place(self, key: str,
+              among: Optional[Iterable[str]] = None) -> str:
+        """The node owning ``key`` (optionally restricted to ``among``,
+        e.g. the real-mode nodes that actually deploy the app).  Ties
+        are impossible in practice (sha256), but break by node name so
+        the map stays a pure function regardless."""
+        candidates = self.nodes if among is None else tuple(
+            sorted(n for n in among if n in self._weights))
+        if not candidates:
+            raise ValueError(f"no candidate nodes for {key!r}")
+        return max(candidates, key=lambda n: (self.score(n, key), n))
+
+    def place_all(self, keys: Iterable[str]) -> dict[str, str]:
+        return {k: self.place(k) for k in keys}
+
+
+# ---------------------------------------------------------------------------
+# sharing-aware planner
+# ---------------------------------------------------------------------------
+
+def hot_set_affinity(hot_set: list[str],
+                     node_hot_sets: list[list[str]]) -> float:
+    """How much of ``hot_set`` the node's resident apps already keep
+    paged in: |modules shared with the node| / |hot_set|, prefix-aware
+    (``fakelib_x`` covers ``fakelib_x.core``) via
+    :func:`repro.pool.sharing.intersect_hot_sets`.  0 for an empty node
+    or a disjoint app; 1 when every hot module is already resident."""
+    if not hot_set or not node_hot_sets:
+        return 0.0
+    union: set[str] = set()
+    for hs in node_hot_sets:
+        union.update(hs)
+    shared = intersect_hot_sets(
+        {"app": list(hot_set), "node": sorted(union)}, min_members=2)
+    return len(shared) / len(set(hot_set))
+
+
+def plan_placement(apps: Iterable[str], ring: ConsistentHashRing, *,
+                   strategy: str = "sharing",
+                   hot_sets: Optional[dict[str, list[str]]] = None,
+                   seed: int = 0,
+                   max_load_factor: float = 1.0) -> dict[str, str]:
+    """Assign every app to a node.
+
+    * ``hash`` — pure weighted rendezvous hashing (minimal churn).
+    * ``random`` — seeded uniform choice (the comparison baseline).
+    * ``sharing`` — greedy affinity packing: apps are visited in
+      hot-set-signature order, which walks library families
+      contiguously (siblings share their family module, so their
+      sorted hot sets are lexicographic neighbours).  Each app goes to
+      the node maximizing measured hot-set overlap with the apps
+      already placed there; the ring score breaks ties (and places
+      apps with no profile).  The load cap — ``max_load_factor`` times
+      the balanced share K/N, default balanced — closes full nodes,
+      because modules shared fleet-wide (a common runtime) give
+      *every* non-empty node positive affinity and pure affinity
+      packing would collapse the fleet onto one hot node.
+
+    Deterministic for a fixed (seed, app set, hot sets, node set).
+    """
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r} "
+                         f"(one of {STRATEGIES})")
+    apps = sorted(set(apps))
+    if not len(ring):
+        raise ValueError("cannot place apps on an empty ring")
+    if strategy == "hash":
+        return ring.place_all(apps)
+    if strategy == "random":
+        rng = random.Random(seed)
+        nodes = ring.nodes
+        return {app: rng.choice(nodes) for app in apps}
+
+    hot_sets = hot_sets or {}
+    cap = max(1, math.ceil(max_load_factor * len(apps) / len(ring)))
+    by_node: dict[str, list[list[str]]] = {n: [] for n in ring.nodes}
+    placement: dict[str, str] = {}
+    # signature order: sorted hot-set tuples put family siblings next
+    # to each other, so each family seeds a node before the next one
+    # starts; name tiebreak keeps the order total
+    order = sorted(apps,
+                   key=lambda a: (tuple(sorted(hot_sets.get(a, []))),
+                                  a))
+    # ring scores span orders of magnitude; affinity is in [0, 1].
+    # Normalizing the ring score per-app into [0, 1) and weighting it
+    # down keeps it a tiebreak: any real overlap dominates.
+    for app in order:
+        hs = hot_sets.get(app, [])
+        open_nodes = tuple(n for n in ring.nodes
+                           if len(by_node[n]) < cap) or ring.nodes
+        ring_scores = {n: ring.score(n, app) for n in open_nodes}
+        top = max(ring_scores.values())
+        scores = {
+            node: (hot_set_affinity(hs, by_node[node]) if hs else 0.0)
+            + 0.01 * (ring_scores[node] / top)
+            for node in open_nodes
+        }
+        best = max(open_nodes, key=lambda n: (scores[n], n))
+        placement[app] = best
+        by_node[best].append(list(hs))
+    return placement

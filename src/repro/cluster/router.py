@@ -1,0 +1,335 @@
+"""The global router: socket-fed placement over real node agents.
+
+Where :class:`~repro.cluster.sim.ClusterSimulator` routes simulated
+arrivals to in-process :class:`FleetManager` nodes, this module routes
+*real* invocations to :class:`~repro.cluster.node.NodeAgent` processes
+over the frame protocol.  Same placement brain
+(:mod:`repro.cluster.ring` — sharing-weighted when hot sets are known,
+plain rendezvous hashing otherwise), same ledger discipline: the
+router counts every admission per node, and at shutdown the per-node
+``fleet_summary`` payloads must account for exactly those requests
+(``requests == served + sheds + flushed + errors + abandoned`` per
+node and globally) — checked in the emitted ``cluster_summary``.
+
+Real nodes deploy a fixed app set (a :class:`ZygoteFleet` boots from
+on-disk app dirs), so placement is constrained to nodes advertising
+the app; when several do, the strategy picks.  Node loss (a dead
+connection, or the chaos ``node_loss`` fault) re-places the lost
+node's apps across surviving advertisers; requests the router already
+handed to the dead node stay in *its* ledger — its last summary (or
+the router's shed accounting when none was obtainable) keeps the
+global invariant intact.
+
+Global percentiles are merged from the capped raw latency samples each
+agent ships back with its summary
+(:meth:`repro.pool.simulator.PercentilePool.merge` — true quantiles,
+not averaged per-node ones).
+"""
+
+from __future__ import annotations
+
+import socket
+import threading
+import time
+from typing import Optional
+
+from repro.obs.log import get_logger
+from repro.obs.tracing import get_tracer, new_id, now_ms
+from repro.pool.chaos import NodeLossFault
+from repro.pool.simulator import PercentilePool
+from repro.cluster.protocol import (FrameClosed, FrameError,
+                                    recv_frame, send_frame)
+from repro.cluster.ring import (ConsistentHashRing, hot_set_affinity,
+                                plan_placement)
+from repro.cluster.summary import make_cluster_summary_payload
+
+_LOG = get_logger("cluster.router")
+
+
+def _reg():
+    from repro.obs.metrics import default_registry
+    return default_registry()
+
+
+class NodeClient:
+    """Blocking frame-RPC client to one node agent (thread-safe: one
+    in-flight call at a time per client)."""
+
+    def __init__(self, node_id: str, host: str, port: int, *,
+                 timeout_s: float = 30.0) -> None:
+        self.node_id = node_id
+        self.host = host
+        self.port = port
+        self.timeout_s = timeout_s
+        self._lock = threading.Lock()
+        self._sock: Optional[socket.socket] = None
+
+    def connect(self) -> dict:
+        with self._lock:
+            if self._sock is None:
+                self._sock = socket.create_connection(
+                    (self.host, self.port), timeout=self.timeout_s)
+        return self.call({"cmd": "hello"})
+
+    def call(self, obj: dict) -> dict:
+        with self._lock:
+            if self._sock is None:
+                raise ConnectionError(
+                    f"node {self.node_id} is not connected")
+            try:
+                send_frame(self._sock, obj)
+                return recv_frame(self._sock)
+            except (OSError, FrameClosed, FrameError):
+                self.close()
+                raise
+
+    def close(self) -> None:
+        sock, self._sock = self._sock, None
+        if sock is not None:
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    def __enter__(self) -> "NodeClient":
+        self.connect()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class ClusterRouter:
+    """Places apps on live node agents and feeds them invocations."""
+
+    def __init__(self, clients: dict[str, NodeClient], *,
+                 strategy: str = "sharing",
+                 hot_sets: Optional[dict[str, list[str]]] = None,
+                 seed: int = 0, fault_hook=None) -> None:
+        if not clients:
+            raise ValueError("router needs at least one node")
+        self.clients = dict(clients)
+        self.strategy = strategy
+        self.hot_sets = dict(hot_sets or {})
+        self.seed = seed
+        self.fault_hook = fault_hook
+        self.ring = ConsistentHashRing(self.clients, seed=seed)
+        self.node_apps: dict[str, list[str]] = {}
+        self.placement: dict[str, str] = {}
+        self.routed_by_node: dict[str, int] = {
+            n: 0 for n in self.clients}
+        self.router_sheds = 0  # arrivals no live node could take
+        self.migrations: list[dict] = []
+        self.lost_nodes: list[str] = []
+        self._node_payloads: dict[str, dict] = {}
+        self._node_samples: dict[str, list[float]] = {}
+        self._t0 = time.monotonic()
+
+    # ----------------------------------------------------------- topology
+    def connect(self) -> dict[str, str]:
+        """Hello every node, learn who deploys what, compute the
+        placement.  Returns the app -> node map."""
+        for node_id, client in sorted(self.clients.items()):
+            hello = client.connect()
+            self.node_apps[node_id] = list(hello.get("apps", []))
+        self._place_all()
+        _reg().gauge("repro_cluster_nodes",
+                     "live cluster nodes").set(len(self.clients))
+        return dict(self.placement)
+
+    def _advertisers(self, app: str) -> list[str]:
+        return sorted(n for n, apps in self.node_apps.items()
+                      if app in apps and n in self.clients)
+
+    def _place_all(self) -> None:
+        apps = sorted({a for apps in self.node_apps.values()
+                       for a in apps})
+        # place over the full ring first (pure strategy), then clamp
+        # each app to the nodes that actually deploy it
+        ideal = plan_placement(apps, self.ring,
+                               strategy=self.strategy,
+                               hot_sets=self.hot_sets, seed=self.seed)
+        for app in apps:
+            nodes = self._advertisers(app)
+            if not nodes:
+                continue
+            self.placement[app] = (ideal[app] if ideal[app] in nodes
+                                   else self.ring.place(app,
+                                                        among=nodes))
+
+    def node_leave(self, node_id: str, *,
+                   reason: str = "node_loss") -> dict:
+        """A node died (connection gone or chaos): collect what it
+        already reported if possible, re-place its apps."""
+        client = self.clients.pop(node_id, None)
+        if client is None:
+            return {"node": node_id, "already_lost": True}
+        tracer = get_tracer()
+        t0 = now_ms() if tracer.enabled else 0.0
+        # best-effort last summary so its admitted requests stay
+        # accounted; a dead socket means the ledger keeps the router's
+        # own count with zero served — conservation then *visibly*
+        # breaks in the report rather than silently dropping traffic
+        if node_id not in self._node_payloads:
+            try:
+                reply = client.call({"cmd": "shutdown", "flush": True})
+                self._harvest(node_id, reply)
+            except (ConnectionError, OSError, FrameClosed, FrameError):
+                pass
+        client.close()
+        self.ring.remove(node_id)
+        self.lost_nodes.append(node_id)
+        moved = []
+        for app, owner in sorted(self.placement.items()):
+            if owner != node_id:
+                continue
+            nodes = self._advertisers(app)
+            if not nodes:
+                del self.placement[app]  # nobody left deploys it
+                continue
+            target = self._choose(app, nodes)
+            self.placement[app] = target
+            moved.append(app)
+            self.migrations.append({
+                "app": app, "from": node_id, "to": target,
+                "at": round(time.monotonic() - self._t0, 3),
+                "reason": reason})
+            _reg().counter("repro_cluster_migrations_total",
+                           "app migrations between nodes, by reason",
+                           labels=("reason",)).labels(
+                reason=reason).inc()
+        _reg().counter("repro_cluster_node_lost_total",
+                       "nodes declared lost").inc()
+        _reg().gauge("repro_cluster_nodes",
+                     "live cluster nodes").set(len(self.clients))
+        _LOG.warning("node-lost", node=node_id, moved=len(moved))
+        if tracer.enabled:
+            tracer.add("cluster.rebalance", trace_id=new_id(),
+                       t_start_ms=t0, duration_ms=now_ms() - t0,
+                       attrs={"node": node_id, "event": reason,
+                              "moved": len(moved)})
+        return {"node": node_id, "moved": moved}
+
+    def node_join(self, node_id: str, client: NodeClient) -> dict:
+        """A node came up: hello it, hand it the apps the ring says it
+        now owns (among its advertised set)."""
+        hello = client.connect()
+        self.clients[node_id] = client
+        self.node_apps[node_id] = list(hello.get("apps", []))
+        self.ring.add(node_id)
+        self.routed_by_node.setdefault(node_id, 0)
+        moved = []
+        for app in self.node_apps[node_id]:
+            old = self.placement.get(app)
+            target = self.ring.place(app, among=self._advertisers(app))
+            if target == node_id and old != node_id:
+                self.placement[app] = node_id
+                moved.append(app)
+                if old is not None:
+                    self.migrations.append({
+                        "app": app, "from": old, "to": node_id,
+                        "at": round(time.monotonic() - self._t0, 3),
+                        "reason": "node_join"})
+        _reg().gauge("repro_cluster_nodes",
+                     "live cluster nodes").set(len(self.clients))
+        _LOG.info("node-joined", node=node_id, moved=len(moved))
+        return {"node": node_id, "moved": moved}
+
+    def _choose(self, app: str, nodes: list[str]) -> str:
+        if self.strategy == "sharing" and self.hot_sets.get(app):
+            hs = self.hot_sets[app]
+            ring_scores = {n: self.ring.score(n, app) for n in nodes}
+            top = max(ring_scores.values())
+            resident = {
+                n: [self.hot_sets.get(a, [])
+                    for a, o in self.placement.items() if o == n]
+                for n in nodes}
+            return max(nodes, key=lambda n: (
+                hot_set_affinity(hs, resident[n])
+                + 0.01 * (ring_scores[n] / top), n))
+        return self.ring.place(app, among=nodes)
+
+    # ------------------------------------------------------------- serving
+    def route(self, app: str, handler: Optional[str] = None) -> dict:
+        """Forward one invocation to the app's owner; on a dead node,
+        fail over once (the node is declared lost, apps re-place, and
+        this invocation goes to the new owner)."""
+        tracer = get_tracer()
+        t0 = now_ms() if tracer.enabled else 0.0
+        for _attempt in (0, 1):
+            node_id = self.placement.get(app)
+            if node_id is None or node_id not in self.clients:
+                self.router_sheds += 1
+                return {"ok": False, "outcome": "no-node",
+                        "error": f"no live node deploys {app!r}"}
+            if self.fault_hook is not None:
+                try:
+                    self.fault_hook("route", app=app, node=node_id)
+                except NodeLossFault:
+                    self.node_leave(node_id, reason="node_loss")
+                    continue
+            try:
+                reply = self.clients[node_id].call(
+                    {"app": app, "handler": handler})
+            except (ConnectionError, OSError, FrameClosed,
+                    FrameError):
+                self.node_leave(node_id, reason="connection_lost")
+                continue
+            self.routed_by_node[node_id] = \
+                self.routed_by_node.get(node_id, 0) + 1
+            _reg().counter("repro_cluster_routed_total",
+                           "invocations routed, by node and outcome",
+                           labels=("node", "outcome")).labels(
+                node=node_id,
+                outcome=str(reply.get("outcome", "error"))).inc()
+            if tracer.enabled:
+                tracer.add("cluster.route", trace_id=new_id(),
+                           t_start_ms=t0,
+                           duration_ms=now_ms() - t0,
+                           attrs={"app": app, "node": node_id,
+                                  "outcome": reply.get("outcome")})
+            return {**reply, "node": node_id}
+        self.router_sheds += 1
+        return {"ok": False, "outcome": "no-node",
+                "error": f"no surviving owner for {app!r}"}
+
+    # -------------------------------------------------------------- finish
+    def _harvest(self, node_id: str, reply: dict) -> None:
+        if reply.get("event") == "summary":
+            self._node_payloads[node_id] = reply.get("summary") or {}
+            self._node_samples[node_id] = [
+                float(x) for x in reply.get("latency_samples") or []]
+
+    def shutdown(self, *, flush: bool = False) -> dict:
+        """Drain every node, merge ledgers and sample pools, return
+        the ``cluster_summary`` payload."""
+        for node_id, client in sorted(self.clients.items()):
+            if node_id in self._node_payloads:
+                continue
+            try:
+                self._harvest(node_id, client.call(
+                    {"cmd": "shutdown", "flush": flush}))
+            except (ConnectionError, OSError, FrameClosed,
+                    FrameError) as exc:
+                _LOG.warning("shutdown-lost", node=node_id,
+                             error=repr(exc))
+            finally:
+                client.close()
+        lat_pool = PercentilePool.merge([
+            PercentilePool.of_lists([samples])
+            for samples in self._node_samples.values()])
+        payload = make_cluster_summary_payload(
+            source="cluster-route",
+            strategy=self.strategy,
+            node_payloads=self._node_payloads,
+            lat_pool=lat_pool,
+            placement=self.placement,
+            migrations=self.migrations,
+            lost_nodes=self.lost_nodes,
+            routed_by_node=self.routed_by_node,
+            router={"sheds": self.router_sheds,
+                    "nodes": sorted(set(self.clients)
+                                    | set(self.lost_nodes))},
+            duration_s=round(time.monotonic() - self._t0, 3),
+        )
+        return payload

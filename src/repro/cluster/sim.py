@@ -1,0 +1,370 @@
+"""Cluster-scale simulator: N simulated nodes, one global router.
+
+Scales the PR 2 :class:`~repro.pool.fleet.FleetManager` simulation
+from one host to a cluster: each :class:`SimNode` runs its own manager
+(incremental ``begin -> offer -> finish``, exactly what the daemon
+drives) under a per-node memory budget and a per-node shared base
+zygote, and the router in :class:`ClusterSimulator` feeds every trace
+arrival to the node owning its app.  Because each offer touches only
+one node's state, a replay is O(requests x apps-per-node) — millions
+of synthetic invocations run in seconds, which is the point: placement
+quality only shows at fleet scale.
+
+Why placement matters here: a node's shared base covers the modules
+hot for >= 2 of *its* apps (:func:`repro.pool.sharing
+.intersect_hot_sets`), and each resident app-zygote is charged only
+its private delta above that base.  Sharing-aware placement packs
+library families onto the same node, so the base covers more pages,
+the per-app deltas shrink, more zygotes fit the node budget, and cold
+starts fall — at the *same* total memory as plain consistent hashing,
+which scatters families and pays full-fat zygotes everywhere.
+
+Topology is dynamic: :meth:`ClusterSimulator.lose_node` (also wired to
+the chaos ``node_loss`` fault) finalizes the lost node's fleet —
+flushing its queued work into its summary, so nothing disappears — and
+re-places its apps on the survivors; :meth:`join_node` migrates the
+ring-owned app set onto a fresh node.  The conservation invariant
+``requests == served + sheds + flushed + errors + abandoned`` is
+checked per node and globally (router ledger vs node ledgers) in the
+emitted ``cluster_summary`` payload.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.obs.log import get_logger
+from repro.obs.tracing import get_tracer, new_id, now_ms
+from repro.pool.chaos import NodeLossFault
+from repro.pool.fleet import FleetManager, QueueConfig
+from repro.pool.policies import ProfileGuidedPolicy
+from repro.pool.sharing import intersect_hot_sets
+from repro.pool.simulator import PercentilePool
+from repro.pool.trace import Request, Trace
+from repro.cluster.ring import (ConsistentHashRing, hot_set_affinity,
+                                plan_placement)
+from repro.cluster.summary import make_cluster_summary_payload
+from repro.cluster.workload import BASE_PROC_MB, ClusterWorkload
+
+_LOG = get_logger("cluster.sim")
+
+
+def _reg():
+    from repro.obs.metrics import default_registry
+    return default_registry()
+
+
+class SimNode:
+    """One simulated node: a FleetManager + per-node base zygote.
+
+    ``base_modules`` (modules hot for >= 2 resident apps) size the
+    node's shared base; each app's zygote is charged its private delta
+    above that base — the two-tier accounting from PR 5, now computed
+    *per node* from whatever placement put here.
+    """
+
+    def __init__(self, node_id: str, workload: ClusterWorkload, *,
+                 apps: list[str], budget_mb: float,
+                 queue: Optional[QueueConfig] = None,
+                 rate_hint_per_s: float = 0.5) -> None:
+        self.node_id = node_id
+        self.workload = workload
+        self.rate_hint_per_s = rate_hint_per_s
+        self.base_modules = intersect_hot_sets(
+            {a: workload.hot_sets[a] for a in apps}, min_members=2)
+        self.shared_base_mb = (
+            BASE_PROC_MB + sum(workload.module_mb[m]
+                               for m in self.base_modules)
+            if self.base_modules else 0.0)
+        self.policy = ProfileGuidedPolicy(
+            rate_hint_per_s=rate_hint_per_s)
+        profiles = {a: self._node_profile(a) for a in apps}
+        for app in apps:
+            self.policy.add_report(workload.reports[app])
+        self.manager = FleetManager(
+            profiles, self.policy, budget_mb=budget_mb,
+            queue=queue or QueueConfig(),
+            shared_base_mb=self.shared_base_mb)
+        self.alive = True
+        self.summary = None  # FleetSummary once finished
+
+    def _node_profile(self, app: str):
+        """The app's profile *on this node*: private zygote pages are
+        whatever its hot set adds above this node's base."""
+        prof = self.workload.profiles[app]
+        base = set(self.base_modules)
+        private = sum(self.workload.module_mb[m]
+                      for m in self.workload.hot_sets[app]
+                      if m not in base)
+        if self.shared_base_mb <= 0:
+            return prof  # single-tier node: full-fat zygote
+        return dataclasses.replace(
+            prof, zygote_private_mb=max(private, 1.0))
+
+    @property
+    def apps(self) -> list[str]:
+        return sorted(self.manager.profiles)
+
+    def begin(self, trace_name: str) -> None:
+        self.manager.begin(trace_name)
+
+    def offer(self, req: Request) -> str:
+        return self.manager.offer(req)
+
+    def add_app(self, app: str) -> None:
+        """Migration target: the app joins with a profile derived
+        against *this* node's (already booted) base."""
+        self.policy.add_report(self.workload.reports[app])
+        self.manager.add_app(self._node_profile(app))
+
+    def retire_app(self, app: str, now: float) -> dict:
+        return self.manager.retire_app(app, now)
+
+    def finish(self, end_t: float):
+        if self.summary is None:
+            self.summary = self.manager.finish(end_t)
+        return self.summary
+
+
+class ClusterSimulator:
+    """Router + N simulated nodes over one synthetic workload."""
+
+    def __init__(self, workload: ClusterWorkload, *,
+                 n_nodes: int = 4, node_budget_mb: float = 512.0,
+                 strategy: str = "sharing", seed: int = 0,
+                 queue: Optional[QueueConfig] = None,
+                 fault_hook=None) -> None:
+        if n_nodes < 1:
+            raise ValueError("n_nodes must be >= 1")
+        self.workload = workload
+        self.strategy = strategy
+        self.seed = seed
+        self.node_budget_mb = node_budget_mb
+        self.queue = queue or QueueConfig()
+        self.fault_hook = fault_hook
+        self.ring = ConsistentHashRing(
+            (f"node{i}" for i in range(n_nodes)), seed=seed)
+        self.placement = plan_placement(
+            workload.apps, self.ring, strategy=strategy,
+            hot_sets=workload.hot_sets, seed=seed)
+        self.nodes: dict[str, SimNode] = {}
+        for node_id in self.ring.nodes:
+            assigned = sorted(a for a, n in self.placement.items()
+                              if n == node_id)
+            self.nodes[node_id] = SimNode(
+                node_id, workload, apps=assigned,
+                budget_mb=node_budget_mb, queue=self.queue)
+        self.migrations: list[dict] = []
+        self.lost_nodes: list[str] = []
+        self.routed_by_node: dict[str, int] = {
+            n: 0 for n in self.ring.nodes}
+        self._began = False
+        self._trace_name = "cluster"
+
+    # ------------------------------------------------------------- serving
+    def begin(self, trace_name: str = "cluster") -> None:
+        self._trace_name = trace_name
+        for node in self.nodes.values():
+            node.begin(trace_name)
+        self._began = True
+
+    def route(self, req: Request) -> str:
+        """Feed one arrival to the node owning its app.  The chaos
+        ``route`` site fires *before* admission, so an injected
+        :class:`NodeLossFault` loses the node but never the request —
+        it is re-placed and admitted on a survivor."""
+        node_id = self.placement[req.app]
+        if self.fault_hook is not None:
+            try:
+                self.fault_hook("route", app=req.app, node=node_id)
+            except NodeLossFault:
+                self.lose_node(node_id, req.t)
+                node_id = self.placement[req.app]
+        self.routed_by_node[node_id] = \
+            self.routed_by_node.get(node_id, 0) + 1
+        return self.nodes[node_id].offer(req)
+
+    def replay(self, trace: Optional[Trace] = None, *,
+               limit: Optional[int] = None,
+               source: str = "cluster-sim") -> dict:
+        """Route a whole trace and return the ``cluster_summary``
+        payload.  ``limit`` truncates the trace (smoke runs)."""
+        trace = trace if trace is not None else self.workload.trace
+        tracer = get_tracer()
+        t0 = now_ms()
+        self.begin(trace.name)
+        last_t = 0.0
+        for i, req in enumerate(trace):
+            if limit is not None and i >= limit:
+                break
+            last_t = req.t
+            self.route(req)
+        end_t = max(trace.duration_s, last_t)
+        payload = self.finish(end_t, source=source)
+        if tracer.enabled:
+            tracer.add("cluster.replay", trace_id=new_id(),
+                       t_start_ms=t0, duration_ms=now_ms() - t0,
+                       attrs={"strategy": self.strategy,
+                              "nodes": len(self.nodes),
+                              "requests": payload["requests"],
+                              "lost_nodes": len(self.lost_nodes)})
+        return payload
+
+    # ------------------------------------------------------------ topology
+    def _alive(self) -> list[str]:
+        return [n for n, node in self.nodes.items() if node.alive]
+
+    def _replace_app(self, app: str, t: float, *, reason: str,
+                     from_node: str) -> str:
+        """Choose a surviving owner for ``app`` and migrate it there."""
+        survivors = self._alive()
+        if not survivors:
+            raise RuntimeError("no surviving nodes to re-place "
+                               f"{app!r} on")
+        if self.strategy == "sharing":
+            # affinity against what each survivor currently hosts,
+            # ring score as tiebreak — same scoring as initial
+            # placement, evaluated over the live topology
+            hs = self.workload.hot_sets[app]
+            ring_scores = {n: self.ring.score(n, app)
+                           for n in survivors}
+            top = max(ring_scores.values())
+            scores = {
+                n: hot_set_affinity(
+                    hs, [self.workload.hot_sets[a]
+                         for a in self.nodes[n].apps])
+                + 0.01 * (ring_scores[n] / top)
+                for n in survivors
+            }
+            target = max(survivors, key=lambda n: (scores[n], n))
+        else:
+            target = self.ring.place(app)
+        self.nodes[target].add_app(app)
+        self.placement[app] = target
+        self.migrations.append({"app": app, "from": from_node,
+                                "to": target, "at": round(t, 3),
+                                "reason": reason})
+        _reg().counter("repro_cluster_migrations_total",
+                       "app migrations between nodes, by reason",
+                       labels=("reason",)).labels(reason=reason).inc()
+        return target
+
+    def lose_node(self, node_id: str, t: float) -> dict:
+        """Node failure: finalize its fleet (queued work flushes into
+        its summary — conservation survives the loss) and re-place its
+        apps on the survivors."""
+        node = self.nodes[node_id]
+        if not node.alive:
+            return {"node": node_id, "already_lost": True}
+        tracer = get_tracer()
+        t0 = now_ms() if tracer.enabled else 0.0
+        node.alive = False
+        node.finish(t)
+        self.ring.remove(node_id)
+        self.lost_nodes.append(node_id)
+        moved = []
+        for app in node.apps:
+            moved.append(self._replace_app(app, t, reason="node_loss",
+                                           from_node=node_id))
+        _reg().counter("repro_cluster_node_lost_total",
+                       "nodes declared lost").inc()
+        _LOG.warning("node-lost", node=node_id, at=round(t, 3),
+                     moved=len(moved))
+        if tracer.enabled:
+            tracer.add("cluster.rebalance", trace_id=new_id(),
+                       t_start_ms=t0, duration_ms=now_ms() - t0,
+                       attrs={"node": node_id, "event": "node_loss",
+                              "moved": len(moved)})
+        return {"node": node_id, "moved": len(moved)}
+
+    def join_node(self, node_id: str, t: float) -> dict:
+        """Node join: the ring decides which apps the newcomer owns
+        (rendezvous hashing moves only *onto* the new node, ~K/N of
+        them); those apps are retired from their old nodes — still-
+        queued work flushes there — and admitted on the new one."""
+        if node_id in self.nodes and self.nodes[node_id].alive:
+            return {"node": node_id, "already_joined": True}
+        self.ring.add(node_id)
+        movers = [app for app in self._placed_on_alive()
+                  if self.ring.place(app) == node_id]
+        node = SimNode(node_id, self.workload, apps=movers,
+                       budget_mb=self.node_budget_mb,
+                       queue=self.queue)
+        node.begin(self._trace_name)
+        self.nodes[node_id] = node
+        self.routed_by_node.setdefault(node_id, 0)
+        for app in movers:
+            old = self.placement[app]
+            self.nodes[old].retire_app(app, t)
+            self.placement[app] = node_id
+            self.migrations.append({"app": app, "from": old,
+                                    "to": node_id, "at": round(t, 3),
+                                    "reason": "node_join"})
+        _LOG.info("node-joined", node=node_id, at=round(t, 3),
+                  moved=len(movers))
+        return {"node": node_id, "moved": len(movers)}
+
+    def _placed_on_alive(self) -> list[str]:
+        return [a for a, n in self.placement.items()
+                if self.nodes[n].alive]
+
+    # -------------------------------------------------------------- finish
+    def finish(self, end_t: float, *,
+               source: str = "cluster-sim") -> dict:
+        node_payloads: dict[str, dict] = {}
+        lat_pools, wait_pools = [], []
+        for node_id, node in sorted(self.nodes.items()):
+            summary = node.finish(end_t)
+            node_payloads[node_id] = summary.artifact_payload(
+                source=source)
+            lat_pools.append(summary._lat_pool)
+            wait_pools.append(summary._wait_pool)
+            _reg().gauge("repro_cluster_node_requests",
+                         "arrivals per cluster node",
+                         labels=("node",)).labels(
+                node=node_id).set(summary.n_requests)
+            _reg().gauge("repro_cluster_node_cold_starts",
+                         "cold starts per cluster node",
+                         labels=("node",)).labels(
+                node=node_id).set(summary.cold_starts)
+        _reg().gauge("repro_cluster_nodes",
+                     "live cluster nodes").set(len(self._alive()))
+        return make_cluster_summary_payload(
+            source=source,
+            strategy=self.strategy,
+            node_payloads=node_payloads,
+            lat_pool=PercentilePool.merge(lat_pools),
+            wait_pool=PercentilePool.merge(wait_pools),
+            placement=self.placement,
+            migrations=self.migrations,
+            lost_nodes=self.lost_nodes,
+            routed_by_node=self.routed_by_node,
+            trace=self._trace_name,
+            seed=self.seed,
+            node_budget_mb=self.node_budget_mb,
+            total_budget_mb=round(
+                self.node_budget_mb * len(self.nodes), 1),
+            duration_s=round(end_t, 3),
+            queue=self.queue.to_dict(),
+        )
+
+
+def compare_strategies(workload: ClusterWorkload, *,
+                       n_nodes: int = 4, node_budget_mb: float = 512.0,
+                       strategies=("sharing", "hash", "random"),
+                       seed: int = 0,
+                       queue: Optional[QueueConfig] = None,
+                       limit: Optional[int] = None) -> dict[str, dict]:
+    """Replay the same trace under each placement strategy at the same
+    per-node budget; returns strategy -> cluster_summary payload.  The
+    ISSUE-8 acceptance table: sharing-aware must beat plain hashing on
+    cold-start ratio at equal total memory."""
+    out: dict[str, dict] = {}
+    for strategy in strategies:
+        sim = ClusterSimulator(workload, n_nodes=n_nodes,
+                               node_budget_mb=node_budget_mb,
+                               strategy=strategy, seed=seed,
+                               queue=queue)
+        out[strategy] = sim.replay(limit=limit)
+    return out

@@ -1,0 +1,147 @@
+"""Cluster-level rollup: merge per-node fleet summaries honestly.
+
+Every node — simulated :class:`~repro.cluster.sim.SimNode` or a real
+socket-fed agent — ultimately produces one ``fleet_summary`` payload
+(the PR 3/4 schema).  The cluster summary is the rollup over those:
+counts add, but **percentiles do not** — a p99 of per-node p99s is not
+the global p99 whenever nodes host different apps.  So the router
+merges the nodes' *sample pools*
+(:meth:`repro.pool.simulator.PercentilePool.merge`) and reads true
+global quantiles, and the per-node payloads ride along under
+``per_node`` for drill-down.
+
+Conservation is checked at both scopes and recorded in the payload:
+``requests == served + sheds + flushed + errors + abandoned`` must
+hold per node (each node's own accounting) and globally (the router
+must not have lost a request between nodes, including across
+migrations and node loss).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+from repro.pool.simulator import PercentilePool
+
+CONSERVATION_EXPR = ("requests == served + sheds + flushed + errors "
+                     "+ abandoned")
+
+# the counters that must add up, with their defaults-when-absent
+_COUNT_KEYS = ("requests", "served", "cold_starts", "sheds", "flushed",
+               "errors", "abandoned")
+
+
+def node_conserves(payload: dict) -> bool:
+    """Does one node's fleet_summary payload conserve requests?"""
+    rhs = sum(int(payload.get(k, 0) or 0)
+              for k in ("served", "sheds", "flushed", "errors",
+                        "abandoned"))
+    return int(payload.get("requests", 0) or 0) == rhs
+
+
+def _num(x: float) -> float:
+    return 0.0 if (x is None or math.isnan(x)) else round(x, 3)
+
+
+def make_cluster_summary_payload(
+        *, source: str, strategy: str,
+        node_payloads: dict[str, dict],
+        lat_pool: Optional[PercentilePool] = None,
+        wait_pool: Optional[PercentilePool] = None,
+        placement: Optional[dict[str, str]] = None,
+        migrations: Optional[list[dict]] = None,
+        lost_nodes: Optional[list[str]] = None,
+        routed_by_node: Optional[dict[str, int]] = None,
+        **optional) -> dict:
+    """The one constructor for ``cluster_summary`` artifact payloads
+    (mirroring :func:`repro.pool.fleet.make_fleet_summary_payload`).
+
+    ``node_payloads`` maps node id -> that node's ``fleet_summary``
+    payload; ``lat_pool``/``wait_pool`` are the merged sample pools for
+    true global percentiles (per-node percentiles are *not* averaged —
+    absent pools report 0.0 and flag ``percentiles_merged: false``).
+    ``routed_by_node`` is the router's own admission count per node;
+    when present it must match each node's reported ``requests`` for
+    global conservation to hold.
+    """
+    totals = {k: 0 for k in _COUNT_KEYS}
+    per_node = []
+    per_node_holds: dict[str, bool] = {}
+    lost = set(lost_nodes or ())
+    for node_id in sorted(node_payloads):
+        payload = node_payloads[node_id]
+        holds = node_conserves(payload)
+        per_node_holds[node_id] = holds
+        row = {"node": node_id, "lost": node_id in lost,
+               "conservation_holds": holds}
+        for k in _COUNT_KEYS:
+            v = int(payload.get(k, 0) or 0)
+            row[k] = v
+            totals[k] += v
+        for k in ("cold_start_ratio", "p50_ms", "p99_ms",
+                  "memory_gb_s", "budget_mb", "shared_base_mb"):
+            if payload.get(k) is not None:
+                row[k] = payload[k]
+        if routed_by_node is not None:
+            row["routed"] = int(routed_by_node.get(node_id, 0))
+        per_node.append(row)
+
+    requests = totals["requests"]
+    accounted = sum(totals[k] for k in ("served", "sheds", "flushed",
+                                        "errors", "abandoned"))
+    holds = requests == accounted and all(per_node_holds.values())
+    routed_total = None
+    if routed_by_node is not None:
+        routed_total = sum(routed_by_node.values())
+        # the router-side ledger and the nodes' ledgers must agree,
+        # per node and in total — a mismatch means a request was
+        # dropped (or double-fed) in flight between router and node
+        holds = holds and routed_total == requests and all(
+            int(routed_by_node.get(r["node"], 0)) == r["requests"]
+            for r in per_node)
+
+    conservation = {
+        "expression": CONSERVATION_EXPR,
+        "holds": holds,
+        "requests": requests,
+        "accounted": accounted,
+        "per_node": per_node_holds,
+    }
+    if routed_total is not None:
+        conservation["routed"] = routed_total
+
+    payload = {
+        "source": source,
+        "strategy": strategy,
+        "nodes": len(node_payloads),
+        "requests": requests,
+        "served": totals["served"],
+        "cold_starts": totals["cold_starts"],
+        "cold_start_ratio": round(
+            totals["cold_starts"] / max(requests, 1), 4),
+        "p50_ms": _num(lat_pool.percentile(0.50)) if lat_pool else 0.0,
+        "p99_ms": _num(lat_pool.percentile(0.99)) if lat_pool else 0.0,
+        "sheds": totals["sheds"],
+        "flushed": totals["flushed"],
+        "errors": totals["errors"],
+        "abandoned": totals["abandoned"],
+        "conservation": conservation,
+        "per_node": per_node,
+        "percentiles_merged": lat_pool is not None,
+    }
+    if wait_pool is not None:
+        payload["queue_wait_p50_ms"] = _num(wait_pool.percentile(0.50))
+        payload["queue_wait_p99_ms"] = _num(wait_pool.percentile(0.99))
+    if placement is not None:
+        payload["placement"] = dict(sorted(placement.items()))
+    if migrations is not None:
+        payload["migrations"] = list(migrations)
+    if lost_nodes is not None:
+        payload["lost_nodes"] = sorted(lost)
+    mem = [p.get("memory_gb_s") for p in node_payloads.values()]
+    if any(m is not None for m in mem):
+        payload["memory_gb_s"] = round(
+            sum(m for m in mem if m is not None), 3)
+    payload.update(optional)
+    return payload

@@ -1,0 +1,125 @@
+"""Synthetic multi-app cluster workloads for the placement comparison.
+
+The cluster simulator's claim — sharing-aware placement beats plain
+consistent hashing at equal total memory — needs a workload whose
+library-sharing structure is *known*, so the comparison measures
+placement quality, not profiling noise.  This module fabricates one:
+
+* ``n_apps`` apps in ``n_families`` library families.  Every app's hot
+  set is ``fakelib_runtime`` (fleet-wide, the PR 5 base-zygote floor) +
+  its family's ``fakelib_fam<k>`` (the pages worth co-locating) + one
+  private ``fakelib_priv_<app>``;
+* per-module resident MB and init milliseconds scale together (big
+  libraries are slow to import — the SLIMSTART correlation), giving
+  each app an :class:`~repro.pool.simulator.AppProfile` and an
+  :class:`~repro.core.profiler.report.OptimizationReport` consistent
+  with each other;
+* arrivals come from the Azure-style Zipf generator
+  (:func:`repro.pool.trace.azure_trace`) so a few apps are hot and the
+  tail is cold — the regime where zygote residency decisions matter.
+
+Everything is deterministic in ``seed``; the bench, the CLI, the perf
+gate and the tests all build workloads here so their numbers agree.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.profiler.report import OptimizationReport
+from repro.core.profiler.utilization import LibraryStats
+from repro.pool.simulator import AppProfile
+from repro.pool.trace import Trace, azure_trace
+
+# interpreter + stdlib floor every process pays, beyond library pages
+BASE_PROC_MB = 20.0
+# import cost per resident MB: the measured SLIMSTART correlation is
+# roughly linear for the fakelib benchsuite
+INIT_MS_PER_MB = 5.0
+FORK_INIT_MS = 9.0      # warm path: fork from a resident zygote
+INVOKE_MS = 14.0
+
+
+@dataclass
+class ClusterWorkload:
+    """One reproducible multi-app workload: who imports what, how much
+    it costs, and when requests arrive."""
+
+    apps: list[str]
+    hot_sets: dict[str, list[str]]
+    module_mb: dict[str, float]
+    profiles: dict[str, AppProfile]
+    reports: dict[str, OptimizationReport]
+    trace: Trace
+    seed: int = 0
+    families: dict[str, int] = field(default_factory=dict)
+
+    def app_modules_mb(self, app: str) -> float:
+        return sum(self.module_mb[m] for m in self.hot_sets[app])
+
+
+def _report(app: str, hot_set: list[str],
+            module_mb: dict[str, float]) -> OptimizationReport:
+    total_init_s = sum(module_mb[m] for m in hot_set) \
+        * INIT_MS_PER_MB / 1e3
+    stats = []
+    for mod in hot_set:
+        init_s = module_mb[mod] * INIT_MS_PER_MB / 1e3
+        stats.append(LibraryStats(
+            name=mod, utilization=0.9, init_s=init_s,
+            init_share=init_s / max(total_init_s, 1e-9),
+            runtime_samples=50, file="<cluster-workload>"))
+    return OptimizationReport(
+        application=app, e2e_s=total_init_s + INVOKE_MS / 1e3,
+        total_init_s=total_init_s, qualifies=True, stats=stats,
+        defer_targets=[])
+
+
+def synthetic_cluster_workload(
+        n_apps: int = 12, *, n_families: int = 4, seed: int = 0,
+        minutes: int = 20, peak_rpm: float = 60.0,
+        popularity_s: float = 1.2,
+        family_mb: float = 64.0, runtime_mb: float = 32.0,
+        private_mb: float = 16.0) -> ClusterWorkload:
+    """Build the standard placement-comparison workload (see module
+    docstring).  ``popularity_s`` is the Zipf skew across apps."""
+    if n_apps < 1:
+        raise ValueError("n_apps must be >= 1")
+    n_families = max(1, min(n_families, n_apps))
+    apps = [f"app{i:02d}" for i in range(n_apps)]
+    families = {app: i % n_families for i, app in enumerate(apps)}
+
+    module_mb: dict[str, float] = {"fakelib_runtime": runtime_mb}
+    for fam in range(n_families):
+        module_mb[f"fakelib_fam{fam}"] = family_mb
+    hot_sets: dict[str, list[str]] = {}
+    for app in apps:
+        priv = f"fakelib_priv_{app}"
+        module_mb[priv] = private_mb
+        hot_sets[app] = ["fakelib_runtime",
+                         f"fakelib_fam{families[app]}", priv]
+
+    profiles: dict[str, AppProfile] = {}
+    reports: dict[str, OptimizationReport] = {}
+    for app in apps:
+        lib_mb = sum(module_mb[m] for m in hot_sets[app])
+        rss = BASE_PROC_MB + lib_mb
+        profiles[app] = AppProfile(
+            app=app,
+            cold_init_ms=lib_mb * INIT_MS_PER_MB,
+            warm_init_ms=FORK_INIT_MS,
+            invoke_ms=INVOKE_MS,
+            rss_mb=rss,
+            zygote_rss_mb=rss,
+            # private delta vs a node base is placement-dependent;
+            # the simulator derives it per node (see SimNode)
+            zygote_private_mb=0.0)
+        reports[app] = _report(app, hot_sets[app], module_mb)
+
+    trace = azure_trace(apps, minutes=minutes, peak_rpm=peak_rpm,
+                        popularity_s=popularity_s, seed=seed,
+                        name=f"cluster-zipf-{seed}")
+    return ClusterWorkload(apps=apps, hot_sets=hot_sets,
+                           module_mb=module_mb, profiles=profiles,
+                           reports=reports, trace=trace, seed=seed,
+                           families=families)

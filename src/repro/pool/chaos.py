@@ -14,6 +14,7 @@ components call it at well-known **sites** with keyword context::
     fault_hook("dispatch",   app=..., base=...)
     fault_hook("cold_start", app=...)
     fault_hook("rewarm",     app=...)
+    fault_hook("route",      app=..., node=...)   # cluster router
 
 :class:`FaultInjector` is the hook implementation this module ships: it
 consumes a :class:`FaultPlan` — a deterministic, seed-generatable list
@@ -35,6 +36,9 @@ socket_oserror      protocol    raise ForkServerError from an OSError
 delay_import        protocol    sleep ``delay_s`` before the command
 fail_cold           cold_start  raise (fresh-process cold start fails)
 fail_rewarm         rewarm      raise inside the daemon rewarm tick
+node_loss           route       raise NodeLossFault: the cluster router
+                                declares the routed node lost and
+                                re-places its apps on survivors
 ==================  ==========  =========================================
 
 Everything is deterministic given the plan: matching is by per-event
@@ -62,6 +66,7 @@ __all__ = [
     "FaultEvent",
     "FaultInjector",
     "FaultPlan",
+    "NodeLossFault",
     "chaos_report_payload",
 ]
 
@@ -77,11 +82,21 @@ _KIND_SPEC: dict[str, tuple[str, Optional[str]]] = {
     "delay_import": ("protocol", "preload"),
     "fail_cold": ("cold_start", None),
     "fail_rewarm": ("rewarm", None),
+    "node_loss": ("route", None),
 }
 
 FAULT_KINDS = tuple(sorted(_KIND_SPEC))
 
-SITES = ("protocol", "spawn_app", "dispatch", "cold_start", "rewarm")
+SITES = ("protocol", "spawn_app", "dispatch", "cold_start", "rewarm",
+         "route")
+
+
+class NodeLossFault(RuntimeError):
+    """Injected whole-node failure, raised at the cluster router's
+    ``route`` site (:mod:`repro.cluster.router`).  The router reacts by
+    declaring the routed node lost: its fleet is finalized (queued work
+    flushed into its summary, preserving conservation) and its apps are
+    re-placed onto the surviving nodes."""
 
 
 @dataclass(frozen=True)
@@ -342,6 +357,9 @@ class FaultInjector:
         if ev.kind == "fail_cold":
             raise RuntimeError(f"{tag} injected cold-start failure "
                                f"for {app!r}")
+        if ev.kind == "node_loss":
+            raise NodeLossFault(f"{tag} injected node loss while "
+                                f"routing {app!r}")
         # socket_eof / fail_spawn / fail_preload / simulated kill
         raise ForkServerError(f"{tag} injected protocol failure "
                               f"for {app!r}")

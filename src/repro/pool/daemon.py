@@ -205,6 +205,23 @@ class SimFleetBackend:
                 "queued": sum(len(s.queue) for s in reps.values()),
             }
 
+    def latency_samples(self, cap: int = 50_000) -> list[float]:
+        """Raw end-to-end latency samples (capped), for cluster-level
+        percentile merging: the router pools every node's samples via
+        :meth:`repro.pool.simulator.PercentilePool.merge` instead of
+        averaging per-node percentiles."""
+        out: list[float] = []
+        with self._lock:
+            summary = getattr(self.manager, "_summary", None)
+            if summary is None:  # never started
+                return out
+            for rep in summary.per_app.values():
+                take = cap - len(out)
+                if take <= 0:
+                    break
+                out.extend(rep.latencies_ms[:take])
+        return out
+
     def rewarm(self) -> dict:
         """Re-load deployed report artifacts into the policy's hot
         sets — the simulated analogue of re-preloading zygotes."""
@@ -664,6 +681,18 @@ class RealFleetBackend:
                                   and self.fleet.base.alive)
             snap["base_swaps"] = self.fleet.base_swaps
         return snap
+
+    def latency_samples(self, cap: int = 50_000) -> list[float]:
+        """Raw end-to-end samples (capped) for cluster-level percentile
+        merging; see :meth:`SimFleetBackend.latency_samples`."""
+        out: list[float] = []
+        with self._cond:
+            for st in self._stats.values():
+                take = cap - len(out)
+                if take <= 0:
+                    break
+                out.extend(st.e2e_ms[:take])
+        return out
 
     def rewarm(self) -> dict:
         if not self.reports_dir:

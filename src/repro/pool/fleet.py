@@ -591,6 +591,55 @@ class FleetManager:
         self._rebalance(req.t)
         return self._serve(req)
 
+    def add_app(self, profile: AppProfile) -> None:
+        """Register a new app mid-run (cluster migration: an app moves
+        onto this node while it serves).  Safe between offers; the
+        app's report joins the live summary so later ``finish()`` rolls
+        it up like any other."""
+        app = profile.app
+        if app in self._apps:
+            return
+        self.profiles[app] = profile
+        st = _AppState(
+            profile=profile,
+            report=FleetReport(policy=self.policy.name,
+                               trace=self._summary.trace,
+                               n_requests=0, cold_starts=0))
+        self._apps[app] = st
+        self._summary.per_app[app] = st.report
+
+    def retire_app(self, app: str, now: Optional[float] = None) -> dict:
+        """Remove an app mid-run (cluster migration: the app moves off
+        this node).  Conservation-preserving: queued requests that can
+        still start on a free instance do; the rest are *flushed*
+        (counted, never served).  Warm state is released and its
+        memory-seconds accounted.  The report stays in the summary so
+        nothing this node admitted ever disappears from the rollup.
+        Returns ``{"flushed": n}``."""
+        st = self._apps.get(app)
+        if st is None:
+            return {"flushed": 0}
+        t = self._last_t if now is None else max(now, self._last_t)
+        self._drain_queue(st, t)
+        flushed = len(st.queue)
+        st.report.flushed += flushed
+        st.queue.clear()
+        for inst in st.instances:
+            st.report.memory_mb_s += st.profile.rss_mb * (
+                max(t, inst.busy_until) - inst.born_t)
+        st.instances = []
+        if st.zygote_up:
+            st.zygote_up = False
+            st.zygote_mb_s += st.zygote_charge_mb(
+                self.shared_base_mb) * (t - st.zygote_since)
+        # fold the accrued zygote overhead in now — _finalize only
+        # visits live _apps entries, and this one is leaving
+        st.report.memory_mb_s += st.zygote_mb_s
+        st.zygote_mb_s = 0.0
+        del self._apps[app]
+        self.profiles.pop(app, None)
+        return {"flushed": flushed}
+
     def finish(self, end_t: Optional[float] = None) -> FleetSummary:
         """Drain queues, account trailing memory, return the summary.
         Requests still queued at ``end_t`` (nothing freed up in time)

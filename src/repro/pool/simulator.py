@@ -93,6 +93,33 @@ class PercentilePool:
             return math.nan
         return self._grid[min(98, max(0, round(q * 100) - 1))]
 
+    @classmethod
+    def merge(cls, pools: "list[PercentilePool]") -> "PercentilePool":
+        """A pool over the union of several pools' samples.
+
+        Percentiles do not compose — averaging per-node p99s is wrong
+        whenever the nodes' latency distributions differ (the usual
+        case: each node hosts different apps).  The cluster router
+        therefore merges the *pools* and reads true global quantiles
+        from the combined sample set.  The merged pool chains the
+        source callables rather than copying lists, so it sees later
+        growth of any member and stays cache-invalidation-correct.
+        """
+        members = list(pools)
+
+        def source():
+            for pool in members:
+                yield from pool._source()
+
+        return cls(source)
+
+    @classmethod
+    def of_lists(cls, lists: "list[list[float]]") -> "PercentilePool":
+        """A pool over fixed sample lists (e.g. latency samples shipped
+        back over the wire by cluster node agents)."""
+        held = list(lists)
+        return cls(lambda: held)
+
     @property
     def mean(self) -> float:
         self._refresh()

@@ -1,0 +1,424 @@
+"""Cluster subsystem tests: frame protocol, percentile merging, the
+cluster simulator (placement comparison, topology churn, chaos
+node_loss), the cluster_summary artifact, and a real socket round-trip
+through NodeAgent + ClusterRouter.
+
+The conservation invariant ``requests == served + sheds + flushed +
+errors + abandoned`` is the thread through every test here: it must
+hold per node, globally, and against the router's own ledger — across
+migrations, node loss, and drain.
+"""
+
+import json
+import os
+import socket
+import struct
+import subprocess
+import sys
+import threading
+
+import pytest
+
+from repro.api import (load_cluster_summary, save_cluster_summary)
+from repro.cluster import (MAX_FRAME, ClusterRouter, ClusterSimulator,
+                           FrameClosed, FrameError, NodeAgent,
+                           NodeClient, compare_strategies, encode_frame,
+                           node_conserves, recv_frame, send_frame,
+                           synthetic_cluster_workload)
+from repro.pool import (AppProfile, FleetDaemon, FleetManager,
+                        IdleTimeoutPolicy, QueueConfig, SimFleetBackend)
+from repro.pool.chaos import FaultEvent, FaultInjector, FaultPlan
+from repro.pool.simulator import PercentilePool
+
+
+# ---------------------------------------------------------------------------
+# frame protocol
+# ---------------------------------------------------------------------------
+
+def _pair():
+    a, b = socket.socketpair()
+    a.settimeout(5.0)
+    b.settimeout(5.0)
+    return a, b
+
+
+def test_frame_round_trip():
+    a, b = _pair()
+    try:
+        msg = {"cmd": "hello", "payload": "newlines\nembedded\nfine",
+               "n": 42}
+        send_frame(a, msg)
+        send_frame(a, {"second": True})
+        assert recv_frame(b) == msg
+        assert recv_frame(b) == {"second": True}
+    finally:
+        a.close()
+        b.close()
+
+
+def test_frame_clean_eof_vs_truncation():
+    a, b = _pair()
+    try:
+        a.close()  # clean close between frames
+        with pytest.raises(FrameClosed):
+            recv_frame(b)
+    finally:
+        b.close()
+    a, b = _pair()
+    try:
+        a.sendall(encode_frame({"x": 1})[:3])  # cut mid-prefix
+        a.close()
+        with pytest.raises(FrameError):
+            recv_frame(b)
+    finally:
+        b.close()
+
+
+def test_frame_rejects_oversize_and_non_dict():
+    a, b = _pair()
+    try:
+        a.sendall(struct.pack(">I", MAX_FRAME + 1))
+        with pytest.raises(FrameError):
+            recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+    a, b = _pair()
+    try:
+        body = b"[1,2,3]"  # valid JSON, but not an object
+        a.sendall(struct.pack(">I", len(body)) + body)
+        with pytest.raises(FrameError):
+            recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+    with pytest.raises(FrameError):
+        encode_frame({"x": "y" * (MAX_FRAME + 1)})
+
+
+# ---------------------------------------------------------------------------
+# percentile merging: true global quantiles, not averaged per-node ones
+# ---------------------------------------------------------------------------
+
+def test_percentile_pool_merge_matches_concatenation():
+    node_a = [float(x) for x in range(1, 100)]      # fast node
+    node_b = [float(x) for x in range(500, 1000)]   # slow node
+    merged = PercentilePool.merge([
+        PercentilePool.of_lists([node_a]),
+        PercentilePool.of_lists([node_b]),
+    ])
+    truth = PercentilePool.of_lists([node_a + node_b])
+    assert len(merged) == len(node_a) + len(node_b)
+    for q in (0.5, 0.9, 0.99):
+        assert merged.percentile(q) == pytest.approx(
+            truth.percentile(q))
+    assert merged.mean == pytest.approx(truth.mean)
+    # averaging the two p99s would be badly wrong — the merge is not
+    # doing that
+    avg_p99 = (PercentilePool.of_lists([node_a]).percentile(0.99)
+               + PercentilePool.of_lists([node_b]).percentile(0.99)) / 2
+    assert abs(merged.percentile(0.99) - avg_p99) > 100
+
+
+def test_percentile_pool_merge_sees_later_growth():
+    samples = [1.0, 2.0]
+    merged = PercentilePool.merge([PercentilePool.of_lists([samples])])
+    assert len(merged) == 2
+    samples.append(1000.0)
+    assert len(merged) == 3
+    assert merged.percentile(0.99) == pytest.approx(1000.0, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# cluster simulator: placement quality, conservation, topology churn
+# ---------------------------------------------------------------------------
+
+def _wl(n_apps=8, families=2, seed=3, minutes=4, peak_rpm=60.0):
+    return synthetic_cluster_workload(n_apps, n_families=families,
+                                      seed=seed, minutes=minutes,
+                                      peak_rpm=peak_rpm)
+
+
+def test_sim_replay_conserves_and_sharing_beats_hash():
+    wl = synthetic_cluster_workload(16, n_families=4, seed=7,
+                                    minutes=10, peak_rpm=80.0)
+    results = compare_strategies(wl, n_nodes=4, node_budget_mb=512.0,
+                                 strategies=("sharing", "hash"), seed=7)
+    for strategy, payload in results.items():
+        assert payload["conservation"]["holds"], strategy
+        assert payload["requests"] > 0
+        assert payload["requests"] == sum(
+            r["requests"] for r in payload["per_node"])
+        assert all(r["conservation_holds"] for r in payload["per_node"])
+    # the acceptance claim: same total memory, fewer cold starts
+    assert (results["sharing"]["cold_start_ratio"]
+            <= results["hash"]["cold_start_ratio"])
+    assert results["sharing"]["percentiles_merged"]
+
+
+def test_sim_lose_node_mid_replay_conserves():
+    wl = _wl()
+    sim = ClusterSimulator(wl, n_nodes=3, node_budget_mb=512.0,
+                           strategy="sharing", seed=3)
+    sim.begin(wl.trace.name)
+    arrivals = list(wl.trace)[:300]
+    victim = sim.ring.nodes[0]
+    for i, req in enumerate(arrivals):
+        if i == 150:
+            sim.lose_node(victim, req.t)
+        sim.route(req)
+    payload = sim.finish(arrivals[-1].t + 120.0)
+    assert payload["conservation"]["holds"]
+    assert payload["lost_nodes"] == [victim]
+    # the victim's ledger survives the loss as a per_node row
+    row = next(r for r in payload["per_node"] if r["node"] == victim)
+    assert row["lost"] and row["conservation_holds"]
+    # its apps all migrated to survivors
+    assert victim not in set(payload["placement"].values())
+    assert all(m["reason"] == "node_loss" for m in payload["migrations"])
+
+
+def test_sim_join_node_mid_replay_conserves():
+    wl = _wl()
+    sim = ClusterSimulator(wl, n_nodes=2, node_budget_mb=512.0,
+                           strategy="hash", seed=3)
+    sim.begin(wl.trace.name)
+    arrivals = list(wl.trace)[:300]
+    for i, req in enumerate(arrivals):
+        if i == 100:
+            joined = sim.join_node("node-late", req.t)
+            assert joined["moved"] >= 0
+        sim.route(req)
+    payload = sim.finish(arrivals[-1].t + 120.0)
+    assert payload["conservation"]["holds"]
+    assert payload["nodes"] == 3
+    moves = [m for m in payload["migrations"]
+             if m["reason"] == "node_join"]
+    # rendezvous hashing: join moves apps only ONTO the newcomer
+    assert all(m["to"] == "node-late" for m in moves)
+
+
+def test_sim_chaos_node_loss_conserves():
+    wl = _wl()
+    plan = FaultPlan(events=[FaultEvent("node_loss", at=40)],
+                     seed=3, name="one-node-down")
+    inject = FaultInjector(plan, simulate=True)
+    sim = ClusterSimulator(wl, n_nodes=3, node_budget_mb=512.0,
+                           strategy="sharing", seed=3,
+                           fault_hook=inject)
+    payload = sim.replay(limit=400)
+    assert inject.counts().get("node_loss") == 1
+    assert len(payload["lost_nodes"]) == 1
+    assert payload["conservation"]["holds"]
+    # the request whose routing tripped the fault was NOT lost: the
+    # router ledger still matches the node ledgers exactly
+    assert payload["conservation"]["routed"] == payload["requests"]
+
+
+# ---------------------------------------------------------------------------
+# cluster_summary artifact
+# ---------------------------------------------------------------------------
+
+def test_cluster_summary_artifact_round_trip(tmp_path):
+    wl = _wl()
+    sim = ClusterSimulator(wl, n_nodes=2, node_budget_mb=512.0,
+                           strategy="sharing", seed=3)
+    payload = sim.replay(limit=200)
+    path = tmp_path / "cluster_summary.json"
+    save_cluster_summary(payload, str(path), meta={"test": True})
+    loaded = load_cluster_summary(str(path))
+    assert loaded["strategy"] == "sharing"
+    assert loaded["requests"] == payload["requests"]
+    assert loaded["conservation"]["holds"]
+    with open(path) as fh:
+        envelope = json.load(fh)
+    assert envelope["kind"] == "cluster_summary"
+    assert envelope["schema_version"] == 1
+
+
+def test_cluster_summary_artifact_rejects_missing_keys(tmp_path):
+    with pytest.raises(ValueError, match="missing"):
+        save_cluster_summary({"source": "x", "strategy": "sharing"},
+                             str(tmp_path / "bad.json"))
+
+
+def test_node_conserves_helper():
+    assert node_conserves({"requests": 5, "served": 3, "sheds": 1,
+                           "flushed": 1})
+    assert not node_conserves({"requests": 5, "served": 3})
+    assert node_conserves({})  # vacuous: 0 == 0
+
+
+# ---------------------------------------------------------------------------
+# socket round-trip: real NodeAgents + ClusterRouter, in-process
+# ---------------------------------------------------------------------------
+
+def _agent_for(wl, apps, node_id, **kw):
+    profiles = {a: wl.profiles[a] for a in apps}
+    manager = FleetManager(profiles, IdleTimeoutPolicy(timeout_s=120.0),
+                           budget_mb=2048.0,
+                           queue=QueueConfig(depth=32,
+                                             max_concurrency=4))
+    agent = NodeAgent(SimFleetBackend(manager), node_id=node_id,
+                      port=0, **kw)
+    agent.start()
+    return agent
+
+
+def _clients_for(agents):
+    return {a.node_id: NodeClient(a.node_id, a.host, a.port)
+            for a in agents}
+
+
+def test_node_agent_socket_round_trip():
+    wl = _wl(n_apps=4, families=2)
+    half = len(wl.apps) // 2
+    agents = [_agent_for(wl, wl.apps[:half], "nodeA"),
+              _agent_for(wl, wl.apps[half:], "nodeB")]
+    try:
+        router = ClusterRouter(_clients_for(agents),
+                               strategy="sharing",
+                               hot_sets=wl.hot_sets, seed=3)
+        placement = router.connect()
+        assert set(placement) == set(wl.apps)
+        # each app landed on the one node that deploys it
+        assert all(placement[a] == "nodeA" for a in wl.apps[:half])
+        assert all(placement[a] == "nodeB" for a in wl.apps[half:])
+        n = 120
+        for i in range(n):
+            reply = router.route(wl.apps[i % len(wl.apps)])
+            assert reply["outcome"] not in ("error",), reply
+        payload = router.shutdown()
+    finally:
+        for agent in agents:
+            agent.result()
+    assert payload["requests"] == n
+    assert payload["conservation"]["holds"]
+    assert payload["conservation"]["routed"] == n
+    assert payload["nodes"] == 2
+    assert payload["percentiles_merged"]
+    assert payload["p99_ms"] > 0.0
+
+
+def test_node_agent_stats_and_unknown_cmd():
+    wl = _wl(n_apps=2, families=1)
+    agent = _agent_for(wl, wl.apps, "solo")
+    try:
+        with NodeClient("solo", agent.host, agent.port) as client:
+            hello = client.call({"cmd": "hello"})
+            assert hello["ok"] and hello["node"] == "solo"
+            assert sorted(hello["apps"]) == sorted(wl.apps)
+            client.call({"app": wl.apps[0]})
+            stats = client.call({"cmd": "stats"})
+            assert stats["ok"] and stats["stats"]["requests"] == 1
+            bad = client.call({"cmd": "launch-missiles"})
+            assert not bad["ok"] and "unknown" in bad["error"]
+            missing = client.call({"oops": True})
+            assert not missing["ok"]
+            unknown_app = client.call({"app": "ghost-app"})
+            assert not unknown_app["ok"]
+    finally:
+        agent.result()
+
+
+def test_node_agent_concurrent_feeders():
+    wl = _wl(n_apps=2, families=1)
+    agent = _agent_for(wl, wl.apps, "multi")
+    errors = []
+
+    def feeder(app, n):
+        try:
+            with NodeClient("multi", agent.host, agent.port) as c:
+                for _ in range(n):
+                    c.call({"app": app})
+        except Exception as exc:  # surfaced below
+            errors.append(exc)
+
+    try:
+        threads = [threading.Thread(target=feeder, args=(app, 25))
+                   for app in wl.apps for _ in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=30.0)
+        assert not errors
+        payload = agent.result()
+    finally:
+        agent.result()
+    assert payload["requests"] == 4 * 25
+    assert node_conserves(payload)
+
+
+def test_router_replaces_lost_nodes_apps_with_conservation():
+    """The ISSUE satellite: chaos node_loss at the router's route site
+    — the lost node's apps re-place onto a surviving advertiser and
+    the global ledger still balances."""
+    wl = _wl(n_apps=4, families=2)
+    # both nodes deploy every app, so the survivor can absorb them all
+    agents = [_agent_for(wl, wl.apps, "nodeA"),
+              _agent_for(wl, wl.apps, "nodeB")]
+    plan = FaultPlan(events=[FaultEvent("node_loss", at=30)],
+                     seed=3, name="router-node-down")
+    inject = FaultInjector(plan, simulate=True)
+    try:
+        router = ClusterRouter(_clients_for(agents),
+                               strategy="sharing",
+                               hot_sets=wl.hot_sets, seed=3,
+                               fault_hook=inject)
+        router.connect()
+        before = dict(router.placement)
+        assert len(set(before.values())) == 2  # both nodes own apps
+        n = 90
+        for i in range(n):
+            reply = router.route(wl.apps[i % len(wl.apps)])
+            assert reply["ok"], reply
+        assert inject.counts().get("node_loss") == 1
+        assert len(router.lost_nodes) == 1
+        lost = router.lost_nodes[0]
+        survivor = ({"nodeA", "nodeB"} - {lost}).pop()
+        # every app the dead node owned now lives on the survivor
+        assert set(router.placement.values()) == {survivor}
+        assert all(m["reason"] == "node_loss"
+                   for m in router.migrations)
+        assert {m["app"] for m in router.migrations} == {
+            a for a, node in before.items() if node == lost}
+        payload = router.shutdown()
+    finally:
+        for agent in agents:
+            agent.result()
+    # nothing was lost: the faulted request was re-routed, not dropped
+    assert payload["requests"] == n
+    assert payload["conservation"]["holds"]
+    assert payload["lost_nodes"] == [lost]
+    lost_row = next(r for r in payload["per_node"]
+                    if r["node"] == lost)
+    assert lost_row["lost"] and lost_row["conservation_holds"]
+
+
+def test_node_agent_drain_on_disconnect():
+    wl = _wl(n_apps=2, families=1)
+    agent = _agent_for(wl, wl.apps, "eof",
+                       drain_on_disconnect=True)
+    client = NodeClient("eof", agent.host, agent.port)
+    client.connect()
+    client.call({"app": wl.apps[0]})
+    client.close()  # last feeder gone -> stdin-EOF semantics
+    payload = agent.serve_forever()
+    assert payload["requests"] == 1
+    assert node_conserves(payload)
+
+
+# ---------------------------------------------------------------------------
+# the real two-node smoke (subprocess tier)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_two_node_cluster_smoke_subprocess():
+    smoke = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "tools", "cluster_smoke.py")
+    proc = subprocess.run(
+        [sys.executable, smoke, "--n-apps", "4", "--families", "2",
+         "--minutes", "2", "--limit", "120"],
+        capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "cluster-smoke: OK" in proc.stdout

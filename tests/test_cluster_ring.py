@@ -1,0 +1,202 @@
+"""Property-based tests for the cluster's rendezvous-hashing ring and
+placement planner.
+
+The churn bounds here are the cluster's rebalance contract (see
+docs/cluster.md): rendezvous hashing moves *exactly* the departed
+node's apps on leave, and on join only *onto* the new node (~K/N of K
+apps in expectation).  Like the other property suites, hypothesis is
+optional — a CI image without it skips the sweeps instead of erroring
+at collection."""
+
+import math
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # CI image without hypothesis: skip sweeps only
+    st = None
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            def skipper():
+                pytest.skip("hypothesis not installed")
+            skipper.__name__ = fn.__name__
+            return skipper
+        return deco
+
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+from repro.cluster import (ConsistentHashRing, hot_set_affinity,
+                           plan_placement)
+
+_NODES = st.integers(min_value=2, max_value=9)
+_APPS = st.integers(min_value=1, max_value=60)
+_SEED = st.integers(min_value=0, max_value=2**31)
+
+
+def _ring(n_nodes: int, seed: int) -> ConsistentHashRing:
+    return ConsistentHashRing((f"n{i}" for i in range(n_nodes)),
+                              seed=seed)
+
+
+def _apps(n: int) -> list:
+    return [f"app{i:03d}" for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# determinism: placement is a pure function of (seed, nodes, apps)
+# ---------------------------------------------------------------------------
+
+@given(n_nodes=_NODES, n_apps=_APPS, seed=_SEED)
+@settings(max_examples=40, deadline=None)
+def test_placement_is_deterministic(n_nodes, n_apps, seed):
+    apps = _apps(n_apps)
+    a = _ring(n_nodes, seed).place_all(apps)
+    b = _ring(n_nodes, seed).place_all(apps)
+    assert a == b
+    # and sha256-based, so independent of process hash randomization:
+    # every app maps into the node set
+    assert set(a.values()) <= {f"n{i}" for i in range(n_nodes)}
+
+
+@given(n_nodes=_NODES, n_apps=_APPS, seed=_SEED)
+@settings(max_examples=25, deadline=None)
+def test_sharing_plan_is_deterministic(n_nodes, n_apps, seed):
+    apps = _apps(n_apps)
+    hot_sets = {a: ["libc", f"fam{i % 3}", f"priv_{a}"]
+                for i, a in enumerate(apps)}
+    one = plan_placement(apps, _ring(n_nodes, seed),
+                         strategy="sharing", hot_sets=hot_sets,
+                         seed=seed)
+    two = plan_placement(apps, _ring(n_nodes, seed),
+                         strategy="sharing", hot_sets=hot_sets,
+                         seed=seed)
+    assert one == two
+
+
+# ---------------------------------------------------------------------------
+# churn bounds: the rendezvous-hashing contract
+# ---------------------------------------------------------------------------
+
+@given(n_nodes=_NODES, n_apps=_APPS, seed=_SEED)
+@settings(max_examples=40, deadline=None)
+def test_leave_moves_exactly_the_departed_nodes_apps(n_nodes, n_apps,
+                                                     seed):
+    apps = _apps(n_apps)
+    ring = _ring(n_nodes, seed)
+    before = ring.place_all(apps)
+    victim = ring.nodes[seed % n_nodes]
+    ring.remove(victim)
+    after = ring.place_all(apps)
+    moved = {a for a in apps if before[a] != after[a]}
+    # every app that lived on the victim moved; nobody else did
+    assert moved == {a for a in apps if before[a] == victim}
+    assert victim not in set(after.values())
+
+
+@given(n_nodes=_NODES, n_apps=_APPS, seed=_SEED)
+@settings(max_examples=40, deadline=None)
+def test_join_moves_only_onto_the_new_node(n_nodes, n_apps, seed):
+    apps = _apps(n_apps)
+    ring = _ring(n_nodes, seed)
+    before = ring.place_all(apps)
+    ring.add("newcomer")
+    after = ring.place_all(apps)
+    moved = {a for a in apps if before[a] != after[a]}
+    # the only legal destination for a moved app is the new node
+    assert all(after[a] == "newcomer" for a in moved)
+    # un-moved apps keep their exact owner (stability)
+    assert all(after[a] == before[a] for a in set(apps) - moved)
+
+
+@given(seed=_SEED)
+@settings(max_examples=15, deadline=None)
+def test_join_churn_is_near_k_over_n(seed):
+    """With K apps on N equal nodes, a join should move about K/(N+1)
+    apps.  A generous x3 bound stays far from flakiness while still
+    catching a broken hash (which moves ~K*(N/(N+1)) of them)."""
+    n_nodes, n_apps = 5, 200
+    apps = _apps(n_apps)
+    ring = _ring(n_nodes, seed)
+    before = ring.place_all(apps)
+    ring.add("newcomer")
+    after = ring.place_all(apps)
+    moved = sum(1 for a in apps if before[a] != after[a])
+    expected = n_apps / (n_nodes + 1)
+    assert moved <= 3 * expected
+
+
+@given(n_apps=st.integers(min_value=1, max_value=40), seed=_SEED)
+@settings(max_examples=25, deadline=None)
+def test_weighted_node_attracts_more_apps(n_apps, seed):
+    """A node with weight 0 is illegal; a heavier node owns at least
+    as many apps as the same node at weight 1 (monotonicity of the
+    weighted-HRW transform)."""
+    apps = _apps(max(n_apps, 20))
+    light = ConsistentHashRing(["a", "b"], seed=seed)
+    heavy = ConsistentHashRing(["a", "b"], seed=seed,
+                               weights={"a": 8.0, "b": 1.0})
+    light_count = sum(1 for app in apps
+                      if light.place(app) == "a")
+    heavy_count = sum(1 for app in apps
+                      if heavy.place(app) == "a")
+    assert heavy_count >= light_count
+    with pytest.raises(ValueError):
+        ConsistentHashRing(["a"], weights={"a": 0.0})
+
+
+# ---------------------------------------------------------------------------
+# sharing planner: grouping and balance
+# ---------------------------------------------------------------------------
+
+@given(seed=_SEED, n_families=st.integers(min_value=2, max_value=4))
+@settings(max_examples=20, deadline=None)
+def test_sharing_groups_families_and_balances_load(seed, n_families):
+    """Families-of-apps with a shared fat module end up co-located,
+    and the default load cap keeps nodes balanced."""
+    n_apps = 4 * n_families
+    apps = [f"app{i:02d}" for i in range(n_apps)]
+    hot_sets = {a: ["runtime", f"family{i % n_families}", f"priv_{a}"]
+                for i, a in enumerate(apps)}
+    ring = _ring(n_families, seed)
+    placement = plan_placement(apps, ring, strategy="sharing",
+                               hot_sets=hot_sets, seed=seed)
+    by_node: dict = {}
+    for app, node in placement.items():
+        by_node.setdefault(node, []).append(app)
+    cap = math.ceil(n_apps / n_families)
+    assert all(len(v) <= cap for v in by_node.values())
+    # every family is fully co-located: one node hosts all 4 siblings
+    for fam in range(n_families):
+        owners = {placement[a] for i, a in enumerate(apps)
+                  if i % n_families == fam}
+        assert len(owners) == 1
+
+
+def test_affinity_scores_overlap():
+    assert hot_set_affinity([], [["x"]]) == 0.0
+    assert hot_set_affinity(["a"], []) == 0.0
+    assert hot_set_affinity(["a", "b"], [["c"], ["d"]]) == 0.0
+    full = hot_set_affinity(["a", "b"], [["a"], ["b"]])
+    assert full == pytest.approx(1.0)
+    half = hot_set_affinity(["a", "b"], [["a"], ["c"]])
+    assert half == pytest.approx(0.5)
+
+
+def test_place_among_and_empty_ring_errors():
+    ring = _ring(3, 0)
+    assert ring.place("x", among=["n1"]) == "n1"
+    with pytest.raises(ValueError):
+        ring.place("x", among=["ghost"])
+    with pytest.raises(ValueError):
+        plan_placement(["x"], ConsistentHashRing())
+    with pytest.raises(ValueError):
+        plan_placement(["x"], ring, strategy="nope")

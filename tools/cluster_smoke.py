@@ -1,0 +1,147 @@
+#!/usr/bin/env python3
+"""Two-node cluster smoke: real sockets, real processes, stdlib only.
+
+Boots two ``python -m repro cluster serve --sim`` node agents as
+subprocesses on ephemeral localhost ports, reads their ready lines for
+the bound ports, then runs ``cluster route`` against both and checks:
+
+* the router served a replay end-to-end over the sockets,
+* the merged ``cluster_summary`` conserves requests per node AND
+  globally (``requests == served + sheds + flushed + errors +
+  abandoned``, router ledger == node ledgers),
+* both node agents exited 0 after their drain.
+
+This is the CI fast-tier gate for the socket serving path (the pytest
+suite covers the same path in-process; this exercises the actual CLI
+entrypoints and process lifecycle).  Exit 0 on success, 1 on any
+failure, with the evidence printed.
+
+    python tools/cluster_smoke.py [--n-apps 8] [--limit 300]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _env() -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(REPO, "src"), env.get("PYTHONPATH", "")]).rstrip(
+        os.pathsep)
+    return env
+
+
+def _spawn_node(node_id: str, apps: list[str],
+                args: argparse.Namespace) -> tuple:
+    """Start one node agent; block until its ready line, return
+    (process, port)."""
+    cmd = [sys.executable, "-m", "repro", "cluster", "serve", "--sim",
+           "--node-id", node_id, "--port", "0",
+           "--apps", ",".join(apps),
+           "--n-apps", str(args.n_apps),
+           "--families", str(args.families),
+           "--seed", str(args.seed),
+           "--minutes", str(args.minutes)]
+    proc = subprocess.Popen(cmd, cwd=REPO, env=_env(),
+                            stdout=subprocess.PIPE,
+                            stderr=subprocess.DEVNULL, text=True)
+    line = proc.stdout.readline()
+    try:
+        ready = json.loads(line)
+        assert ready.get("event") == "ready"
+    except (json.JSONDecodeError, AssertionError):
+        proc.kill()
+        raise RuntimeError(
+            f"{node_id}: bad ready line {line!r}") from None
+    return proc, int(ready["port"])
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--n-apps", type=int, default=8)
+    ap.add_argument("--families", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=5)
+    ap.add_argument("--minutes", type=int, default=3)
+    ap.add_argument("--limit", type=int, default=300,
+                    help="arrivals to route (keeps the smoke fast)")
+    ap.add_argument("--timeout", type=float, default=120.0)
+    args = ap.parse_args()
+
+    apps = [f"app{i:02d}" for i in range(args.n_apps)]
+    half = len(apps) // 2
+    nodes: list = []
+    failures: list[str] = []
+    out = os.path.join(tempfile.mkdtemp(prefix="cluster-smoke-"),
+                       "cluster_summary.json")
+    try:
+        a, port_a = _spawn_node("nodeA", apps[:half], args)
+        nodes.append(("nodeA", a))
+        b, port_b = _spawn_node("nodeB", apps[half:], args)
+        nodes.append(("nodeB", b))
+        print(f"cluster-smoke: nodeA:{port_a} nodeB:{port_b} up")
+
+        route = subprocess.run(
+            [sys.executable, "-m", "repro", "cluster", "route",
+             "--nodes", f"nodeA=127.0.0.1:{port_a},"
+                        f"nodeB=127.0.0.1:{port_b}",
+             "--n-apps", str(args.n_apps),
+             "--families", str(args.families),
+             "--seed", str(args.seed),
+             "--minutes", str(args.minutes),
+             "--limit", str(args.limit),
+             "--check", "--out", out],
+            cwd=REPO, env=_env(), capture_output=True, text=True,
+            timeout=args.timeout)
+        if route.returncode != 0:
+            failures.append(f"route exited {route.returncode}:\n"
+                            f"{route.stdout}\n{route.stderr}")
+
+        for name, proc in nodes:
+            try:
+                proc.wait(timeout=args.timeout)
+            except subprocess.TimeoutExpired:
+                proc.kill()
+                failures.append(f"{name}: did not exit after drain")
+                continue
+            if proc.returncode != 0:
+                failures.append(f"{name}: exited {proc.returncode}")
+
+        if not os.path.exists(out):
+            failures.append("no cluster_summary artifact written")
+        else:
+            with open(out) as fh:
+                payload = json.load(fh)  # flat artifact envelope
+            requests = payload.get("requests", 0)
+            conserve = payload.get("conservation", {})
+            print(f"cluster-smoke: requests={requests} "
+                  f"served={payload.get('served')} "
+                  f"conservation={'holds' if conserve.get('holds') else 'BROKEN'}")
+            if requests <= 0:
+                failures.append("router admitted zero requests")
+            if not conserve.get("holds"):
+                failures.append(f"conservation broken: {conserve}")
+    finally:
+        for _name, proc in nodes:
+            if proc.poll() is None:
+                proc.kill()
+
+    if failures:
+        print("cluster-smoke: FAIL", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("cluster-smoke: OK — two nodes served a routed replay with "
+          "global conservation")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -158,6 +158,42 @@ def _fault_hook_overhead(n: int = 4000, runs: int = 3):
     return off_s, on_s
 
 
+def _cluster_check(tol: dict, check) -> None:
+    """In-process cluster placement gate: sharing vs hash at equal
+    budgets on a deterministic Zipf workload, plus conservation and a
+    wall-clock bound on the replay (the cluster simulator's
+    scale-out promise)."""
+    import time
+
+    from repro.cluster import compare_strategies, synthetic_cluster_workload
+
+    wl = synthetic_cluster_workload(16, n_families=4, seed=7,
+                                    minutes=10, peak_rpm=80.0)
+    t0 = time.perf_counter()
+    results = compare_strategies(wl, n_nodes=4, node_budget_mb=512.0,
+                                 strategies=("sharing", "hash"), seed=7)
+    replay_s = time.perf_counter() - t0
+    sharing, hashed = results["sharing"], results["hash"]
+    dr = sharing["cold_start_ratio"] - hashed["cold_start_ratio"]
+    check("cluster placement",
+          dr <= tol["max_cold_ratio_vs_hash"],
+          f"sharing {sharing['cold_start_ratio']:.4f} vs hash "
+          f"{hashed['cold_start_ratio']:.4f} cold ratio "
+          f"(delta {dr:+.4f}, allowed "
+          f"+{tol['max_cold_ratio_vs_hash']})")
+    check("cluster conservation",
+          all(p["conservation"]["holds"] for p in results.values()),
+          f"sharing={sharing['conservation']['holds']} "
+          f"hash={hashed['conservation']['holds']}")
+    n_req = sharing["requests"] + hashed["requests"]
+    check("cluster replay throughput",
+          n_req >= tol["min_replay_requests"]
+          and replay_s <= tol["max_replay_s"],
+          f"{n_req} arrivals through 2 x 4 simulated nodes in "
+          f"{replay_s:.2f} s (need >= {tol['min_replay_requests']} "
+          f"within {tol['max_replay_s']} s)")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tolerance",
@@ -241,6 +277,8 @@ def main(argv=None) -> int:
           f"({frac * 100:+.1f}%, {per_req_us:+.2f} us/req; allowed "
           f"{ftol['max_overhead_frac'] * 100:.0f}% or "
           f"{ftol['max_per_request_us']} us/req)")
+
+    _cluster_check(all_tol["cluster"], check)
 
     if all(checks):
         print("perf smoke: PASS — shared-base does not regress the "

@@ -96,6 +96,21 @@ def _fleet_metrics(data: dict) -> dict:
             "two_tier_cold_ratio": two.get("cold_ratio"),
             "wins": data.get("shared_base_wins"),
         }
+    cluster = {r["placement"]: r for r in data.get("cluster_rows", [])}
+    if cluster:
+        sharing = cluster.get("sharing", {})
+        hashed = cluster.get("hash", {})
+        out["cluster"] = {
+            "nodes": data.get("cluster_nodes"),
+            "sharing_cold_ratio": sharing.get("cold_ratio"),
+            "hash_cold_ratio": hashed.get("cold_ratio"),
+            "sharing_p99_ms": sharing.get("p99_ms"),
+            "sharing_memory_gb_s": sharing.get("memory_gb_s"),
+            "conserves": all(r.get("conserves")
+                             for r in cluster.values()),
+            "sharing_beats_hash": data.get(
+                "cluster_sharing_beats_hash"),
+        }
     return out
 
 
