@@ -140,6 +140,113 @@ def build_fleet_trace(root: str, apps: list[str], *, minutes: int,
     return trace_from_azure_rows(rows, seed=seed + 1, name="azure")
 
 
+def run_adaptive_comparison(*, smoke: bool = False,
+                            seed: int = 23) -> dict:
+    """Static vs closed-loop adaptive replay of a popularity-flip
+    trace (self-contained; also used by tools/record_bench.py)."""
+    from repro.api import save_drift_report
+    from repro.core.adaptive import AdaptiveConfig, DriftConfig
+    from repro.core.profiler.report import OptimizationReport
+    from repro.core.profiler.utilization import LibraryStats
+    from repro.pool.daemon import make_sim_adaptive_loop
+    from repro.pool.policies import ProfileGuidedPolicy
+    from repro.pool.trace import azure_flip_trace
+
+    apps = ["flip_head", "flip_mid", "flip_tail"]
+    # lean zygotes (copy-on-write incremental pages) so mid-run zygote
+    # admission for the newly-hot app doesn't evict serving instances
+    profiles = {a: AppProfile(app=a, cold_init_ms=400.0,
+                              warm_init_ms=40.0, invoke_ms=30.0,
+                              rss_mb=128.0, zygote_rss_mb=32.0)
+                for a in apps}
+    minutes = 10 if smoke else 20
+    trace = azure_flip_trace(apps, minutes=minutes, peak_rpm=60.0,
+                             popularity_s=2.0, seed=seed)
+    budget_mb = 2.0 * sum(p.rss_mb for p in profiles.values())
+
+    def synth_report(app: str) -> OptimizationReport:
+        prof = profiles[app]
+        e2e = (prof.cold_init_ms + prof.invoke_ms) / 1e3
+        init = 0.8 * prof.cold_init_ms / 1e3
+        return OptimizationReport(
+            application=app, e2e_s=e2e, total_init_s=init,
+            qualifies=True,
+            stats=[LibraryStats(name=f"simlib_{app}", utilization=0.9,
+                                init_s=init, init_share=init / e2e,
+                                runtime_samples=50, file="<sim>")],
+            defer_targets=[])
+
+    def yesterday_policy() -> ProfileGuidedPolicy:
+        policy = ProfileGuidedPolicy()
+        for a in apps[:-1]:  # the post-flip head app was never profiled
+            policy.add_report(synth_report(a))
+        return policy
+
+    static = FleetManager(profiles, yesterday_policy(),
+                          budget_mb=budget_mb).replay(trace)
+
+    manager = FleetManager(profiles, yesterday_policy(),
+                           budget_mb=budget_mb)
+    loop = make_sim_adaptive_loop(
+        manager, config=AdaptiveConfig(drift=DriftConfig(window_s=120.0)))
+    manager.begin(trace.name)
+    for req in trace:
+        loop.observe_request(req.app, req.handler, t=req.t)
+        manager.offer(req)
+    adaptive = manager.finish(trace.duration_s)
+    loop.flush(t=trace.duration_s)
+
+    def _p99_init_ms(s) -> float:
+        # the exact init-latency multiset is recoverable from the
+        # summary's path counts: cold spawns pay the full init, pool
+        # (zygote-fork) starts the fork init, warm reuse none
+        samples = ([profiles[apps[0]].cold_init_ms] * s.cold_starts
+                   + [profiles[apps[0]].warm_init_ms] * s.pool_starts
+                   + [0.0] * max(s.served - s.cold_starts
+                                 - s.pool_starts, 0))
+        samples.sort()
+        return (samples[min(int(0.99 * len(samples)),
+                            len(samples) - 1)] if samples else 0.0)
+
+    def _row(mode, s, fires, reopt):
+        return {"mode": mode, "requests": s.n_requests,
+                "cold_starts": s.cold_starts,
+                "cold_ratio": round(s.cold_start_ratio, 4),
+                "p99_init_ms": round(_p99_init_ms(s), 2),
+                "p99_ms": round(s.p99_ms, 2),
+                "mean_ms": round(s.mean_ms, 2),
+                "drift_fires": fires, "reoptimized": reopt}
+
+    reoptimized = sorted({a["app"] for act in loop.actions
+                          for a in act.get("applied", [])})
+    rows = [
+        _row("static (yesterday's reports)", static, 0, "-"),
+        _row("adaptive closed loop", adaptive, loop.detector.fires,
+             ",".join(reoptimized) or "-"),
+    ]
+    drift_path = save_drift_report(
+        loop.drift_report_payload(source="bench"),
+        str(RESULTS / "drift_report.json"),
+        meta={"bench": "bench_fleet", "smoke": bool(smoke)})
+    beats = (adaptive.cold_start_ratio < static.cold_start_ratio
+             and _p99_init_ms(adaptive) <= _p99_init_ms(static)
+             and loop.detector.fires >= 1)
+    return {
+        "rows": rows,
+        "trace_requests": len(trace),
+        "flip_s": minutes * 30.0,
+        "drift_report_path": drift_path,
+        "static_cold_ratio": round(static.cold_start_ratio, 4),
+        "adaptive_cold_ratio": round(adaptive.cold_start_ratio, 4),
+        "static_p99_init_ms": round(_p99_init_ms(static), 2),
+        "adaptive_p99_init_ms": round(_p99_init_ms(adaptive), 2),
+        "static_p99_ms": round(static.p99_ms, 2),
+        "adaptive_p99_ms": round(adaptive.p99_ms, 2),
+        "drift_fires": loop.detector.fires,
+        "adaptive_beats_static": beats,
+    }
+
+
 @bench("fleet", ref="fleet scale", order=100)
 def run(smoke: bool = False) -> dict:
     smoke = smoke or QUICK
@@ -316,6 +423,24 @@ def run(smoke: bool = False) -> dict:
         meta={"bench": "bench_fleet", "smoke": bool(smoke)})
     print(f"fleet_summary artifact: {fleet_summary_path}")
 
+    # ------------------------------ part 2d: adaptive closed loop (ISSUE 9)
+    # mid-trace popularity flip: "static" is the profile-guided fleet
+    # tuned for yesterday's workload — reports deployed only for the
+    # pre-flip head apps, so the post-flip head app has no zygote and
+    # no prewarm floor.  "adaptive" runs the *same* starting policy
+    # plus the closed loop: live drift windows over the arrival mix, a
+    # noise-calibrated trigger, and in-process re-optimization that
+    # deploys a fresh report for the newly-hot app mid-replay.
+    adaptive_cmp = run_adaptive_comparison(smoke=smoke)
+    print()
+    print(table(adaptive_cmp["rows"],
+                ["mode", "requests", "cold_starts", "cold_ratio",
+                 "p99_init_ms", "p99_ms", "mean_ms", "drift_fires",
+                 "reoptimized"],
+                f"Closed-loop adaptive vs static on a popularity-flip "
+                f"trace ({adaptive_cmp['trace_requests']} requests, "
+                f"flip at t={adaptive_cmp['flip_s']:.0f}s)"))
+
     # --------------------------- part 2c: cluster placement comparison
     # scale out: the same trace shape sharded over N simulated nodes
     # (per-node budgets, per-node shared bases), replayed once per
@@ -389,6 +514,16 @@ def run(smoke: bool = False) -> dict:
                 if shared_base_wins else
                 "WARNING: shared-base two-tier did NOT meet the "
                 ">=1.3X boot / lower-memory target")
+    verdict4 = (f"adaptive closed loop beats the static fleet on the "
+                f"popularity-flip trace: cold ratio "
+                f"{adaptive_cmp['adaptive_cold_ratio']} vs "
+                f"{adaptive_cmp['static_cold_ratio']}, p99 init "
+                f"{adaptive_cmp['adaptive_p99_init_ms']} vs "
+                f"{adaptive_cmp['static_p99_init_ms']} ms, "
+                f"{adaptive_cmp['drift_fires']} drift fire(s)"
+                if adaptive_cmp["adaptive_beats_static"] else
+                "WARNING: the adaptive closed loop did NOT beat the "
+                "static fleet on the popularity-flip trace")
     verdict3 = (f"cluster: sharing-aware placement beats plain "
                 f"consistent hashing on cold-start ratio "
                 f"({cluster_results['sharing']['cold_start_ratio']} vs "
@@ -398,7 +533,7 @@ def run(smoke: bool = False) -> dict:
                 if cluster_sharing_beats_hash else
                 "WARNING: sharing-aware placement did NOT beat plain "
                 "hashing (or conservation broke)")
-    print(f"\n{verdict}\n{verdict2}\n{verdict3}")
+    print(f"\n{verdict}\n{verdict2}\n{verdict3}\n{verdict4}")
 
     payload = {
         "claim": "at equal memory budget the profile-guided fleet "
@@ -426,6 +561,8 @@ def run(smoke: bool = False) -> dict:
         "cluster_rows": cluster_rows,
         "cluster_nodes": cluster_nodes,
         "cluster_sharing_beats_hash": cluster_sharing_beats_hash,
+        "adaptive_rows": adaptive_cmp["rows"],
+        "adaptive_comparison": adaptive_cmp,
     }
     save_result("bench_fleet", payload)
     return payload

@@ -32,6 +32,7 @@ from repro.api.artifacts import (
     ChaosReportArtifact,
     ClusterSummaryArtifact,
     ColdStartStatsArtifact,
+    DriftReportArtifact,
     FleetSummaryArtifact,
     ReportArtifact,
     SharedHotSetArtifact,
@@ -41,6 +42,7 @@ from repro.api.artifacts import (
     load_bench_result,
     load_chaos_report,
     load_cluster_summary,
+    load_drift_report,
     load_fleet_summary,
     load_report,
     load_report_meta,
@@ -51,6 +53,7 @@ from repro.api.artifacts import (
     save_bench_result,
     save_chaos_report,
     save_cluster_summary,
+    save_drift_report,
     save_fleet_summary,
     save_report,
     save_shared_hot_set,
@@ -84,6 +87,7 @@ __all__ = [
     "ChaosReportArtifact",
     "ClusterSummaryArtifact",
     "ColdStartStatsArtifact",
+    "DriftReportArtifact",
     "FleetSummaryArtifact",
     "OptimizeStage",
     "ProfileStage",
@@ -106,6 +110,7 @@ __all__ = [
     "load_bench_result",
     "load_chaos_report",
     "load_cluster_summary",
+    "load_drift_report",
     "load_fleet_summary",
     "load_report",
     "load_report_meta",
@@ -120,6 +125,7 @@ __all__ = [
     "save_bench_result",
     "save_chaos_report",
     "save_cluster_summary",
+    "save_drift_report",
     "save_fleet_summary",
     "save_report",
     "save_shared_hot_set",

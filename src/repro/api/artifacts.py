@@ -310,9 +310,10 @@ class FleetSummaryArtifact(Artifact):
     optional_keys = ("policy", "trace", "budget_mb", "duration_s",
                      "pool_starts", "errors", "abandoned", "degraded",
                      "degrade_reasons", "memory_gb_s",
-                     "rewarm_ticks", "queue", "zygotes", "skipped",
-                     "used_mb", "shared_base_mb", "base_gb_s",
-                     "shared_base", "shed_reasons", "meta")
+                     "rewarm_ticks", "rewarm_errors", "queue",
+                     "zygotes", "skipped", "used_mb", "shared_base_mb",
+                     "base_gb_s", "shared_base", "shed_reasons",
+                     "adaptive", "meta")
 
     def __init__(self, payload: dict, meta: Optional[dict] = None) -> None:
         self.data = dict(payload)
@@ -507,6 +508,67 @@ def save_chaos_report(payload: dict, path: str,
 def load_chaos_report(path: str) -> dict:
     """Load a ``chaos_report`` artifact; returns the payload dict."""
     return ChaosReportArtifact.load(path).data
+
+
+# ---------------------------------------------------------------------------
+# drift_report (v1)
+# ---------------------------------------------------------------------------
+
+class DriftReportArtifact(Artifact):
+    """One adaptive-serving run's drift ledger (see
+    :class:`repro.core.adaptive.AdaptiveLoop`): the noise-calibrated
+    detector config actually applied, every closed window's verdict
+    (Σ|Δp| vs eps_eff, defer-set hit rate, new hot modules, the max
+    drift ``score`` and whether it ``fired``), the re-optimization
+    actions taken (which apps got fresh in-process reports, whether the
+    shared base was swapped), the live-profiler's per-app sample
+    counts, and its measured overhead.  Produced by
+    ``fleet replay --adaptive --drift-out PATH`` /
+    ``fleet serve --adaptive --drift-out PATH``; rendered by
+    ``python -m repro drift status``; the nightly adaptive-replay job
+    uploads these."""
+
+    kind = "drift_report"
+    schema_version = 1
+    required_keys = ("source", "config", "windows", "fires")
+    optional_keys = ("actions", "final_score", "sampler_overhead_pct",
+                     "apps", "errors", "meta")
+
+    def __init__(self, payload: dict,
+                 meta: Optional[dict] = None) -> None:
+        self.data = dict(payload)
+        if meta is not None:
+            self.data["meta"] = {**self.data.get("meta", {}), **meta}
+
+    def to_payload(self) -> dict:
+        return dict(self.data)
+
+    def save(self, path: str) -> str:
+        # raw-payload artifact (like fleet_summary): validate at write
+        # time so a producer bug fails the serving run, not a later load
+        self._validate_keys(path, self.to_payload())
+        return super().save(path)
+
+    @classmethod
+    def from_payload(cls, payload: dict) -> "DriftReportArtifact":
+        return cls(payload)
+
+    @property
+    def meta(self) -> dict:
+        return self.data.get("meta") or {}
+
+
+def save_drift_report(payload: dict, path: str,
+                      meta: Optional[dict] = None) -> str:
+    """Atomically save a ``drift_report`` payload (see
+    :meth:`repro.core.adaptive.AdaptiveLoop.drift_report_payload` for
+    the producer)."""
+    return DriftReportArtifact(payload, meta=meta).save(path)
+
+
+def load_drift_report(path: str) -> dict:
+    """Load a ``drift_report`` artifact; returns the payload dict."""
+    return DriftReportArtifact.load(path).data
 
 
 # ---------------------------------------------------------------------------

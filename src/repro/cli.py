@@ -199,18 +199,49 @@ def cmd_pool_serve(args: argparse.Namespace) -> int:
 
 def _fleet_trace(args: argparse.Namespace):
     """The replay workload: a saved trace artifact or a synthetic
-    Azure-style one over ``--apps``.  Returns (trace, apps)."""
-    from repro.pool.trace import azure_synthetic_rows, trace_from_azure_rows
+    Azure-style one over ``--apps``.  ``--flip-popularity`` reverses
+    the Zipf app order mid-trace (the canonical drift scenario for
+    ``--adaptive``).  Returns (trace, apps)."""
+    from repro.pool.trace import (
+        azure_flip_rows, azure_synthetic_rows, trace_from_azure_rows,
+    )
     if args.trace:
         trace = load_trace(args.trace)
         apps = sorted({r.app for r in trace})
     else:
         apps = [a for a in args.apps.split(",") if a]
-        rows = azure_synthetic_rows(apps, minutes=args.minutes,
-                                    peak_rpm=args.peak_rpm,
-                                    seed=args.seed)
-        trace = trace_from_azure_rows(rows, name="azure-synthetic")
+        if getattr(args, "flip_popularity", False):
+            rows = azure_flip_rows(apps, minutes=args.minutes,
+                                   peak_rpm=args.peak_rpm,
+                                   flip_minute=getattr(
+                                       args, "flip_minute", None),
+                                   seed=args.seed)
+            trace = trace_from_azure_rows(rows, name="azure-flip")
+        else:
+            rows = azure_synthetic_rows(apps, minutes=args.minutes,
+                                        peak_rpm=args.peak_rpm,
+                                        seed=args.seed)
+            trace = trace_from_azure_rows(rows, name="azure-synthetic")
     return trace, apps
+
+
+def _adaptive_config(args: argparse.Namespace):
+    """--drift-* knobs -> AdaptiveConfig (None without --adaptive)."""
+    if not getattr(args, "adaptive", False):
+        return None
+    from repro.core.adaptive import AdaptiveConfig, DriftConfig
+    return AdaptiveConfig(drift=DriftConfig(
+        window_s=args.drift_window_s, epsilon=args.drift_epsilon))
+
+
+def _save_drift_report(args: argparse.Namespace, loop, source: str):
+    """Persist the loop's drift_report artifact when --drift-out."""
+    if loop is None or not getattr(args, "drift_out", None):
+        return
+    from repro.api.artifacts import save_drift_report
+    path = os.path.abspath(args.drift_out)
+    save_drift_report(loop.drift_report_payload(source=source), path)
+    print(f"drift_report artifact: {path}")
 
 
 def _fleet_policy(args: argparse.Namespace, apps: Sequence[str]):
@@ -369,29 +400,50 @@ def cmd_fleet_replay(args: argparse.Namespace) -> int:
                   file=sys.stderr)
             return 2
         return _chaos_replay(args, trace, apps)
+    adaptive_cfg = _adaptive_config(args)
     if args.real:
         with _real_fleet(args, apps) as fleet:
-            rows = fleet.replay(trace, limit=args.limit)
+            loop = (fleet.make_adaptive_loop(config=adaptive_cfg)
+                    if args.adaptive else None)
+            rows = fleet.replay(trace, limit=args.limit, adaptive=loop)
         payload = fleet.last_summary
         print(json.dumps({k: v for k, v in payload.items()
                           if k != "per_app"}, indent=2))
         _print_rows(rows, ["app", "requests", "pool_starts",
                            "cold_starts", "cold_ratio", "pool_init_ms",
                            "cold_init_ms", "p99_ms"])
+        _save_drift_report(args, loop, "replay-real")
     else:
         queue = _queue_config(args) if args.queue_depth >= 0 else None
-        summary = FleetManager(_fleet_profiles(args, apps),
+        manager = FleetManager(_fleet_profiles(args, apps),
                                _fleet_policy(args, apps),
                                budget_mb=args.budget_mb,
                                queue=queue,
-                               shared_base_mb=_shared_base_mb(args),
-                               ).replay(trace)
+                               shared_base_mb=_shared_base_mb(args))
+        loop = None
+        if args.adaptive:
+            from repro.pool.daemon import make_sim_adaptive_loop
+            loop = make_sim_adaptive_loop(manager, config=adaptive_cfg)
+            manager.begin(trace.name)
+            for req in trace:
+                # drift windows close in trace time, so a confirmed
+                # re-optimization lands before the next offer — the
+                # hot-swap is shed-free by construction
+                loop.observe_request(req.app, req.handler, t=req.t)
+                manager.offer(req)
+            summary = manager.finish(trace.duration_s)
+            loop.flush(t=trace.duration_s)
+        else:
+            summary = manager.replay(trace)
         payload = summary.artifact_payload(source="replay-sim")
+        if loop is not None:
+            payload["adaptive"] = loop.summary()
         print(json.dumps(summary.summary(), indent=2))
         _print_rows(summary.app_rows(),
                     ["app", "requests", "cold_starts", "cold_ratio",
                      "p50_ms", "p99_ms", "max_instances", "sheds",
                      "queue_wait_p99_ms"])
+        _save_drift_report(args, loop, "replay-sim")
     if args.out:
         save_fleet_summary(payload, os.path.abspath(args.out))
         print(f"fleet_summary artifact: {os.path.abspath(args.out)}")
@@ -424,15 +476,25 @@ def cmd_fleet_serve(args: argparse.Namespace) -> int:
             print("fleet serve --stdin: need --apps", file=sys.stderr)
             return 2
 
+    adaptive_cfg = _adaptive_config(args)
+    loop = None
     if args.sim:
         manager = FleetManager(_fleet_profiles(args, apps),
                                _fleet_policy(args, apps),
                                budget_mb=args.budget_mb, queue=queue,
                                shared_base_mb=_shared_base_mb(args))
-        backend = SimFleetBackend(manager, reports_dir=args.reports_dir)
+        if args.adaptive:
+            from repro.pool.daemon import make_sim_adaptive_loop
+            loop = make_sim_adaptive_loop(manager, config=adaptive_cfg)
+        backend = SimFleetBackend(manager, reports_dir=args.reports_dir,
+                                  adaptive=loop)
     else:
-        backend = RealFleetBackend(_real_fleet(args, apps), queue=queue,
-                                   reports_dir=args.reports_dir)
+        fleet = _real_fleet(args, apps)
+        if args.adaptive:
+            loop = fleet.make_adaptive_loop(config=adaptive_cfg)
+        backend = RealFleetBackend(fleet, queue=queue,
+                                   reports_dir=args.reports_dir,
+                                   adaptive=loop)
 
     daemon = FleetDaemon(backend,
                          rewarm_interval_s=args.rewarm_interval_s,
@@ -469,8 +531,68 @@ def cmd_fleet_serve(args: argparse.Namespace) -> int:
     if args.summary_out:
         print(f"fleet_summary artifact: "
               f"{os.path.abspath(args.summary_out)}", file=sys.stderr)
+    _save_drift_report(args, loop,
+                       "serve-sim" if args.sim else "serve-real")
     _obs_save_capture(args, "fleet-serve",
-                      meta={"apps": apps, "sim": bool(args.sim)})
+                      meta={"apps": apps, "sim": bool(args.sim),
+                            "adaptive": bool(args.adaptive)})
+    rewarm_errors = int(payload.get("rewarm_errors") or 0)
+    if rewarm_errors:
+        # rewarm-tick failures were swallowed into the daemon's ring
+        # buffer during the run; a clean exit here would hide them
+        print(f"fleet serve: {rewarm_errors} rewarm error(s) during "
+              f"the run (see rewarm_errors in the summary)",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+def cmd_drift_status(args: argparse.Namespace) -> int:
+    """Render a saved drift_report artifact: the detector config that
+    was applied, every closed window's verdict, and the
+    re-optimization actions the adaptive loop took."""
+    from repro.api.artifacts import load_drift_report
+    payload = load_drift_report(args.path)
+    if args.json:
+        print(json.dumps(payload, indent=2, sort_keys=True))
+        return 0
+    cfg = payload.get("config", {})
+    print(f"drift report ({payload.get('source', '?')}): "
+          f"{len(payload.get('windows', []))} windows, "
+          f"{payload.get('fires', 0)} fired, "
+          f"final score {payload.get('final_score', 0.0):.3f}")
+    print(f"  config: window_s={cfg.get('window_s')} "
+          f"epsilon={cfg.get('epsilon')} "
+          f"noise_guard={cfg.get('noise_guard')} "
+          f"sample_every={cfg.get('sample_every')}")
+    overhead = payload.get("sampler_overhead_pct")
+    if overhead is not None:
+        print(f"  sampler overhead: {overhead:.2f}% of exec time")
+    rows = []
+    for w in payload.get("windows", []):
+        rows.append({
+            "t_end": round(w.get("t_end", 0.0), 1),
+            "invocations": w.get("invocations", 0),
+            "mix": round(w.get("mix_score", 0.0), 3),
+            "miss": round(w.get("miss_score", 0.0), 3),
+            "new_mods": round(w.get("new_module_score", 0.0), 3),
+            "score": round(w.get("score", 0.0), 3),
+            "fired": w.get("fired", False),
+            "suppressed": w.get("suppressed", False),
+        })
+    if rows:
+        _print_rows(rows, ["t_end", "invocations", "mix", "miss",
+                           "new_mods", "score", "fired", "suppressed"])
+    for act in payload.get("actions", []):
+        applied = ", ".join(a["app"] for a in act.get("applied", []))
+        print(f"  re-optimized @t={act.get('t', 0.0):.1f} "
+              f"score={act.get('score', 0.0):.3f} "
+              f"apps=[{applied}]"
+              + (" base-swapped" if act.get("swapped") else "")
+              + (f" ERROR: {act['error']}" if act.get("error") else ""))
+    errors = payload.get("errors", [])
+    if errors:
+        print(f"  {len(errors)} error(s); last: {errors[-1]}")
     return 0
 
 
@@ -970,6 +1092,30 @@ def build_parser() -> argparse.ArgumentParser:
         p.add_argument("--base-min-apps", type=int, default=2,
                        help="a module joins the shared base when hot "
                             "for at least this many member apps")
+        p.add_argument("--flip-popularity", action="store_true",
+                       help="synthetic trace only: reverse the Zipf "
+                            "app popularity order mid-trace (the "
+                            "canonical drift scenario for --adaptive)")
+        p.add_argument("--flip-minute", type=int, default=None,
+                       help="minute the popularity flip lands "
+                            "(default: half the trace)")
+
+    def add_adaptive_knobs(p: argparse.ArgumentParser) -> None:
+        p.add_argument("--adaptive", action="store_true",
+                       help="close the loop: sample live profiles in "
+                            "the serving path, watch for workload "
+                            "drift, and re-optimize + hot-swap defer "
+                            "sets in place on confirmed drift "
+                            "(see docs/adaptive.md)")
+        p.add_argument("--drift-window-s", type=float, default=60.0,
+                       help="drift-detector window length in trace/"
+                            "wall seconds")
+        p.add_argument("--drift-epsilon", type=float, default=0.002,
+                       help="aggregate handler-mix change threshold "
+                            "(paper Eq. 7; the applied gate is "
+                            "noise-calibrated above this floor)")
+        p.add_argument("--drift-out", default=None,
+                       help="save the drift_report artifact here")
 
     def add_fleet_sim_profile(p: argparse.ArgumentParser) -> None:
         p.add_argument("--policy", default="profile",
@@ -1022,6 +1168,7 @@ def build_parser() -> argparse.ArgumentParser:
     add_fleet_sim_profile(p)
     add_queue_knobs(p, default_depth=-1)
     add_obs_knobs(p)
+    add_adaptive_knobs(p)
     p.add_argument("--real", action="store_true",
                    help="replay through a live ZygoteFleet over the "
                         "deployed benchsuite apps (one zygote per app "
@@ -1078,6 +1225,7 @@ def build_parser() -> argparse.ArgumentParser:
     add_fleet_sim_profile(p)
     add_queue_knobs(p, default_depth=16)
     add_obs_knobs(p)
+    add_adaptive_knobs(p)
     add_root(p)
     p.add_argument("--metrics-port", type=int, default=None,
                    help="expose Prometheus metrics on this port "
@@ -1290,6 +1438,24 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--no-clear", action="store_true",
                    help="append renders instead of clearing the screen")
     p.set_defaults(func=cmd_obs_top)
+
+    drift = sub.add_parser(
+        "drift", help="adaptive-loop drift reports")
+    drift_sub = drift.add_subparsers(dest="drift_command", required=True)
+    p = drift_sub.add_parser(
+        "status",
+        help="render a saved drift_report artifact",
+        description="Show what an adaptive run saw and did: the "
+                    "noise-calibrated detector config, every closed "
+                    "window's component scores (handler-mix change, "
+                    "defer-set misses, new hot modules) and whether "
+                    "it fired, plus the re-optimization actions and "
+                    "any swallowed errors.  Produced by fleet "
+                    "replay/serve --adaptive --drift-out.")
+    p.add_argument("path", help="drift_report artifact JSON")
+    p.add_argument("--json", action="store_true",
+                   help="dump the versioned payload as JSON")
+    p.set_defaults(func=cmd_drift_status)
 
     p = sub.add_parser("ci-check",
                        help="re-profile and compare against the deployed "

@@ -2,10 +2,28 @@
 
 from repro.core.adaptive.monitor import WorkloadMonitor, MonitorConfig
 from repro.core.adaptive.controller import SlimStartController, ControllerConfig
+from repro.core.adaptive.live import (
+    AdaptiveConfig,
+    AdaptiveLoop,
+    DriftConfig,
+    DriftDetector,
+    DriftWindow,
+    LiveProfileConfig,
+    LiveProfiler,
+    baseline_records_from_report,
+)
 
 __all__ = [
     "WorkloadMonitor",
     "MonitorConfig",
     "SlimStartController",
     "ControllerConfig",
+    "AdaptiveConfig",
+    "AdaptiveLoop",
+    "DriftConfig",
+    "DriftDetector",
+    "DriftWindow",
+    "LiveProfileConfig",
+    "LiveProfiler",
+    "baseline_records_from_report",
 ]

@@ -1,0 +1,654 @@
+"""In-production closed loop: live profiling -> drift detection ->
+in-process re-optimization (paper §IV-C taken all the way to runtime).
+
+The offline pipeline (``repro.api.stages``) profiles cold instances,
+analyzes the shards, and writes an :class:`OptimizationReport` artifact
+that the serving fleet loads at boot.  This module closes the loop the
+paper's "adaptive monitoring" section sketches: the *serving path
+itself* keeps profiling a sampled subset of dispatches, watches the
+workload for drift, and — when drift is confirmed — regenerates the
+report in-process and hot-swaps defer sets + shared base through the
+existing ``rewarm``/``rebase`` machinery, with zero sheds and no
+restart.
+
+Three pieces:
+
+:class:`LiveProfiler`
+    Folds per-exec profile payloads (``ImportTimer`` records + a
+    serialized :class:`CCT`, produced inside forkserver children and
+    shipped back on the exec reply) into rolling per-app state, and
+    regenerates an :class:`OptimizationReport` with *exactly* the
+    offline ``analyze_sink`` recipe — mean-merged timers, merged +
+    escalated CCT, mean e2e — so the live and offline pipelines are
+    differentially testable against each other.
+
+:class:`DriftDetector`
+    Extends :class:`WorkloadMonitor` (Eq. 5-7) with two more drift
+    signals — defer-set hit-rate and new-hot-module appearance — and a
+    *noise-calibrated* trigger.  The paper's ε=0.002 assumes windows of
+    millions of invocations; at serving-window volumes multinomial
+    sampling noise alone exceeds it, so the effective gate is
+
+        eps_eff = max(epsilon, noise_guard * sqrt(k*(1/n_prev + 1/n_cur)))
+
+    where ``k`` is the number of distinct handlers and ``n_*`` the
+    window totals.  ``sqrt(k*(1/n_prev + 1/n_cur))`` is a Cauchy-Schwarz
+    upper bound on E[Σ|Δp̂|] under a stationary workload, so with the
+    default guard the detector provably (and property-testedly) does
+    not fire on stationary traffic, while a real popularity flip moves
+    Σ|Δp| by O(1) and fires immediately.
+
+:class:`AdaptiveLoop`
+    Glues the two together behind three injected callbacks —
+    ``regenerate_fn`` (build a fresh report for an app),
+    ``apply_fn`` (deploy it: ``ZygoteFleet.rewarm`` /
+    ``ProfileGuidedPolicy.add_report``), and optional ``swap_fn``
+    (``ZygoteFleet.maybe_swap_base``) — so the same loop drives the
+    simulated and the real fleet.  Emits ``repro_drift_score`` /
+    ``repro_sampler_overhead_pct`` gauges and a versioned
+    ``drift_report`` artifact payload.
+"""
+
+from __future__ import annotations
+
+import math
+import statistics
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.core.adaptive.monitor import MonitorConfig, WorkloadMonitor
+from repro.core.profiler.cct import CCT
+from repro.core.profiler.report import OptimizationReport
+from repro.core.profiler.utilization import (
+    AnalyzerConfig,
+    ModuleMapper,
+    UtilizationAnalyzer,
+)
+
+
+# ---------------------------------------------------------------------------
+# Live profiler
+# ---------------------------------------------------------------------------
+
+@dataclass
+class LiveProfileConfig:
+    """Knobs for in-serving-path profiling.
+
+    The sampler interval is coarser than the offline profiler's 2 ms
+    (we are riding production requests, not dedicated profiling
+    instances); ``sample_every`` throttles which dispatches carry the
+    profiler at all, which is where the <=3 % overhead budget
+    (tools/perf_smoke.py gate) comes from.
+    """
+
+    interval_s: float = 0.010  # sampler tick inside the child
+    timer: str = "prof"  # CPU-time sampling, like the offline profiler
+    max_depth: int = 128
+    sample_every: int = 8  # profile 1 of every N dispatches per app
+    max_shards: int = 64  # rolling init-record shards kept per app
+    max_e2e: int = 256  # rolling e2e samples kept per app
+
+    def exec_config(self) -> dict:
+        """The dict shipped to the forkserver child on a profiled exec."""
+        return {"interval_s": self.interval_s, "timer": self.timer,
+                "max_depth": self.max_depth}
+
+
+def baseline_records_from_report(report: OptimizationReport) -> dict:
+    """Synthetic init-record shard for a deployed report's hot set.
+
+    Modules preloaded into the zygote are in ``sys.modules`` before the
+    fork, so child-side ``ImportTimer`` records never see them — a live
+    regeneration from child shards alone would conclude the hot
+    libraries cost nothing and defer them.  This folds the deployed
+    report's per-*library* init times back in as one extra shard
+    (top-level stats only: a library stat's ``init_s`` already covers
+    its subtree, so including sub-package prefixes would double-count
+    under ``ImportTimer.package_times``).
+    """
+    out: dict[str, dict] = {}
+    for s in report.stats:
+        if not s.is_library or s.init_s <= 0:
+            continue
+        out[s.name] = {
+            "filename": s.file or "<baseline>",
+            "self_s": s.init_s,
+            "cumulative_s": s.init_s,
+            "parent": None,
+            "importer_file": None,
+            "importer_lineno": 0,
+        }
+    return out
+
+
+@dataclass
+class _AppProfileState:
+    cct: CCT = field(default_factory=CCT)
+    shards: list = field(default_factory=list)  # init_records dicts
+    e2e_s: list = field(default_factory=list)
+    baseline: Optional[dict] = None  # synthetic shard, see above
+    n_payloads: int = 0
+    n_signals: int = 0
+    overhead_s: float = 0.0  # profiler cost inside profiled execs
+    exec_s: float = 0.0  # total wall of profiled execs
+
+
+class LiveProfiler:
+    """Rolling per-app profile state fed by exec replies.
+
+    Thread-safe: the real backend's worker threads call
+    :meth:`observe` concurrently.
+    """
+
+    def __init__(self, config: LiveProfileConfig | None = None) -> None:
+        self.config = config or LiveProfileConfig()
+        self._lock = threading.Lock()
+        self._apps: dict[str, _AppProfileState] = {}
+
+    def _state(self, app: str) -> _AppProfileState:
+        st = self._apps.get(app)
+        if st is None:
+            st = self._apps[app] = _AppProfileState()
+        return st
+
+    # ----------------------------------------------------------------- feed
+    def observe(self, app: str, payload: dict) -> None:
+        """Fold one exec's ``live_profile`` reply payload into the
+        rolling state.  Payload shape mirrors the offline profile shard
+        (``benchsuite.runner``): ``init_records``, ``cct``,
+        ``e2e_cold_s``, ``n_signals``, ``overhead_s``, ``exec_s``."""
+        cfg = self.config
+        with self._lock:
+            st = self._state(app)
+            st.n_payloads += 1
+            st.n_signals += int(payload.get("n_signals", 0))
+            st.overhead_s += float(payload.get("overhead_s", 0.0))
+            st.exec_s += float(payload.get("exec_s", 0.0))
+            recs = payload.get("init_records")
+            if recs:
+                st.shards.append(recs)
+                if len(st.shards) > cfg.max_shards:
+                    del st.shards[:len(st.shards) - cfg.max_shards]
+            if payload.get("cct"):
+                st.cct.merge(CCT.from_dict(payload["cct"]))
+            if payload.get("e2e_cold_s") is not None:
+                st.e2e_s.append(float(payload["e2e_cold_s"]))
+                if len(st.e2e_s) > cfg.max_e2e:
+                    del st.e2e_s[:len(st.e2e_s) - cfg.max_e2e]
+
+    def set_baseline(self, app: str,
+                     report: OptimizationReport) -> None:
+        """Seed an app with its deployed report (see
+        :func:`baseline_records_from_report`)."""
+        with self._lock:
+            self._state(app).baseline = \
+                baseline_records_from_report(report)
+
+    # ------------------------------------------------------------- analysis
+    def has_data(self, app: str) -> bool:
+        with self._lock:
+            st = self._apps.get(app)
+            return bool(st and (st.shards or st.e2e_s))
+
+    def apps(self) -> list[str]:
+        with self._lock:
+            return sorted(self._apps)
+
+    def regenerate(self, app: str, libs_dir: str,
+                   config: AnalyzerConfig | None = None
+                   ) -> Optional[OptimizationReport]:
+        """Re-run Analyze on the live state — the offline
+        ``analyze_sink`` recipe verbatim (mean-merged timers, merged +
+        escalated CCT copy, mean e2e), so the differential test in
+        ``tests/test_adaptive_loop.py`` can hold the two pipelines to
+        the same answer on the same records."""
+        from repro.api.stages import _merge_import_timers
+        with self._lock:
+            st = self._apps.get(app)
+            if st is None or not st.e2e_s or not st.shards:
+                return None
+            shards = list(st.shards)
+            if st.baseline:
+                shards.append(st.baseline)
+            cct = CCT()
+            cct.merge(st.cct)
+            e2e = statistics.fmean(st.e2e_s)
+        timer = _merge_import_timers(shards)
+        cct.escalate()
+        mapper = ModuleMapper((libs_dir,))
+        analyzer = UtilizationAnalyzer(timer, cct, mapper, e2e_s=e2e,
+                                       config=config)
+        return OptimizationReport.from_analyzer(app, analyzer)
+
+    # -------------------------------------------------------------- metrics
+    def overhead_pct(self, app: Optional[str] = None) -> float:
+        """Profiler cost as % of profiled-exec wall time (the paper's
+        <=10 % in-band budget; our CI gate holds end-to-end p50 to 3 %)."""
+        with self._lock:
+            states = ([self._apps[app]] if app in self._apps
+                      else list(self._apps.values()) if app is None
+                      else [])
+            over = sum(s.overhead_s for s in states)
+            total = sum(s.exec_s for s in states)
+        return 100.0 * over / total if total > 0 else 0.0
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                app: {
+                    "profiled_execs": st.n_payloads,
+                    "shards": len(st.shards),
+                    "n_signals": st.n_signals,
+                    "baseline": st.baseline is not None,
+                }
+                for app, st in sorted(self._apps.items())
+            }
+
+
+# ---------------------------------------------------------------------------
+# Drift detection
+# ---------------------------------------------------------------------------
+
+@dataclass
+class DriftConfig:
+    """Noise-calibrated drift gate over serving-scale windows."""
+
+    window_s: float = 60.0
+    epsilon: float = 0.002  # paper's ε — the floor of the gate
+    # eps_eff multiplier over the stationary-noise bound
+    # sqrt(k*(1/n_prev+1/n_cur)); 4.0 puts a stationary window's
+    # Σ|Δp̂| past the gate with probability < exp(-5k) (McDiarmid),
+    # which the hypothesis sweep in tests/test_pool_properties.py
+    # hammers on
+    noise_guard: float = 4.0
+    min_invocations: int = 20  # ignore near-empty windows
+    min_hit_rate: float = 0.5  # defer-set hit-rate floor
+    min_profiled: int = 3  # hit-rate needs this many profiled execs
+    new_module_threshold: int = 3  # distinct new hot modules per window
+    cooldown_windows: int = 1  # windows to sit out after a fire
+
+    def monitor_config(self) -> MonitorConfig:
+        return MonitorConfig(window_s=self.window_s,
+                             epsilon=self.epsilon,
+                             min_invocations=self.min_invocations)
+
+
+@dataclass
+class DriftWindow:
+    """One closed window's drift verdict (rides in drift_report)."""
+
+    t_end: float
+    total_invocations: int
+    aggregate_change: float  # Σ|Δp| (Eq. 7 left-hand side)
+    eps_eff: float  # noise-calibrated gate actually applied
+    mix_score: float  # aggregate_change / eps_eff
+    hit_rate: Optional[float]  # None when too few profiled execs
+    miss_score: float
+    new_modules: list[str]
+    new_module_score: float
+    score: float  # max of the components; >1 means drift
+    fired: bool
+    suppressed: bool  # score>1 but inside the post-fire cooldown
+
+    def to_payload(self) -> dict:
+        return {
+            "t_end": round(self.t_end, 3),
+            "invocations": self.total_invocations,
+            "mix_change": round(self.aggregate_change, 5),
+            "eps_eff": round(self.eps_eff, 5),
+            "mix_score": round(self.mix_score, 3),
+            "hit_rate": (round(self.hit_rate, 4)
+                         if self.hit_rate is not None else None),
+            "miss_score": round(self.miss_score, 3),
+            "new_modules": list(self.new_modules),
+            "new_module_score": round(self.new_module_score, 3),
+            "score": round(self.score, 3),
+            "fired": self.fired,
+            "suppressed": self.suppressed,
+        }
+
+
+class DriftDetector(WorkloadMonitor):
+    """Eq. 5-7 plus defer-set hit-rate and new-hot-module signals.
+
+    Keys are ``app/handler`` so both per-app popularity flips and
+    per-handler mix shifts inside one app move the same Σ|Δp|.  The
+    clock is injectable *and* overridable per record (``t=``), so trace
+    replay drives the detector in trace time.
+    """
+
+    def __init__(self, config: DriftConfig | None = None,
+                 clock: Callable[[], float] = time.monotonic) -> None:
+        self.drift_config = config or DriftConfig()
+        self._base_clock = clock
+        self._t_override: Optional[float] = None
+        super().__init__(self.drift_config.monitor_config(),
+                         clock=self._now)
+        self.windows: list[DriftWindow] = []
+        self.fires = 0
+        self._cooldown = 0
+        self._primed = False
+        self._win_hits = 0
+        self._win_misses = 0
+        self._win_new_modules: set[str] = set()
+
+    def _now(self) -> float:
+        return (self._t_override if self._t_override is not None
+                else self._base_clock())
+
+    # ----------------------------------------------------------------- feed
+    def observe(self, app: str, handler: Optional[str] = None,
+                n: int = 1, t: Optional[float] = None
+                ) -> Optional[DriftWindow]:
+        """Record one arrival; returns the closed :class:`DriftWindow`
+        when this arrival rolled the window over."""
+        self._t_override = t
+        try:
+            if not self._primed:
+                # align the first window to the stream's own clock: a
+                # trace replay observes in *trace* time while the
+                # monitor base class stamped construction wall time
+                self._window_start = self._now()
+                self._primed = True
+            before = len(self.windows)
+            self.record(f"{app}/{handler or '_'}", n)
+        finally:
+            self._t_override = None
+        return self.windows[-1] if len(self.windows) > before else None
+
+    def note_hit(self, hit: bool) -> None:
+        """One profiled exec's defer-set verdict: ``hit`` means no
+        deferred module was imported at runtime."""
+        if hit:
+            self._win_hits += 1
+        else:
+            self._win_misses += 1
+
+    def note_new_modules(self, names) -> None:
+        """Top-level modules seen initializing in a child that are in
+        neither the deployed hot set nor the defer set."""
+        self._win_new_modules.update(names)
+
+    def flush(self, t: Optional[float] = None) -> Optional[DriftWindow]:
+        """Force-close the trailing window (end of trace / drain)."""
+        self._t_override = t
+        try:
+            before = len(self.windows)
+            super().flush()
+        finally:
+            self._t_override = None
+        return self.windows[-1] if len(self.windows) > before else None
+
+    # --------------------------------------------------------------- window
+    def _close_window(self, now: float):
+        hits, misses = self._win_hits, self._win_misses
+        new_mods = sorted(self._win_new_modules)
+        self._win_hits = self._win_misses = 0
+        self._win_new_modules = set()
+        stats = super()._close_window(now)
+        if stats is None:
+            return None
+        cfg = self.drift_config
+
+        # mix-shift component, against the noise-calibrated gate
+        if len(self.history) >= 2:
+            prev = self.history[-2]
+            k = max(len(set(stats.probabilities)
+                        | set(prev.probabilities)), 1)
+            noise = math.sqrt(k * (1.0 / max(prev.total_invocations, 1)
+                                   + 1.0 / max(stats.total_invocations,
+                                               1)))
+            eps_eff = max(cfg.epsilon, cfg.noise_guard * noise)
+            mix_score = stats.aggregate_change / eps_eff
+        else:
+            eps_eff = cfg.epsilon
+            mix_score = 0.0  # first window: nothing to diff against
+
+        # defer-set hit-rate component (profiled subset only)
+        hit_rate: Optional[float] = None
+        miss_score = 0.0
+        if hits + misses >= cfg.min_profiled:
+            hit_rate = hits / (hits + misses)
+            if cfg.min_hit_rate < 1.0:
+                miss_score = (1.0 - hit_rate) / (1.0 - cfg.min_hit_rate)
+
+        # new-hot-module component
+        new_score = (len(new_mods) / cfg.new_module_threshold
+                     if cfg.new_module_threshold > 0 else 0.0)
+
+        score = max(mix_score, miss_score, new_score)
+        suppressed = False
+        fired = False
+        if score > 1.0 and len(self.history) >= 2:
+            if self._cooldown > 0:
+                suppressed = True
+            else:
+                fired = True
+                self._cooldown = cfg.cooldown_windows
+                self.fires += 1
+        if not fired and self._cooldown > 0:
+            self._cooldown -= 1
+
+        win = DriftWindow(
+            t_end=now, total_invocations=stats.total_invocations,
+            aggregate_change=stats.aggregate_change, eps_eff=eps_eff,
+            mix_score=mix_score, hit_rate=hit_rate,
+            miss_score=miss_score, new_modules=new_mods,
+            new_module_score=new_score, score=score, fired=fired,
+            suppressed=suppressed)
+        self.windows.append(win)
+        return stats
+
+    @property
+    def last_score(self) -> float:
+        return self.windows[-1].score if self.windows else 0.0
+
+
+# ---------------------------------------------------------------------------
+# The loop
+# ---------------------------------------------------------------------------
+
+@dataclass
+class AdaptiveConfig:
+    profile: LiveProfileConfig = field(default_factory=LiveProfileConfig)
+    drift: DriftConfig = field(default_factory=DriftConfig)
+    max_actions: int = 50  # bounded re-optimization action log
+    max_errors: int = 50
+
+
+class AdaptiveLoop:
+    """Observe -> detect -> regenerate -> hot-swap, behind callbacks.
+
+    ``regenerate_fn(app, profiler)`` returns a fresh
+    :class:`OptimizationReport` (or None to skip the app);
+    ``apply_fn(report)`` deploys it into the serving path
+    (``ZygoteFleet.rewarm`` / ``ProfileGuidedPolicy.add_report`` — both
+    shed nothing); ``swap_fn()`` optionally recomputes the shared base
+    afterwards (``ZygoteFleet.maybe_swap_base``); ``hot_sets_fn(app)``
+    returns ``(hot_modules, defer_targets)`` top-level sets for the
+    deployed report, feeding the hit-rate / new-module signals.
+
+    ``fault_hook`` is the chaos seam (site ``"profiler"``): an injected
+    ``profiler_stall`` aborts one re-optimization round — serving is
+    never touched, the error lands in the drift report.
+    """
+
+    def __init__(self, *,
+                 regenerate_fn: Callable[..., Optional[OptimizationReport]],
+                 apply_fn: Callable[[OptimizationReport], object],
+                 swap_fn: Optional[Callable[[], object]] = None,
+                 hot_sets_fn: Optional[Callable[[str], tuple]] = None,
+                 config: AdaptiveConfig | None = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 fault_hook=None) -> None:
+        self.config = config or AdaptiveConfig()
+        self.regenerate_fn = regenerate_fn
+        self.apply_fn = apply_fn
+        self.swap_fn = swap_fn
+        self.hot_sets_fn = hot_sets_fn
+        self.fault_hook = fault_hook
+        self.profiler = LiveProfiler(self.config.profile)
+        self.detector = DriftDetector(self.config.drift, clock=clock)
+        self.actions: list[dict] = []
+        self.errors: list[str] = []
+        self.applied = 0
+        self.swaps = 0
+        self._lock = threading.RLock()
+        self._dispatches: dict[str, int] = {}
+        self._window_apps: set[str] = set()
+        self._last_window_apps: set[str] = set()
+
+    # -------------------------------------------------------------- serving
+    def observe_request(self, app: str, handler: Optional[str] = None,
+                        t: Optional[float] = None) -> Optional[dict]:
+        """Record one admission.  Returns the child-side profiler
+        config when *this* dispatch should carry the live profiler
+        (every ``sample_every``-th per app), else None.  Closing a
+        window — and any re-optimization it fires — happens inline,
+        which in the single-threaded replay path is exactly what makes
+        the swap shed-free: it runs between requests."""
+        with self._lock:
+            self._window_apps.add(app)
+            closed = self.detector.observe(app, handler, t=t)
+            if closed is not None:
+                self._last_window_apps = self._window_apps
+                self._window_apps = {app}
+                if closed.fired:
+                    self._reoptimize(closed)
+                self._export_gauges()
+            n = self._dispatches.get(app, 0)
+            self._dispatches[app] = n + 1
+            if n % max(self.config.profile.sample_every, 1) == 0:
+                return self.config.profile.exec_config()
+            return None
+
+    def observe_exec(self, app: str, metrics: dict) -> None:
+        """Fold a dispatch reply's ``live_profile`` payload (if any)
+        into the profiler and the drift signals.  Pops the payload so
+        it never leaks into latency summaries."""
+        payload = metrics.pop("live_profile", None) \
+            if isinstance(metrics, dict) else None
+        if not payload:
+            return
+        self.profiler.observe(app, payload)
+        if self.hot_sets_fn is None:
+            return
+        with self._lock:
+            try:
+                hot, defer = self.hot_sets_fn(app)
+            except Exception:
+                return
+            tops = {name.split(".", 1)[0]
+                    for name in (payload.get("init_records") or {})}
+            hot = {h.split(".", 1)[0] for h in hot}
+            defer = {d.split(".", 1)[0] for d in defer}
+            # a child importing a deferred module at init means the
+            # defer decision cost this request a lazy load: a miss
+            self.detector.note_hit(not (tops & defer))
+            new = tops - hot - defer - {"handler"}
+            if new:
+                self.detector.note_new_modules(new)
+
+    def flush(self, t: Optional[float] = None) -> None:
+        """Close the trailing window at end of trace / drain."""
+        with self._lock:
+            closed = self.detector.flush(t=t)
+            if closed is not None:
+                self._last_window_apps = self._window_apps
+                self._window_apps = set()
+                if closed.fired:
+                    self._reoptimize(closed)
+                self._export_gauges()
+
+    # ----------------------------------------------------------- reoptimize
+    def _reoptimize(self, window: DriftWindow) -> None:
+        """One confirmed-drift round: regenerate + apply per app, then
+        swap the shared base.  Never raises — a failed round (including
+        an injected ``profiler_stall``) is recorded and skipped; the
+        serving path is untouched either way."""
+        apps = sorted(self._last_window_apps) or self.profiler.apps()
+        entry = {"t": round(window.t_end, 3),
+                 "score": round(window.score, 3), "apps": apps,
+                 "applied": [], "swapped": False}
+        try:
+            if self.fault_hook is not None:
+                # chaos site "profiler": a profiler_stall lands here
+                self.fault_hook("profiler", app="_adaptive")
+            for app in apps:
+                report = self.regenerate_fn(app, self.profiler)
+                if report is None:
+                    continue
+                self.apply_fn(report)
+                self.applied += 1
+                entry["applied"].append(
+                    {"app": app, "qualifies": report.qualifies,
+                     "defer_targets": list(report.defer_targets)})
+            if entry["applied"] and self.swap_fn is not None:
+                self.swap_fn()
+                self.swaps += 1
+                entry["swapped"] = True
+        except Exception as exc:
+            entry["error"] = repr(exc)
+            if len(self.errors) >= self.config.max_errors:
+                del self.errors[:1]
+            self.errors.append(f"t={entry['t']}: {exc!r}")
+        if len(self.actions) >= self.config.max_actions:
+            del self.actions[:1]
+        self.actions.append(entry)
+
+    def _export_gauges(self) -> None:
+        from repro.obs.metrics import default_registry
+        reg = default_registry()
+        reg.gauge("repro_drift_score",
+                  "latest window's drift score (>1 means drift)",
+                  labels=("app",)).labels(app="_fleet").set(
+            self.detector.last_score)
+        reg.gauge("repro_sampler_overhead_pct",
+                  "live-profiler cost as % of profiled exec wall time",
+                  labels=("app",)).labels(app="_fleet").set(
+            round(self.profiler.overhead_pct(), 3))
+
+    # ------------------------------------------------------------ reporting
+    def summary(self) -> dict:
+        """Compact block for the fleet_summary artifact."""
+        with self._lock:
+            return {
+                "windows": len(self.detector.windows),
+                "fires": self.detector.fires,
+                "applied": self.applied,
+                "base_swaps": self.swaps,
+                "final_score": round(self.detector.last_score, 3),
+                "sampler_overhead_pct":
+                    round(self.profiler.overhead_pct(), 3),
+                "errors": len(self.errors),
+            }
+
+    def drift_report_payload(self, source: str = "live") -> dict:
+        """Payload for the versioned ``drift_report`` artifact."""
+        cfg = self.config
+        with self._lock:
+            return {
+                "source": source,
+                "config": {
+                    "window_s": cfg.drift.window_s,
+                    "epsilon": cfg.drift.epsilon,
+                    "noise_guard": cfg.drift.noise_guard,
+                    "min_hit_rate": cfg.drift.min_hit_rate,
+                    "new_module_threshold":
+                        cfg.drift.new_module_threshold,
+                    "cooldown_windows": cfg.drift.cooldown_windows,
+                    "sample_every": cfg.profile.sample_every,
+                    "interval_s": cfg.profile.interval_s,
+                },
+                "windows": [w.to_payload()
+                            for w in self.detector.windows],
+                "fires": self.detector.fires,
+                "actions": list(self.actions),
+                "final_score": round(self.detector.last_score, 3),
+                "sampler_overhead_pct":
+                    round(self.profiler.overhead_pct(), 3),
+                "apps": self.profiler.snapshot(),
+                "errors": list(self.errors),
+            }

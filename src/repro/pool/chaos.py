@@ -15,6 +15,7 @@ components call it at well-known **sites** with keyword context::
     fault_hook("cold_start", app=...)
     fault_hook("rewarm",     app=...)
     fault_hook("route",      app=..., node=...)   # cluster router
+    fault_hook("profiler",   app=...)             # adaptive re-optimize
 
 :class:`FaultInjector` is the hook implementation this module ships: it
 consumes a :class:`FaultPlan` — a deterministic, seed-generatable list
@@ -39,6 +40,10 @@ fail_rewarm         rewarm      raise inside the daemon rewarm tick
 node_loss           route       raise NodeLossFault: the cluster router
                                 declares the routed node lost and
                                 re-places its apps on survivors
+profiler_stall      profiler    optional ``delay_s`` sleep, then raise
+                                inside the adaptive re-optimization
+                                step; the AdaptiveLoop must swallow the
+                                error into its ring and keep serving
 ==================  ==========  =========================================
 
 Everything is deterministic given the plan: matching is by per-event
@@ -83,12 +88,13 @@ _KIND_SPEC: dict[str, tuple[str, Optional[str]]] = {
     "fail_cold": ("cold_start", None),
     "fail_rewarm": ("rewarm", None),
     "node_loss": ("route", None),
+    "profiler_stall": ("profiler", None),
 }
 
 FAULT_KINDS = tuple(sorted(_KIND_SPEC))
 
 SITES = ("protocol", "spawn_app", "dispatch", "cold_start", "rewarm",
-         "route")
+         "route", "profiler")
 
 
 class NodeLossFault(RuntimeError):
@@ -330,6 +336,10 @@ class FaultInjector:
                         os.kill(base.pid, signal.SIGKILL)
                     except ProcessLookupError:
                         pass
+            elif ev.kind == "profiler_stall":
+                if ev.delay_s:
+                    time.sleep(ev.delay_s)  # the "stall" half
+                raiser = raiser or ev
             else:  # pure-exception kinds
                 raiser = raiser or ev
         if raiser is not None:
@@ -360,6 +370,9 @@ class FaultInjector:
         if ev.kind == "node_loss":
             raise NodeLossFault(f"{tag} injected node loss while "
                                 f"routing {app!r}")
+        if ev.kind == "profiler_stall":
+            raise RuntimeError(f"{tag} injected live-profiler stall "
+                               f"for {app!r}")
         # socket_eof / fail_spawn / fail_preload / simulated kill
         raise ForkServerError(f"{tag} injected protocol failure "
                               f"for {app!r}")

@@ -145,12 +145,22 @@ class SimFleetBackend:
     deployed ``<app>.json`` report artifacts the rewarm tick re-loads
     into the keep-alive policy (only policies with ``add_report``, i.e.
     the profile-guided one, consume them).
+
+    ``adaptive`` is an optional
+    :class:`repro.core.adaptive.AdaptiveLoop` (see
+    :func:`make_sim_adaptive_loop`): every admission feeds the drift
+    detector in *simulated* time, and a confirmed drift regenerates
+    synthetic reports into the policy between requests — which is what
+    admits zygotes/prewarm floors for apps that became hot after the
+    deployed report set was cut.
     """
 
     def __init__(self, manager: FleetManager, *,
-                 reports_dir: Optional[str] = None) -> None:
+                 reports_dir: Optional[str] = None,
+                 adaptive=None) -> None:
         self.manager = manager
         self.reports_dir = reports_dir
+        self.adaptive = adaptive
         self._lock = threading.Lock()
         self._started = False
 
@@ -167,6 +177,12 @@ class SimFleetBackend:
     def submit(self, req: Request) -> str:
         tracer = get_tracer()
         t0 = now_ms() if tracer.enabled else 0.0
+        if self.adaptive is not None:
+            # drift detection runs in sim time; a fired window
+            # re-optimizes here, before the offer, so the policy the
+            # request sees is already the regenerated one
+            self.adaptive.observe_request(req.app, req.handler,
+                                          t=req.t)
         with self._lock:
             outcome = self.manager.offer(req)
         _m_requests(req.app, outcome)
@@ -185,10 +201,15 @@ class SimFleetBackend:
         pass  # simulated queues drain inside finish()
 
     def finish(self, end_t: Optional[float] = None) -> dict:
+        if self.adaptive is not None:
+            self.adaptive.flush(t=end_t)
         with self._lock:
             summary = self.manager.finish(end_t)
             self._started = False
-        return summary.artifact_payload(source="serve-sim")
+        payload = summary.artifact_payload(source="serve-sim")
+        if self.adaptive is not None:
+            payload["adaptive"] = self.adaptive.summary()
+        return payload
 
     def snapshot(self) -> dict:
         with self._lock:
@@ -248,6 +269,46 @@ class SimFleetBackend:
         pass
 
 
+def make_sim_adaptive_loop(manager: FleetManager, *, config=None,
+                           fault_hook=None, clock=None):
+    """Wire an :class:`repro.core.adaptive.AdaptiveLoop` to a simulated
+    fleet.  There is no forked child to carry the sampler, so the
+    "regenerated profile" is synthesized from the app's
+    :class:`~repro.pool.simulator.AppProfile` ground truth — the drift
+    *detection* and the deploy path (``policy.add_report`` → zygote
+    admission + Little's-law prewarm floors) are the real code under
+    test; only the profile measurement is simulated."""
+    import time as _time
+
+    from repro.core.adaptive import AdaptiveLoop
+    from repro.core.profiler.report import OptimizationReport
+    from repro.core.profiler.utilization import LibraryStats
+
+    def regenerate(app, _profiler):
+        prof = manager.profiles.get(app)
+        if prof is None:
+            return None
+        e2e_s = (prof.cold_init_ms + prof.invoke_ms) / 1e3
+        init_s = 0.8 * prof.cold_init_ms / 1e3
+        return OptimizationReport(
+            application=app, e2e_s=e2e_s, total_init_s=init_s,
+            qualifies=init_s / max(e2e_s, 1e-9) > 0.10,
+            stats=[LibraryStats(
+                name=f"simlib_{app}", utilization=0.9, init_s=init_s,
+                init_share=init_s / max(e2e_s, 1e-9),
+                runtime_samples=50, file="<sim>")],
+            defer_targets=[])
+
+    def apply(report):
+        policy = manager.policy
+        if hasattr(policy, "add_report"):
+            policy.add_report(report)
+
+    return AdaptiveLoop(regenerate_fn=regenerate, apply_fn=apply,
+                        config=config, clock=clock or _time.monotonic,
+                        fault_hook=fault_hook)
+
+
 # ---------------------------------------------------------------------------
 # Real-process backend
 # ---------------------------------------------------------------------------
@@ -303,11 +364,15 @@ class RealFleetBackend:
 
     def __init__(self, fleet: ZygoteFleet, *, queue: QueueConfig,
                  reports_dir: Optional[str] = None,
-                 seed0: int = 500) -> None:
+                 seed0: int = 500, adaptive=None) -> None:
         self.fleet = fleet
         self.queue_cfg = queue
         self.reports_dir = reports_dir
         self.seed0 = seed0
+        # optional closed-loop re-optimization (repro.core.adaptive
+        # .AdaptiveLoop): workers sample live profiles through it and
+        # its drift windows close on the wall clock as requests flow
+        self.adaptive = adaptive
         self._cond = threading.Condition()
         self._queues: dict[str, deque] = {}
         self._in_flight: dict[str, int] = {}
@@ -409,9 +474,12 @@ class RealFleetBackend:
                            duration_ms=wait_ms, attrs={"app": app})
                 trace = {"trace_id": tid, "parent_id": rid}
             st = self._stats[app]
+            lp_cfg = (self.adaptive.observe_request(app, req.handler)
+                      if self.adaptive is not None else None)
             try:
                 m = self.fleet.dispatch(app, handler=req.handler,
-                                        seed=seed, trace=trace)
+                                        seed=seed, trace=trace,
+                                        live_profile=lp_cfg)
             except Exception as exc:
                 # classify the failure: a wedged handler or a
                 # circuit-broken crash loop is *shed* (with a named
@@ -446,6 +514,10 @@ class RealFleetBackend:
                                duration_ms=now_ms() - t_deq_ms + wait_ms,
                                attrs={"app": app, "error": repr(exc)})
                 continue
+            if self.adaptive is not None:
+                # pops m["live_profile"] (when the child carried a
+                # sampler) and folds it into the rolling live CCT
+                self.adaptive.observe_exec(app, m)
             if trace is not None:
                 tracer.add("request", trace_id=tid, span_id=rid,
                            t_start_ms=t_deq_ms - wait_ms,
@@ -541,6 +613,10 @@ class RealFleetBackend:
         e2e_all: list[float] = []
         waits_all: list[float] = []
         tot = _AppServeStats()
+        extra: dict = {}
+        if self.adaptive is not None:
+            self.adaptive.flush()
+            extra["adaptive"] = self.adaptive.summary()
         with self._cond:
             # a dispatch still blocked at finish() time (finish without
             # drain, or one that slipped in since) is lost traffic:
@@ -636,6 +712,7 @@ class RealFleetBackend:
             # two-tier fleet: shared base modules, RSS and hot-swap
             # count ({} when the fleet runs one zygote per app)
             **self.fleet._base_info(),
+            **extra,
         )
 
     def snapshot(self) -> dict:
@@ -793,6 +870,10 @@ class FleetDaemon:
                                flush=flush)
             payload = self.backend.finish(end_t)
             payload["rewarm_ticks"] = self.rewarm_ticks
+            # surface rewarm failures swallowed into the ring buffer:
+            # without this the summary (and the serve exit status built
+            # on it) reported a clean run even when every tick errored
+            payload["rewarm_errors"] = len(self.rewarm_errors)
             if self._extra_meta:  # must land before the artifact save
                 payload.setdefault("meta", {}).update(self._extra_meta)
             self.backend.stop()

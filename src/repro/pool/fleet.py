@@ -1132,7 +1132,8 @@ class ZygoteFleet:
     # ------------------------------------------------------------ serving
     def dispatch(self, app: str, *, handler: Optional[str] = None,
                  invocations: int = 1, seed: int = 0,
-                 trace: Optional[dict] = None) -> dict:
+                 trace: Optional[dict] = None,
+                 live_profile: Optional[dict] = None) -> dict:
         """Serve one request: fork from the app's zygote if it is
         resident and alive, else a fresh-process cold start.  Returns
         runner-format metrics plus ``path`` ("pool" | "cold") and
@@ -1174,7 +1175,8 @@ class ZygoteFleet:
             if not degraded and fs is not None and fs.alive:
                 try:
                     m = fs.exec(invocations=invocations, handler=handler,
-                                seed=seed, trace=sp.ctx())
+                                seed=seed, trace=sp.ctx(),
+                                live_profile=live_profile)
                     tracer.record_dicts(m.pop("spans", None))
                     self.dispatches[app]["pool"] += 1
                     sp.set("path", "pool")
@@ -1259,12 +1261,20 @@ class ZygoteFleet:
                 "failures)", labels=("app",)).labels(app=app).inc()
 
     def replay(self, trace: Trace, *, limit: Optional[int] = None,
-               seed0: int = 500) -> list[dict]:
+               seed0: int = 500, adaptive=None) -> list[dict]:
         """Time-compressed replay: every request dispatches immediately
         (arrival gaps cost nothing; the point is real init latencies
         down the pool vs cold paths).  Returns per-app rows; the full
         schema-versioned ``fleet_summary`` payload of the run lands in
-        ``self.last_summary``."""
+        ``self.last_summary``.
+
+        ``adaptive`` is an optional
+        :class:`repro.core.adaptive.AdaptiveLoop` (see
+        :meth:`make_adaptive_loop`): every arrival feeds the drift
+        detector in *trace time*, sampled dispatches carry the child
+        live profiler, and a confirmed-drift re-optimization runs
+        between requests — the replay is single-threaded, so the
+        defer-set/base hot-swap is shed-free by construction."""
         from repro.obs.tracing import get_tracer
         tracer = get_tracer()
         per_app: dict[str, dict[str, list[float]]] = {}
@@ -1272,16 +1282,25 @@ class ZygoteFleet:
         for i, req in enumerate(trace):
             if limit is not None and i >= limit:
                 break
+            lp_cfg = None
+            if adaptive is not None:
+                lp_cfg = adaptive.observe_request(req.app, req.handler,
+                                                  t=req.t)
             with tracer.span("request", app=req.app,
                              handler=req.handler or "") as root:
                 m = self.dispatch(req.app, handler=req.handler,
-                                  seed=seed0 + i, trace=root.ctx())
+                                  seed=seed0 + i, trace=root.ctx(),
+                                  live_profile=lp_cfg)
                 root.set("path", m["path"])
+            if adaptive is not None:
+                adaptive.observe_exec(req.app, m)
             st = per_app.setdefault(
                 req.app, {"pool": [], "cold": [], "e2e": []})
             st[m["path"]].append(m["init_ms"])
             st["e2e"].append(m["e2e_cold_ms"])
             n += 1
+        if adaptive is not None:
+            adaptive.flush(t=trace.duration_s)
         rows = []
         for app, paths in sorted(per_app.items()):
             pool, cold = paths["pool"], paths["cold"]
@@ -1307,6 +1326,8 @@ class ZygoteFleet:
             })
         self.last_summary = self._summary_payload(trace.name, per_app,
                                                   rows, n)
+        if adaptive is not None:
+            self.last_summary["adaptive"] = adaptive.summary()
         return rows
 
     def _summary_payload(self, trace_name: str,
@@ -1347,6 +1368,44 @@ class ZygoteFleet:
         )
 
     # ------------------------------------------------------ adaptive hook
+    def make_adaptive_loop(self, config=None, clock=None,
+                           fault_hook=None):
+        """Wire an :class:`repro.core.adaptive.AdaptiveLoop` to this
+        fleet: in-process regeneration analyzes against each app's
+        ``libs`` dir, apply goes through :meth:`rewarm` (shed-free
+        preload/restart under the per-app protocol lock), and — in
+        two-tier mode — a successful round recomputes and hot-swaps the
+        shared base via :meth:`maybe_swap_base`.  Deployed reports seed
+        the live profiler's baselines (preloaded hot modules never show
+        up in child-side import records) and the hit-rate/new-module
+        drift signals."""
+        from repro.core.adaptive import AdaptiveLoop
+
+        def regenerate(app, profiler):
+            app_dir = self.app_dirs.get(app)
+            if app_dir is None:
+                return None
+            return profiler.regenerate(
+                app, os.path.join(app_dir, "libs"))
+
+        def hot_sets(app):
+            rep = self.reports.get(app)
+            if rep is None:
+                return (), ()
+            return (hot_set_from_report(rep),
+                    tuple(rep.defer_targets))
+
+        loop = AdaptiveLoop(
+            regenerate_fn=regenerate, apply_fn=self.rewarm,
+            swap_fn=self.maybe_swap_base if self.shared_base else None,
+            hot_sets_fn=hot_sets, config=config,
+            clock=clock or time.monotonic,
+            fault_hook=(fault_hook if fault_hook is not None
+                        else self.fault_hook))
+        for app, rep in self.reports.items():
+            loop.profiler.set_baseline(app, rep)
+        return loop
+
     def rewarm(self, report) -> dict:
         """``SlimStartController.rewarm_fn`` for a whole fleet: after a
         re-profile, re-preload the re-profiled app's zygote (rebooting

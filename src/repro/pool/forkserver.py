@@ -151,6 +151,18 @@ def _fork_exec(cmd: dict) -> dict:
     them back inside ``metrics["spans"]`` — the parent's tracer merges
     them under its own ``dispatch`` span.  Without a trace context the
     fork path is byte-for-byte the untraced one.
+
+    When the command carries a ``live_profile`` config (the adaptive
+    loop's sampled in-production profiling,
+    :class:`repro.core.adaptive.LiveProfiler`), the child additionally
+    times its imports (restricted to ``only_under`` roots — preloaded
+    hot-set modules are already in ``sys.modules`` pre-fork, so what
+    shows up here is exactly the defer-set misses and new modules) and
+    runs a :class:`~repro.core.profiler.sampler.CallPathSampler` around
+    the invocations, shipping a profile-shard-shaped payload back as
+    ``metrics["live_profile"]`` with its own measured ``overhead_s``.
+    With neither ``trace`` nor ``live_profile`` the fork path is
+    byte-for-byte unchanged.
     """
     r, w = os.pipe()
     t0 = time.perf_counter()
@@ -163,37 +175,60 @@ def _fork_exec(cmd: dict) -> dict:
             os.dup2(devnull, 1)
             rss_sampler = _runner.PeakRssSampler().start()
             trace = cmd.get("trace") or None
+            lp = cmd.get("live_profile") or None
             spans: list[dict] = []
-            if trace:
+            lp_overhead = 0.0
+            if trace or lp:
                 from repro.core.profiler.import_timer import ImportTimer
-                from repro.obs.tracing import (
-                    new_id,
-                    span_dict,
-                    spans_from_import_timer,
-                )
-                t_child = time.perf_counter()
-                spans.append(span_dict(
-                    "fork", trace_id=trace["trace_id"],
-                    parent_id=trace.get("parent_id"),
-                    t_start_ms=t0 * 1e3,
-                    duration_ms=(t_child - t0) * 1e3, pid=os.getpid()))
-                timer = ImportTimer()
+                # live profiling restricts timing to the app's vendored
+                # libs (what the analyzer maps); tracing wants everything
+                only_under = (tuple(lp.get("only_under") or ())
+                              if lp and not trace else ())
+                timer = ImportTimer(only_under=only_under)
+                if trace:
+                    from repro.obs.tracing import (
+                        new_id,
+                        span_dict,
+                        spans_from_import_timer,
+                    )
+                    t_child = time.perf_counter()
+                    spans.append(span_dict(
+                        "fork", trace_id=trace["trace_id"],
+                        parent_id=trace.get("parent_id"),
+                        t_start_ms=t0 * 1e3,
+                        duration_ms=(t_child - t0) * 1e3,
+                        pid=os.getpid()))
                 with timer:
                     handler_mod = importlib.import_module("handler")
-                t_imp = time.perf_counter()
-                import_id = new_id()
-                spans.append(span_dict(
-                    "import", trace_id=trace["trace_id"],
-                    parent_id=trace.get("parent_id"), span_id=import_id,
-                    t_start_ms=t_child * 1e3,
-                    duration_ms=(t_imp - t_child) * 1e3,
-                    module="handler"))
-                spans.extend(spans_from_import_timer(
-                    timer.records, trace_id=trace["trace_id"],
-                    parent_id=import_id, t_start_ms=t_child * 1e3))
+                if trace:
+                    t_imp = time.perf_counter()
+                    import_id = new_id()
+                    spans.append(span_dict(
+                        "import", trace_id=trace["trace_id"],
+                        parent_id=trace.get("parent_id"),
+                        span_id=import_id,
+                        t_start_ms=t_child * 1e3,
+                        duration_ms=(t_imp - t_child) * 1e3,
+                        module="handler"))
+                    spans.extend(spans_from_import_timer(
+                        timer.records, trace_id=trace["trace_id"],
+                        parent_id=import_id, t_start_ms=t_child * 1e3))
             else:
                 handler_mod = importlib.import_module("handler")
             init_s = time.perf_counter() - t0
+            sampler = None
+            if lp:
+                t_lp = time.perf_counter()
+                from repro.core.profiler.sampler import (
+                    CallPathSampler,
+                    SamplerConfig,
+                )
+                sampler = CallPathSampler(SamplerConfig(
+                    interval_s=float(lp.get("interval_s", 0.010)),
+                    timer=str(lp.get("timer", "prof")),
+                    max_depth=int(lp.get("max_depth", 128))))
+                sampler.start()
+                lp_overhead += time.perf_counter() - t_lp
             t_inv = time.perf_counter()
             invocation_s, counts = _runner.run_invocations(
                 handler_mod,
@@ -207,11 +242,30 @@ def _fork_exec(cmd: dict) -> dict:
                     t_start_ms=t_inv * 1e3,
                     duration_ms=(time.perf_counter() - t_inv) * 1e3,
                     invocations=int(cmd.get("invocations", 1))))
+            live = None
+            if sampler is not None:
+                t_lp = time.perf_counter()
+                sampler.stop()
+                n_signals = sampler.n_signals
+                live = {
+                    "init_s": init_s,
+                    "e2e_cold_s": init_s + (invocation_s[0][1]
+                                            if invocation_s else 0.0),
+                    "init_records": timer.to_dict(),
+                    "cct": sampler.build_cct().to_dict(),
+                    "n_signals": n_signals,
+                    "counts": counts,
+                }
+                lp_overhead += time.perf_counter() - t_lp
             peak_kb = max(_runner.instance_rss_kb(), rss_sampler.stop())
             metrics = _runner.metrics_dict(init_s, invocation_s, counts,
                                            peak_kb)
             if spans:
                 metrics["spans"] = spans
+            if live is not None:
+                live["overhead_s"] = lp_overhead
+                live["exec_s"] = time.perf_counter() - t0
+                metrics["live_profile"] = live
             with os.fdopen(w, "w") as fh:
                 fh.write(json.dumps(metrics))
             code = 0
@@ -718,7 +772,8 @@ class ForkServer:
     # ------------------------------------------------------------- commands
     def exec(self, *, invocations: int = 1, handler: Optional[str] = None,
              seed: int = 0, preload: Optional[Sequence[str]] = None,
-             trace: Optional[dict] = None) -> dict:
+             trace: Optional[dict] = None,
+             live_profile: Optional[dict] = None) -> dict:
         """One forked warm instance; returns runner-format metrics.
 
         ``preload`` rides the fast path: the modules are imported in
@@ -735,9 +790,22 @@ class ForkServer:
         fast-path preload spans, protocol order preserved) under
         ``"spans"`` in the returned metrics dict for the caller's
         tracer.
+
+        ``live_profile`` is an optional sampler config (see
+        :meth:`repro.core.adaptive.LiveProfileConfig.exec_config`); the
+        child then ships a profile-shard-shaped payload back under
+        ``"live_profile"`` in the metrics dict for the adaptive loop.
         """
         msg = {"cmd": "exec", "invocations": invocations,
                "handler": handler, "seed": seed}
+        if live_profile:
+            # in-production sampled profiling (repro.core.adaptive):
+            # the child times imports under the app's libs root and
+            # runs the call-path sampler around the invocations
+            msg["live_profile"] = {
+                **live_profile,
+                "only_under": [os.path.join(self.app_dir, "libs")],
+            }
         if trace:
             msg["trace"] = {"trace_id": trace["trace_id"],
                             "parent_id": trace.get("parent_id")}

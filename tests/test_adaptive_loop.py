@@ -1,0 +1,701 @@
+"""Closed-loop adaptive optimization tests (live profiler -> drift
+detector -> in-process re-optimization -> hot swap).
+
+The anchor is the *differential* test: the in-process regeneration
+(``LiveProfiler.regenerate``) must agree with the offline
+Profile -> Analyze pipeline (``repro.api.stages.analyze_sink``) when
+both see the same recorded profile shards — same defer set, same
+qualification verdict, same init accounting.
+
+Fast tier: synthetic shards, deterministic drift windows in trace
+time, chaos ``profiler_stall`` survival, the drift_report artifact
+round-trip, the sim closed loop beating a static fleet on a
+popularity flip, and the rewarm-error exit-status contract.
+Slow tier: the real zygote fleet re-optimizing itself mid-replay.
+"""
+
+import json
+import os
+import random
+
+import pytest
+
+from repro.api import load_drift_report, save_drift_report
+from repro.api.stages import analyze_sink
+from repro.core.adaptive import (
+    AdaptiveConfig,
+    AdaptiveLoop,
+    DriftConfig,
+    DriftDetector,
+    LiveProfileConfig,
+    LiveProfiler,
+)
+from repro.core.profiler.cct import CCT, Frame
+from repro.core.profiler.report import OptimizationReport
+from repro.core.profiler.utilization import LibraryStats
+from repro.pool import (
+    AppProfile,
+    FleetDaemon,
+    FleetManager,
+    IdleTimeoutPolicy,
+    ProfileGuidedPolicy,
+    QueueConfig,
+    Request,
+    SimFleetBackend,
+    Trace,
+)
+from repro.pool.chaos import FaultEvent, FaultInjector, FaultPlan
+from repro.pool.daemon import make_sim_adaptive_loop
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+
+# ---------------------------------------------------------------------------
+# differential: live regeneration == offline analyze_sink
+# ---------------------------------------------------------------------------
+
+def _synthetic_records(libs_dir: str, n: int = 6, seed: int = 3):
+    """Profile shards in the runner's on-disk format: one hot library
+    (heavy runtime use), one cold library (init cost, zero runtime
+    samples -> the analyzer must flag it), plus app-code samples."""
+    hot = os.path.join(libs_dir, "fakelib_hot", "__init__.py")
+    cold = os.path.join(libs_dir, "fakelib_cold", "__init__.py")
+    handler = os.path.join(os.path.dirname(libs_dir), "handler.py")
+    rng = random.Random(seed)
+    records = []
+    for _ in range(n):
+        def jig(x):
+            return x * (1.0 + 0.05 * rng.uniform(-1.0, 1.0))
+        init_records = {
+            name: {"filename": fn, "self_s": jig(s), "cumulative_s": jig(s),
+                   "parent": None, "importer_file": handler,
+                   "importer_lineno": 1}
+            for name, fn, s in (("fakelib_hot", hot, 0.08),
+                                ("fakelib_cold", cold, 0.30))
+        }
+        cct = CCT()
+        # runtime samples: hot library does the work, app code the rest
+        cct.add_path((Frame(handler, 5, "handler"),
+                      Frame(hot, 10, "work")), count=40)
+        cct.add_path((Frame(handler, 7, "handler"),), count=10)
+        # init-time samples in the cold library (must NOT count as
+        # runtime utilization: path passes module-level __init__ code)
+        cct.add_path((Frame(handler, 1, "<module>"),
+                      Frame(cold, 1, "<module>")), count=20)
+        records.append({"app": "difftest", "init_records": init_records,
+                        "cct": cct.to_dict(), "e2e_cold_s": jig(1.0)})
+    return records
+
+
+def _write_shards(sink: str, records) -> None:
+    os.makedirs(sink, exist_ok=True)
+    with open(os.path.join(sink, "profile-test.jsonl"), "w") as fh:
+        for rec in records:
+            fh.write(json.dumps(rec) + "\n")
+
+
+def _live_report(records, libs_dir: str):
+    prof = LiveProfiler()
+    for rec in records:
+        prof.observe("difftest", {"init_records": rec["init_records"],
+                                  "cct": rec["cct"],
+                                  "e2e_cold_s": rec["e2e_cold_s"]})
+    return prof.regenerate("difftest", libs_dir)
+
+
+def test_differential_live_regeneration_matches_offline(tmp_path):
+    """Same shards through both pipelines -> the same optimization
+    decision, down to the init-time accounting."""
+    libs = str(tmp_path / "libs")
+    records = _synthetic_records(libs)
+    _write_shards(str(tmp_path / "sink"), records)
+
+    offline = analyze_sink("difftest", str(tmp_path / "sink"), libs)
+    live = _live_report(records, libs)
+
+    assert live is not None
+    assert live.qualifies == offline.qualifies is True
+    assert list(live.defer_targets) == list(offline.defer_targets) \
+        == ["fakelib_cold"]
+    assert live.total_init_s == pytest.approx(offline.total_init_s)
+    assert live.e2e_s == pytest.approx(offline.e2e_s)
+    live_stats = {s.name: s for s in live.stats}
+    off_stats = {s.name: s for s in offline.stats}
+    assert live_stats.keys() == off_stats.keys()
+    for name, s in off_stats.items():
+        assert live_stats[name].init_s == pytest.approx(s.init_s)
+        assert live_stats[name].utilization == \
+            pytest.approx(s.utilization)
+        assert live_stats[name].runtime_samples == s.runtime_samples
+
+
+def test_differential_subsampled_live_agrees_on_defer_set(tmp_path):
+    """The live profiler rides a sampled subset of production traffic:
+    seeing only half the shards must still land on the same defer set
+    (the decision is a ratio test, robust to subsampling)."""
+    libs = str(tmp_path / "libs")
+    records = _synthetic_records(libs, n=8)
+    _write_shards(str(tmp_path / "sink"), records)
+    offline = analyze_sink("difftest", str(tmp_path / "sink"), libs)
+    live = _live_report(records[::2], libs)
+    assert live is not None
+    assert list(live.defer_targets) == list(offline.defer_targets)
+    assert live.qualifies == offline.qualifies
+
+
+def test_live_profiler_baseline_restores_preloaded_hot_set(tmp_path):
+    """Modules preloaded into the zygote never appear in child-side
+    import records; the deployed report's baseline shard must keep
+    their init cost visible so regeneration doesn't defer them."""
+    libs = str(tmp_path / "libs")
+    records = _synthetic_records(libs)
+    # children forked from a zygote with fakelib_hot preloaded: strip
+    # it from every init_records shard
+    for rec in records:
+        rec["init_records"].pop("fakelib_hot")
+    prof = LiveProfiler()
+    for rec in records:
+        prof.observe("difftest", {"init_records": rec["init_records"],
+                                  "cct": rec["cct"],
+                                  "e2e_cold_s": rec["e2e_cold_s"]})
+    deployed = OptimizationReport(
+        application="difftest", e2e_s=1.0, total_init_s=0.38,
+        qualifies=True,
+        stats=[LibraryStats(
+            name="fakelib_hot", utilization=0.8, init_s=0.08,
+            init_share=0.08, runtime_samples=40,
+            file=os.path.join(libs, "fakelib_hot", "__init__.py"))],
+        defer_targets=["fakelib_cold"])
+    without = prof.regenerate("difftest", libs)
+    prof.set_baseline("difftest", deployed)
+    with_base = prof.regenerate("difftest", libs)
+    names = {s.name for s in with_base.stats}
+    assert "fakelib_hot" in names
+    assert "fakelib_hot" not in {s.name for s in without.stats}
+    assert "fakelib_hot" not in with_base.defer_targets
+    assert "fakelib_cold" in with_base.defer_targets
+
+
+def test_live_profiler_rolling_state_and_overhead(tmp_path):
+    cfg = LiveProfileConfig(max_shards=4, max_e2e=4)
+    prof = LiveProfiler(cfg)
+    for i in range(10):
+        prof.observe("a", {"init_records": {"m": {
+            "filename": "<x>", "self_s": 0.01, "cumulative_s": 0.01,
+            "parent": None, "importer_file": None,
+            "importer_lineno": 0}},
+            "e2e_cold_s": 0.5, "overhead_s": 0.01, "exec_s": 0.5,
+            "n_signals": 20})
+    snap = prof.snapshot()["a"]
+    assert snap["profiled_execs"] == 10
+    assert snap["shards"] == 4  # ring-bounded
+    assert prof.overhead_pct("a") == pytest.approx(2.0)
+    assert prof.has_data("a") and not prof.has_data("b")
+
+
+# ---------------------------------------------------------------------------
+# drift detector: deterministic windows in trace time
+# ---------------------------------------------------------------------------
+
+def _det(window_s=10.0, **kw) -> DriftDetector:
+    kw.setdefault("min_invocations", 10)
+    return DriftDetector(DriftConfig(window_s=window_s, **kw))
+
+
+def _feed(det, counts: dict, t: float, app: str = "app"):
+    for handler, n in counts.items():
+        det.observe(app, handler, n=n, t=t)
+
+
+def test_detector_windows_follow_trace_time_not_wall_clock():
+    """The detector is constructed on the wall monotonic clock but a
+    replay observes in trace time starting at ~0; the first observation
+    must re-anchor the window, or no window would ever close."""
+    det = _det(window_s=10.0)
+    _feed(det, {"h": 50}, t=1.0)
+    _feed(det, {"h": 50}, t=11.0)   # closes [1, 11)
+    _feed(det, {"h": 50}, t=21.0)   # closes [11, 21)
+    det.flush(t=31.0)
+    assert len(det.windows) == 3
+    assert [w.t_end for w in det.windows] == [11.0, 21.0, 31.0]
+    assert all(w.total_invocations == 50 for w in det.windows)
+
+
+def test_detector_stationary_mix_never_fires():
+    det = _det()
+    for w in range(6):
+        _feed(det, {"h1": 700, "h2": 300}, t=1.0 + 10.0 * w)
+    det.flush(t=61.0)
+    assert det.fires == 0
+    assert all(not w.fired and not w.suppressed for w in det.windows)
+    assert max(w.score for w in det.windows) < 1.0
+
+
+def test_detector_popularity_flip_fires_once():
+    det = _det()
+    _feed(det, {"h1": 1000}, t=1.0)
+    _feed(det, {"h1": 1000}, t=11.0)
+    _feed(det, {"h2": 1000}, t=21.0)  # the flip window
+    last = det.flush(t=31.0)
+    assert det.fires == 1
+    assert last is not None and last.fired
+    # the full flip moves sigma|delta p| by 2.0 against a noise gate of
+    # 4*sqrt(2 * 2/1000) ~ 0.25 -- far past the threshold
+    assert last.aggregate_change == pytest.approx(2.0)
+    assert last.eps_eff < 0.3
+    assert last.score > 5.0
+
+
+def test_detector_first_window_never_fires():
+    """No previous window to diff against: the first close must be
+    score-0 on the mix component, whatever the traffic looks like."""
+    det = _det()
+    _feed(det, {"h9": 1000}, t=1.0)
+    win = det.flush(t=11.0)
+    assert win is not None and not win.fired
+    assert win.mix_score == 0.0 and det.fires == 0
+
+
+def test_detector_cooldown_suppresses_back_to_back_fires():
+    det = _det(cooldown_windows=1)
+    mixes = [{"h1": 500}, {"h2": 500}, {"h1": 500}, {"h2": 500}]
+    for w, mix in enumerate(mixes):
+        _feed(det, mix, t=1.0 + 10.0 * w)
+    det.flush(t=41.0)
+    fired = [w.fired for w in det.windows]
+    suppressed = [w.suppressed for w in det.windows]
+    # window 1 fires, window 2 is inside the cooldown (score > 1 but
+    # suppressed), window 3 fires again after the cooldown expires
+    assert fired == [False, True, False, True]
+    assert suppressed == [False, False, True, False]
+    assert det.fires == 2
+
+
+def test_detector_small_window_noise_is_gated():
+    """Serving-scale windows: with n=30 per window the multinomial
+    noise floor exceeds the paper's epsilon by orders of magnitude;
+    modest count jitter must stay under the calibrated gate."""
+    det = _det(min_invocations=10)
+    rng = random.Random(11)
+    for w in range(8):
+        n1 = 15 + rng.randint(-4, 4)
+        _feed(det, {"h1": n1, "h2": 30 - n1}, t=1.0 + 10.0 * w)
+    det.flush(t=81.0)
+    assert det.fires == 0
+    assert all(w.eps_eff > 0.002 for w in det.windows[1:])
+
+
+def test_detector_hit_rate_and_new_module_signals():
+    # two quiet windows to build history, then a window whose profiled
+    # execs all missed the defer set
+    det = _det(min_hit_rate=0.5, min_profiled=3)
+    _feed(det, {"h": 100}, t=1.0)
+    _feed(det, {"h": 100}, t=11.0)
+    _feed(det, {"h": 100}, t=21.0)
+    for _ in range(5):
+        det.note_hit(False)
+    win = det.flush(t=31.0)
+    assert win.hit_rate == 0.0
+    assert win.miss_score == pytest.approx(2.0)
+    assert win.fired and det.fires == 1
+
+    det2 = _det(new_module_threshold=3)
+    _feed(det2, {"h": 100}, t=1.0)
+    _feed(det2, {"h": 100}, t=11.0)
+    _feed(det2, {"h": 100}, t=21.0)
+    det2.note_new_modules({"numpyish", "pandasish", "torchish",
+                           "scipyish"})
+    win = det2.flush(t=31.0)
+    assert win.new_modules == sorted(
+        {"numpyish", "pandasish", "torchish", "scipyish"})
+    assert win.new_module_score > 1.0
+    assert win.fired
+
+    # too few profiled execs: the hit-rate signal abstains entirely
+    det3 = _det(min_profiled=3)
+    _feed(det3, {"h": 100}, t=1.0)
+    det3.note_hit(False)
+    win = det3.flush(t=11.0)
+    assert win.hit_rate is None and win.miss_score == 0.0
+
+
+# ---------------------------------------------------------------------------
+# the loop: sampling cadence, re-optimize wiring, chaos survival
+# ---------------------------------------------------------------------------
+
+def _loop(regenerate=None, apply=None, swap=None, *, drift=None,
+          profile=None, fault_hook=None) -> AdaptiveLoop:
+    cfg = AdaptiveConfig(drift=drift or DriftConfig(window_s=10.0,
+                                                    min_invocations=10),
+                         profile=profile or LiveProfileConfig())
+    return AdaptiveLoop(
+        regenerate_fn=regenerate or (lambda app, prof: None),
+        apply_fn=apply or (lambda report: None),
+        swap_fn=swap, config=cfg, fault_hook=fault_hook)
+
+
+def test_loop_samples_every_nth_dispatch_per_app():
+    loop = _loop(profile=LiveProfileConfig(sample_every=4))
+    carried = [loop.observe_request("a", t=0.1 * i) is not None
+               for i in range(8)]
+    assert carried == [True, False, False, False, True, False, False,
+                       False]
+    # a second app gets its own cadence, not the tail of app a's
+    assert loop.observe_request("b", t=1.0) is not None
+    cfg = loop.observe_request("a", t=1.1)
+    assert cfg is None or set(cfg) == {"interval_s", "timer",
+                                       "max_depth"}
+
+
+def test_loop_observe_exec_pops_profile_payload():
+    loop = _loop()
+    metrics = {"init_ms": 5.0, "live_profile": {
+        "init_records": {}, "e2e_cold_s": 0.1, "overhead_s": 0.0,
+        "exec_s": 0.1}}
+    loop.observe_exec("a", metrics)
+    assert "live_profile" not in metrics  # never leaks into summaries
+    assert loop.profiler.has_data("a")
+    loop.observe_exec("a", {"init_ms": 5.0})  # no payload: no-op
+
+
+def test_loop_confirmed_drift_regenerates_applies_and_swaps():
+    applied, swaps = [], []
+
+    def regen(app, prof):
+        return OptimizationReport(
+            application=app, e2e_s=0.5, total_init_s=0.2,
+            qualifies=True, stats=[], defer_targets=["deadlib"])
+
+    loop = _loop(regen, applied.append, lambda: swaps.append(1))
+    for i in range(20):
+        loop.observe_request("a", "h1", t=1.0 + 0.1 * i)
+    for i in range(20):
+        loop.observe_request("a", "h1", t=11.0 + 0.1 * i)
+    for i in range(20):
+        loop.observe_request("a", "h2", t=21.0 + 0.1 * i)
+    loop.flush(t=31.0)
+    assert loop.detector.fires == 1
+    assert [r.application for r in applied] == ["a"]
+    assert swaps == [1] and loop.swaps == 1
+    s = loop.summary()
+    assert s["fires"] == 1 and s["applied"] == 1
+    assert s["base_swaps"] == 1 and s["errors"] == 0
+    act = loop.actions[-1]
+    assert act["applied"][0]["defer_targets"] == ["deadlib"]
+    assert act["swapped"] is True
+
+
+def test_loop_profiler_stall_chaos_is_survived():
+    """An injected profiler_stall aborts one re-optimization round;
+    the error lands in the report and serving continues untouched."""
+    applied = []
+
+    def regen(app, prof):
+        return OptimizationReport(application=app, e2e_s=0.5,
+                                  total_init_s=0.2, qualifies=True,
+                                  stats=[], defer_targets=[])
+
+    inj = FaultInjector(FaultPlan([FaultEvent("profiler_stall")]),
+                        simulate=True)
+    loop = _loop(regen, applied.append, fault_hook=inj)
+    flips = [{"h1": 20}, {"h1": 20}, {"h2": 20}, {"h2": 20},
+             {"h1": 20}]
+    for w, mix in enumerate(flips):
+        for handler, n in mix.items():
+            for i in range(n):
+                loop.observe_request("a", handler,
+                                     t=1.0 + 10.0 * w + 0.1 * i)
+    loop.flush(t=51.0)
+    # two fires: the first re-optimization was stalled by chaos, the
+    # second (after cooldown) went through
+    assert loop.detector.fires == 2
+    assert len(loop.errors) == 1 and "stall" in loop.errors[0]
+    assert len(applied) == 1
+    assert any("error" in a for a in loop.actions)
+    assert [ev["kind"] for ev in inj.injected] == ["profiler_stall"]
+    # the failed round still never raised into the serving path
+    loop.observe_request("a", "h1", t=60.0)
+    assert loop.summary()["errors"] == 1
+
+
+def test_drift_report_artifact_round_trip(tmp_path):
+    loop = _loop()
+    for w in range(3):
+        for i in range(15):
+            loop.observe_request("a", "h1" if w < 2 else "h2",
+                                 t=1.0 + 10.0 * w + 0.1 * i)
+    loop.flush(t=31.0)
+    payload = loop.drift_report_payload("unit")
+    path = str(tmp_path / "drift.json")
+    save_drift_report(payload, path)
+    loaded = load_drift_report(path)
+    assert loaded["source"] == "unit"
+    assert loaded["fires"] == loop.detector.fires
+    assert len(loaded["windows"]) == 3
+    for win in loaded["windows"]:
+        assert {"t_end", "invocations", "mix_change", "eps_eff",
+                "score", "fired", "suppressed"} <= set(win)
+    assert loaded["config"]["window_s"] == 10.0
+    assert "sampler_overhead_pct" in loaded
+
+    with pytest.raises(Exception):
+        load_drift_report(str(tmp_path / "missing.json"))
+
+
+def test_drift_gauges_exported():
+    from repro.obs.metrics import default_registry
+    loop = _loop()
+    for w in range(2):
+        for i in range(15):
+            loop.observe_request("a", "h", t=1.0 + 10.0 * w + 0.1 * i)
+    loop.flush(t=21.0)
+    text = default_registry().render()
+    assert "repro_drift_score" in text
+    assert "repro_sampler_overhead_pct" in text
+
+
+# ---------------------------------------------------------------------------
+# sim fleet: the closed loop beats a static deployment on a flip
+# ---------------------------------------------------------------------------
+
+def test_sim_adaptive_loop_reoptimizes_through_policy():
+    """make_sim_adaptive_loop wires apply -> policy.add_report: after a
+    confirmed flip the newly-hot app gains a report-backed keep-alive
+    floor it did not have before."""
+    profiles = {
+        a: AppProfile(app=a, cold_init_ms=400.0, warm_init_ms=40.0,
+                      invoke_ms=30.0, rss_mb=128.0, zygote_rss_mb=32.0)
+        for a in ("hot", "cold")
+    }
+    policy = ProfileGuidedPolicy(rate_hint_per_s=1.0)
+    manager = FleetManager(profiles, policy, budget_mb=2048.0)
+    loop = make_sim_adaptive_loop(
+        manager, config=AdaptiveConfig(
+            drift=DriftConfig(window_s=10.0, min_invocations=10)))
+    ka_before = policy.keep_alive_s("cold")
+    manager.begin("flip")
+    t = 0.0
+    for w, app in enumerate(["hot", "hot", "cold"]):
+        for i in range(20):
+            t = 1.0 + 10.0 * w + 0.1 * i
+            loop.observe_request(app, None, t=t)
+            manager.offer(Request(t, app))
+    summary = manager.finish(40.0)
+    loop.flush(t=40.0)
+    assert loop.detector.fires == 1
+    assert loop.applied >= 1
+    # the regenerated report reached the policy: keep-alive moved off
+    # the no-report floor to the amortization horizon
+    assert policy.keep_alive_s("cold") > ka_before
+    assert summary.n_requests == 60
+
+
+def test_sim_closed_loop_beats_static_on_popularity_flip():
+    """The bench acceptance scenario, smoke-sized: yesterday's reports
+    cover only the pre-flip head; the adaptive fleet must win on cold
+    ratio and not lose on p99 init latency."""
+    from benchmarks.bench_fleet import run_adaptive_comparison
+    res = run_adaptive_comparison(smoke=True)
+    assert res["drift_fires"] >= 1
+    assert res["adaptive_cold_ratio"] < res["static_cold_ratio"]
+    assert res["adaptive_p99_init_ms"] <= res["static_p99_init_ms"]
+    assert res["adaptive_beats_static"] is True
+    assert os.path.exists(res["drift_report_path"])
+
+
+# ---------------------------------------------------------------------------
+# rewarm errors: swallowed failures must surface in summary + exit code
+# ---------------------------------------------------------------------------
+
+def test_rewarm_errors_surface_in_summary_payload(tmp_path):
+    from repro.api import load_fleet_summary
+
+    def boom():
+        raise RuntimeError("artifact store down")
+
+    manager = FleetManager(
+        {"a": AppProfile(app="a", cold_init_ms=100.0, warm_init_ms=10.0,
+                         invoke_ms=10.0, rss_mb=64.0)},
+        IdleTimeoutPolicy(timeout_s=60.0), budget_mb=1024.0,
+        queue=QueueConfig(depth=8))
+    out = str(tmp_path / "sum.json")
+    d = FleetDaemon(SimFleetBackend(manager), rewarm_fn=boom,
+                    summary_path=out)
+    d.start("live")
+    d.rewarm_now()
+    d.rewarm_now()
+    d.submit(Request(0.0, "a"))
+    payload = d.shutdown(end_t=10.0)
+    # the ring buffer alone would hide the failures from the artifact
+    assert payload["rewarm_errors"] == 2
+    assert payload["served"] == 1  # serving was never disturbed
+    assert load_fleet_summary(out)["rewarm_errors"] == 2
+
+
+def test_fleet_serve_exits_nonzero_on_rewarm_errors(tmp_path,
+                                                    monkeypatch,
+                                                    capsys):
+    """A report artifact that goes corrupt mid-run (a partial CI
+    write) makes the forced rewarm tick fail; the serve run must say
+    so in its exit status, not just a log line."""
+    from repro.api import save_report
+    from repro.cli import main
+
+    reports_dir = tmp_path / "reports"
+    reports_dir.mkdir()
+    report_path = reports_dir / "a.json"
+    save_report(OptimizationReport(
+        application="a", e2e_s=0.3, total_init_s=0.15, qualifies=True,
+        stats=[], defer_targets=[]), str(report_path))
+
+    class _Feed:
+        """Valid report at boot; corrupt it just before the tick."""
+
+        def __iter__(self):
+            yield json.dumps({"app": "a"}) + "\n"
+            report_path.write_text("{not json")
+            yield json.dumps({"cmd": "rewarm"}) + "\n"
+
+    monkeypatch.setattr("sys.stdin", _Feed())
+    rc = main(["fleet", "serve", "--sim", "--stdin", "--apps", "a",
+               "--queue-depth", "8",
+               "--reports-dir", str(reports_dir),
+               "--summary-out", str(tmp_path / "sum.json")])
+    assert rc == 1
+    assert "rewarm error" in capsys.readouterr().err
+    summary = json.loads((tmp_path / "sum.json").read_text())
+    assert summary["rewarm_errors"] >= 1
+    assert summary["served"] == 1
+
+
+def test_fleet_serve_sim_adaptive_cli_writes_drift_report(tmp_path,
+                                                          monkeypatch):
+    """--adaptive on the sim daemon: the summary carries the adaptive
+    block and --drift-out lands a loadable drift_report artifact."""
+    import io
+
+    from repro.cli import main
+
+    feed = io.StringIO("".join(json.dumps({"app": "a"}) + "\n"
+                               for _ in range(6)))
+    monkeypatch.setattr("sys.stdin", feed)
+    drift_out = tmp_path / "drift.json"
+    rc = main(["fleet", "serve", "--sim", "--stdin", "--apps", "a,b",
+               "--queue-depth", "8", "--adaptive",
+               "--drift-window-s", "5",
+               "--drift-out", str(drift_out),
+               "--summary-out", str(tmp_path / "sum.json")])
+    assert rc == 0
+    summary = json.loads((tmp_path / "sum.json").read_text())
+    assert "adaptive" in summary
+    assert summary["adaptive"]["fires"] == 0  # six arrivals: no drift
+    loaded = load_drift_report(str(drift_out))
+    assert loaded["source"] == "serve-sim"
+    assert loaded["fires"] == 0
+
+
+def test_drift_status_cli_renders_report(tmp_path, capsys):
+    from repro.cli import main
+
+    loop = _loop()
+    for w in range(3):
+        for i in range(15):
+            loop.observe_request("a", "h1" if w < 2 else "h2",
+                                 t=1.0 + 10.0 * w + 0.1 * i)
+    loop.flush(t=31.0)
+    path = str(tmp_path / "drift.json")
+    save_drift_report(loop.drift_report_payload("unit"), path)
+
+    assert main(["drift", "status", path]) == 0
+    out = capsys.readouterr().out
+    assert "unit" in out and "fired" in out
+
+    assert main(["drift", "status", path, "--json"]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["fires"] == loop.detector.fires
+
+
+# ---------------------------------------------------------------------------
+# slow tier: the real zygote fleet re-optimizes itself mid-replay
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def suite_root():
+    from repro.benchsuite.genlibs import build_suite
+    return build_suite()
+
+
+@pytest.mark.slow
+def test_real_fleet_adaptive_replay_hot_swaps_midstream(suite_root):
+    """Handler-mix shift against real zygotes: the loop must confirm
+    the drift, regenerate in-process from live child profiles, apply
+    through rewarm (and the two-tier base swap) — all with zero sheds
+    and full request conservation."""
+    from repro.pool.fleet import ZygoteFleet
+
+    apps = {name: os.path.join(suite_root, "apps", name)
+            for name in ["graph_bfs", "echo"]}
+    fleet = ZygoteFleet(apps, budget_mb=4096.0, shared_base=True,
+                        base_min_apps=2)
+    # small windows + a permissive guard: the slow tier can afford ~30
+    # real dispatches, not the thousands the default gate is sized for
+    cfg = AdaptiveConfig(
+        profile=LiveProfileConfig(sample_every=1, interval_s=0.005),
+        drift=DriftConfig(window_s=5.0, min_invocations=6,
+                          noise_guard=0.5, cooldown_windows=1))
+    with fleet:
+        loop = fleet.make_adaptive_loop(config=cfg)
+        reqs = []
+        # two windows of graph_bfs/bfs history, then the mix flips
+        # mid-stream: echo takes over while graph_bfs keeps a trickle
+        # (so the fired window's app set has live shards to
+        # regenerate from)
+        mixes = [
+            [("graph_bfs", "bfs")] * 8,
+            [("graph_bfs", "bfs")] * 8,
+            [("echo", None)] * 6 + [("graph_bfs", "bfs")] * 2,
+            [("echo", None)] * 6 + [("graph_bfs", "bfs")] * 2,
+        ]
+        for w, mix in enumerate(mixes):
+            for i, (app, handler) in enumerate(mix):
+                reqs.append(Request(0.5 + 5.0 * w + 0.5 * i, app,
+                                    handler=handler))
+        trace = Trace("adaptive-shift", reqs, 21.0)
+        rows = fleet.replay(trace, adaptive=loop)
+        summary = fleet.last_summary
+    assert loop.detector.fires >= 1
+    assert loop.applied >= 1  # live-regenerated reports were deployed
+    assert loop.swaps >= 1  # the shared base was hot-swapped
+    assert not loop.errors
+    # conservation with zero sheds through the swap
+    assert summary["requests"] == len(reqs)
+    assert summary["served"] == len(reqs)
+    assert summary.get("sheds", 0) == 0
+    assert summary["adaptive"]["fires"] == loop.detector.fires
+    assert {r["app"] for r in rows} == {"graph_bfs", "echo"}
+    # the profiled execs really carried the sampler
+    snap = loop.profiler.snapshot()
+    assert any(st["profiled_execs"] > 0 for st in snap.values())
+    assert loop.profiler.overhead_pct() < 50.0
+
+
+@pytest.mark.slow
+def test_fleet_replay_real_adaptive_cli(suite_root, tmp_path):
+    from repro.cli import main
+    out = str(tmp_path / "replay.json")
+    drift_out = str(tmp_path / "drift.json")
+    rc = main(["fleet", "replay", "--real", "--root", suite_root,
+               "--apps", "graph_bfs,echo", "--minutes", "2",
+               "--peak-rpm", "20", "--limit", "8", "--adaptive",
+               "--drift-window-s", "30", "--out", out,
+               "--drift-out", drift_out])
+    assert rc == 0
+    from repro.api import load_fleet_summary
+    summary = load_fleet_summary(out)
+    assert summary["source"] == "replay-real"
+    assert summary["requests"] == 8
+    assert "adaptive" in summary
+    loaded = load_drift_report(drift_out)
+    assert loaded["source"] == "replay-real"
+    assert "windows" in loaded and "config" in loaded

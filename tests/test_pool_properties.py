@@ -29,6 +29,7 @@ except ModuleNotFoundError:  # CI image without hypothesis: skip sweeps only
 
     st = _AnyStrategy()
 
+from repro.core.adaptive import DriftConfig, DriftDetector
 from repro.core.profiler.report import OptimizationReport
 from repro.core.profiler.utilization import LibraryStats
 from repro.pool import (
@@ -227,3 +228,92 @@ def test_shared_base_charges_never_exceed_one_per_app_total(
     for st_ in plain._apps.values():
         st_.zygote_up = True
     assert plain._used_mb() == one_total
+
+
+# ---------------------------------------------------------------------------
+# DriftDetector: noise-calibrated gate invariants (adaptive loop)
+# ---------------------------------------------------------------------------
+
+import random as _random  # noqa: E402  (kept below the hypothesis shim)
+
+
+def _drift_detector(window_s=10.0, **kw) -> DriftDetector:
+    kw.setdefault("min_invocations", 10)
+    return DriftDetector(DriftConfig(window_s=window_s, **kw))
+
+
+@given(
+    weights=st.lists(st.floats(min_value=0.05, max_value=1.0,
+                               allow_nan=False, allow_infinity=False),
+                     min_size=1, max_size=6),
+    n_per_window=st.integers(min_value=20, max_value=2000),
+    n_windows=st.integers(min_value=3, max_value=8),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+@settings(max_examples=60, deadline=None)
+def test_drift_detector_stationary_workload_never_fires(
+        weights, n_per_window, n_windows, seed):
+    """Every window draws from the SAME handler distribution; the
+    multinomial sampling noise between windows must stay under the
+    calibrated gate eps_eff = noise_guard * sqrt(k(1/n1 + 1/n2)), so
+    the detector never declares drift on stationary traffic."""
+    rng = _random.Random(seed)
+    handlers = [f"h{i}" for i in range(len(weights))]
+    det = _drift_detector()
+    for w in range(n_windows):
+        draws = rng.choices(handlers, weights=weights, k=n_per_window)
+        for h in handlers:
+            n = draws.count(h)
+            if n:
+                det.observe("app", h, n=n, t=1.0 + 10.0 * w)
+    det.flush(t=1.0 + 10.0 * n_windows)
+    assert det.fires == 0
+    assert all(not w.fired and not w.suppressed for w in det.windows)
+    # and the gate never collapses below the paper's epsilon floor
+    assert all(w.eps_eff >= det.drift_config.epsilon
+               for w in det.windows)
+
+
+@given(
+    shifts=st.lists(st.integers(min_value=0, max_value=500),
+                    min_size=2, max_size=6),
+    n=st.integers(min_value=500, max_value=1000),
+)
+@settings(max_examples=60, deadline=None)
+def test_drift_score_monotone_in_mix_shift_magnitude(shifts, n):
+    """Holding window sizes fixed, a larger handler-mix shift can
+    never score *lower*: score(d) is nondecreasing in d (it is
+    sigma|delta p| = 2d/n against a fixed eps_eff)."""
+    def final_score(d: int) -> float:
+        det = _drift_detector()
+        det.observe("app", "h1", n=n, t=1.0)          # baseline window
+        det.observe("app", "h1", n=n - d, t=11.0)      # shifted window
+        if d:
+            det.observe("app", "h2", n=d, t=11.0)
+        det.flush(t=21.0)
+        return det.windows[-1].score
+
+    scores = [final_score(d) for d in sorted(set(shifts))]
+    assert all(a <= b + 1e-12 for a, b in zip(scores, scores[1:]))
+
+
+@given(
+    d=st.integers(min_value=0, max_value=1000),
+    guard_lo=st.floats(min_value=0.5, max_value=2.0, allow_nan=False),
+    guard_hi=st.floats(min_value=2.0, max_value=8.0, allow_nan=False),
+)
+@settings(max_examples=60, deadline=None)
+def test_drift_score_antitone_in_noise_guard(d, guard_lo, guard_hi):
+    """A stricter (larger) noise guard can only shrink the mix score:
+    raising the gate must never make the same shift look *more*
+    drifted."""
+    def score(guard: float) -> float:
+        det = _drift_detector(noise_guard=guard)
+        det.observe("app", "h1", n=1000, t=1.0)
+        det.observe("app", "h1", n=1000 - d, t=11.0)
+        if d:
+            det.observe("app", "h2", n=d, t=11.0)
+        det.flush(t=21.0)
+        return det.windows[-1].mix_score
+
+    assert score(guard_hi) <= score(guard_lo) + 1e-12

@@ -117,6 +117,53 @@ def _tracer_overhead(n: int = 2000, runs: int = 3):
     return off_s, on_s
 
 
+def _adaptive_overhead(n: int = 4000, runs: int = 3):
+    """Wall time of an in-process sim replay, adaptive loop off vs on.
+
+    The closed loop promises the serving path pays only the per-arrival
+    drift-detector bookkeeping (the child-side sampler rides sampled
+    *forked* execs, which the sim doesn't fork); this holds the
+    end-to-end submit loop to the <=3 % p50 budget, min-of-N runs.
+    Window size is chosen so several windows actually close (and score)
+    inside the run — the gate covers the window-close path too.
+    """
+    import time
+
+    from repro.core.adaptive import AdaptiveConfig, DriftConfig
+    from repro.pool import (
+        AppProfile, FleetDaemon, FleetManager, IdleTimeoutPolicy,
+        QueueConfig, SimFleetBackend,
+    )
+    from repro.pool.daemon import make_sim_adaptive_loop
+    from repro.pool.trace import Request
+
+    def one(adaptive: bool) -> float:
+        profiles = {a: AppProfile(app=a, cold_init_ms=400.0,
+                                  warm_init_ms=20.0, invoke_ms=30.0,
+                                  rss_mb=100.0) for a in APPS}
+        manager = FleetManager(
+            profiles, IdleTimeoutPolicy(timeout_s=60.0),
+            budget_mb=2048.0,
+            queue=QueueConfig(depth=64, max_concurrency=4))
+        loop = None
+        if adaptive:
+            loop = make_sim_adaptive_loop(
+                manager, config=AdaptiveConfig(
+                    drift=DriftConfig(window_s=5.0)))
+        daemon = FleetDaemon(SimFleetBackend(manager, adaptive=loop))
+        daemon.start("perf-smoke-adaptive")
+        t0 = time.perf_counter()
+        for i in range(n):
+            daemon.submit(Request(t=i * 0.01, app=APPS[i % len(APPS)]))
+        dt = time.perf_counter() - t0
+        daemon.shutdown(end_t=n * 0.01 + 120.0)
+        return dt
+
+    off_s = min(one(False) for _ in range(runs))
+    on_s = min(one(True) for _ in range(runs))
+    return off_s, on_s
+
+
 def _fault_hook_overhead(n: int = 4000, runs: int = 3):
     """Dispatch wall time with the chaos ``fault_hook`` unset vs a
     no-op hook installed.
@@ -277,6 +324,20 @@ def main(argv=None) -> int:
           f"({frac * 100:+.1f}%, {per_req_us:+.2f} us/req; allowed "
           f"{ftol['max_overhead_frac'] * 100:.0f}% or "
           f"{ftol['max_per_request_us']} us/req)")
+
+    atol = all_tol["adaptive"]
+    n_sub = 4000
+    off_s, on_s = _adaptive_overhead(n=n_sub)
+    frac = (on_s - off_s) / off_s if off_s else 0.0
+    per_req_us = (on_s - off_s) / n_sub * 1e6
+    check("adaptive-loop overhead",
+          frac <= atol["max_overhead_frac"]
+          or per_req_us <= atol["max_per_request_us"],
+          f"sim replay static {off_s * 1e3:.1f} ms vs adaptive "
+          f"{on_s * 1e3:.1f} ms over {n_sub} submits "
+          f"({frac * 100:+.1f}%, {per_req_us:+.2f} us/req; allowed "
+          f"{atol['max_overhead_frac'] * 100:.0f}% or "
+          f"{atol['max_per_request_us']} us/req)")
 
     _cluster_check(all_tol["cluster"], check)
 

@@ -96,6 +96,17 @@ def _fleet_metrics(data: dict) -> dict:
             "two_tier_cold_ratio": two.get("cold_ratio"),
             "wins": data.get("shared_base_wins"),
         }
+    adaptive = data.get("adaptive_comparison")
+    if adaptive:
+        out["adaptive"] = {
+            "static_cold_ratio": adaptive.get("static_cold_ratio"),
+            "adaptive_cold_ratio": adaptive.get("adaptive_cold_ratio"),
+            "static_p99_init_ms": adaptive.get("static_p99_init_ms"),
+            "adaptive_p99_init_ms":
+                adaptive.get("adaptive_p99_init_ms"),
+            "drift_fires": adaptive.get("drift_fires"),
+            "beats_static": adaptive.get("adaptive_beats_static"),
+        }
     cluster = {r["placement"]: r for r in data.get("cluster_rows", [])}
     if cluster:
         sharing = cluster.get("sharing", {})
