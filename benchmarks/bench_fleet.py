@@ -247,6 +247,51 @@ def run_adaptive_comparison(*, smoke: bool = False,
     }
 
 
+def run_handoff_comparison(root: str, apps: list[str],
+                           reports: dict) -> dict:
+    """Warm-state handoff vs cold re-place on the real tier (ISSUE
+    10): both arms are a successor node that deploys the app but was
+    not serving it.  The warm arm runs
+    :meth:`~repro.pool.fleet.ZygoteFleet.prewarm_app` with the
+    departing owner's shipped report BEFORE the first request lands —
+    exactly what the router's ``plan_leave`` prewarm exchange triggers
+    on the target — so that request forks from a hot zygote; the cold
+    arm (unplanned loss / stalled handoff) pays a full fresh-process
+    cold start.  The number that matters is the app's FIRST request on
+    its new owner."""
+    rows = []
+    for app in apps:
+        app_dir = {app: os.path.join(root, "apps", app)}
+        fleet = ZygoteFleet(app_dir, reports={app: reports[app]})
+        try:
+            m_cold = fleet.dispatch(app, seed=901)
+        finally:
+            fleet.stop()
+        fleet = ZygoteFleet(app_dir, reports={app: reports[app]})
+        try:
+            pre = fleet.prewarm_app(app, report=reports[app])
+            m_warm = fleet.dispatch(app, seed=901)
+        finally:
+            fleet.stop()
+        rows.append({
+            "app": APP_SHORT.get(app, app),
+            "cold_first_ms": round(m_cold["init_ms"], 1),
+            "warm_first_ms": round(m_warm["init_ms"], 1),
+            "speedup": round(m_cold["init_ms"]
+                             / max(m_warm["init_ms"], 1e-9), 2),
+            "prewarmed": bool(pre.get("warm")),
+            "cold_path": m_cold["path"],
+            "warm_path": m_warm["path"],
+        })
+    beats = all(r["prewarmed"] and r["warm_path"] == "pool"
+                and r["cold_path"] == "cold"
+                and r["warm_first_ms"] < r["cold_first_ms"]
+                for r in rows)
+    return {"rows": rows, "warm_beats_cold": beats,
+            "min_speedup": min((r["speedup"] for r in rows),
+                               default=0.0)}
+
+
 @bench("fleet", ref="fleet scale", order=100)
 def run(smoke: bool = False) -> dict:
     smoke = smoke or QUICK
@@ -504,6 +549,16 @@ def run(smoke: bool = False) -> dict:
                 f"requests; zygotes: {','.join(boot['zygotes'])}; "
                 f"{boot['used_mb']} MB incremental-resident)"))
 
+    # ------------------------------ part 3b: warm handoff vs cold re-place
+    handoff_cmp = run_handoff_comparison(root, apps, reports)
+    print()
+    print(table(handoff_cmp["rows"],
+                ["app", "cold_first_ms", "warm_first_ms", "speedup",
+                 "prewarmed", "cold_path", "warm_path"],
+                "Planned-migration handoff: first request on the new "
+                "owner, prewarmed from the shipped report vs cold "
+                "re-place"))
+
     verdict = ("profile-guided fleet beats fixed-size and idle-timeout "
                "on cold-start ratio at equal budget"
                if beats_fixed and beats_idle else
@@ -533,7 +588,13 @@ def run(smoke: bool = False) -> dict:
                 if cluster_sharing_beats_hash else
                 "WARNING: sharing-aware placement did NOT beat plain "
                 "hashing (or conservation broke)")
-    print(f"\n{verdict}\n{verdict2}\n{verdict3}\n{verdict4}")
+    verdict5 = (f"warm handoff beats cold re-place on the new owner's "
+                f"first request for every app (min "
+                f"{handoff_cmp['min_speedup']}X)"
+                if handoff_cmp["warm_beats_cold"] else
+                "WARNING: warm handoff did NOT beat cold re-place on "
+                "first-request latency")
+    print(f"\n{verdict}\n{verdict2}\n{verdict3}\n{verdict4}\n{verdict5}")
 
     payload = {
         "claim": "at equal memory budget the profile-guided fleet "
@@ -563,6 +624,9 @@ def run(smoke: bool = False) -> dict:
         "cluster_sharing_beats_hash": cluster_sharing_beats_hash,
         "adaptive_rows": adaptive_cmp["rows"],
         "adaptive_comparison": adaptive_cmp,
+        "handoff_rows": handoff_cmp["rows"],
+        "handoff_min_speedup": handoff_cmp["min_speedup"],
+        "handoff_warm_beats_cold": handoff_cmp["warm_beats_cold"],
     }
     save_result("bench_fleet", payload)
     return payload

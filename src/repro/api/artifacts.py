@@ -601,7 +601,7 @@ class ClusterSummaryArtifact(Artifact):
                      "queue_wait_p99_ms", "placement", "migrations",
                      "lost_nodes", "memory_gb_s", "trace", "seed",
                      "node_budget_mb", "total_budget_mb", "duration_s",
-                     "queue", "router", "meta")
+                     "queue", "router", "ha", "handoffs", "meta")
 
     def __init__(self, payload: dict,
                  meta: Optional[dict] = None) -> None:

@@ -606,15 +606,24 @@ def _cluster_workload(args: argparse.Namespace):
         minutes=args.minutes, peak_rpm=args.peak_rpm)
 
 
-def _cluster_node_loss_hook(args: argparse.Namespace):
-    """--node-loss-at N [N ...] -> a FaultInjector firing chaos
-    ``node_loss`` at those 0-based route calls (None when unused)."""
-    if not getattr(args, "node_loss_at", None):
-        return None
+def _cluster_fault_hook(args: argparse.Namespace):
+    """Build a FaultInjector from the cluster chaos flags:
+    ``--node-loss-at N`` (chaos ``node_loss`` at the Nth route call),
+    ``--kill-leader-at N`` (``router_loss`` at the election site) and
+    ``--handoff-stall-at N`` (``handoff_stall`` at the handoff site).
+    Returns None when no flag is set."""
+    events = []
     from repro.pool.chaos import FaultEvent, FaultInjector, FaultPlan
-    plan = FaultPlan(events=[FaultEvent("node_loss", at=at)
-                             for at in args.node_loss_at],
-                     seed=args.seed, name="cli-node-loss")
+    for at in getattr(args, "node_loss_at", None) or ():
+        events.append(FaultEvent("node_loss", at=at))
+    for at in getattr(args, "kill_leader_at", None) or ():
+        events.append(FaultEvent("router_loss", at=at))
+    for at in getattr(args, "handoff_stall_at", None) or ():
+        events.append(FaultEvent("handoff_stall", at=at))
+    if not events:
+        return None
+    plan = FaultPlan(events=events, seed=args.seed,
+                     name="cli-cluster-chaos")
     return FaultInjector(plan, simulate=True)
 
 
@@ -642,7 +651,7 @@ def cmd_cluster_replay(args: argparse.Namespace) -> int:
         sim = ClusterSimulator(
             wl, n_nodes=args.nodes, node_budget_mb=args.node_budget_mb,
             strategy=strategy, seed=args.seed,
-            fault_hook=_cluster_node_loss_hook(args))
+            fault_hook=_cluster_fault_hook(args))
         results[strategy] = sim.replay(limit=args.limit)
 
     rows = [{"strategy": s,
@@ -758,10 +767,11 @@ def cmd_cluster_route(args: argparse.Namespace) -> int:
     import time as _time
 
     from repro.api.artifacts import save_cluster_summary
-    from repro.cluster import ClusterRouter, NodeClient
+    from repro.cluster import (ClusterRouter, NodeClient,
+                               ReplicatedRouter, RetryPolicy)
 
     _obs_setup(args)
-    clients: dict[str, NodeClient] = {}
+    addrs: dict[str, tuple] = {}
     for spec in args.nodes.split(","):
         spec = spec.strip()
         if not spec:
@@ -769,15 +779,16 @@ def cmd_cluster_route(args: argparse.Namespace) -> int:
         try:
             node_id, addr = spec.split("=", 1)
             host, port = addr.rsplit(":", 1)
-            clients[node_id] = NodeClient(node_id, host, int(port))
+            addrs[node_id] = (host, int(port))
         except ValueError:
             print(f"cluster route: bad --nodes entry {spec!r} "
                   f"(want id=host:port)", file=sys.stderr)
             return 2
-    if not clients:
+    if not addrs:
         print("cluster route: need --nodes id=host:port[,...]",
               file=sys.stderr)
         return 2
+    retry = RetryPolicy.from_args(args)
 
     if args.trace:
         trace = load_trace(args.trace)
@@ -793,18 +804,39 @@ def cmd_cluster_route(args: argparse.Namespace) -> int:
         wl = _cluster_workload(args)
         trace, hot_sets = wl.trace, wl.hot_sets
 
-    router = ClusterRouter(clients, strategy=args.strategy,
-                           hot_sets=hot_sets, seed=args.seed,
-                           fault_hook=_cluster_node_loss_hook(args))
+    fault_hook = _cluster_fault_hook(args)
+    if args.ha:
+        router = ReplicatedRouter(
+            addrs, strategy=args.strategy, hot_sets=hot_sets,
+            seed=args.seed, retry=retry, standby_id=args.standby_id,
+            lease_ttl_s=args.lease_ttl_s, fault_hook=fault_hook)
+    else:
+        clients = {node_id: NodeClient(node_id, host, port,
+                                       retry=retry)
+                   for node_id, (host, port) in sorted(addrs.items())}
+        router = ClusterRouter(clients, strategy=args.strategy,
+                               hot_sets=hot_sets, seed=args.seed,
+                               retry=retry, fault_hook=fault_hook)
     placement = router.connect()
-    print(f"placement over {len(clients)} nodes: "
+    print(f"placement over {len(addrs)} nodes: "
           f"{json.dumps(placement)}", file=sys.stderr)
+    if args.leave_node and args.leave_node not in addrs:
+        print(f"cluster route: --leave-node {args.leave_node!r} is "
+              f"not in --nodes", file=sys.stderr)
+        return 2
 
     routed = unplaced = 0
+    left = False
     prev_t: Optional[float] = None
     for i, req in enumerate(trace):
         if args.limit is not None and i >= args.limit:
             break
+        if args.leave_node and not left and routed >= args.leave_at:
+            out = router.plan_leave(args.leave_node,
+                                    warm=not args.cold_leave)
+            left = True
+            print(f"planned leave {args.leave_node}: "
+                  f"{json.dumps(out)}", file=sys.stderr)
         if req.app not in router.placement:
             unplaced += 1  # no node deploys it: not admitted anywhere
             continue
@@ -813,6 +845,8 @@ def cmd_cluster_route(args: argparse.Namespace) -> int:
         prev_t = req.t
         router.route(req.app, req.handler)
         routed += 1
+    if args.leave_node and not left:
+        router.plan_leave(args.leave_node, warm=not args.cold_leave)
     payload = router.shutdown()
     payload["router"]["unplaced"] = unplaced
     _print_cluster_summary(payload)
@@ -823,7 +857,7 @@ def cmd_cluster_route(args: argparse.Namespace) -> int:
         save_cluster_summary(payload, os.path.abspath(args.out))
         print(f"cluster_summary artifact: {os.path.abspath(args.out)}")
     _obs_save_capture(args, "cluster-route",
-                      meta={"nodes": sorted(clients),
+                      meta={"nodes": sorted(addrs),
                             "strategy": args.strategy,
                             "routed": routed})
     if args.check and not payload["conservation"]["holds"]:
@@ -984,6 +1018,8 @@ def cmd_ci_check(args: argparse.Namespace) -> int:
 # ---------------------------------------------------------------------------
 
 def build_parser() -> argparse.ArgumentParser:
+    from repro.cluster.ha import add_retry_flags
+
     ap = argparse.ArgumentParser(
         prog="python -m repro",
         description="SLIMSTART profile-guided cold-start optimization")
@@ -1394,6 +1430,37 @@ def build_parser() -> argparse.ArgumentParser:
                    help="save the cluster_summary artifact here")
     p.add_argument("--check", action="store_true",
                    help="exit 1 if conservation breaks")
+    p.add_argument("--ha", action="store_true",
+                   help="replicated router: lease-elected leader + "
+                        "warm standby tailing the ledger (see "
+                        "docs/cluster.md)")
+    p.add_argument("--standby-id", default="router-b",
+                   help="with --ha: the standby router's id")
+    p.add_argument("--lease-ttl-s", type=float, default=5.0,
+                   help="with --ha: leader lease TTL (renewed every "
+                        "ttl/3 on the routing path)")
+    p.add_argument("--kill-leader-at", type=int, nargs="*",
+                   default=None, metavar="N",
+                   help="with --ha: inject a chaos router_loss at "
+                        "these 0-based election-site hits — the "
+                        "leader halts abruptly and the standby must "
+                        "take over mid-replay")
+    p.add_argument("--handoff-stall-at", type=int, nargs="*",
+                   default=None, metavar="N",
+                   help="inject a chaos handoff_stall at these "
+                        "0-based handoff-site hits (the app degrades "
+                        "to a cold re-place)")
+    p.add_argument("--leave-node", default=None, metavar="ID",
+                   help="planned decommission: drain this node with "
+                        "warm-state handoff once --leave-at requests "
+                        "have routed")
+    p.add_argument("--leave-at", type=int, default=0, metavar="N",
+                   help="route this many requests before the planned "
+                        "leave (default 0)")
+    p.add_argument("--cold-leave", action="store_true",
+                   help="skip the warm handoff exchange on the "
+                        "planned leave (cold re-place baseline)")
+    add_retry_flags(p)
     p.set_defaults(func=cmd_cluster_route)
 
     obs = sub.add_parser("obs", help="observability: trace analysis "

@@ -16,7 +16,11 @@ Layers, bottom up:
 * :mod:`repro.cluster.router` — the global router driving real node
   agents over sockets;
 * :mod:`repro.cluster.summary` — the ``cluster_summary`` payload
-  constructor and the per-node/global conservation check.
+  constructor and the per-node/global conservation check;
+* :mod:`repro.cluster.ha` — router high availability (ISSUE 10):
+  lease-based leader election over node-agent witnesses, ledger
+  replication to hot standbys, promotion with reconciliation, and the
+  unified :class:`~repro.cluster.ha.RetryPolicy` for every socket hop.
 """
 
 from repro.cluster.protocol import (MAX_FRAME, FrameClosed, FrameError,
@@ -33,6 +37,10 @@ from repro.cluster.sim import (ClusterSimulator, SimNode,
                                compare_strategies)
 from repro.cluster.node import PROTOCOL_VERSION, NodeAgent
 from repro.cluster.router import ClusterRouter, NodeClient
+from repro.cluster.ha import (ElectionLost, LeaseWitness,
+                              LedgerReplicator, ReplicatedRouter,
+                              RetryExhausted, RetryPolicy,
+                              StandbyRouter, elect)
 
 __all__ = [
     "MAX_FRAME", "FrameClosed", "FrameError", "encode_frame",
@@ -45,4 +53,7 @@ __all__ = [
     "ClusterSimulator", "SimNode", "compare_strategies",
     "PROTOCOL_VERSION", "NodeAgent",
     "ClusterRouter", "NodeClient",
+    "ElectionLost", "LeaseWitness", "LedgerReplicator",
+    "ReplicatedRouter", "RetryExhausted", "RetryPolicy",
+    "StandbyRouter", "elect",
 ]

@@ -1,0 +1,814 @@
+"""Cluster HA: replicated routers, lease elections, retry policy.
+
+PR 8's :class:`~repro.cluster.router.ClusterRouter` is a single point
+of failure: when the router process dies, its ledger (placement map,
+per-node admission counts, migration history) dies with it and the
+conservation invariant ``requests == served + sheds + flushed + errors
++ abandoned`` can no longer be *demonstrated*, even though the node
+agents kept every count.  This module closes that gap with three
+pieces, all over the existing frame protocol — no new wire format, no
+external coordination service:
+
+**RetryPolicy** — one object for every remote call the cluster tier
+makes: bounded attempts, per-call socket timeout, an overall deadline,
+and jittered exponential backoff between attempts.  Errors are classed
+retryable (connection resets, timeouts, clean EOFs — the transient
+family) vs terminal (:class:`FrameError` desyncs, logic errors).
+Invocation frames are deliberately **not** resent by the policy: a
+lost *reply* after the node admitted the request would double-admit on
+resend and silently break conservation — the router's failover loop
+(re-place, route to the new owner) is the only retry an invocation
+gets.  Idempotent control commands (``hello``, ``stats``, ``lease``,
+``rewarm``) may opt in to transparent resend.
+
+**Lease election** — node agents double as stdlib-only lease
+witnesses (:class:`LeaseWitness`, served under the ``lease`` command).
+A router holds leadership while a majority of witnesses grant it the
+lease for the current epoch; a standby takes over by bumping the epoch
+and winning a majority (:func:`elect`).  Epochs fence zombies: once a
+witness has granted epoch *e*, it rejects acquires and renews for any
+epoch below *e*, so a partitioned old leader cannot win its lease back
+after a successor is elected.
+
+**Ledger replication** — the leader streams its ledger to standbys:
+one snapshot frame on connect, then an incremental entry per state
+change (:class:`LedgerReplicator` serving, :class:`StandbyRouter`
+tailing).  Promotion (:meth:`StandbyRouter.promote`) wins the
+election, rebuilds live node clients, and *reconciles* the replicated
+``routed_by_node`` counts against each node's own admission counters
+(shipped in the extended ``hello`` reply) — node ledgers are ground
+truth, so an entry lost in flight at the instant the leader died
+cannot leave the promoted router's ledger out of step.
+
+:class:`ReplicatedRouter` packages the whole arrangement (leader +
+warm standby + lease heartbeat) behind the plain router surface and
+gives the chaos tier its ``election`` site: a ``router_loss`` fault
+halts the leader abruptly mid-replay and the standby must finish the
+replay with conservation intact.
+"""
+
+from __future__ import annotations
+
+import random
+import socket
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from repro.obs.log import get_logger
+from repro.pool.chaos import RouterLossFault
+from repro.cluster.protocol import (FrameClosed, FrameError, recv_frame,
+                                    send_frame)
+
+_LOG = get_logger("cluster.ha")
+
+__all__ = [
+    "ElectionLost",
+    "LeaseWitness",
+    "LedgerReplicator",
+    "ReplicatedRouter",
+    "RetryExhausted",
+    "RetryPolicy",
+    "StandbyRouter",
+    "add_retry_flags",
+    "elect",
+    "empty_ledger",
+    "lease_call",
+]
+
+
+def _reg():
+    from repro.obs.metrics import default_registry
+    return default_registry()
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy
+# ---------------------------------------------------------------------------
+
+class RetryExhausted(ConnectionError):
+    """Every allowed attempt failed with a retryable error (the last
+    one is chained as ``__cause__``).  A :class:`ConnectionError`
+    subclass so existing failover paths treat exhaustion like any
+    other dead connection."""
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Retry/timeout/backoff policy for the cluster's remote calls.
+
+    ``attempts`` bounds tries per operation; ``deadline_s`` bounds the
+    operation's total wall time including backoff sleeps (whichever is
+    hit first ends the retry loop).  Backoff is exponential from
+    ``backoff_base_s``, capped at ``backoff_cap_s``, with a
+    multiplicative jitter of ±``jitter``/2 (seedable for deterministic
+    tests).  ``call_timeout_s`` is the per-frame socket timeout,
+    ``connect_timeout_s`` the per-attempt connect timeout.
+    """
+
+    attempts: int = 3
+    call_timeout_s: float = 10.0
+    connect_timeout_s: float = 5.0
+    deadline_s: float = 30.0
+    backoff_base_s: float = 0.05
+    backoff_cap_s: float = 2.0
+    jitter: float = 0.5
+    seed: Optional[int] = None
+
+    def __post_init__(self) -> None:
+        if self.attempts < 1:
+            raise ValueError(f"attempts must be >= 1, got {self.attempts}")
+        for name in ("call_timeout_s", "connect_timeout_s", "deadline_s",
+                     "backoff_base_s", "backoff_cap_s"):
+            if getattr(self, name) < 0:
+                raise ValueError(f"{name} must be >= 0")
+        if not 0.0 <= self.jitter <= 1.0:
+            raise ValueError(f"jitter must be in [0, 1], got {self.jitter}")
+
+    # ------------------------------------------------------------ classing
+    @staticmethod
+    def retryable(exc: BaseException) -> bool:
+        """Transient transport failures retry; protocol desyncs
+        (:class:`FrameError`) and logic errors are terminal."""
+        if isinstance(exc, FrameError):
+            return False
+        return isinstance(exc, (OSError, FrameClosed))
+
+    # ------------------------------------------------------------- backoff
+    def backoff_s(self, attempt: int,
+                  rng: Optional[random.Random] = None) -> float:
+        """Sleep before retry number ``attempt`` (0-based)."""
+        base = min(self.backoff_base_s * (2 ** attempt),
+                   self.backoff_cap_s)
+        if base <= 0 or self.jitter <= 0:
+            return base
+        r = (rng or random).random()
+        return base * (1.0 - self.jitter / 2.0 + self.jitter * r)
+
+    def rng(self) -> Optional[random.Random]:
+        return random.Random(self.seed) if self.seed is not None else None
+
+    # ----------------------------------------------------------- execution
+    def run(self, fn: Callable[[], dict], *, what: str = "call",
+            sleep: Callable[[float], None] = time.sleep):
+        """Call ``fn`` under the policy: retry retryable failures with
+        backoff until ``attempts`` or ``deadline_s`` runs out, then
+        raise :class:`RetryExhausted` chained to the last error.
+        Terminal errors propagate immediately."""
+        rng = self.rng()
+        deadline = time.monotonic() + self.deadline_s
+        last: Optional[BaseException] = None
+        for attempt in range(self.attempts):
+            try:
+                return fn()
+            except Exception as exc:
+                if not self.retryable(exc):
+                    raise
+                last = exc
+                if attempt + 1 >= self.attempts:
+                    break
+                delay = self.backoff_s(attempt, rng)
+                if time.monotonic() + delay >= deadline:
+                    break
+                sleep(delay)
+        raise RetryExhausted(
+            f"{what} failed after {self.attempts} attempt(s): "
+            f"{last!r}") from last
+
+    # ---------------------------------------------------------------- CLI
+    def to_dict(self) -> dict:
+        return {"attempts": self.attempts,
+                "call_timeout_s": self.call_timeout_s,
+                "connect_timeout_s": self.connect_timeout_s,
+                "deadline_s": self.deadline_s,
+                "backoff_base_s": self.backoff_base_s,
+                "backoff_cap_s": self.backoff_cap_s,
+                "jitter": self.jitter}
+
+    @classmethod
+    def from_args(cls, args) -> "RetryPolicy":
+        """Build from the ``--retry-*`` namespace attributes installed
+        by :func:`add_retry_flags` (missing attributes keep their
+        defaults)."""
+        d = cls()
+        return cls(
+            attempts=getattr(args, "retry_attempts", d.attempts),
+            call_timeout_s=getattr(args, "retry_call_timeout_s",
+                                   d.call_timeout_s),
+            connect_timeout_s=getattr(args, "retry_connect_timeout_s",
+                                      d.connect_timeout_s),
+            deadline_s=getattr(args, "retry_deadline_s", d.deadline_s),
+            backoff_base_s=getattr(args, "retry_backoff_s",
+                                   d.backoff_base_s),
+            backoff_cap_s=getattr(args, "retry_backoff_cap_s",
+                                  d.backoff_cap_s),
+        )
+
+
+def add_retry_flags(parser) -> None:
+    """Install the ``--retry-*`` flags mirroring
+    :class:`RetryPolicy`'s fields on an argparse parser."""
+    d = RetryPolicy()
+    parser.add_argument("--retry-attempts", type=int,
+                        default=d.attempts, metavar="N",
+                        help="max attempts per remote call "
+                             f"(default {d.attempts})")
+    parser.add_argument("--retry-call-timeout-s", type=float,
+                        default=d.call_timeout_s, metavar="S",
+                        help="per-call socket timeout "
+                             f"(default {d.call_timeout_s})")
+    parser.add_argument("--retry-connect-timeout-s", type=float,
+                        default=d.connect_timeout_s, metavar="S",
+                        help="per-attempt connect timeout "
+                             f"(default {d.connect_timeout_s})")
+    parser.add_argument("--retry-deadline-s", type=float,
+                        default=d.deadline_s, metavar="S",
+                        help="overall per-operation deadline "
+                             f"(default {d.deadline_s})")
+    parser.add_argument("--retry-backoff-s", type=float,
+                        default=d.backoff_base_s, metavar="S",
+                        help="base backoff between attempts "
+                             f"(default {d.backoff_base_s})")
+    parser.add_argument("--retry-backoff-cap-s", type=float,
+                        default=d.backoff_cap_s, metavar="S",
+                        help="backoff ceiling "
+                             f"(default {d.backoff_cap_s})")
+
+
+# ---------------------------------------------------------------------------
+# Lease witness + election
+# ---------------------------------------------------------------------------
+
+class LeaseWitness:
+    """One node agent's vote in the leader election.
+
+    Pure stdlib state machine over the monotonic clock: at most one
+    live (holder, epoch) at a time; a grant lasts ``ttl_s`` unless
+    renewed.  Epochs fence: once epoch *e* is granted, acquires and
+    renews below *e* are rejected forever — a deposed leader cannot
+    talk its way back in with its stale epoch.
+    """
+
+    def __init__(self, node_id: str,
+                 clock: Callable[[], float] = time.monotonic) -> None:
+        self.node_id = node_id
+        self._clock = clock
+        self._lock = threading.Lock()
+        self.holder: Optional[str] = None
+        self.epoch = 0
+        self.expires_t = 0.0
+        self.grants = 0
+        self.rejections = 0
+
+    def _expired(self, now: float) -> bool:
+        return self.holder is None or now >= self.expires_t
+
+    def handle(self, evt: dict) -> dict:
+        """Serve one ``{"cmd": "lease", ...}`` frame body."""
+        op = evt.get("op", "acquire")
+        router = str(evt.get("router", ""))
+        epoch = int(evt.get("epoch", 0))
+        ttl_s = float(evt.get("ttl_s", 5.0))
+        now = self._clock()
+        with self._lock:
+            if op == "release":
+                if self.holder == router and epoch >= self.epoch:
+                    self.holder = None
+                    self.expires_t = now
+                return self._state(now, granted=True)
+            if epoch < self.epoch:  # fenced: a newer epoch was granted
+                self.rejections += 1
+                return self._state(now, granted=False)
+            if op == "renew":
+                ok = (self.holder == router and epoch == self.epoch
+                      and not self._expired(now))
+            else:  # acquire
+                ok = (self._expired(now) or self.holder == router
+                      or epoch > self.epoch)
+            if ok:
+                self.holder = router
+                self.epoch = epoch
+                self.expires_t = now + ttl_s
+                self.grants += 1
+            else:
+                self.rejections += 1
+            return self._state(now, granted=ok)
+
+    def _state(self, now: float, *, granted: bool) -> dict:
+        return {"granted": granted, "holder": self.holder,
+                "epoch": self.epoch,
+                "expires_in_s": round(max(self.expires_t - now, 0.0), 3)}
+
+    def state(self) -> dict:
+        with self._lock:
+            return self._state(self._clock(), granted=False) | {
+                "grants": self.grants, "rejections": self.rejections}
+
+
+class ElectionLost(RuntimeError):
+    """A majority of lease witnesses did not grant the epoch."""
+
+
+def lease_call(client, *, op: str, router_id: str, epoch: int,
+               ttl_s: float) -> dict:
+    """One lease RPC against a node agent's witness; transport errors
+    surface to the caller (an unreachable witness is an abstention)."""
+    return client.call({"cmd": "lease", "op": op, "router": router_id,
+                        "epoch": epoch, "ttl_s": ttl_s},
+                       idempotent=True)
+
+
+def elect(clients: dict, *, router_id: str, epoch: int,
+          ttl_s: float = 5.0, op: str = "acquire") -> dict:
+    """Ask every witness for the lease at ``epoch``; leadership needs
+    a strict majority of the *configured* witness set (unreachable
+    witnesses count against, not for — a partitioned minority cannot
+    elect itself)."""
+    granted, voters = 0, len(clients)
+    replies: dict[str, dict] = {}
+    for node_id, client in sorted(clients.items()):
+        try:
+            reply = lease_call(client, op=op, router_id=router_id,
+                               epoch=epoch, ttl_s=ttl_s)
+        except (OSError, FrameClosed, FrameError) as exc:
+            replies[node_id] = {"granted": False, "error": repr(exc)}
+            continue
+        replies[node_id] = reply
+        if reply.get("granted"):
+            granted += 1
+    won = granted > voters // 2
+    _reg().counter("repro_cluster_ha_elections_total",
+                   "lease elections held, by outcome",
+                   labels=("outcome",)).labels(
+        outcome="won" if won else "lost").inc()
+    _LOG.info("election", router=router_id, epoch=epoch, op=op,
+              granted=granted, witnesses=voters, won=won)
+    return {"router": router_id, "epoch": epoch, "op": op,
+            "granted": granted, "witnesses": voters, "won": won,
+            "replies": replies}
+
+
+# ---------------------------------------------------------------------------
+# Ledger replication (leader side)
+# ---------------------------------------------------------------------------
+
+def empty_ledger(epoch: int = 0) -> dict:
+    """The replicated-ledger shape (what a snapshot frame carries)."""
+    return {"epoch": epoch, "placement": {}, "routed_by_node": {},
+            "router_sheds": 0, "migrations": [], "lost_nodes": [],
+            "departed": [], "node_payloads": {}, "node_samples": {}}
+
+
+def apply_ledger_entry(ledger: dict, entry: dict) -> None:
+    """Fold one replicated entry into a ledger dict (shared by the
+    standby tail and tests so the two sides cannot drift)."""
+    k = entry.get("k")
+    if k == "route":
+        n = entry["node"]
+        ledger["routed_by_node"][n] = \
+            ledger["routed_by_node"].get(n, 0) + 1
+    elif k == "shed":
+        ledger["router_sheds"] += 1
+    elif k == "migration":
+        m = entry["m"]
+        ledger["migrations"].append(dict(m))
+        ledger["placement"][m["app"]] = m["to"]
+    elif k == "place":
+        ledger["placement"][entry["app"]] = entry["node"]
+    elif k == "unplace":
+        ledger["placement"].pop(entry["app"], None)
+    elif k == "lost":
+        if entry["node"] not in ledger["lost_nodes"]:
+            ledger["lost_nodes"].append(entry["node"])
+    elif k == "departed":
+        if entry["node"] not in ledger["departed"]:
+            ledger["departed"].append(entry["node"])
+    elif k == "harvest":
+        ledger["node_payloads"][entry["node"]] = entry.get("summary") or {}
+        ledger["node_samples"][entry["node"]] = [
+            float(x) for x in entry.get("samples") or []]
+    elif k == "epoch":
+        ledger["epoch"] = int(entry["epoch"])
+    # unknown kinds are ignored: replication is forward-compatible
+
+
+class LedgerReplicator:
+    """The leader's replication server: every connecting standby first
+    gets a snapshot frame (cut under the publish lock, so no entry can
+    fall between snapshot and stream), then the live entry stream.
+    Slow standbys never block routing: entries go through a per-
+    connection queue drained by a writer thread, and a standby that
+    stops reading is dropped, not waited on."""
+
+    _STOP = object()
+
+    def __init__(self, snapshot_fn: Callable[[], dict], *,
+                 host: str = "127.0.0.1", port: int = 0) -> None:
+        self._snapshot_fn = snapshot_fn
+        self._lock = threading.Lock()
+        self._seq = 0
+        self._conns: list[tuple[socket.socket, "_Queue"]] = []
+        self._stopped = False
+        self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._srv.bind((host, port))
+        self._srv.listen(8)
+        self.host, self.port = self._srv.getsockname()[:2]
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="ledger-replicator",
+            daemon=True)
+        self._accept_thread.start()
+
+    @property
+    def standbys(self) -> int:
+        with self._lock:
+            return len(self._conns)
+
+    def _accept_loop(self) -> None:
+        while True:
+            try:
+                sock, _peer = self._srv.accept()
+            except OSError:
+                return  # server socket closed: replicator stopping
+            q = _Queue()
+            with self._lock:
+                if self._stopped:
+                    sock.close()
+                    return
+                # snapshot under the lock: publishes are serialized
+                # against it, so the stream resumes exactly after seq
+                try:
+                    send_frame(sock, {"event": "snapshot",
+                                      "seq": self._seq,
+                                      "ledger": self._snapshot_fn()})
+                except OSError:
+                    sock.close()
+                    continue
+                self._conns.append((sock, q))
+            threading.Thread(target=self._writer, args=(sock, q),
+                             name="ledger-writer", daemon=True).start()
+            _LOG.info("standby-attached", port=self.port,
+                      standbys=self.standbys)
+
+    def publish(self, entry: dict) -> None:
+        with self._lock:
+            if self._stopped:
+                return
+            self._seq += 1
+            frame = {"event": "entry", "seq": self._seq, **entry}
+            for _sock, q in self._conns:
+                q.put(frame)
+
+    def _writer(self, sock: socket.socket, q: "_Queue") -> None:
+        while True:
+            item = q.get()
+            if item is self._STOP:
+                break
+            try:
+                send_frame(sock, item)
+            except OSError:
+                break  # standby gone; drop it
+        with self._lock:
+            self._conns = [(s, cq) for s, cq in self._conns
+                           if s is not sock]
+        try:
+            sock.close()
+        except OSError:
+            pass
+
+    def stop(self, *, abrupt: bool = False) -> None:
+        """``abrupt=True`` models leader death: sockets die mid-stream
+        with no goodbye, which is exactly what a tailing standby must
+        treat as leader loss."""
+        with self._lock:
+            self._stopped = True
+            conns = list(self._conns)
+        try:
+            self._srv.close()
+        except OSError:
+            pass
+        for sock, q in conns:
+            if abrupt:
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+            q.put(self._STOP)
+
+
+class _Queue:
+    """Tiny unbounded thread-safe FIFO (condvar + list); avoids
+    importing queue for two methods."""
+
+    def __init__(self) -> None:
+        self._items: list = []
+        self._cond = threading.Condition()
+
+    def put(self, item) -> None:
+        with self._cond:
+            self._items.append(item)
+            self._cond.notify()
+
+    def get(self):
+        with self._cond:
+            while not self._items:
+                self._cond.wait()
+            return self._items.pop(0)
+
+
+# ---------------------------------------------------------------------------
+# Standby router (tail + promote)
+# ---------------------------------------------------------------------------
+
+class StandbyRouter:
+    """A warm standby: tails the leader's ledger stream and can be
+    promoted to a live :class:`~repro.cluster.router.ClusterRouter`
+    when the leader dies.
+
+    ``node_addrs`` maps node id -> ``(host, port)`` — the full witness
+    set.  Promotion wins a majority lease election at ``last seen
+    epoch + 1``, rebuilds node clients, and reconciles the replicated
+    ``routed_by_node`` against each live node's admission counters
+    from the extended ``hello`` reply (node ledgers are ground truth
+    for anything that was in flight when the leader died).
+    """
+
+    def __init__(self, router_id: str, leader_addr: tuple,
+                 node_addrs: dict[str, tuple], *,
+                 strategy: str = "sharing",
+                 hot_sets: Optional[dict[str, list[str]]] = None,
+                 seed: int = 0,
+                 retry: Optional[RetryPolicy] = None,
+                 lease_ttl_s: float = 5.0,
+                 fault_hook=None) -> None:
+        self.router_id = router_id
+        self.leader_addr = tuple(leader_addr)
+        self.node_addrs = {n: tuple(a) for n, a in node_addrs.items()}
+        self.strategy = strategy
+        self.hot_sets = dict(hot_sets or {})
+        self.seed = seed
+        self.retry = retry or RetryPolicy()
+        self.lease_ttl_s = lease_ttl_s
+        self.fault_hook = fault_hook
+        self.ledger = empty_ledger()
+        self.seq = 0
+        self.gaps = 0
+        self.synced = threading.Event()
+        self.leader_lost = threading.Event()
+        self.last_election: Optional[dict] = None
+        self._lock = threading.Lock()
+        self._sock: Optional[socket.socket] = None
+        self._thread: Optional[threading.Thread] = None
+
+    # --------------------------------------------------------------- tail
+    def start(self) -> "StandbyRouter":
+        host, port = self.leader_addr
+        self._sock = self.retry.run(
+            lambda: socket.create_connection(
+                (host, port), timeout=self.retry.connect_timeout_s),
+            what=f"standby {self.router_id} connect to leader")
+        self._sock.settimeout(None)  # the tail blocks until frames come
+        self._thread = threading.Thread(
+            target=self._tail, name=f"standby-{self.router_id}",
+            daemon=True)
+        self._thread.start()
+        return self
+
+    def wait_synced(self, timeout_s: float = 10.0) -> bool:
+        return self.synced.wait(timeout=timeout_s)
+
+    def _tail(self) -> None:
+        sock = self._sock
+        while True:
+            try:
+                frame = recv_frame(sock)
+            except (OSError, FrameClosed, FrameError):
+                self.leader_lost.set()
+                _LOG.warning("leader-lost", standby=self.router_id,
+                             seq=self.seq)
+                return
+            with self._lock:
+                if frame.get("event") == "snapshot":
+                    self.ledger = frame.get("ledger") or empty_ledger()
+                    self.seq = int(frame.get("seq", 0))
+                    self.synced.set()
+                elif frame.get("event") == "entry":
+                    seq = int(frame.get("seq", 0))
+                    if seq != self.seq + 1:
+                        self.gaps += 1
+                    self.seq = seq
+                    apply_ledger_entry(self.ledger, frame)
+
+    def ledger_copy(self) -> dict:
+        import copy
+        with self._lock:
+            return copy.deepcopy(self.ledger)
+
+    def stop(self) -> None:
+        sock, self._sock = self._sock, None
+        if sock is not None:
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    # ------------------------------------------------------------ promote
+    def promote(self, *, epoch: Optional[int] = None):
+        """Win the election and resume routing from the replica.
+        Returns a live :class:`ClusterRouter`; raises
+        :class:`ElectionLost` without touching placement if a majority
+        of witnesses refuses (a newer epoch is already out there)."""
+        from repro.cluster.router import ClusterRouter, NodeClient
+        self.stop()
+        ledger = self.ledger_copy()
+        epoch = (int(ledger.get("epoch", 0)) + 1
+                 if epoch is None else epoch)
+        gone = set(ledger.get("lost_nodes", ())) \
+            | set(ledger.get("departed", ()))
+        clients = {
+            node_id: NodeClient(node_id, host, port, retry=self.retry)
+            for node_id, (host, port) in sorted(self.node_addrs.items())
+            if node_id not in gone}
+        result = elect(clients, router_id=self.router_id, epoch=epoch,
+                       ttl_s=self.lease_ttl_s)
+        self.last_election = result
+        if not result["won"]:
+            for c in clients.values():
+                c.close()
+            raise ElectionLost(
+                f"standby {self.router_id} lost the election for "
+                f"epoch {epoch}: {result['granted']}/"
+                f"{result['witnesses']} grants")
+        router = ClusterRouter.resume(
+            clients, ledger=ledger, router_id=self.router_id,
+            epoch=epoch, strategy=self.strategy,
+            hot_sets=self.hot_sets, seed=self.seed, retry=self.retry,
+            fault_hook=self.fault_hook)
+        _reg().counter("repro_cluster_ha_promotions_total",
+                       "standby routers promoted to leader").inc()
+        _LOG.info("promoted", router=self.router_id, epoch=epoch,
+                  nodes=len(clients), seq=self.seq)
+        return router
+
+
+# ---------------------------------------------------------------------------
+# The HA coordinator: leader + warm standby behind the router surface
+# ---------------------------------------------------------------------------
+
+class ReplicatedRouter:
+    """Leader + warm standby packaged behind the plain router surface.
+
+    ``connect()`` elects the leader (epoch 1) against the node-agent
+    witnesses, starts ledger replication, and attaches the standby.
+    ``route()`` heartbeats the lease on a ``lease_ttl_s / 3`` cadence
+    and exposes the chaos ``election`` site: an injected
+    ``router_loss`` fault halts the leader abruptly (dead sockets, no
+    drain, no goodbye) and promotes the standby before the arrival is
+    routed — so the arrival that observed the crash is also the first
+    one the new leader serves.
+    """
+
+    def __init__(self, node_addrs: dict[str, tuple], *,
+                 strategy: str = "sharing",
+                 hot_sets: Optional[dict[str, list[str]]] = None,
+                 seed: int = 0,
+                 retry: Optional[RetryPolicy] = None,
+                 router_id: str = "router-a",
+                 standby_id: str = "router-b",
+                 lease_ttl_s: float = 5.0,
+                 fault_hook=None) -> None:
+        self.node_addrs = {n: tuple(a) for n, a in node_addrs.items()}
+        self.strategy = strategy
+        self.hot_sets = dict(hot_sets or {})
+        self.seed = seed
+        self.retry = retry or RetryPolicy()
+        self.router_id = router_id
+        self.standby_id = standby_id
+        self.lease_ttl_s = lease_ttl_s
+        self.fault_hook = fault_hook
+        self.leader = None
+        self.standby: Optional[StandbyRouter] = None
+        self.failovers = 0
+        self.elections: list[dict] = []
+        self.lease_renewals = 0
+        self.lease_denials = 0
+        self._last_renew_t = time.monotonic()
+
+    # ------------------------------------------------------------ topology
+    def connect(self) -> dict[str, str]:
+        from repro.cluster.router import ClusterRouter, NodeClient
+        clients = {
+            node_id: NodeClient(node_id, host, port, retry=self.retry)
+            for node_id, (host, port)
+            in sorted(self.node_addrs.items())}
+        self.leader = ClusterRouter(
+            clients, strategy=self.strategy, hot_sets=self.hot_sets,
+            seed=self.seed, fault_hook=self.fault_hook,
+            retry=self.retry, router_id=self.router_id, epoch=1)
+        placement = self.leader.connect()
+        result = elect(self.leader.clients, router_id=self.router_id,
+                       epoch=1, ttl_s=self.lease_ttl_s)
+        self.elections.append(result)
+        if not result["won"]:
+            raise ElectionLost(
+                f"leader {self.router_id} could not win epoch 1: "
+                f"{result['granted']}/{result['witnesses']} grants")
+        addr = self.leader.enable_replication()
+        self.standby = StandbyRouter(
+            self.standby_id, addr, self.node_addrs,
+            strategy=self.strategy, hot_sets=self.hot_sets,
+            seed=self.seed, retry=self.retry,
+            lease_ttl_s=self.lease_ttl_s, fault_hook=self.fault_hook)
+        self.standby.start()
+        if not self.standby.wait_synced():
+            raise RuntimeError(
+                f"standby {self.standby_id} never received the "
+                f"ledger snapshot")
+        return placement
+
+    # ------------------------------------------------------------- serving
+    def route(self, app: str, handler: Optional[str] = None) -> dict:
+        if self.fault_hook is not None:
+            try:
+                self.fault_hook("election", router=self.leader.router_id,
+                                epoch=self.leader.epoch)
+            except RouterLossFault:
+                self.failover()
+        self._maybe_renew()
+        return self.leader.route(app, handler)
+
+    def failover(self) -> dict:
+        """Kill the leader abruptly and promote the standby (the
+        ``router_loss`` reaction, callable directly by tests)."""
+        old = self.leader.router_id
+        self.leader.halt()
+        standby, self.standby = self.standby, None
+        # the tail sees the dead stream on its own; promotion does not
+        # wait for it — election fencing is what makes takeover safe
+        self.leader = standby.promote()
+        self.failovers += 1
+        if standby.last_election is not None:
+            self.elections.append(standby.last_election)
+        _LOG.warning("failover", from_router=old,
+                     to_router=self.leader.router_id,
+                     epoch=self.leader.epoch)
+        return {"from": old, "to": self.leader.router_id,
+                "epoch": self.leader.epoch}
+
+    def _maybe_renew(self) -> None:
+        now = time.monotonic()
+        if now - self._last_renew_t < self.lease_ttl_s / 3.0:
+            return
+        self._last_renew_t = now
+        result = elect(self.leader.clients,
+                       router_id=self.leader.router_id,
+                       epoch=self.leader.epoch,
+                       ttl_s=self.lease_ttl_s, op="renew")
+        self.lease_renewals += 1
+        if not result["won"]:
+            self.lease_denials += 1
+            _LOG.warning("lease-denied", router=self.leader.router_id,
+                         epoch=self.leader.epoch,
+                         granted=result["granted"])
+
+    # ---------------------------------------------------------- delegation
+    def plan_leave(self, node_id: str, **kw) -> dict:
+        out = self.leader.plan_leave(node_id, **kw)
+        self.node_addrs.pop(node_id, None)
+        if self.standby is not None:
+            self.standby.node_addrs.pop(node_id, None)
+        return out
+
+    def node_leave(self, node_id: str, **kw) -> dict:
+        return self.leader.node_leave(node_id, **kw)
+
+    @property
+    def placement(self) -> dict:
+        return self.leader.placement
+
+    @property
+    def router_sheds(self) -> int:
+        return self.leader.router_sheds
+
+    # -------------------------------------------------------------- finish
+    def ha_summary(self) -> dict:
+        return {"leader": self.leader.router_id,
+                "epoch": self.leader.epoch,
+                "standby": (self.standby.router_id
+                            if self.standby is not None else None),
+                "failovers": self.failovers,
+                "lease_ttl_s": self.lease_ttl_s,
+                "lease_renewals": self.lease_renewals,
+                "lease_denials": self.lease_denials,
+                "elections": [
+                    {k: e[k] for k in ("router", "epoch", "op",
+                                       "granted", "witnesses", "won")}
+                    for e in self.elections]}
+
+    def shutdown(self, *, flush: bool = False) -> dict:
+        if self.standby is not None:
+            self.standby.stop()
+        payload = self.leader.shutdown(flush=flush)
+        payload["ha"] = self.ha_summary()
+        return payload

@@ -38,6 +38,7 @@ from typing import Optional
 from repro.obs.log import get_logger
 from repro.pool.daemon import FleetDaemon
 from repro.pool.trace import Request
+from repro.cluster.ha import LeaseWitness
 from repro.cluster.protocol import (FrameClosed, FrameError,
                                     read_frame, write_frame)
 
@@ -76,6 +77,9 @@ class NodeAgent:
             backend, rewarm_interval_s=rewarm_interval_s,
             summary_path=summary_path,
             drain_timeout_s=drain_timeout_s, fault_hook=fault_hook)
+        # HA: this agent is one vote in the router leader election
+        # (stdlib lease state machine served under the "lease" cmd)
+        self.lease = LeaseWitness(node_id)
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._server: Optional[asyncio.base_events.Server] = None
         self._thread: Optional[threading.Thread] = None
@@ -246,22 +250,68 @@ class NodeAgent:
         surface, framed."""
         cmd = evt.get("cmd")
         if cmd == "hello":
+            # "counts" extends the reply with this node's own
+            # admission ledger so a promoted standby can reconcile its
+            # replicated routed_by_node against ground truth
+            counts: dict = {}
+            try:
+                snap = self.daemon.backend.snapshot()
+                counts = {"requests": int(snap.get("requests", 0)),
+                          "served": int(snap.get("served", 0))}
+            except Exception:  # counts are best-effort extras
+                counts = {}
             return {"ok": True, "node": self.node_id,
                     "protocol": PROTOCOL_VERSION,
                     "mode": self._boot.get("mode"),
-                    "apps": self._boot.get("apps", [])}
+                    "apps": self._boot.get("apps", []),
+                    "counts": counts}
         if cmd == "stats":
             return {"ok": True, "node": self.node_id,
                     "stats": self.daemon.backend.snapshot(),
                     "rewarm_ticks": self.daemon.rewarm_ticks,
+                    "lease": self.lease.state(),
                     "metrics": _reg().snapshot()}
+        if cmd == "lease":
+            # leader-election witness: grant/renew/release one lease
+            return {"ok": True, "node": self.node_id,
+                    **self.lease.handle(evt)}
+        if cmd == "handoff_export":
+            # warm handoff, departing side: ship the app's deployed
+            # report artifact (and sim profile) to the router
+            try:
+                export = self.daemon.backend.export_app(evt.get("app"))
+            except KeyError as exc:
+                return {"ok": False, "node": self.node_id,
+                        "error": str(exc)}
+            return {"ok": True, "node": self.node_id, **export}
+        if cmd == "prewarm":
+            # warm handoff, receiving side: boot the app's zygote from
+            # the shipped state *before* the placement flips
+            try:
+                out = self.daemon.backend.prewarm_app(
+                    evt.get("app"), report=evt.get("report"),
+                    profile=evt.get("profile"))
+            except KeyError as exc:
+                return {"ok": False, "node": self.node_id,
+                        "error": str(exc)}
+            return {"ok": True, "node": self.node_id, **out,
+                    "warm": bool(out.get("warm"))}
         if cmd == "rewarm":
             return {"ok": True, "node": self.node_id,
                     "rewarm": self.daemon.rewarm_now()}
         if cmd in ("drain", "shutdown"):
             # flush=False: end-of-feed semantics — queued work is
             # served before the summary is cut (the router asked us to
-            # finish, not to abandon)
+            # finish, not to abandon).  return_queued=True (planned
+            # handoff): queued requests are counted flushed here AND
+            # returned in the reply so the router re-admits them at
+            # the new owners instead of dropping them.
+            queued: list = []
+            if evt.get("return_queued"):
+                try:
+                    queued = self.daemon.backend.collect_queued()
+                except Exception:
+                    queued = []
             payload = self._final_payload(
                 flush=bool(evt.get("flush", False)))
             samples = []
@@ -270,9 +320,12 @@ class NodeAgent:
                     self.latency_sample_cap)
             except Exception:  # samples are best-effort extras
                 samples = []
-            return {"ok": True, "node": self.node_id,
-                    "event": "summary", "summary": payload,
-                    "latency_samples": samples}
+            reply = {"ok": True, "node": self.node_id,
+                     "event": "summary", "summary": payload,
+                     "latency_samples": samples}
+            if evt.get("return_queued"):
+                reply["queued"] = queued
+            return reply
         if cmd is not None:
             return {"ok": False, "node": self.node_id,
                     "error": f"unknown cmd {cmd!r}"}

@@ -104,6 +104,15 @@ def recv_frame(sock: socket.socket) -> dict:
     return _decode_body(_recv_exact(sock, n, header=False))
 
 
+def request(sock: socket.socket, obj: dict) -> dict:
+    """One blocking RPC round-trip: send a frame, read the reply.
+    The building block for one-shot control calls (lease grants,
+    handshake probes) that do not want a :class:`NodeClient`'s
+    connection lifecycle."""
+    send_frame(sock, obj)
+    return recv_frame(sock)
+
+
 # ---------------------------------------------------------------------------
 # asyncio side (the node agent's server loop)
 # ---------------------------------------------------------------------------

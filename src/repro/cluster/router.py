@@ -35,8 +35,9 @@ from typing import Optional
 
 from repro.obs.log import get_logger
 from repro.obs.tracing import get_tracer, new_id, now_ms
-from repro.pool.chaos import NodeLossFault
+from repro.pool.chaos import HandoffStallFault, NodeLossFault
 from repro.pool.simulator import PercentilePool
+from repro.cluster.ha import LedgerReplicator, RetryPolicy, empty_ledger
 from repro.cluster.protocol import (FrameClosed, FrameError,
                                     recv_frame, send_frame)
 from repro.cluster.ring import (ConsistentHashRing, hot_set_affinity,
@@ -53,35 +54,70 @@ def _reg():
 
 class NodeClient:
     """Blocking frame-RPC client to one node agent (thread-safe: one
-    in-flight call at a time per client)."""
+    in-flight call at a time per client).
+
+    ``retry`` (a :class:`~repro.cluster.ha.RetryPolicy`) governs every
+    timeout: ``connect()`` retries refused connections with capped
+    jittered backoff — a node agent still binding its socket no longer
+    fails the whole router bring-up — and each call runs under the
+    policy's per-call socket timeout instead of one fixed 30 s knob.
+    ``call(..., idempotent=True)`` additionally reconnects and resends
+    on transient failures; invocation frames must never set it (a lost
+    reply after the node admitted the request would double-admit on
+    resend and break conservation).
+    """
 
     def __init__(self, node_id: str, host: str, port: int, *,
-                 timeout_s: float = 30.0) -> None:
+                 retry: Optional[RetryPolicy] = None,
+                 timeout_s: Optional[float] = None) -> None:
         self.node_id = node_id
         self.host = host
         self.port = port
-        self.timeout_s = timeout_s
+        if retry is None:
+            retry = (RetryPolicy(call_timeout_s=timeout_s)
+                     if timeout_s is not None else RetryPolicy())
+        self.retry = retry
         self._lock = threading.Lock()
         self._sock: Optional[socket.socket] = None
 
+    def _ensure_sock(self) -> socket.socket:
+        # caller holds self._lock
+        if self._sock is None:
+            sock = self.retry.run(
+                lambda: socket.create_connection(
+                    (self.host, self.port),
+                    timeout=self.retry.connect_timeout_s),
+                what=f"connect to node {self.node_id}")
+            sock.settimeout(self.retry.call_timeout_s or None)
+            self._sock = sock
+        return self._sock
+
     def connect(self) -> dict:
         with self._lock:
-            if self._sock is None:
-                self._sock = socket.create_connection(
-                    (self.host, self.port), timeout=self.timeout_s)
-        return self.call({"cmd": "hello"})
+            self._ensure_sock()
+        return self.call({"cmd": "hello"}, idempotent=True)
 
-    def call(self, obj: dict) -> dict:
-        with self._lock:
-            if self._sock is None:
-                raise ConnectionError(
-                    f"node {self.node_id} is not connected")
-            try:
-                send_frame(self._sock, obj)
-                return recv_frame(self._sock)
-            except (OSError, FrameClosed, FrameError):
-                self.close()
-                raise
+    def call(self, obj: dict, *, idempotent: bool = False) -> dict:
+        def _once() -> dict:
+            with self._lock:
+                sock = self._sock
+                if sock is None:
+                    if not idempotent:
+                        raise ConnectionError(
+                            f"node {self.node_id} is not connected")
+                    sock = self._ensure_sock()
+                try:
+                    send_frame(sock, obj)
+                    return recv_frame(sock)
+                except (OSError, FrameClosed, FrameError):
+                    self.close()
+                    raise
+
+        if not idempotent:
+            return _once()
+        return self.retry.run(
+            _once, what=f"call {obj.get('cmd')!r} on node "
+                        f"{self.node_id}")
 
     def close(self) -> None:
         sock, self._sock = self._sock, None
@@ -105,7 +141,9 @@ class ClusterRouter:
     def __init__(self, clients: dict[str, NodeClient], *,
                  strategy: str = "sharing",
                  hot_sets: Optional[dict[str, list[str]]] = None,
-                 seed: int = 0, fault_hook=None) -> None:
+                 seed: int = 0, fault_hook=None,
+                 retry: Optional[RetryPolicy] = None,
+                 router_id: str = "router", epoch: int = 0) -> None:
         if not clients:
             raise ValueError("router needs at least one node")
         self.clients = dict(clients)
@@ -113,6 +151,9 @@ class ClusterRouter:
         self.hot_sets = dict(hot_sets or {})
         self.seed = seed
         self.fault_hook = fault_hook
+        self.retry = retry or RetryPolicy()
+        self.router_id = router_id
+        self.epoch = epoch
         self.ring = ConsistentHashRing(self.clients, seed=seed)
         self.node_apps: dict[str, list[str]] = {}
         self.placement: dict[str, str] = {}
@@ -121,21 +162,142 @@ class ClusterRouter:
         self.router_sheds = 0  # arrivals no live node could take
         self.migrations: list[dict] = []
         self.lost_nodes: list[str] = []
+        self.departed: list[str] = []  # left cleanly via plan_leave
+        self.handoffs = {"warm": 0, "cold": 0, "stalled": 0,
+                         "requeued": 0}
         self._node_payloads: dict[str, dict] = {}
         self._node_samples: dict[str, list[float]] = {}
+        self._rep: Optional[LedgerReplicator] = None
+        self._halted = False
         self._t0 = time.monotonic()
 
+    @classmethod
+    def resume(cls, clients: dict[str, NodeClient], *, ledger: dict,
+               router_id: str, epoch: int, strategy: str = "sharing",
+               hot_sets: Optional[dict[str, list[str]]] = None,
+               seed: int = 0, retry: Optional[RetryPolicy] = None,
+               fault_hook=None) -> "ClusterRouter":
+        """Bring a promoted standby's replicated ledger back to life:
+        restore placement/counts/history from the replica, then
+        ``connect(reconcile=True)`` overwrites the per-node admission
+        counts with each live node's own ledger (the ground truth for
+        whatever was in flight when the old leader died)."""
+        router = cls(clients, strategy=strategy, hot_sets=hot_sets,
+                     seed=seed, fault_hook=fault_hook, retry=retry,
+                     router_id=router_id, epoch=epoch)
+        router.placement = dict(ledger.get("placement") or {})
+        router.routed_by_node = {
+            n: int(c) for n, c
+            in (ledger.get("routed_by_node") or {}).items()}
+        for n in router.clients:
+            router.routed_by_node.setdefault(n, 0)
+        router.router_sheds = int(ledger.get("router_sheds", 0))
+        router.migrations = [dict(m) for m
+                             in ledger.get("migrations") or []]
+        router.lost_nodes = list(ledger.get("lost_nodes") or [])
+        router.departed = list(ledger.get("departed") or [])
+        router._node_payloads = {
+            n: dict(p) for n, p
+            in (ledger.get("node_payloads") or {}).items()}
+        router._node_samples = {
+            n: [float(x) for x in s] for n, s
+            in (ledger.get("node_samples") or {}).items()}
+        router.connect(reconcile=True)
+        return router
+
     # ----------------------------------------------------------- topology
-    def connect(self) -> dict[str, str]:
+    def connect(self, *, reconcile: bool = False) -> dict[str, str]:
         """Hello every node, learn who deploys what, compute the
-        placement.  Returns the app -> node map."""
+        placement.  Returns the app -> node map.
+
+        ``reconcile=True`` (the promoted-standby path) keeps the
+        resumed placement instead of recomputing it, overwrites
+        ``routed_by_node`` with the admission counters each node ships
+        in its ``hello`` reply, and re-places only the apps whose
+        owner did not survive the failover."""
         for node_id, client in sorted(self.clients.items()):
             hello = client.connect()
             self.node_apps[node_id] = list(hello.get("apps", []))
-        self._place_all()
+            if reconcile:
+                counts = hello.get("counts") or {}
+                if "requests" in counts:
+                    self.routed_by_node[node_id] = \
+                        int(counts["requests"])
+        if reconcile:
+            self._reconcile_placement()
+        else:
+            self._place_all()
         _reg().gauge("repro_cluster_nodes",
                      "live cluster nodes").set(len(self.clients))
         return dict(self.placement)
+
+    def _reconcile_placement(self) -> None:
+        """After a failover: keep every placement whose owner is still
+        live, re-place (or drop) the rest."""
+        apps = sorted({a for apps in self.node_apps.values()
+                       for a in apps} | set(self.placement))
+        for app in apps:
+            owner = self.placement.get(app)
+            if owner in self.clients:
+                continue
+            nodes = self._advertisers(app)
+            if not nodes:
+                if owner is not None:
+                    del self.placement[app]
+                    self._emit({"k": "unplace", "app": app})
+                continue
+            target = self._choose(app, nodes)
+            self.placement[app] = target
+            self._emit({"k": "place", "app": app, "node": target})
+            if owner is not None:
+                mig = {"app": app, "from": owner, "to": target,
+                       "at": round(time.monotonic() - self._t0, 3),
+                       "reason": "router_failover"}
+                self.migrations.append(mig)
+                self._emit({"k": "migration", "m": mig})
+
+    # -------------------------------------------------------- replication
+    def enable_replication(self, *, host: str = "127.0.0.1",
+                           port: int = 0) -> tuple:
+        """Start streaming this router's ledger to standbys; returns
+        the ``(host, port)`` standbys connect to.  Idle cost when no
+        standby is attached: one ``is not None`` check per emit."""
+        if self._rep is None:
+            self._rep = LedgerReplicator(self.ledger_snapshot,
+                                         host=host, port=port)
+        return (self._rep.host, self._rep.port)
+
+    def ledger_snapshot(self) -> dict:
+        """The replicated state (see :func:`repro.cluster.ha
+        .empty_ledger` for the shape)."""
+        snap = empty_ledger(self.epoch)
+        snap["placement"] = dict(self.placement)
+        snap["routed_by_node"] = dict(self.routed_by_node)
+        snap["router_sheds"] = self.router_sheds
+        snap["migrations"] = [dict(m) for m in self.migrations]
+        snap["lost_nodes"] = list(self.lost_nodes)
+        snap["departed"] = list(self.departed)
+        snap["node_payloads"] = {n: dict(p) for n, p
+                                 in self._node_payloads.items()}
+        snap["node_samples"] = {n: list(s) for n, s
+                                in self._node_samples.items()}
+        return snap
+
+    def _emit(self, entry: dict) -> None:
+        if self._rep is not None:
+            self._rep.publish(entry)
+
+    def halt(self) -> None:
+        """Abrupt router death (failover drills): node sockets and the
+        replication stream die with no drain and no goodbye.  The
+        router is unusable afterwards — that is the point."""
+        self._halted = True
+        if self._rep is not None:
+            self._rep.stop(abrupt=True)
+        for client in self.clients.values():
+            client.close()
+        _LOG.warning("router-halted", router=self.router_id,
+                     epoch=self.epoch)
 
     def _advertisers(self, app: str) -> list[str]:
         return sorted(n for n, apps in self.node_apps.items()
@@ -178,7 +340,12 @@ class ClusterRouter:
                 pass
         client.close()
         self.ring.remove(node_id)
+        # drop the advertisement too: a ghost entry would keep the
+        # dead node in every _advertisers() scan and make the summary
+        # unable to tell "left" from "still advertised"
+        self.node_apps.pop(node_id, None)
         self.lost_nodes.append(node_id)
+        self._emit({"k": "lost", "node": node_id})
         moved = []
         for app, owner in sorted(self.placement.items()):
             if owner != node_id:
@@ -186,14 +353,16 @@ class ClusterRouter:
             nodes = self._advertisers(app)
             if not nodes:
                 del self.placement[app]  # nobody left deploys it
+                self._emit({"k": "unplace", "app": app})
                 continue
             target = self._choose(app, nodes)
             self.placement[app] = target
             moved.append(app)
-            self.migrations.append({
-                "app": app, "from": node_id, "to": target,
-                "at": round(time.monotonic() - self._t0, 3),
-                "reason": reason})
+            mig = {"app": app, "from": node_id, "to": target,
+                   "at": round(time.monotonic() - self._t0, 3),
+                   "reason": reason}
+            self.migrations.append(mig)
+            self._emit({"k": "migration", "m": mig})
             _reg().counter("repro_cluster_migrations_total",
                            "app migrations between nodes, by reason",
                            labels=("reason",)).labels(
@@ -210,6 +379,113 @@ class ClusterRouter:
                               "moved": len(moved)})
         return {"node": node_id, "moved": moved}
 
+    def plan_leave(self, node_id: str, *, warm: bool = True) -> dict:
+        """Planned decommission with **warm-state handoff**: for every
+        app the departing node owns, ship its deployed report artifact
+        (and sim profile) to the chosen successor, let the successor
+        pre-warm its zygote, and only then flip the placement.  The
+        departing node then drains — in-flight work finishes, and its
+        still-queued requests come back over the wire (counted
+        ``flushed`` in its ledger) to be re-admitted at the new owners
+        instead of hitting the floor.
+
+        A ``handoff_stall`` chaos fault (or any transport error during
+        the prewarm exchange) downgrades that app to today's cold
+        re-place — placement still flips, accounting stays intact.
+        ``warm=False`` skips the prewarm exchange entirely (the
+        cold-baseline arm of the handoff benchmark).
+        """
+        client = self.clients.get(node_id)
+        if client is None:
+            return {"node": node_id, "already_lost": True}
+        tracer = get_tracer()
+        t0 = now_ms() if tracer.enabled else 0.0
+        handoffs: list[dict] = []
+        for app, owner in sorted(self.placement.items()):
+            if owner != node_id:
+                continue
+            nodes = [n for n in self._advertisers(app)
+                     if n != node_id]
+            if not nodes:
+                del self.placement[app]  # nobody else deploys it
+                self._emit({"k": "unplace", "app": app})
+                continue
+            target = self._choose(app, nodes)
+            mode = "cold"
+            if warm:
+                try:
+                    if self.fault_hook is not None:
+                        self.fault_hook("handoff", app=app,
+                                        node=node_id, target=target)
+                    export = client.call(
+                        {"cmd": "handoff_export", "app": app},
+                        idempotent=True)
+                    pre = self.clients[target].call(
+                        {"cmd": "prewarm", "app": app,
+                         "report": export.get("report"),
+                         "profile": export.get("profile")},
+                        idempotent=True)
+                    if pre.get("warm"):
+                        mode = "warm"
+                except HandoffStallFault:
+                    self.handoffs["stalled"] += 1
+                except (ConnectionError, OSError, FrameClosed,
+                        FrameError) as exc:
+                    _LOG.warning("handoff-degraded", app=app,
+                                 node=node_id, target=target,
+                                 error=repr(exc))
+            self.handoffs[mode] += 1
+            self.placement[app] = target
+            self._emit({"k": "place", "app": app, "node": target})
+            mig = {"app": app, "from": node_id, "to": target,
+                   "at": round(time.monotonic() - self._t0, 3),
+                   "reason": f"handoff_{mode}"}
+            self.migrations.append(mig)
+            self._emit({"k": "migration", "m": mig})
+            _reg().counter("repro_cluster_migrations_total",
+                           "app migrations between nodes, by reason",
+                           labels=("reason",)).labels(
+                reason=f"handoff_{mode}").inc()
+            handoffs.append({"app": app, "to": target, "mode": mode})
+        # drain the departing node; queued requests come home with the
+        # summary instead of being flushed to the floor
+        queued: list[dict] = []
+        try:
+            reply = client.call({"cmd": "shutdown", "flush": True,
+                                 "return_queued": True})
+            self._harvest(node_id, reply)
+            queued = list(reply.get("queued") or [])
+        except (ConnectionError, OSError, FrameClosed,
+                FrameError) as exc:
+            _LOG.warning("plan-leave-drain-lost", node=node_id,
+                         error=repr(exc))
+        client.close()
+        self.clients.pop(node_id, None)
+        self.ring.remove(node_id)
+        self.node_apps.pop(node_id, None)
+        self.departed.append(node_id)
+        self._emit({"k": "departed", "node": node_id})
+        requeued = 0
+        for item in queued:
+            qapp = item.get("app")
+            if qapp is None:
+                continue
+            self.route(qapp, item.get("handler"))
+            requeued += 1
+        self.handoffs["requeued"] += requeued
+        _reg().gauge("repro_cluster_nodes",
+                     "live cluster nodes").set(len(self.clients))
+        _LOG.info("node-departed", node=node_id,
+                  handoffs=len(handoffs), requeued=requeued)
+        if tracer.enabled:
+            tracer.add("cluster.handoff", trace_id=new_id(),
+                       t_start_ms=t0, duration_ms=now_ms() - t0,
+                       attrs={"node": node_id,
+                              "handoffs": len(handoffs),
+                              "requeued": requeued})
+        return {"node": node_id, "handoffs": handoffs,
+                "requeued": requeued}
+
     def node_join(self, node_id: str, client: NodeClient) -> dict:
         """A node came up: hello it, hand it the apps the ring says it
         now owns (among its advertised set)."""
@@ -225,11 +501,13 @@ class ClusterRouter:
             if target == node_id and old != node_id:
                 self.placement[app] = node_id
                 moved.append(app)
+                self._emit({"k": "place", "app": app, "node": node_id})
                 if old is not None:
-                    self.migrations.append({
-                        "app": app, "from": old, "to": node_id,
-                        "at": round(time.monotonic() - self._t0, 3),
-                        "reason": "node_join"})
+                    mig = {"app": app, "from": old, "to": node_id,
+                           "at": round(time.monotonic() - self._t0, 3),
+                           "reason": "node_join"}
+                    self.migrations.append(mig)
+                    self._emit({"k": "migration", "m": mig})
         _reg().gauge("repro_cluster_nodes",
                      "live cluster nodes").set(len(self.clients))
         _LOG.info("node-joined", node=node_id, moved=len(moved))
@@ -252,16 +530,26 @@ class ClusterRouter:
     # ------------------------------------------------------------- serving
     def route(self, app: str, handler: Optional[str] = None) -> dict:
         """Forward one invocation to the app's owner; on a dead node,
-        fail over once (the node is declared lost, apps re-place, and
-        this invocation goes to the new owner)."""
+        fail over (the node is declared lost, apps re-place, and this
+        invocation goes to the new owner).  The failover loop runs
+        under :class:`~repro.cluster.ha.RetryPolicy`: up to
+        ``retry.attempts`` owners are tried within ``deadline_s``,
+        with jittered backoff between consecutive failures.  The
+        invocation frame itself is never resent to the *same* node —
+        only re-placed — so a node that admitted the request can never
+        be fed it twice."""
+        if self._halted:
+            raise RuntimeError(
+                f"router {self.router_id} was halted")
         tracer = get_tracer()
         t0 = now_ms() if tracer.enabled else 0.0
-        for _attempt in (0, 1):
+        retry = self.retry
+        rng = retry.rng()
+        deadline = time.monotonic() + retry.deadline_s
+        for attempt in range(retry.attempts):
             node_id = self.placement.get(app)
             if node_id is None or node_id not in self.clients:
-                self.router_sheds += 1
-                return {"ok": False, "outcome": "no-node",
-                        "error": f"no live node deploys {app!r}"}
+                break  # no live owner: shed below
             if self.fault_hook is not None:
                 try:
                     self.fault_hook("route", app=app, node=node_id)
@@ -274,9 +562,16 @@ class ClusterRouter:
             except (ConnectionError, OSError, FrameClosed,
                     FrameError):
                 self.node_leave(node_id, reason="connection_lost")
+                if attempt + 1 < retry.attempts:
+                    delay = retry.backoff_s(attempt, rng)
+                    if time.monotonic() + delay >= deadline:
+                        break
+                    if delay > 0:
+                        time.sleep(delay)
                 continue
             self.routed_by_node[node_id] = \
                 self.routed_by_node.get(node_id, 0) + 1
+            self._emit({"k": "route", "node": node_id})
             _reg().counter("repro_cluster_routed_total",
                            "invocations routed, by node and outcome",
                            labels=("node", "outcome")).labels(
@@ -290,6 +585,7 @@ class ClusterRouter:
                                   "outcome": reply.get("outcome")})
             return {**reply, "node": node_id}
         self.router_sheds += 1
+        self._emit({"k": "shed"})
         return {"ok": False, "outcome": "no-node",
                 "error": f"no surviving owner for {app!r}"}
 
@@ -299,6 +595,11 @@ class ClusterRouter:
             self._node_payloads[node_id] = reply.get("summary") or {}
             self._node_samples[node_id] = [
                 float(x) for x in reply.get("latency_samples") or []]
+            # replicate the harvested ledger: a standby promoted after
+            # this node died still owes its counts to the rollup
+            self._emit({"k": "harvest", "node": node_id,
+                        "summary": self._node_payloads[node_id],
+                        "samples": self._node_samples[node_id]})
 
     def shutdown(self, *, flush: bool = False) -> dict:
         """Drain every node, merge ledgers and sample pools, return
@@ -315,9 +616,27 @@ class ClusterRouter:
                              error=repr(exc))
             finally:
                 client.close()
+        if self._rep is not None:
+            self._rep.stop()
         lat_pool = PercentilePool.merge([
             PercentilePool.of_lists([samples])
             for samples in self._node_samples.values()])
+        # "nodes" distinguishes how each node left the topology:
+        # live at shutdown, lost (crash / declared dead) or departed
+        # (clean plan_leave) — ghosts can no longer masquerade as
+        # advertisers (node_apps is scrubbed on both exits)
+        router_info = {
+            "id": self.router_id,
+            "epoch": self.epoch,
+            "sheds": self.router_sheds,
+            "nodes": sorted(set(self.clients) | set(self.lost_nodes)
+                            | set(self.departed)),
+            "departed": sorted(self.departed),
+            "retry": self.retry.to_dict(),
+        }
+        extra: dict = {}
+        if any(self.handoffs.values()):
+            extra["handoffs"] = dict(self.handoffs)
         payload = make_cluster_summary_payload(
             source="cluster-route",
             strategy=self.strategy,
@@ -327,9 +646,8 @@ class ClusterRouter:
             migrations=self.migrations,
             lost_nodes=self.lost_nodes,
             routed_by_node=self.routed_by_node,
-            router={"sheds": self.router_sheds,
-                    "nodes": sorted(set(self.clients)
-                                    | set(self.lost_nodes))},
+            router=router_info,
             duration_s=round(time.monotonic() - self._t0, 3),
+            **extra,
         )
         return payload

@@ -16,6 +16,8 @@ components call it at well-known **sites** with keyword context::
     fault_hook("rewarm",     app=...)
     fault_hook("route",      app=..., node=...)   # cluster router
     fault_hook("profiler",   app=...)             # adaptive re-optimize
+    fault_hook("election",   router=..., epoch=...)  # HA leader path
+    fault_hook("handoff",    app=..., node=..., target=...)  # warm handoff
 
 :class:`FaultInjector` is the hook implementation this module ships: it
 consumes a :class:`FaultPlan` — a deterministic, seed-generatable list
@@ -44,6 +46,14 @@ profiler_stall      profiler    optional ``delay_s`` sleep, then raise
                                 inside the adaptive re-optimization
                                 step; the AdaptiveLoop must swallow the
                                 error into its ring and keep serving
+router_loss         election    raise RouterLossFault: the HA harness
+                                halts the leader router abruptly; a
+                                standby must win the lease election and
+                                resume from its replicated ledger
+handoff_stall       handoff     optional ``delay_s`` sleep, then raise
+                                HandoffStallFault mid warm handoff; the
+                                router falls back to cold re-place with
+                                accounting intact
 ==================  ==========  =========================================
 
 Everything is deterministic given the plan: matching is by per-event
@@ -71,7 +81,9 @@ __all__ = [
     "FaultEvent",
     "FaultInjector",
     "FaultPlan",
+    "HandoffStallFault",
     "NodeLossFault",
+    "RouterLossFault",
     "chaos_report_payload",
 ]
 
@@ -89,12 +101,14 @@ _KIND_SPEC: dict[str, tuple[str, Optional[str]]] = {
     "fail_rewarm": ("rewarm", None),
     "node_loss": ("route", None),
     "profiler_stall": ("profiler", None),
+    "router_loss": ("election", None),
+    "handoff_stall": ("handoff", None),
 }
 
 FAULT_KINDS = tuple(sorted(_KIND_SPEC))
 
 SITES = ("protocol", "spawn_app", "dispatch", "cold_start", "rewarm",
-         "route", "profiler")
+         "route", "profiler", "election", "handoff")
 
 
 class NodeLossFault(RuntimeError):
@@ -103,6 +117,21 @@ class NodeLossFault(RuntimeError):
     declaring the routed node lost: its fleet is finalized (queued work
     flushed into its summary, preserving conservation) and its apps are
     re-placed onto the surviving nodes."""
+
+
+class RouterLossFault(RuntimeError):
+    """Injected *leader router* failure, raised at the HA coordinator's
+    ``election`` site (:mod:`repro.cluster.ha`).  The coordinator halts
+    the leader abruptly (sockets die, no drain, lease left to expire or
+    be fenced) and promotes the standby, which must win a majority
+    lease election and resume routing from its replicated ledger."""
+
+
+class HandoffStallFault(RuntimeError):
+    """Injected stall during a planned warm-state handoff, raised at
+    the router's ``handoff`` site.  The router abandons the prewarm for
+    that app and falls back to the unplanned cold re-place path —
+    placement still flips and conservation must still hold."""
 
 
 @dataclass(frozen=True)
@@ -336,7 +365,7 @@ class FaultInjector:
                         os.kill(base.pid, signal.SIGKILL)
                     except ProcessLookupError:
                         pass
-            elif ev.kind == "profiler_stall":
+            elif ev.kind in ("profiler_stall", "handoff_stall"):
                 if ev.delay_s:
                     time.sleep(ev.delay_s)  # the "stall" half
                 raiser = raiser or ev
@@ -370,6 +399,11 @@ class FaultInjector:
         if ev.kind == "node_loss":
             raise NodeLossFault(f"{tag} injected node loss while "
                                 f"routing {app!r}")
+        if ev.kind == "router_loss":
+            raise RouterLossFault(f"{tag} injected leader router loss")
+        if ev.kind == "handoff_stall":
+            raise HandoffStallFault(f"{tag} injected warm-handoff "
+                                    f"stall for {app!r}")
         if ev.kind == "profiler_stall":
             raise RuntimeError(f"{tag} injected live-profiler stall "
                                f"for {app!r}")

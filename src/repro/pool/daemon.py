@@ -224,6 +224,11 @@ class SimFleetBackend:
                 "sheds": sum(s.report.sheds for s in reps.values()),
                 "shed_reasons": reasons,
                 "queued": sum(len(s.queue) for s in reps.values()),
+                # mid-run "served" must exclude the still-queued (they
+                # are neither shed nor flushed yet), or a failover
+                # reconciliation would double-count them
+                "served": sum(s.report.served - len(s.queue)
+                              for s in reps.values()),
             }
 
     def latency_samples(self, cap: int = 50_000) -> list[float]:
@@ -264,6 +269,68 @@ class SimFleetBackend:
             except Exception as exc:  # a bad artifact must not kill serving
                 out[app] = {"ok": False, "error": repr(exc)}
         return out
+
+    # ------------------------------------------------ warm-state handoff
+    def export_app(self, app: str) -> dict:
+        """Departing-owner side of a planned migration: package the
+        app's warm state — its deployed report artifact (if any) plus
+        the sim ground-truth profile — for the new owner to pre-warm
+        from *before* placement flips."""
+        import dataclasses
+        import os
+        with self._lock:
+            prof = self.manager.profiles.get(app)
+        if prof is None:
+            raise KeyError(f"export for unknown app {app!r}")
+        out: dict = {"app": app,
+                     "profile": dataclasses.asdict(prof)}
+        if self.reports_dir:
+            path = os.path.join(self.reports_dir, f"{app}.json")
+            if os.path.exists(path):
+                from repro.api.artifacts import (ReportArtifact,
+                                                 load_report)
+                try:
+                    out["report"] = ReportArtifact(
+                        load_report(path)).to_payload()
+                except Exception:
+                    pass  # a bad artifact ships nothing, not a crash
+        return out
+
+    def prewarm_app(self, app: str, report=None,
+                    profile=None) -> dict:
+        """New-owner side: adopt the shipped profile/report and force
+        the app's zygote resident before the first migrated request
+        lands, so it pays ``warm_init_ms`` instead of cold."""
+        from repro.pool.simulator import AppProfile
+        with self._lock:
+            if app not in self.manager.profiles and profile:
+                import dataclasses
+                fields = {f.name for f in
+                          dataclasses.fields(AppProfile)}
+                kw = {k: v for k, v in dict(profile).items()
+                      if k in fields}
+                kw.setdefault("app", app)
+                self.manager.add_app(AppProfile(**kw))
+            if report is not None:
+                policy = self.manager.policy
+                if hasattr(policy, "add_report"):
+                    from repro.api.artifacts import ReportArtifact
+                    try:
+                        policy.add_report(
+                            ReportArtifact.from_payload(
+                                dict(report)).report)
+                    except Exception:
+                        pass  # bad shipped report: warm without it
+            out = self.manager.prewarm_zygote(app)
+        return {"app": app, **out}
+
+    def collect_queued(self) -> list[dict]:
+        """Planned-drain flush: requests still queued here are counted
+        flushed locally and *returned* (as wire dicts) for the router
+        to re-admit at the new owners."""
+        with self._lock:
+            reqs = self.manager.flush_queued()
+        return [{"app": r.app, "handler": r.handler} for r in reqs]
 
     def stop(self) -> None:
         pass
@@ -775,6 +842,46 @@ class RealFleetBackend:
         if not self.reports_dir:
             return {}
         return self.fleet.rewarm_from_dir(self.reports_dir)
+
+    # ------------------------------------------------ warm-state handoff
+    def export_app(self, app: str) -> dict:
+        """Departing-owner side of a planned migration: ship the app's
+        in-memory report artifact so the new owner's prewarm boots a
+        zygote with the *proven* hot set, not a bare one."""
+        if app not in self.fleet.app_dirs:
+            raise KeyError(f"export for unknown app {app!r}")
+        out: dict = {"app": app}
+        rep = self.fleet.reports.get(app)
+        if rep is not None:
+            from repro.api.artifacts import ReportArtifact
+            try:
+                out["report"] = ReportArtifact(rep).to_payload()
+            except Exception:
+                pass  # a bad artifact ships nothing, not a crash
+        return out
+
+    def prewarm_app(self, app: str, report=None,
+                    profile=None) -> dict:
+        """New-owner side: boot the app's zygote (adopting the shipped
+        report's hot set) before placement flips here.  ``profile`` is
+        sim-only state and ignored on the real tier."""
+        return self.fleet.prewarm_app(app, report=report)
+
+    def collect_queued(self) -> list[dict]:
+        """Planned-drain flush: pop every still-queued request, count
+        it flushed locally (this node admitted it and must account for
+        it), and return it for re-admission at the new owners."""
+        popped: list = []
+        with self._cond:
+            for app, q in self._queues.items():
+                while q:
+                    popped.append(q.popleft())
+                    self._stats[app].flushed += 1
+            self._cond.notify_all()
+        if popped:
+            _m_flushed(len(popped))
+        return [{"app": req.app, "handler": req.handler}
+                for _enq_t, req, _ids in popped]
 
     def stop(self) -> None:
         self.fleet.stop()

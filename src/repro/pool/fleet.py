@@ -640,6 +640,46 @@ class FleetManager:
         self.profiles.pop(app, None)
         return {"flushed": flushed}
 
+    def prewarm_zygote(self, app: str,
+                       now: Optional[float] = None) -> dict:
+        """Warm-handoff target side: force ``app``'s zygote resident
+        *before* placement flips to this node, so the first migrated
+        request pays ``warm_init_ms`` instead of ``cold_init_ms``.
+        Budget still rules — a prewarm that does not fit degrades to a
+        cold handoff rather than blowing the cap."""
+        st = self._apps.get(app)
+        if st is None:
+            return {"warm": False, "reason": "unknown_app"}
+        t = self._last_t if now is None else max(now, self._last_t)
+        if st.zygote_up:
+            return {"warm": True, "already": True}
+        charge = st.zygote_charge_mb(self.shared_base_mb)
+        if (self.budget_mb is not None
+                and self._used_mb() + charge > self.budget_mb):
+            return {"warm": False, "reason": "budget"}
+        st.zygote_up = True
+        st.zygote_since = t
+        self._note_peak()
+        return {"warm": True, "already": False}
+
+    def flush_queued(self,
+                     now: Optional[float] = None) -> list[Request]:
+        """Planned-drain flush: give every queue one last chance to
+        start on a free instance, then *return* whatever is still
+        waiting instead of dropping it.  The returned requests are
+        counted ``flushed`` here (conservation: this node admitted
+        them and must account for them) — the caller re-admits them
+        elsewhere as fresh arrivals."""
+        t = self._last_t if now is None else max(now, self._last_t)
+        out: list[Request] = []
+        for st in self._apps.values():
+            self._drain_queue(st, t)
+            if st.queue:
+                st.report.flushed += len(st.queue)
+                out.extend(req for _, req in st.queue)
+                st.queue.clear()
+        return out
+
     def finish(self, end_t: Optional[float] = None) -> FleetSummary:
         """Drain queues, account trailing memory, return the summary.
         Requests still queued at ``end_t`` (nothing freed up in time)
@@ -1453,6 +1493,75 @@ class ZygoteFleet:
             if br is not None:
                 br.record_success()
         return {"app": app, "skipped": False, **out}
+
+    def prewarm_app(self, app: str, report=None) -> dict:
+        """Warm-handoff target side: boot ``app``'s zygote *now*,
+        ahead of placement flipping to this node, optionally adopting
+        the departing owner's report artifact so the zygote pre-imports
+        the proven hot set instead of re-learning it.  ``report`` is a
+        :class:`~repro.api.artifacts.ReportArtifact` wire payload
+        (dict) or anything :func:`repro.api.as_report` accepts.
+
+        A prewarm that cannot boot (budget exhausted, breaker open,
+        boot backoff gating) returns ``{"warm": False, ...}`` instead
+        of raising — the handoff still happens, just cold."""
+        if app not in self.app_dirs:
+            raise KeyError(f"prewarm for unknown app {app!r}")
+        if report is not None:
+            from repro.api.artifacts import ReportArtifact, as_report
+            try:
+                rep = (ReportArtifact.from_payload(dict(report)).report
+                       if isinstance(report, dict)
+                       else as_report(report))
+            except Exception:
+                pass  # bad shipped artifact: warm from what we know
+            else:
+                self.reports[app] = rep
+        br = self.breakers.get(app)
+        if br is not None and br.open:
+            return {"ok": False, "app": app, "warm": False,
+                    "reason": "breaker_open"}
+        fs = self.servers.get(app)
+        if fs is not None and fs.alive:
+            return {"ok": True, "app": app, "warm": True,
+                    "already": True}
+        if (self.budget_mb is not None
+                and self.used_mb() >= self.budget_mb):
+            return {"ok": False, "app": app, "warm": False,
+                    "reason": "budget"}
+        try:
+            if self.shared_base and (self.base is None
+                                     or not self.base.alive):
+                self.ensure_base()
+            if fs is None:
+                fs = ForkServer(self.app_dirs[app],
+                                preload=self._app_preload(app),
+                                timeout_s=self.timeout_s,
+                                base=self.base,
+                                fault_hook=self.fault_hook,
+                                boot_backoff_s=self.boot_backoff_s,
+                                clock=self._clock)
+                fs.start()
+                self.servers[app] = fs
+            else:
+                if self.shared_base:
+                    fs.base = self.base
+                fs.restart(preload=self._app_preload(app))
+        except ForkServerBackoff as exc:
+            return {"ok": False, "app": app, "warm": False,
+                    "reason": "backoff", "error": str(exc)}
+        except ForkServerError as exc:
+            self._record_boot_failure(app, exc)
+            return {"ok": False, "app": app, "warm": False,
+                    "reason": "boot_failed", "error": repr(exc)}
+        if app in self.skipped:
+            self.skipped.remove(app)
+        if app in self.boot_failed:
+            self.boot_failed.remove(app)
+        if br is not None:
+            br.record_success()
+        return {"ok": True, "app": app, "warm": fs.alive,
+                "already": False}
 
     def rewarm_from_dir(self, reports_dir: str) -> dict:
         """Daemon rewarm tick: re-load every ``<app>.json`` report

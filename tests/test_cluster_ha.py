@@ -1,0 +1,483 @@
+"""Cluster HA tests: the retry/timeout/backoff policy, lease-witness
+election with epoch fencing, ledger replication to a warm standby,
+leader failover (chaos ``router_loss``), warm-state handoff on planned
+decommission (and its ``handoff_stall`` cold fallback), and the
+double-failure shed path.
+
+The same conservation invariant as test_cluster.py — ``requests ==
+served + sheds + flushed + errors + abandoned`` per node, globally,
+and against the router ledger — must survive every failure injected
+here: that is the point of the HA tier.
+"""
+
+import argparse
+import socket
+import threading
+import time
+
+import pytest
+
+from repro.cluster import (ClusterRouter, ElectionLost, FrameClosed,
+                           FrameError, LeaseWitness, LedgerReplicator,
+                           NodeAgent, NodeClient, ReplicatedRouter,
+                           RetryExhausted, RetryPolicy, StandbyRouter,
+                           elect, synthetic_cluster_workload)
+from repro.cluster.ha import (add_retry_flags, apply_ledger_entry,
+                              empty_ledger)
+from repro.pool import (FleetManager, IdleTimeoutPolicy, QueueConfig,
+                        SimFleetBackend)
+from repro.pool.chaos import FaultEvent, FaultInjector, FaultPlan
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy
+# ---------------------------------------------------------------------------
+
+def test_retry_policy_classing():
+    assert RetryPolicy.retryable(ConnectionRefusedError())
+    assert RetryPolicy.retryable(socket.timeout())
+    assert RetryPolicy.retryable(FrameClosed("eof"))
+    # a protocol desync means resending would desync further
+    assert not RetryPolicy.retryable(FrameError("bad prefix"))
+    assert not RetryPolicy.retryable(ValueError("logic bug"))
+
+
+def test_retry_policy_backoff_exponential_capped_and_seeded():
+    p = RetryPolicy(backoff_base_s=0.1, backoff_cap_s=0.4, jitter=0.0)
+    assert [p.backoff_s(a) for a in range(4)] == [0.1, 0.2, 0.4, 0.4]
+    j = RetryPolicy(backoff_base_s=0.1, backoff_cap_s=0.4, jitter=0.5,
+                    seed=7)
+    a, b = j.backoff_s(1, j.rng()), j.backoff_s(1, j.rng())
+    assert a == b  # seeded: deterministic
+    # jitter stays within ±jitter/2 of the exponential base
+    assert 0.2 * 0.75 <= a <= 0.2 * 1.25
+
+
+def test_retry_policy_run_retries_transient_then_succeeds():
+    calls, slept = [], []
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise ConnectionResetError("transient")
+        return {"ok": True}
+    p = RetryPolicy(attempts=3, backoff_base_s=0.01, jitter=0.0)
+    assert p.run(flaky, sleep=slept.append) == {"ok": True}
+    assert len(calls) == 3
+    assert slept == [0.01, 0.02]
+
+
+def test_retry_policy_run_exhausts_as_connection_error():
+    def dead():
+        raise ConnectionRefusedError("nope")
+    p = RetryPolicy(attempts=2, backoff_base_s=0.0)
+    with pytest.raises(RetryExhausted) as ei:
+        p.run(dead, what="test call", sleep=lambda _s: None)
+    # failover paths catch ConnectionError; the cause is chained
+    assert isinstance(ei.value, ConnectionError)
+    assert isinstance(ei.value.__cause__, ConnectionRefusedError)
+
+
+def test_retry_policy_terminal_error_not_retried():
+    calls = []
+    def desync():
+        calls.append(1)
+        raise FrameError("oversize frame")
+    with pytest.raises(FrameError):
+        RetryPolicy(attempts=5).run(desync, sleep=lambda _s: None)
+    assert len(calls) == 1
+
+
+def test_retry_policy_validates():
+    with pytest.raises(ValueError):
+        RetryPolicy(attempts=0)
+    with pytest.raises(ValueError):
+        RetryPolicy(jitter=1.5)
+    with pytest.raises(ValueError):
+        RetryPolicy(deadline_s=-1.0)
+
+
+def test_retry_policy_from_cli_flags():
+    parser = argparse.ArgumentParser()
+    add_retry_flags(parser)
+    args = parser.parse_args(["--retry-attempts", "5",
+                              "--retry-backoff-s", "0.01",
+                              "--retry-deadline-s", "7.5"])
+    p = RetryPolicy.from_args(args)
+    assert p.attempts == 5
+    assert p.backoff_base_s == 0.01
+    assert p.deadline_s == 7.5
+    # unspecified flags keep the dataclass defaults
+    assert p.call_timeout_s == RetryPolicy().call_timeout_s
+    assert p.to_dict()["attempts"] == 5
+
+
+# ---------------------------------------------------------------------------
+# Lease witness + election
+# ---------------------------------------------------------------------------
+
+def test_lease_witness_grant_renew_and_epoch_fence():
+    t = [0.0]
+    w = LeaseWitness("nodeA", clock=lambda: t[0])
+    assert w.handle({"op": "acquire", "router": "ra", "epoch": 1,
+                     "ttl_s": 5.0})["granted"]
+    t[0] = 2.0  # inside the ttl: another router cannot steal it
+    assert not w.handle({"op": "acquire", "router": "rb", "epoch": 1,
+                         "ttl_s": 5.0})["granted"]
+    assert w.handle({"op": "renew", "router": "ra", "epoch": 1,
+                     "ttl_s": 5.0})["granted"]
+    # a higher epoch fences the old leader out immediately...
+    assert w.handle({"op": "acquire", "router": "rb", "epoch": 2,
+                     "ttl_s": 5.0})["granted"]
+    # ...and the deposed leader can never renew its stale epoch,
+    # even after the new lease expires
+    t[0] = 100.0
+    assert not w.handle({"op": "renew", "router": "ra", "epoch": 1,
+                         "ttl_s": 5.0})["granted"]
+    assert not w.handle({"op": "acquire", "router": "ra", "epoch": 1,
+                         "ttl_s": 5.0})["granted"]
+    assert w.epoch == 2
+    assert w.state()["rejections"] >= 3
+
+
+def test_lease_witness_expiry_frees_the_lease():
+    t = [0.0]
+    w = LeaseWitness("nodeA", clock=lambda: t[0])
+    assert w.handle({"op": "acquire", "router": "ra", "epoch": 1,
+                     "ttl_s": 5.0})["granted"]
+    t[0] = 6.0  # past the ttl: same epoch, new holder is fine
+    assert w.handle({"op": "acquire", "router": "rb", "epoch": 1,
+                     "ttl_s": 5.0})["granted"]
+    # an expired renew is a rejection, not a silent re-grant
+    t[0] = 20.0
+    assert not w.handle({"op": "renew", "router": "rb", "epoch": 1,
+                         "ttl_s": 5.0})["granted"]
+
+
+class _FakeWitness:
+    def __init__(self, granted=True):
+        self.granted = granted
+    def call(self, obj, *, idempotent=False):
+        assert obj["cmd"] == "lease" and idempotent
+        return {"granted": self.granted, "epoch": obj["epoch"]}
+
+
+class _DeadWitness:
+    def call(self, obj, *, idempotent=False):
+        raise ConnectionRefusedError("witness unreachable")
+
+
+def test_elect_needs_strict_majority_of_configured_set():
+    win = elect({"a": _FakeWitness(), "b": _FakeWitness(),
+                 "c": _FakeWitness(False)}, router_id="ra", epoch=1)
+    assert win["won"] and win["granted"] == 2 and win["witnesses"] == 3
+
+    lose = elect({"a": _FakeWitness(), "b": _FakeWitness(False),
+                  "c": _FakeWitness(False)}, router_id="ra", epoch=1)
+    assert not lose["won"]
+
+    # unreachable witnesses count AGAINST: 1 grant of 2 configured is
+    # not a strict majority — a partitioned minority cannot elect
+    # itself just because it can only see agreeable voters
+    part = elect({"a": _FakeWitness(), "b": _DeadWitness()},
+                 router_id="ra", epoch=1)
+    assert not part["won"]
+    assert part["granted"] == 1 and part["witnesses"] == 2
+    assert "error" in part["replies"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# Ledger replication
+# ---------------------------------------------------------------------------
+
+def test_apply_ledger_entry_folds_every_kind():
+    led = empty_ledger(epoch=1)
+    apply_ledger_entry(led, {"k": "route", "node": "n1"})
+    apply_ledger_entry(led, {"k": "route", "node": "n1"})
+    apply_ledger_entry(led, {"k": "shed"})
+    apply_ledger_entry(led, {"k": "place", "app": "a", "node": "n1"})
+    apply_ledger_entry(led, {"k": "migration",
+                             "m": {"app": "a", "from": "n1",
+                                   "to": "n2", "reason": "node_loss"}})
+    apply_ledger_entry(led, {"k": "unplace", "app": "a"})
+    apply_ledger_entry(led, {"k": "lost", "node": "n1"})
+    apply_ledger_entry(led, {"k": "departed", "node": "n3"})
+    apply_ledger_entry(led, {"k": "harvest", "node": "n1",
+                             "summary": {"requests": 2},
+                             "samples": [1.0, 2.0]})
+    apply_ledger_entry(led, {"k": "epoch", "epoch": 4})
+    apply_ledger_entry(led, {"k": "from_the_future", "x": 1})  # ignored
+    assert led["routed_by_node"] == {"n1": 2}
+    assert led["router_sheds"] == 1
+    assert led["placement"] == {}  # placed, migrated, then unplaced
+    assert led["migrations"][0]["to"] == "n2"
+    assert led["lost_nodes"] == ["n1"]
+    assert led["departed"] == ["n3"]
+    assert led["node_payloads"]["n1"] == {"requests": 2}
+    assert led["node_samples"]["n1"] == [1.0, 2.0]
+    assert led["epoch"] == 4
+
+
+def test_standby_tails_snapshot_then_stream_and_sees_leader_loss():
+    led = empty_ledger(epoch=3)
+    led["placement"] = {"a": "n1"}
+    rep = LedgerReplicator(lambda: dict(led))
+    sb = StandbyRouter("rb", (rep.host, rep.port), {})
+    sb.start()
+    try:
+        assert sb.wait_synced(5.0)
+        assert rep.standbys == 1
+        rep.publish({"k": "route", "node": "n1"})
+        rep.publish({"k": "shed"})
+        rep.publish({"k": "departed", "node": "n2"})
+        deadline = time.monotonic() + 5.0
+        while sb.seq < 3 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        copy = sb.ledger_copy()
+        assert copy["epoch"] == 3  # from the snapshot
+        assert copy["placement"] == {"a": "n1"}
+        assert copy["routed_by_node"] == {"n1": 1}
+        assert copy["router_sheds"] == 1
+        assert copy["departed"] == ["n2"]
+        assert sb.gaps == 0
+    finally:
+        rep.stop(abrupt=True)  # leader death: no goodbye frame
+    assert sb.leader_lost.wait(5.0)
+    # zero configured witnesses can never yield a strict majority
+    with pytest.raises(ElectionLost):
+        sb.promote()
+
+
+# ---------------------------------------------------------------------------
+# socket-fed integration (sim node agents)
+# ---------------------------------------------------------------------------
+
+def _wl(n_apps=4, families=2, seed=3, minutes=4, peak_rpm=60.0):
+    return synthetic_cluster_workload(n_apps, n_families=families,
+                                      seed=seed, minutes=minutes,
+                                      peak_rpm=peak_rpm)
+
+
+def _agent_for(wl, apps, node_id, port=0):
+    profiles = {a: wl.profiles[a] for a in apps}
+    manager = FleetManager(profiles, IdleTimeoutPolicy(timeout_s=120.0),
+                           budget_mb=2048.0,
+                           queue=QueueConfig(depth=32,
+                                             max_concurrency=4))
+    agent = NodeAgent(SimFleetBackend(manager), node_id=node_id,
+                      port=port)
+    agent.start()
+    return agent
+
+
+def _retry(seed=3):
+    return RetryPolicy(backoff_base_s=0.01, backoff_cap_s=0.05,
+                       seed=seed)
+
+
+def test_node_client_connect_retries_until_agent_binds():
+    """The satellite: a router brought up a beat before its node agent
+    no longer fails — connect() backs off and retries under the
+    policy instead of dying on the first ECONNREFUSED."""
+    probe = socket.socket()
+    probe.bind(("127.0.0.1", 0))
+    port = probe.getsockname()[1]
+    probe.close()
+
+    # nothing listening and no retries left: fails as ConnectionError
+    fast = NodeClient("late", "127.0.0.1", port,
+                      retry=RetryPolicy(attempts=1))
+    with pytest.raises(ConnectionError):
+        fast.connect()
+
+    wl = _wl(n_apps=2, families=1)
+    holder: dict = {}
+    def _bind_late():
+        time.sleep(0.3)
+        holder["agent"] = _agent_for(wl, wl.apps, "late", port=port)
+    t = threading.Thread(target=_bind_late)
+    t.start()
+    client = NodeClient("late", "127.0.0.1", port,
+                        retry=RetryPolicy(attempts=20,
+                                          backoff_base_s=0.05,
+                                          backoff_cap_s=0.2, seed=1))
+    try:
+        hello = client.connect()
+        assert hello.get("node") == "late"
+        assert "counts" in hello  # the extended reconciliation reply
+        client.call({"cmd": "shutdown", "flush": True},
+                    idempotent=True)
+    finally:
+        t.join()
+        client.close()
+        holder["agent"].result()
+
+
+def test_replicated_router_survives_leader_loss_with_conservation():
+    """The tentpole end-to-end: chaos ``router_loss`` halts the leader
+    abruptly mid-replay; the standby wins the epoch-2 election,
+    reconciles its replica against the nodes' own admission counters,
+    and finishes the replay with the global ledger intact."""
+    wl = _wl(n_apps=4, families=2)
+    agents = [_agent_for(wl, wl.apps, "nodeA"),
+              _agent_for(wl, wl.apps, "nodeB")]
+    plan = FaultPlan(events=[FaultEvent("router_loss", at=25)],
+                     seed=7, name="leader-kill")
+    inject = FaultInjector(plan, simulate=True)
+    try:
+        router = ReplicatedRouter(
+            {a.node_id: (a.host, a.port) for a in agents},
+            strategy="sharing", hot_sets=wl.hot_sets, seed=3,
+            retry=_retry(), fault_hook=inject)
+        router.connect()
+        assert router.leader.router_id == "router-a"
+        n = 80
+        for i in range(n):
+            reply = router.route(wl.apps[i % len(wl.apps)])
+            assert reply.get("outcome") != "error", reply
+        assert inject.counts().get("router_loss") == 1
+        assert router.failovers == 1
+        assert router.leader.router_id == "router-b"
+        assert router.leader.epoch == 2
+        payload = router.shutdown()
+    finally:
+        for agent in agents:
+            agent.result()
+    assert payload["requests"] == n
+    assert payload["conservation"]["holds"]
+    assert payload["conservation"]["routed"] == n
+    ha = payload["ha"]
+    assert ha["leader"] == "router-b" and ha["failovers"] == 1
+    assert any(e["won"] and e["epoch"] == 2 for e in ha["elections"])
+    assert payload["router"]["id"] == "router-b"
+    assert payload["router"]["epoch"] == 2
+
+
+def test_plan_leave_hands_off_warm_and_requeues():
+    """Planned decommission: the successor pre-warms from the shipped
+    report BEFORE placement flips, the departing node's queue flushes
+    back for re-admission, and no ghost advertisement survives."""
+    wl = _wl(n_apps=4, families=2)
+    agents = [_agent_for(wl, wl.apps, "nodeA"),
+              _agent_for(wl, wl.apps, "nodeB")]
+    try:
+        router = ClusterRouter(
+            {a.node_id: NodeClient(a.node_id, a.host, a.port,
+                                   retry=_retry())
+             for a in agents},
+            strategy="sharing", hot_sets=wl.hot_sets, seed=3,
+            retry=_retry())
+        router.connect()
+        departing = router.placement[wl.apps[0]]
+        survivor = ({"nodeA", "nodeB"} - {departing}).pop()
+        n = 60
+        for i in range(n):
+            reply = router.route(wl.apps[i % len(wl.apps)])
+            assert reply.get("outcome") != "error", reply
+        out = router.plan_leave(departing)
+        assert out["handoffs"], out
+        assert all(h["mode"] == "warm" for h in out["handoffs"]), out
+        assert router.handoffs["warm"] == len(out["handoffs"])
+        assert set(router.placement.values()) == {survivor}
+        # the satellite: no ghost advertiser after a clean exit
+        assert departing not in router.node_apps
+        assert departing not in router.clients
+        for i in range(20):
+            reply = router.route(wl.apps[i % len(wl.apps)])
+            assert reply.get("outcome") != "error", reply
+        payload = router.shutdown()
+    finally:
+        for agent in agents:
+            agent.result()
+    assert payload["conservation"]["holds"]
+    assert payload["conservation"]["routed"] == payload["requests"]
+    # departed vs lost are distinguishable in the rollup
+    assert payload["router"]["departed"] == [departing]
+    assert payload["lost_nodes"] == []
+    assert set(payload["router"]["nodes"]) == {"nodeA", "nodeB"}
+    assert all(m["reason"] == "handoff_warm"
+               for m in payload["migrations"])
+    assert payload["handoffs"]["warm"] >= 1
+    row = next(r for r in payload["per_node"] if r["node"] == departing)
+    assert row["conservation_holds"] and not row["lost"]
+
+
+def test_handoff_stall_falls_back_cold_and_conserves():
+    """Chaos ``handoff_stall`` at the handoff site: the stalled app
+    downgrades to a cold re-place — placement still flips and the
+    ledger still balances."""
+    wl = _wl(n_apps=4, families=2)
+    agents = [_agent_for(wl, wl.apps, "nodeA"),
+              _agent_for(wl, wl.apps, "nodeB")]
+    plan = FaultPlan(events=[FaultEvent("handoff_stall", at=0)],
+                     seed=3, name="stalled-handoff")
+    inject = FaultInjector(plan, simulate=True)
+    try:
+        router = ClusterRouter(
+            {a.node_id: NodeClient(a.node_id, a.host, a.port,
+                                   retry=_retry())
+             for a in agents},
+            strategy="sharing", hot_sets=wl.hot_sets, seed=3,
+            retry=_retry(), fault_hook=inject)
+        router.connect()
+        departing = router.placement[wl.apps[0]]
+        for i in range(40):
+            router.route(wl.apps[i % len(wl.apps)])
+        out = router.plan_leave(departing)
+        assert inject.counts().get("handoff_stall") == 1
+        modes = [h["mode"] for h in out["handoffs"]]
+        assert modes[0] == "cold"  # the stalled one degraded
+        assert router.handoffs["stalled"] == 1
+        assert router.handoffs["cold"] >= 1
+        payload = router.shutdown()
+    finally:
+        for agent in agents:
+            agent.result()
+    assert payload["conservation"]["holds"]
+    assert payload["handoffs"]["stalled"] == 1
+
+
+def test_double_failure_sheds_without_breaking_conservation():
+    """The satellite: the owner dies, then the failover target dies on
+    the very next placement — the router sheds (it never double-feeds
+    an admitted invocation) and the global ledger still balances."""
+    wl = _wl(n_apps=4, families=2)
+    agents = [_agent_for(wl, wl.apps, "nodeA"),
+              _agent_for(wl, wl.apps, "nodeB")]
+    kill_at = 20
+    plan = FaultPlan(events=[FaultEvent("node_loss", at=kill_at,
+                                        count=2)],
+                     seed=3, name="double-failure")
+    inject = FaultInjector(plan, simulate=True)
+    try:
+        router = ClusterRouter(
+            {a.node_id: NodeClient(a.node_id, a.host, a.port,
+                                   retry=_retry())
+             for a in agents},
+            strategy="sharing", hot_sets=wl.hot_sets, seed=3,
+            retry=_retry(), fault_hook=inject)
+        router.connect()
+        n = 60
+        shed = 0
+        for i in range(n):
+            reply = router.route(wl.apps[i % len(wl.apps)])
+            if reply.get("outcome") == "no-node":
+                shed += 1
+            else:
+                assert reply.get("outcome") != "error", reply
+        assert inject.counts().get("node_loss") == 2
+        assert sorted(router.lost_nodes) == ["nodeA", "nodeB"]
+        assert router.placement == {}  # nobody left deploys anything
+        assert shed == n - kill_at
+        assert router.router_sheds == shed
+        payload = router.shutdown()
+    finally:
+        for agent in agents:
+            agent.result()
+    # the nodes admitted exactly what the router fed them before the
+    # crashes; the rest were shed at the router, not lost in flight
+    assert payload["requests"] == kill_at
+    assert payload["conservation"]["holds"]
+    assert payload["router"]["sheds"] == n - kill_at
+    assert sorted(payload["lost_nodes"]) == ["nodeA", "nodeB"]
+    assert all(r["lost"] and r["conservation_holds"]
+               for r in payload["per_node"])

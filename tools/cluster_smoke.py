@@ -1,22 +1,24 @@
 #!/usr/bin/env python3
-"""Two-node cluster smoke: real sockets, real processes, stdlib only.
+"""Cluster HA smoke: three nodes, a warm standby, a leader kill.
 
-Boots two ``python -m repro cluster serve --sim`` node agents as
+Boots three ``python -m repro cluster serve --sim`` node agents as
 subprocesses on ephemeral localhost ports, reads their ready lines for
-the bound ports, then runs ``cluster route`` against both and checks:
+the bound ports, then runs ``cluster route --ha`` against all three
+with a chaos ``router_loss`` injected mid-replay and checks:
 
-* the router served a replay end-to-end over the sockets,
+* the leader router died abruptly and the standby won the epoch-bumped
+  lease election and finished the replay (``ha.failovers == 1``),
 * the merged ``cluster_summary`` conserves requests per node AND
   globally (``requests == served + sheds + flushed + errors +
-  abandoned``, router ledger == node ledgers),
-* both node agents exited 0 after their drain.
+  abandoned``, router ledger == node ledgers) ACROSS the failover,
+* all three node agents exited 0 after their drain.
 
-This is the CI fast-tier gate for the socket serving path (the pytest
-suite covers the same path in-process; this exercises the actual CLI
-entrypoints and process lifecycle).  Exit 0 on success, 1 on any
-failure, with the evidence printed.
+This is the CI fast-tier gate for the replicated-router serving path
+(the pytest suite covers the same path in-process; this exercises the
+actual CLI entrypoints and process lifecycle).  Exit 0 on success, 1
+on any failure, with the evidence printed.
 
-    python tools/cluster_smoke.py [--n-apps 8] [--limit 300]
+    python tools/cluster_smoke.py [--n-apps 8] [--limit 300] [--seed 7]
 """
 
 from __future__ import annotations
@@ -72,31 +74,43 @@ def main() -> int:
     ap.add_argument("--minutes", type=int, default=3)
     ap.add_argument("--limit", type=int, default=300,
                     help="arrivals to route (keeps the smoke fast)")
+    ap.add_argument("--kill-leader-at", type=int, default=None,
+                    help="0-based route call at which the chaos "
+                         "router_loss fires (default: limit // 2)")
     ap.add_argument("--timeout", type=float, default=120.0)
     args = ap.parse_args()
+    kill_at = (args.limit // 2 if args.kill_leader_at is None
+               else args.kill_leader_at)
 
+    # every node deploys every app: the leader kill must not strand an
+    # app without an advertiser, and the spread still exercises the
+    # sharing-aware placement across all three
     apps = [f"app{i:02d}" for i in range(args.n_apps)]
-    half = len(apps) // 2
+    node_ids = ["nodeA", "nodeB", "nodeC"]
     nodes: list = []
     failures: list[str] = []
     out = os.path.join(tempfile.mkdtemp(prefix="cluster-smoke-"),
                        "cluster_summary.json")
     try:
-        a, port_a = _spawn_node("nodeA", apps[:half], args)
-        nodes.append(("nodeA", a))
-        b, port_b = _spawn_node("nodeB", apps[half:], args)
-        nodes.append(("nodeB", b))
-        print(f"cluster-smoke: nodeA:{port_a} nodeB:{port_b} up")
+        ports: dict[str, int] = {}
+        for node_id in node_ids:
+            proc, port = _spawn_node(node_id, apps, args)
+            nodes.append((node_id, proc))
+            ports[node_id] = port
+        print("cluster-smoke: "
+              + " ".join(f"{n}:{p}" for n, p in ports.items())
+              + " up")
 
         route = subprocess.run(
             [sys.executable, "-m", "repro", "cluster", "route",
-             "--nodes", f"nodeA=127.0.0.1:{port_a},"
-                        f"nodeB=127.0.0.1:{port_b}",
+             "--nodes", ",".join(f"{n}=127.0.0.1:{p}"
+                                 for n, p in ports.items()),
              "--n-apps", str(args.n_apps),
              "--families", str(args.families),
              "--seed", str(args.seed),
              "--minutes", str(args.minutes),
              "--limit", str(args.limit),
+             "--ha", "--kill-leader-at", str(kill_at),
              "--check", "--out", out],
             cwd=REPO, env=_env(), capture_output=True, text=True,
             timeout=args.timeout)
@@ -121,13 +135,28 @@ def main() -> int:
                 payload = json.load(fh)  # flat artifact envelope
             requests = payload.get("requests", 0)
             conserve = payload.get("conservation", {})
+            ha = payload.get("ha", {})
             print(f"cluster-smoke: requests={requests} "
                   f"served={payload.get('served')} "
-                  f"conservation={'holds' if conserve.get('holds') else 'BROKEN'}")
+                  f"failovers={ha.get('failovers')} "
+                  f"leader={ha.get('leader')} "
+                  f"epoch={ha.get('epoch')} "
+                  f"conservation="
+                  f"{'holds' if conserve.get('holds') else 'BROKEN'}")
             if requests <= 0:
                 failures.append("router admitted zero requests")
             if not conserve.get("holds"):
                 failures.append(f"conservation broken: {conserve}")
+            if ha.get("failovers") != 1:
+                failures.append(
+                    f"expected exactly one leader failover, got "
+                    f"{ha.get('failovers')!r}")
+            elections = ha.get("elections", [])
+            if not any(e.get("won") and e.get("epoch", 0) > 1
+                       for e in elections):
+                failures.append(
+                    f"no epoch-bumped election won after the leader "
+                    f"kill: {elections}")
     finally:
         for _name, proc in nodes:
             if proc.poll() is None:
@@ -138,8 +167,8 @@ def main() -> int:
         for f in failures:
             print(f"  - {f}", file=sys.stderr)
         return 1
-    print("cluster-smoke: OK — two nodes served a routed replay with "
-          "global conservation")
+    print("cluster-smoke: OK — standby finished a leader-killed "
+          "replay over three nodes with global conservation")
     return 0
 
 

@@ -205,6 +205,59 @@ def _fault_hook_overhead(n: int = 4000, runs: int = 3):
     return off_s, on_s
 
 
+def _ha_overhead(n: int = 1500, runs: int = 3):
+    """Routing-path cost of the HA machinery (ISSUE 10).
+
+    Same socket-fed router + one sim node agent both ways; the "on"
+    arm additionally enables ledger replication with ZERO standbys
+    attached — the promised idle cost is one ``is not None`` check
+    plus an entry publish into an empty connection list per route.
+    Every call already runs under :class:`RetryPolicy` (that IS the
+    plain path now); this bounds what replication adds on top,
+    min-of-N runs over a socket round-trip baseline.
+    """
+    import time
+
+    from repro.cluster import (ClusterRouter, NodeAgent, NodeClient,
+                               RetryPolicy)
+    from repro.pool import (
+        AppProfile, FleetManager, IdleTimeoutPolicy, QueueConfig,
+        SimFleetBackend,
+    )
+
+    def one(replicate: bool) -> float:
+        profiles = {a: AppProfile(app=a, cold_init_ms=400.0,
+                                  warm_init_ms=20.0, invoke_ms=30.0,
+                                  rss_mb=100.0) for a in APPS}
+        manager = FleetManager(
+            profiles, IdleTimeoutPolicy(timeout_s=60.0),
+            budget_mb=2048.0,
+            queue=QueueConfig(depth=64, max_concurrency=4))
+        agent = NodeAgent(SimFleetBackend(manager), node_id="perf",
+                          port=0)
+        agent.start()
+        try:
+            router = ClusterRouter(
+                {"perf": NodeClient("perf", agent.host, agent.port,
+                                    retry=RetryPolicy(seed=7))},
+                strategy="hash", seed=7, retry=RetryPolicy(seed=7))
+            router.connect()
+            if replicate:
+                router.enable_replication()
+            t0 = time.perf_counter()
+            for i in range(n):
+                router.route(APPS[i % len(APPS)])
+            dt = time.perf_counter() - t0
+            router.shutdown()
+        finally:
+            agent.result()
+        return dt
+
+    off_s = min(one(False) for _ in range(runs))
+    on_s = min(one(True) for _ in range(runs))
+    return off_s, on_s
+
+
 def _cluster_check(tol: dict, check) -> None:
     """In-process cluster placement gate: sharing vs hash at equal
     budgets on a deterministic Zipf workload, plus conservation and a
@@ -338,6 +391,20 @@ def main(argv=None) -> int:
           f"({frac * 100:+.1f}%, {per_req_us:+.2f} us/req; allowed "
           f"{atol['max_overhead_frac'] * 100:.0f}% or "
           f"{atol['max_per_request_us']} us/req)")
+
+    htol = all_tol["cluster_ha"]
+    n_route = 1500
+    off_s, on_s = _ha_overhead(n=n_route)
+    frac = (on_s - off_s) / off_s if off_s else 0.0
+    per_req_us = (on_s - off_s) / n_route * 1e6
+    check("ha routing overhead",
+          frac <= htol["max_overhead_frac"]
+          or per_req_us <= htol["max_per_request_us"],
+          f"replication off {off_s * 1e3:.1f} ms vs on (zero "
+          f"standbys) {on_s * 1e3:.1f} ms over {n_route} routes "
+          f"({frac * 100:+.1f}%, {per_req_us:+.2f} us/req; allowed "
+          f"{htol['max_overhead_frac'] * 100:.0f}% or "
+          f"{htol['max_per_request_us']} us/req)")
 
     _cluster_check(all_tol["cluster"], check)
 

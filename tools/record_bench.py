@@ -107,6 +107,16 @@ def _fleet_metrics(data: dict) -> dict:
             "drift_fires": adaptive.get("drift_fires"),
             "beats_static": adaptive.get("adaptive_beats_static"),
         }
+    handoff = data.get("handoff_rows")
+    if handoff:
+        out["handoff"] = {
+            "min_speedup": data.get("handoff_min_speedup"),
+            "warm_first_ms": {r["app"]: r.get("warm_first_ms")
+                              for r in handoff},
+            "cold_first_ms": {r["app"]: r.get("cold_first_ms")
+                              for r in handoff},
+            "warm_beats_cold": data.get("handoff_warm_beats_cold"),
+        }
     cluster = {r["placement"]: r for r in data.get("cluster_rows", [])}
     if cluster:
         sharing = cluster.get("sharing", {})
